@@ -1,0 +1,144 @@
+//! END-TO-END DRIVER: real federated training through all three layers.
+//!
+//! Proves the full stack composes: the L1 Pallas dense kernels (inside the
+//! AOT-lowered L2 train/eval steps) are executed by the L3 rust
+//! coordinator over PJRT, while FedTune adjusts (M, E) online from the
+//! measured accuracy and the Eq. 2–5 overhead accounting. No Python runs.
+//!
+//! Workload: speech-like synthetic federated dataset (211 clients,
+//! power-law shard sizes, Dirichlet non-IID), mlp-m (≈145k params — the
+//! Table-2 ResNet-18 mirror), FedAvg aggregation with a deliberately
+//! conservative client LR (hundreds of rounds of horizon), target 0.90, balanced preference. Both the FedTune run and the fixed (10, 2)
+//! baseline are executed for a real Eq. 6 comparison; loss/accuracy curves
+//! land in traces/ and EXPERIMENTS.md records a reference run.
+//!
+//!     make artifacts && cargo run --release --example e2e_train
+
+use std::time::Instant;
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::config::ExperimentConfig;
+use fedtune::coordinator::selection::Selector;
+use fedtune::coordinator::{RunResult, Server, ServerConfig};
+use fedtune::data::FederatedDataset;
+use fedtune::engine::real::{RealEngine, RealEngineConfig};
+use fedtune::fedtune::schedule::Schedule;
+use fedtune::fedtune::{FedTune, FedTuneConfig};
+use fedtune::overhead::{CostModel, Preference};
+use fedtune::runtime::Runtime;
+
+const MODEL: &str = "mlp-m";
+const TARGET: f64 = 0.90;
+const SCALE: f64 = 0.1; // 211 of the 2112 speech clients
+const M0: usize = 10;
+const E0: usize = 2;
+// Deliberately conservative LR so the run spans a few hundred rounds —
+// enough optimization horizon for FedTune to act repeatedly.
+const LR: f32 = 0.03;
+const SEED: u64 = 2024;
+
+fn build_engine(seed: u64) -> anyhow::Result<RealEngine> {
+    let runtime = Runtime::new("artifacts")?;
+    let cfg = ExperimentConfig {
+        dataset: "speech".into(),
+        scale: SCALE,
+        ..ExperimentConfig::default()
+    };
+    let profile = cfg.profile()?;
+    let dataset = FederatedDataset::generate(&profile, seed);
+    RealEngine::new(
+        runtime,
+        dataset,
+        RealEngineConfig {
+            model: MODEL.into(),
+            lr: LR,
+            aggregator: AggregatorKind::FedAvg,
+            eval_subsample: 1024,
+            seed,
+        },
+    )
+}
+
+fn run(schedule: Schedule, seed: u64) -> anyhow::Result<(RunResult, f64, u64)> {
+    let mut engine = build_engine(seed)?;
+    let meta = engine.runtime().manifest().model(MODEL)?.clone();
+    let cost_model =
+        CostModel::from_flops_params(meta.flops_per_sample, meta.param_count as u64);
+    let t0 = Instant::now();
+    let result = Server::new(
+        &mut engine,
+        ServerConfig {
+            target_accuracy: TARGET,
+            max_rounds: 400,
+            cost_model,
+            selector: Selector::UniformRandom,
+            seed,
+        },
+        schedule,
+    )
+    .run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = engine.runtime().stats;
+    println!(
+        "  wall {:.1}s | {} PJRT execs ({:.1}s exec, {:.2}% marshal overhead) | {} local SGD steps",
+        wall,
+        stats.executions,
+        stats.exec_secs(),
+        stats.overhead_fraction() * 100.0,
+        engine.total_steps,
+    );
+    Ok((result, wall, engine.total_steps))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "e2e: REAL federated training — {MODEL} on speech-like data (scale {SCALE}), \
+         FedAvg, target {TARGET}\n"
+    );
+    std::fs::create_dir_all("traces")?;
+
+    // --- fixed baseline ----------------------------------------------------
+    println!("[1/2] fixed baseline (M={M0}, E={E0})");
+    let (base, _, _) = run(Schedule::Fixed { m: M0, e: E0 }, SEED)?;
+    println!(
+        "  stop={:?} rounds={} acc={:.3}  CompT={:.3e} TransT={:.3e} CompL={:.3e} TransL={:.3e}",
+        base.stop, base.rounds, base.final_accuracy,
+        base.costs.comp_t, base.costs.trans_t, base.costs.comp_l, base.costs.trans_l
+    );
+    base.trace.write_csv("traces/e2e_baseline.csv")?;
+
+    // --- FedTune run ---------------------------------------------------------
+    println!("\n[2/2] FedTune (balanced preference, D=10, ε=0.01)");
+    let pref = Preference::new(0.25, 0.25, 0.25, 0.25).map_err(anyhow::Error::msg)?;
+    // num_clients matches the generated dataset (speech scaled).
+    let clients = (2112.0 * SCALE).round() as usize;
+    let ft = FedTune::new(pref, FedTuneConfig::paper_defaults(clients), M0, E0)
+        .map_err(anyhow::Error::msg)?;
+    let (tuned, _, _) = run(Schedule::Tuned(Box::new(ft)), SEED)?;
+    println!(
+        "  stop={:?} rounds={} acc={:.3}  CompT={:.3e} TransT={:.3e} CompL={:.3e} TransL={:.3e}  final M={} E={}",
+        tuned.stop, tuned.rounds, tuned.final_accuracy,
+        tuned.costs.comp_t, tuned.costs.trans_t, tuned.costs.comp_l, tuned.costs.trans_l,
+        tuned.final_m, tuned.final_e
+    );
+    tuned.trace.write_csv("traces/e2e_fedtune.csv")?;
+
+    // --- headline comparison (Eq. 6) -----------------------------------------
+    let i = base.costs.compare(&tuned.costs, &pref);
+    println!("\nloss curve (fedtune run):");
+    for r in tuned.trace.records().iter().step_by((tuned.rounds / 12).max(1)) {
+        println!(
+            "  round {:>4}  acc {:.3}  loss {:.3}  M={} E={:.0}",
+            r.round, r.accuracy, r.train_loss, r.m, r.e
+        );
+    }
+    println!("\nEq. 6 improvement of FedTune over fixed ({M0},{E0}): {:+.2}%", -i * 100.0);
+    println!("traces: traces/e2e_baseline.csv, traces/e2e_fedtune.csv");
+
+    anyhow::ensure!(
+        base.final_accuracy >= TARGET || tuned.final_accuracy >= TARGET,
+        "neither run reached the target — regression in the real pipeline"
+    );
+    println!("\ne2e OK: all three layers compose, training converges");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Scenario (paper Fig. 1 / §1 example 2): a smart-home HVAC control
+//! system. Sensor devices have weak CPUs, so the application is
+//! *computation-sensitive*: it weights CompT and CompL (α = γ = 0.5) and
+//! doesn't care about transmission.
+//!
+//! Expected behaviour per Table 3 / Table 4: FedTune pushes E down (small
+//! E is better for both CompT and CompL) and settles M at a moderate
+//! value balancing time (wants big M) against load (wants small M).
+//!
+//!     cargo run --release --example smart_home
+
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::overhead::Preference;
+
+fn main() -> anyhow::Result<()> {
+    let pref = Preference::new(0.5, 0.0, 0.5, 0.0).map_err(anyhow::Error::msg)?;
+    let cfg = ExperimentConfig {
+        dataset: "speech".into(), // voice-command control of the home
+        model: "resnet-10".into(),
+        seed: 7,
+        ..ExperimentConfig::default()
+    };
+
+    println!("smart-home HVAC: computation-sensitive (α=0.5, γ=0.5)\n");
+    let c = baselines::compare(&cfg, pref, &[7, 8, 9])?;
+    println!(
+        "FedTune vs fixed (20,20):  {:+.2}% (std {:.2}%) weighted-overhead reduction",
+        c.improvement_pct, c.improvement_std
+    );
+    println!(
+        "final hyper-parameters:    M = {:.1} (std {:.1}), E = {:.1} (std {:.1})",
+        c.final_m_mean, c.final_m_std, c.final_e_mean, c.final_e_std
+    );
+    println!(
+        "FedTune overheads:         CompT {:.3e}  TransT {:.3e}  CompL {:.3e}  TransL {:.3e}",
+        c.fedtune_costs[0], c.fedtune_costs[1], c.fedtune_costs[2], c.fedtune_costs[3]
+    );
+
+    // The computation-sensitive controller must slash E (Table 3: both
+    // CompT and CompL prefer small E).
+    anyhow::ensure!(
+        c.final_e_mean < 20.0,
+        "expected E to shrink for a computation-sensitive app, got {:.1}",
+        c.final_e_mean
+    );
+    println!("\nE shrank as Table 3 predicts for computation-sensitive apps ✓");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python: L1 Pallas kernels + L2 JAX models + the AOT exporter.
+
+Never imported at runtime -- `make artifacts` runs `compile.aot` once and
+the rust coordinator executes the lowered HLO through PJRT afterwards.
+"""

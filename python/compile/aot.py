@@ -1,0 +1,176 @@
+"""AOT exporter: lower L2 train/eval steps to HLO text + manifest.json.
+
+This is the only place Python touches the pipeline; `make artifacts` runs it
+once and the rust coordinator (L3) is self-contained afterwards.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, per model: the ordered parameter layout (the contract
+with rust/src/model), input/output specs of each artifact, FLOPs-per-sample
+(the paper's C1=C3 overhead constant) and the parameter count (C2=C4).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models mlp-s,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s) -> dict:
+    dt = jnp.dtype(s.dtype).name
+    return {"shape": list(s.shape), "dtype": dt}
+
+
+def export_model(spec: M.ModelSpec, out_dir: str) -> dict:
+    """Lower train_step and eval_step for one model; return manifest entry."""
+    pspecs = M.param_specs(spec)
+    param_structs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in pspecs
+    ]
+
+    # --- train step -------------------------------------------------------
+    x, y, mask = M.example_batch(spec, spec.train_batch)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    train_lowered = jax.jit(M.make_train_step(spec)).lower(
+        *param_structs, x, y, mask, lr
+    )
+    train_text = to_hlo_text(train_lowered)
+    train_path = f"{spec.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(train_text)
+
+    # --- train chunks (scan of K steps; the §Perf hot path) ---------------
+    chunk_entries = []
+    for k in M.TRAIN_CHUNKS:
+        xs, ys, masks = M.example_chunk(spec, k, spec.train_batch)
+        chunk_lowered = jax.jit(M.make_train_chunk(spec, k)).lower(
+            *param_structs, xs, ys, masks, lr
+        )
+        chunk_text = to_hlo_text(chunk_lowered)
+        chunk_path = f"{spec.name}_train_chunk{k}.hlo.txt"
+        with open(os.path.join(out_dir, chunk_path), "w") as f:
+            f.write(chunk_text)
+        chunk_entries.append(
+            {
+                "path": chunk_path,
+                "batch": spec.train_batch,
+                "chunk": k,
+                "inputs": [
+                    *({"name": n, **_shape_entry(s)} for (n, _), s in zip(pspecs, param_structs)),
+                    {"name": "xs", **_shape_entry(xs)},
+                    {"name": "ys", **_shape_entry(ys)},
+                    {"name": "masks", **_shape_entry(masks)},
+                    {"name": "lr", **_shape_entry(lr)},
+                ],
+                "outputs": [
+                    *({"name": n, **_shape_entry(s)} for (n, _), s in zip(pspecs, param_structs)),
+                    {"name": "mean_loss", "shape": [], "dtype": "float32"},
+                ],
+                "sha256": hashlib.sha256(chunk_text.encode()).hexdigest(),
+            }
+        )
+
+    # --- eval step --------------------------------------------------------
+    xe, ye, maske = M.example_batch(spec, spec.eval_batch)
+    eval_lowered = jax.jit(M.make_eval_step(spec)).lower(
+        *param_structs, xe, ye, maske
+    )
+    eval_text = to_hlo_text(eval_lowered)
+    eval_path = f"{spec.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(eval_text)
+
+    return {
+        "dataset": spec.dataset,
+        "input_shape": list(spec.input_shape),
+        "classes": spec.classes,
+        "params": [
+            {"name": name, "shape": list(shape)} for name, shape in pspecs
+        ],
+        "param_count": M.param_count(spec),
+        "flops_per_sample": M.flops_per_sample(spec),
+        "train": {
+            "path": train_path,
+            "batch": spec.train_batch,
+            "inputs": [
+                *({"name": n, **_shape_entry(s)} for (n, _), s in zip(pspecs, param_structs)),
+                {"name": "x", **_shape_entry(x)},
+                {"name": "y", **_shape_entry(y)},
+                {"name": "mask", **_shape_entry(mask)},
+                {"name": "lr", **_shape_entry(lr)},
+            ],
+            "outputs": [
+                *({"name": n, **_shape_entry(s)} for (n, _), s in zip(pspecs, param_structs)),
+                {"name": "loss", "shape": [], "dtype": "float32"},
+            ],
+            "sha256": hashlib.sha256(train_text.encode()).hexdigest(),
+        },
+        "train_chunks": chunk_entries,
+        "eval": {
+            "path": eval_path,
+            "batch": spec.eval_batch,
+            "inputs": [
+                *({"name": n, **_shape_entry(s)} for (n, _), s in zip(pspecs, param_structs)),
+                {"name": "x", **_shape_entry(xe)},
+                {"name": "y", **_shape_entry(ye)},
+                {"name": "mask", **_shape_entry(maske)},
+            ],
+            "outputs": [
+                {"name": "correct", "shape": [], "dtype": "float32"},
+                {"name": "loss_sum", "shape": [], "dtype": "float32"},
+            ],
+            "sha256": hashlib.sha256(eval_text.encode()).hexdigest(),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(M.MODELS),
+        help="comma-separated subset of: " + ", ".join(M.MODELS),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format_version": 1, "jax_version": jax.__version__, "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in M.MODELS:
+            raise SystemExit(f"unknown model {name!r}; have {list(M.MODELS)}")
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["models"][name] = export_model(M.MODELS[name], args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {len(manifest['models'])} models to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

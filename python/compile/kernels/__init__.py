@@ -1,0 +1,13 @@
+"""L1 Pallas kernels: the compute hot-spot of the FedTune model family.
+
+Public surface:
+* ``matmul.matmul`` -- tiled Pallas matmul (f32 accumulation).
+* ``dense.dense``   -- fused matmul + bias + optional ReLU with a custom
+  VJP whose backward products also run through the Pallas kernel.
+* ``ref``           -- pure-jnp oracles the tests pin everything to.
+"""
+
+from .dense import dense
+from .matmul import matmul
+
+__all__ = ["dense", "matmul"]

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: tiled matrix multiplication.
+
+This is the FLOP carrier of every model in the FedTune model ladder (the
+dense layers dominate both forward and backward compute), so it is the
+paper's compute hot-spot in our reproduction.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+
+* The grid iterates over (M/bm, N/bn, K/bk) tiles. Each program instance
+  holds one ``(bm, bk)`` block of ``a``, one ``(bk, bn)`` block of ``b`` and
+  one ``(bm, bn)`` block of ``out`` in VMEM.
+* Blocks default to 128x128 — the MXU-native tile — and shrink to the
+  operand size for small problems so we never waste VMEM on padding.
+* The K-loop is the *innermost* grid dimension, so the output block stays
+  resident in VMEM across the whole contraction and serves as the
+  accumulator (the out index_map ignores the K grid index, which in Pallas
+  keeps the block live across those grid steps).
+* Accumulation is in f32 (the output dtype). bf16 inputs hit the MXU
+  natively on real TPUs; in this environment the kernel runs under
+  ``interpret=True`` because the CPU PJRT plugin cannot execute Mosaic
+  custom-calls — see DESIGN.md.
+
+Inputs whose dimensions are not multiples of the block size are
+zero-padded by the wrapper and the result is sliced back: zero padding is
+exact for matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. On small operands we shrink to the operand size.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # f32 accumulation; MXU matmul on the (bm, bk) x (bk, bn) blocks.
+    out_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int, bn: int, bk: int,
+               itemsize: int = 4) -> int:
+    """VMEM footprint estimate of one program instance (a, b, out blocks)."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    return itemsize * (bm * bk + bk * bn + bm * bn)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """``a @ b`` via the tiled Pallas kernel.
+
+    ``a``: (M, K), ``b``: (K, N) → (M, N) in f32.
+    Shapes need not be multiples of the block sizes (zero-pad + slice).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    mp = pl.cdiv(m, bm) * bm
+    np_ = pl.cdiv(n, bn) * bn
+    kp = pl.cdiv(k, bk) * bk
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle to float32 tolerance;
+``python/tests/`` enforces this with hypothesis sweeps over shapes and
+dtypes. The oracles are also what ``jax.grad`` differentiates in the VJP
+tests, pinning the custom-VJP backward kernels to the true gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """f32 reference for kernels.matmul."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool) -> jax.Array:
+    """f32 reference for kernels.dense (fused matmul + bias + optional ReLU)."""
+    out = matmul_ref(x, w) + b.astype(jnp.float32)[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def dense_vjp_ref(x, w, b, g, *, relu: bool):
+    """Reference gradients of ``sum(dense(x, w, b) * g)`` w.r.t. (x, w, b)."""
+
+    def f(x_, w_, b_):
+        return jnp.sum(dense_ref(x_, w_, b_, relu=relu) * g)
+
+    return jax.grad(f, argnums=(0, 1, 2))(
+        x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32)
+    )

@@ -1,0 +1,79 @@
+"""L1 perf report: VMEM footprint + MXU-utilization *estimates* from the
+BlockSpec, per DESIGN.md §8 — interpret=True wallclock is CPU-numpy, not a
+TPU proxy, so the optimization signal is structural.
+
+Usage: python -m compile.kernels.report
+
+For each model in the zoo and each dense layer it prints the matmul grid,
+the per-instance VMEM footprint (x-block + w-block + out-block), and the
+MXU-utilization estimate = (real FLOPs) / (padded-tile FLOPs): tiles whose
+dimensions don't fill the 128-lane MXU waste the remainder.
+"""
+
+from __future__ import annotations
+
+from .matmul import vmem_bytes
+from .. import model as M
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4/v5e per-core VMEM
+
+
+def tile_report(m: int, k: int, n: int, bm: int = 128, bn: int = 128,
+                bk: int = 128) -> dict:
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    grid = (
+        -(-m // bm_),
+        -(-n // bn_),
+        -(-k // bk_),
+    )
+    vmem = vmem_bytes(m, n, k, bm, bn, bk)
+    real_flops = 2 * m * k * n
+    padded_flops = 2 * (grid[0] * bm_) * (grid[2] * bk_) * (grid[1] * bn_)
+    # MXU lane efficiency: last-dim tiles below 128 under-fill the array.
+    lane_eff = min(bn_, 128) / 128 * min(bk_, 128) / 128
+    return {
+        "shape": (m, k, n),
+        "block": (bm_, bk_, bn_),
+        "grid": grid,
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= VMEM_BYTES,
+        "pad_utilization": real_flops / padded_flops,
+        "lane_utilization": lane_eff,
+        "mxu_estimate": (real_flops / padded_flops) * lane_eff,
+    }
+
+
+def model_report(name: str) -> list[dict]:
+    spec = M.MODELS[name]
+    rows = []
+    b = spec.train_batch
+    d = M._dense_input_dim(spec)
+    dims = [*spec.hidden, spec.classes]
+    for h in dims:
+        # fwd: (B,d)x(d,h); bwd dW: (d,B)x(B,h); bwd dx: (B,h)x(h,d)
+        for tag, (mm, kk, nn) in {
+            "fwd": (b, d, h),
+            "dW": (d, b, h),
+            "dx": (b, h, d),
+        }.items():
+            r = tile_report(mm, kk, nn)
+            r["layer"] = f"{name}:{tag}:{d}x{h}"
+            rows.append(r)
+        d = h
+    return rows
+
+
+def main() -> None:
+    print(f"{'layer':<28} {'grid':<12} {'vmem':>10} {'pad_util':>9} {'mxu_est':>8}")
+    for name in M.MODELS:
+        for r in model_report(name):
+            print(
+                f"{r['layer']:<28} {str(r['grid']):<12} "
+                f"{r['vmem_bytes']:>10} {r['pad_utilization']:>9.3f} "
+                f"{r['mxu_estimate']:>8.3f}"
+            )
+            assert r["vmem_ok"], f"VMEM overflow in {r['layer']}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""L2: JAX model family for the FedTune reproduction (build-time only).
+
+The paper's measurement ladder (Table 2) uses ResNet-10/18/26/34 on
+32x32 spectrograms; its evaluation uses ResNet-10 (speech), a 2-layer MLP
+(EMNIST) and ResNet-10/18 (CIFAR-100). Our synthetic datasets (see
+DESIGN.md §Substitutions) feed the same system model, which consumes only
+FLOPs-per-sample (C1, C3) and parameter count (C2, C4), so we mirror the
+ladder with an MLP family whose FLOP ratios match Table 2's
+(x1 / x2.14 / x3.29 / x4.81) plus a small conv net for the speech-like
+task. Every dense layer routes through the L1 Pallas kernel
+(``kernels.dense``), so the AOT train step's FLOP volume is carried by the
+Pallas matmul.
+
+Exported computations (per model, fixed shapes; see aot.py):
+
+* ``train_step(params..., x, y, mask, lr) -> (params'..., loss)``
+  one mini-batch of masked-softmax-CE SGD. The FL client loop (L3, rust)
+  iterates this over the client's local batches E times per round.
+* ``eval_step(params..., x, y, mask) -> (correct, loss_sum)``
+  masked top-1 correctness count + summed CE, accumulated by rust over the
+  held-out set.
+
+Masking: clients have heterogeneous n_k, while HLO shapes are static. The
+last batch is zero-padded and ``mask`` (0/1 per row) excludes padding from
+both the loss mean and the gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense
+
+# ----------------------------------------------------------------------------
+# Model zoo
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model in the zoo."""
+
+    name: str
+    dataset: str  # speech | emnist | cifar
+    input_shape: tuple[int, ...]  # per-sample shape fed to the model
+    classes: int
+    hidden: tuple[int, ...]  # dense hidden widths
+    conv_channels: tuple[int, ...] = ()  # conv stage (speech cnn only)
+    train_batch: int = 8
+    eval_batch: int = 64
+
+    @property
+    def flat_input_dim(self) -> int:
+        d = 1
+        for s in self.input_shape:
+            d *= s
+        return d
+
+
+def _mk_ladder() -> dict[str, ModelSpec]:
+    """Speech-like MLP ladder mirroring Table 2's FLOP ratios.
+
+    Table 2 (ResNet-10/18/26/34): FLOPs 12.5/26.8/41.1/60.1 M ⇒ ratios
+    1 : 2.14 : 3.29 : 4.81. With input 1024 and 35 classes, a single hidden
+    layer of width H has ~2·(1024+35)·H FLOPs, linear in H, so widths
+    64/137/211/308 reproduce the ratios.
+    """
+    widths = {"mlp-s": 64, "mlp-m": 137, "mlp-l": 211, "mlp-xl": 308}
+    return {
+        name: ModelSpec(
+            name=name,
+            dataset="speech",
+            input_shape=(1024,),
+            classes=35,
+            hidden=(w,),
+        )
+        for name, w in widths.items()
+    }
+
+
+MODELS: dict[str, ModelSpec] = {
+    **_mk_ladder(),
+    # Paper §5.1(2): EMNIST with a 1-hidden-layer (200, ReLU) MLP.
+    "mlp-emnist": ModelSpec(
+        name="mlp-emnist",
+        dataset="emnist",
+        input_shape=(784,),
+        classes=62,
+        hidden=(200,),
+    ),
+    # Paper §5.1(3): CIFAR-100. MLP stand-in sized like ResNet-18's param
+    # count direction (wider hidden layer, 100-way output).
+    "mlp-cifar": ModelSpec(
+        name="mlp-cifar",
+        dataset="cifar",
+        input_shape=(3072,),
+        classes=100,
+        hidden=(128,),
+    ),
+    # Conv stand-in for ResNet-10 on spectrograms: 2 conv stages + pallas
+    # dense head. Exercises a non-trivially-shaped param tree end to end.
+    "cnn-s": ModelSpec(
+        name="cnn-s",
+        dataset="speech",
+        input_shape=(32, 32, 1),
+        classes=35,
+        hidden=(64,),
+        conv_channels=(8, 16),
+    ),
+}
+
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+
+def param_specs(spec: ModelSpec) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — THE param layout contract with rust."""
+    out: list[tuple[str, tuple[int, ...]]] = []
+    in_ch = spec.input_shape[-1] if spec.conv_channels else 0
+    for i, ch in enumerate(spec.conv_channels):
+        out.append((f"conv{i}_k", (3, 3, in_ch, ch)))
+        out.append((f"conv{i}_b", (ch,)))
+        in_ch = ch
+    d = _dense_input_dim(spec)
+    for i, h in enumerate(spec.hidden):
+        out.append((f"w{i}", (d, h)))
+        out.append((f"b{i}", (h,)))
+        d = h
+    out.append(("w_out", (d, spec.classes)))
+    out.append(("b_out", (spec.classes,)))
+    return out
+
+
+def _dense_input_dim(spec: ModelSpec) -> int:
+    if not spec.conv_channels:
+        return spec.flat_input_dim
+    # Each conv stage is stride-1 SAME followed by 2x2 max-pool.
+    h, w, _ = spec.input_shape
+    for _ in spec.conv_channels:
+        h, w = h // 2, w // 2
+    return h * w * spec.conv_channels[-1]
+
+
+def init_params(spec: ModelSpec, key: jax.Array) -> list[jax.Array]:
+    """He-normal weights, zero biases, in param_specs order."""
+    params = []
+    for name, shape in param_specs(spec):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b") or name.startswith("b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+    return params
+
+
+def param_count(spec: ModelSpec) -> int:
+    n = 0
+    for _, shape in param_specs(spec):
+        c = 1
+        for s in shape:
+            c *= s
+        n += c
+    return n
+
+
+def flops_per_sample(spec: ModelSpec) -> int:
+    """Forward-pass FLOPs for one input (the paper's C1 = C3 constant)."""
+    flops = 0
+    if spec.conv_channels:
+        h, w, in_ch = spec.input_shape
+        for ch in spec.conv_channels:
+            flops += 2 * 3 * 3 * in_ch * ch * h * w
+            h, w, in_ch = h // 2, w // 2, ch
+    d = _dense_input_dim(spec)
+    for hd in spec.hidden:
+        flops += 2 * d * hd
+        d = hd
+    flops += 2 * d * spec.classes
+    return flops
+
+
+# ----------------------------------------------------------------------------
+# Forward / loss
+# ----------------------------------------------------------------------------
+
+
+def forward(spec: ModelSpec, params: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Logits for a batch. Dense layers go through the L1 Pallas kernel."""
+    i = 0
+    if spec.conv_channels:
+        for _ in spec.conv_channels:
+            k, b = params[i], params[i + 1]
+            i += 2
+            x = jax.lax.conv_general_dilated(
+                x,
+                k,
+                window_strides=(1, 1),
+                padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            x = jnp.maximum(x + b[None, None, None, :], 0.0)
+            x = jax.lax.reduce_window(
+                x,
+                -jnp.inf,
+                jax.lax.max,
+                window_dimensions=(1, 2, 2, 1),
+                window_strides=(1, 2, 2, 1),
+                padding="VALID",
+            )
+        x = x.reshape(x.shape[0], -1)
+    else:
+        x = x.reshape(x.shape[0], -1)
+    for _ in spec.hidden:
+        w, b = params[i], params[i + 1]
+        i += 2
+        x = dense(x, w, b, True)
+    w, b = params[i], params[i + 1]
+    return dense(x, w, b, False)
+
+
+def masked_ce(logits: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean masked softmax cross-entropy (mask excludes padded rows)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def make_train_step(spec: ModelSpec) -> Callable:
+    """(params..., x, y, mask, lr) -> (params'..., loss) — one SGD batch."""
+
+    def train_step(*args):
+        n = len(param_specs(spec))
+        params = list(args[:n])
+        x, y, mask, lr = args[n], args[n + 1], args[n + 2], args[n + 3]
+
+        def loss_fn(ps):
+            return masked_ce(forward(spec, ps, x), y, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return (*new_params, loss)
+
+    return train_step
+
+
+#: Chunk sizes exported for `train_chunk` (lax.scan of K mini-batches).
+#: Chosen in the §Perf pass: marshalling params host↔device per *step*
+#: cost ~19-22% of runtime. The rust client loop greedily picks the
+#: largest chunk that fits the remaining batches, so typical small clients
+#: use K=4 with little padding waste while data-rich clients amortize the
+#: fixed param round-trip over K=16 (see EXPERIMENTS.md §Perf).
+TRAIN_CHUNKS = (4, 16)
+#: Back-compat alias (single default size).
+TRAIN_CHUNK = TRAIN_CHUNKS[-1]
+
+
+def make_train_chunk(spec: ModelSpec, chunk: int) -> Callable:
+    """(params..., xs, ys, masks, lr) -> (params'..., mean_loss).
+
+    Runs `chunk` sequential SGD mini-batches inside one XLA program
+    via ``lax.scan``: xs is (K, B, ...), ys/masks are (K, B). Batches whose
+    mask is all-zero are exact no-ops (zero loss ⇒ zero grads), so the
+    caller can pad the tail of a client's data freely.
+    """
+
+    n = len(param_specs(spec))
+
+    def train_chunk(*args):
+        params = list(args[:n])
+        xs, ys, masks, lr = args[n], args[n + 1], args[n + 2], args[n + 3]
+
+        def body(ps, batch):
+            x, y, mask = batch
+
+            def loss_fn(p):
+                return masked_ce(forward(spec, p, x), y, mask)
+
+            loss, grads = jax.value_and_grad(loss_fn)(ps)
+            return [p - lr * g for p, g in zip(ps, grads)], loss
+
+        params_out, losses = jax.lax.scan(body, params, (xs, ys, masks))
+        # Mean over batches that had any real rows.
+        weights = (jnp.sum(masks, axis=1) > 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(weights), 1.0)
+        mean_loss = jnp.sum(losses * weights) / denom
+        return (*params_out, mean_loss)
+
+    return train_chunk
+
+
+def example_chunk(spec: ModelSpec, chunk: int, batch: int):
+    """ShapeDtypeStructs for (xs, ys, masks) of a train chunk."""
+    xs = jax.ShapeDtypeStruct((chunk, batch, *spec.input_shape), jnp.float32)
+    ys = jax.ShapeDtypeStruct((chunk, batch), jnp.int32)
+    masks = jax.ShapeDtypeStruct((chunk, batch), jnp.float32)
+    return xs, ys, masks
+
+
+def make_eval_step(spec: ModelSpec) -> Callable:
+    """(params..., x, y, mask) -> (correct, loss_sum) over one batch."""
+
+    def eval_step(*args):
+        n = len(param_specs(spec))
+        params = list(args[:n])
+        x, y, mask = args[n], args[n + 1], args[n + 2]
+        logits = forward(spec, params, x)
+        pred = jnp.argmax(logits, axis=-1).astype(y.dtype)
+        correct = jnp.sum((pred == y).astype(jnp.float32) * mask)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        return correct, jnp.sum(nll * mask)
+
+    return eval_step
+
+
+def example_batch(spec: ModelSpec, batch: int):
+    """ShapeDtypeStructs for (x, y, mask) at the given batch size."""
+    x = jax.ShapeDtypeStruct((batch, *spec.input_shape), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return x, y, mask

@@ -1,0 +1,115 @@
+//! Paper Fig. 3: FL training profiles for M ∈ {1, 10, 20, 50} (E = 1,
+//! ResNet-18, target 0.8, C1..C4 = 1, normalized to the largest overhead).
+//!
+//! Regenerates all six panels as series: (a) accuracy-to-round,
+//! (b) accuracy-to-CompT, (c) round time growth with M, (d) accuracy-to-
+//! CompL, (e) accuracy-to-TransT, (f) accuracy-to-TransL — and asserts the
+//! paper's qualitative ordering (more participants: better round/CompT/
+//! TransT, worse CompL/TransL).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use fedtune::config::ExperimentConfig;
+use fedtune::coordinator::{Server, ServerConfig};
+use fedtune::coordinator::selection::Selector;
+use fedtune::engine::sim::{SimEngine, SimParams};
+use fedtune::fedtune::schedule::Schedule;
+use fedtune::overhead::CostModel;
+use fedtune::trace::Trace;
+use harness::Table;
+
+const MS: [usize; 4] = [1, 10, 20, 50];
+const TARGET: f64 = 0.8;
+const ACC_GRID: [f64; 7] = [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+
+fn run_profile(m: usize, seed: u64) -> Trace {
+    let cfg = ExperimentConfig {
+        model: "resnet-18".into(),
+        ..ExperimentConfig::default()
+    };
+    let profile = cfg.profile().unwrap();
+    let params = SimParams::default().with_a_max(0.90); // resnet-18 ceiling
+    let mut engine = SimEngine::new(&profile, params, seed);
+    let server = Server::new(
+        &mut engine,
+        ServerConfig {
+            target_accuracy: TARGET,
+            max_rounds: 60_000,
+            cost_model: CostModel::UNIT, // the paper's Fig. 3 setting
+            selector: Selector::UniformRandom,
+            seed,
+        },
+        Schedule::Fixed { m, e: 1 },
+    );
+    server.run().unwrap().trace
+}
+
+fn main() {
+    let traces: Vec<(usize, Trace)> =
+        MS.iter().map(|&m| (m, run_profile(m, 7))).collect();
+
+    // Panel (a)/(b)/(d)/(e)/(f): overheads at each accuracy milestone.
+    for (panel, pick) in [
+        ("(a) accuracy-to-round", 0usize),
+        ("(b) accuracy-to-CompT", 1),
+        ("(d) accuracy-to-CompL", 2),
+        ("(e) accuracy-to-TransT", 3),
+        ("(f) accuracy-to-TransL", 4),
+    ] {
+        let mut t = Table::new(&["accuracy", "M=1", "M=10", "M=20", "M=50"]);
+        // Normalize each panel to its largest value (paper convention).
+        let mut grid = vec![vec![f64::NAN; MS.len()]; ACC_GRID.len()];
+        for (j, (_m, tr)) in traces.iter().enumerate() {
+            for (i, &acc) in ACC_GRID.iter().enumerate() {
+                if let Some(r) = tr.records().iter().find(|r| r.accuracy >= acc) {
+                    grid[i][j] = match pick {
+                        0 => r.round as f64,
+                        1 => r.costs.comp_t,
+                        2 => r.costs.comp_l,
+                        3 => r.costs.trans_t,
+                        4 => r.costs.trans_l,
+                        _ => unreachable!(),
+                    };
+                }
+            }
+        }
+        let maxv = grid
+            .iter()
+            .flatten()
+            .filter(|v| v.is_finite())
+            .fold(0.0f64, |a, &b| a.max(b));
+        for (i, &acc) in ACC_GRID.iter().enumerate() {
+            t.row(vec![
+                format!("{acc:.1}"),
+                format!("{:.3}", grid[i][0] / maxv),
+                format!("{:.3}", grid[i][1] / maxv),
+                format!("{:.3}", grid[i][2] / maxv),
+                format!("{:.3}", grid[i][3] / maxv),
+            ]);
+        }
+        t.print(&format!("Fig. 3{panel} — speech, ResNet-18, E=1, normalized"));
+    }
+
+    // Panel (c): round time (CompT per round) grows with M.
+    let mut t = Table::new(&["M", "mean CompT/round", "rounds to 0.8"]);
+    for (m, tr) in &traces {
+        let last = tr.last().unwrap();
+        t.row(vec![
+            m.to_string(),
+            format!("{:.2}", last.costs.comp_t / last.round as f64),
+            last.round.to_string(),
+        ]);
+    }
+    t.print("Fig. 3(c) — per-round time grows with M while rounds shrink");
+
+    // Shape assertions (paper's qualitative claims).
+    let final_rounds: Vec<usize> = traces.iter().map(|(_, t)| t.last().unwrap().round).collect();
+    assert!(final_rounds[0] > final_rounds[1], "M=1 must need the most rounds");
+    assert!(final_rounds[1] >= final_rounds[3], "more participants: fewer rounds");
+    let compl: Vec<f64> = traces.iter().map(|(_, t)| t.last().unwrap().costs.comp_l).collect();
+    assert!(compl[0] < compl[3], "more participants must cost more CompL");
+    let transl: Vec<f64> = traces.iter().map(|(_, t)| t.last().unwrap().costs.trans_l).collect();
+    assert!(transl[0] < transl[3], "more participants must cost more TransL");
+    println!("\nshape checks PASSED: round/CompL/TransL orderings match the paper");
+}

@@ -1,0 +1,65 @@
+//! Paper Fig. 8: the degraded preference cases versus the penalty factor D
+//! (speech + FedAvg). Without the penalty (D = 1) the paper found three
+//! degraded preferences — (0,.5,.5,0), (0,0,.5,.5), (.33,.33,0,.33); the
+//! penalty mitigates the degradation and stays stable for moderate D.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::overhead::Preference;
+use fedtune::util::stats;
+use harness::{pct_std, Table, SEEDS3};
+
+const DS: [f64; 5] = [1.0, 5.0, 10.0, 15.0, 20.0];
+
+fn degraded_cases() -> Vec<Preference> {
+    let t = 1.0 / 3.0;
+    vec![
+        Preference::new(0.0, 0.5, 0.5, 0.0).unwrap(),
+        Preference::new(0.0, 0.0, 0.5, 0.5).unwrap(),
+        Preference::new(t, t, 0.0, t).unwrap(),
+    ]
+}
+
+fn main() {
+    let mut t = Table::new(&["a/b/g/d", "D=1", "D=5", "D=10", "D=15", "D=20"]);
+    let mut by_d: Vec<Vec<f64>> = vec![Vec::new(); DS.len()];
+    for pref in degraded_cases() {
+        let mut row = vec![pref.label()];
+        for (di, &d) in DS.iter().enumerate() {
+            let cfg = ExperimentConfig {
+                aggregator: AggregatorKind::FedAvg,
+                model: "resnet-10".into(),
+                penalty: d,
+                ..ExperimentConfig::default()
+            };
+            let c = baselines::compare(&cfg, pref, &SEEDS3).unwrap();
+            row.push(pct_std(c.improvement_pct, c.improvement_std));
+            by_d[di].push(c.improvement_pct);
+        }
+        t.row(row);
+    }
+    t.print("Fig. 8 — degraded cases vs penalty factor D (speech + FedAvg, 3 seeds)");
+
+    let means: Vec<f64> = by_d.iter().map(|v| stats::mean(v)).collect();
+    println!("\nmean over degraded cases per D: {:?}",
+        means.iter().map(|m| format!("{m:+.1}%")).collect::<Vec<_>>());
+
+    // Shape: the penalty (D = 10) must not be worse than no penalty, and
+    // moderate D values must stay stable (bounded spread).
+    assert!(
+        means[2] >= means[0] - 2.0,
+        "D=10 must mitigate vs D=1: {:+.2}% vs {:+.2}%",
+        means[2],
+        means[0]
+    );
+    let spread = means[1..]
+        .iter()
+        .fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+        - means[1..].iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    assert!(spread < 40.0, "moderate-D region should be stable, spread {spread:.1}");
+    println!("shape checks PASSED: penalty mitigates degradation, stable for moderate D");
+}

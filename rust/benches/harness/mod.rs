@@ -1,0 +1,151 @@
+//! Micro/macro-bench harness substrate (no `criterion` offline).
+//!
+//! Two kinds of bench targets share this module:
+//! * **paper benches** (one per table/figure) that regenerate the paper's
+//!   rows/series — they use [`table`] printing helpers and run the sim
+//!   engine through the public library API;
+//! * **perf benches** (`perf_micro`) that time hot paths with
+//!   warmup + repeated samples and report mean/std/min like criterion.
+//!
+//! Every bench is an ordinary binary (`[[bench]] harness = false`), so
+//! `cargo bench` runs them all and their stdout is the artifact.
+
+#![allow(dead_code)] // each bench binary uses a subset of the harness
+
+use std::time::Instant;
+
+/// Timing statistics of one benchmarked operation.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Sample {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    /// Ops/second at the measured mean.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` with warmup; auto-scales iterations to ~`budget_ms` total.
+pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> Sample {
+    // Warmup + calibration: how many iters fit in one sample (~budget/20)?
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    loop {
+        std::hint::black_box(f());
+        iters += 1;
+        if t0.elapsed().as_millis() as u64 >= budget_ms / 10 + 1 || iters >= 1_000_000 {
+            break;
+        }
+    }
+    let per_iter_ns = (t0.elapsed().as_nanos() as f64 / iters as f64).max(1.0);
+    let sample_target_ns = (budget_ms as f64 * 1e6) / 20.0;
+    let iters_per_sample = ((sample_target_ns / per_iter_ns) as u64).clamp(1, 10_000_000);
+
+    let samples = 20;
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            std::hint::black_box(f());
+        }
+        times.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / times.len() as f64;
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let s = Sample {
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+        iters_per_sample,
+        samples,
+    };
+    println!(
+        "bench {name:<40} mean {:>12.3} µs  std {:>10.3} µs  min {:>12.3} µs  ({} it/sample)",
+        s.mean_ns / 1e3,
+        s.std_ns / 1e3,
+        s.min_ns / 1e3,
+        iters_per_sample
+    );
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Table printing (paper-style output)
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer for paper rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|h| h.len().max(8)).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(&cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// `1.23e9`-style compact scientific formatting used across the tables.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+/// `12.3% (4.5%)` mean-with-std formatting (paper's Table 4 convention).
+pub fn pct_std(mean: f64, std: f64) -> String {
+    format!("{mean:+.2}% ({std:.2}%)")
+}
+
+/// Standard seed set for 3-run averaging, matching the paper's "results
+/// are averaged over three runs".
+pub const SEEDS3: [u64; 3] = [101, 202, 303];

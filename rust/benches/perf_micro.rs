@@ -1,0 +1,176 @@
+//! §Perf microbenches: the L3 hot paths, plus the PJRT execute path when
+//! artifacts are present. Targets (DESIGN.md §8):
+//! * aggregation weighted-sum ≥ 1 GB/s,
+//! * FedTune observe_round < 1 µs,
+//! * simulator ≥ 1e6 rounds/s equivalent (sub-µs per round),
+//! * runtime marshal overhead < 5% of execute time.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
+use fedtune::coordinator::selection::Selector;
+use fedtune::data::DatasetProfile;
+use fedtune::engine::sim::{SimEngine, SimParams};
+use fedtune::engine::FlEngine;
+use fedtune::fedtune::{FedTune, FedTuneConfig};
+use fedtune::model::{ParamSpec, ParamVec};
+use fedtune::overhead::{CostModel, Costs, Preference};
+use fedtune::util::json::Json;
+use fedtune::util::rng::Rng;
+use harness::bench;
+
+fn specs_of(n: usize) -> Vec<ParamSpec> {
+    vec![ParamSpec { name: "w".into(), shape: vec![n] }]
+}
+
+fn main() {
+    // --- aggregation throughput (FedAvg over 20 updates of 80k params,
+    //     the paper's speech/ResNet-10 configuration) -----------------------
+    let n = 80_000;
+    let specs = specs_of(n);
+    let mut rng = Rng::new(1);
+    let updates: Vec<ClientUpdate> = (0..20)
+        .map(|i| ClientUpdate {
+            params: ParamVec::init_he(&specs, &mut rng),
+            n: 10 + i,
+            tau: 5,
+        })
+        .collect();
+    let mut global = ParamVec::init_he(&specs, &mut rng);
+    let s = bench("fedavg_aggregate_20x80k", 300, || {
+        let mut agg = Aggregator::new(AggregatorKind::FedAvg);
+        agg.aggregate(&mut global, &updates);
+    });
+    let bytes = (20 * n * 4) as f64;
+    let gbs = bytes / (s.mean_ns * 1e-9) / 1e9;
+    println!("  → aggregation throughput: {gbs:.2} GB/s (target ≥ 1)");
+    assert!(gbs > 1.0, "aggregation below 1 GB/s: {gbs:.2}");
+
+    let s = bench("fednova_aggregate_20x80k", 300, || {
+        let mut agg = Aggregator::new(AggregatorKind::FedNova);
+        agg.aggregate(&mut global, &updates);
+    });
+    println!("  → fednova round: {:.1} µs", s.mean_us());
+
+    let s = bench("fedadagrad_aggregate_20x80k", 300, || {
+        let mut agg = Aggregator::new(AggregatorKind::fedadagrad_paper());
+        agg.aggregate(&mut global, &updates);
+    });
+    println!("  → fedadagrad round: {:.1} µs", s.mean_us());
+
+    // --- FedTune controller step -----------------------------------------
+    let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+    let mut ft =
+        FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20).unwrap();
+    let mut round = 0usize;
+    let mut acc = 0.0f64;
+    let mut cum = Costs::ZERO;
+    let s = bench("fedtune_observe_round", 200, || {
+        round += 1;
+        acc += 0.02;
+        if acc > 0.85 {
+            acc = 0.0; // reset so activations keep firing
+            ft = FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20).unwrap();
+            cum = Costs::ZERO;
+        }
+        cum.add(&Costs { comp_t: 3.0, trans_t: 1.0, comp_l: 9.0, trans_l: 20.0 });
+        ft.observe_round(round, acc, cum)
+    });
+    println!("  → fedtune step: {:.3} µs (target < 1 µs)", s.mean_us());
+    assert!(s.mean_us() < 1.0, "fedtune step too slow: {:.3} µs", s.mean_us());
+
+    // --- selection over the full speech population ------------------------
+    let profile = DatasetProfile::speech();
+    let mut srng = Rng::new(2);
+    let sizes = fedtune::data::ClientSizes::generate(&profile, &mut srng).sizes;
+    let mut sel_rng = Rng::new(3);
+    let s = bench("selection_uniform_20_of_2112", 200, || {
+        Selector::UniformRandom.select(&sizes, 20, &mut sel_rng)
+    });
+    println!("  → selection: {:.2} µs", s.mean_us());
+
+    // --- one simulated round (engine only) --------------------------------
+    let mut eng = SimEngine::new(&profile, SimParams::default(), 4);
+    let parts: Vec<usize> = (0..20).collect();
+    let s = bench("sim_engine_round", 200, || {
+        eng.run_round(&parts, 2.0).unwrap()
+    });
+    println!("  → sim round: {:.3} µs", s.mean_us());
+
+    // --- overhead accounting ----------------------------------------------
+    let cm = CostModel::from_flops_params(12_500_000, 79_700);
+    let psizes: Vec<usize> = (0..20).map(|i| 1 + i * 7 % 300).collect();
+    let s = bench("cost_model_round", 100, || cm.round_costs(&psizes, 2.0));
+    println!("  → cost accounting: {:.4} µs", s.mean_us());
+
+    // --- JSON substrate -----------------------------------------------------
+    let manifest_like = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = &manifest_like {
+        let s = bench("json_parse_manifest", 200, || Json::parse(text).unwrap());
+        println!("  → manifest parse: {:.1} µs ({} bytes)", s.mean_us(), text.len());
+    }
+
+    // --- PJRT execute path (needs artifacts) -------------------------------
+    match fedtune::runtime::Runtime::new("artifacts") {
+        Ok(mut rt) => {
+            rt.load_model("mlp-s").unwrap();
+            let meta = rt.model_meta("mlp-s").unwrap().clone();
+            let mut prng = Rng::new(5);
+            let mut params = ParamVec::init_he(&meta.params, &mut prng);
+            let b = meta.train.batch;
+            let dim = meta.input_dim();
+            let x: Vec<f32> = (0..b * dim).map(|_| prng.gauss() as f32).collect();
+            let y: Vec<i32> = (0..b).map(|i| (i % meta.classes) as i32).collect();
+            let mask = vec![1.0f32; b];
+            let s = bench("pjrt_train_step_mlp_s", 2000, || {
+                rt.train_step("mlp-s", &mut params, &x, &y, &mask, 0.01).unwrap()
+            });
+            println!(
+                "  → single-step: {:.2} ms; marshal overhead {:.2}% (chunked path is the target)",
+                s.mean_ms(),
+                rt.stats.overhead_fraction() * 100.0
+            );
+
+            // The hot path: scan-of-K-steps chunk (largest K). Fresh
+            // runtime so the overhead fraction reflects only this path.
+            let mut rt2 = fedtune::runtime::Runtime::new("artifacts").unwrap();
+            rt2.load_model("mlp-s").unwrap();
+            let k = *rt2.chunk_sizes("mlp-s").last().unwrap_or(&1);
+            let xs: Vec<f32> =
+                (0..k * b * dim).map(|_| prng.gauss() as f32).collect();
+            let ys: Vec<i32> =
+                (0..k * b).map(|i| (i % meta.classes) as i32).collect();
+            let masks = vec![1.0f32; k * b];
+            let s = bench("pjrt_train_chunk_mlp_s(K=max)", 2000, || {
+                rt2.train_chunk("mlp-s", k, &mut params, &xs, &ys, &masks, 0.01)
+                    .unwrap()
+            });
+            println!(
+                "  → train_chunk: {:.2} ms for {k} steps ({:.2} ms/step); exec {:.3}s vs marshal {:.3}s ({:.2}% overhead, target < 5%)",
+                s.mean_ms(),
+                s.mean_ms() / k as f64,
+                rt2.stats.exec_secs(),
+                rt2.stats.marshal_secs(),
+                rt2.stats.overhead_fraction() * 100.0
+            );
+            assert!(
+                rt2.stats.overhead_fraction() < 0.05,
+                "chunked marshalling overhead {:.2}% exceeds 5%",
+                rt2.stats.overhead_fraction() * 100.0
+            );
+
+            let be = meta.eval.batch;
+            let xe: Vec<f32> = (0..be * dim).map(|_| prng.gauss() as f32).collect();
+            let ye: Vec<i32> = (0..be).map(|i| (i % meta.classes) as i32).collect();
+            let maske = vec![1.0f32; be];
+            let s = bench("pjrt_eval_step_mlp_s", 2000, || {
+                rt.eval_step("mlp-s", &params, &xe, &ye, &maske).unwrap()
+            });
+            println!("  → eval_step: {:.2} ms", s.mean_ms());
+        }
+        Err(_) => println!("(no artifacts/: skipping PJRT microbenches — run `make artifacts`)"),
+    }
+
+    println!("\nperf_micro PASSED all targets");
+}

@@ -1,0 +1,60 @@
+//! Paper Table 2: the model-complexity ladder (FLOPs, params, accuracy).
+//!
+//! Prints the static ResNet ladder (the paper's numbers, which drive the
+//! simulator's cost constants) next to our AOT MLP ladder from the
+//! manifest (which drives the real engine), and verifies that the MLP
+//! ladder's FLOP *ratios* mirror the paper's within 2%.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use fedtune::model::{ladder, Manifest};
+use harness::Table;
+
+fn main() {
+    let mut t = Table::new(&[
+        "model", "#FLOP (x1e6)", "#Params (x1e3)", "Accuracy", "ratio",
+    ]);
+    let base = ladder::RESNET_LADDER[0].flops_per_sample as f64;
+    for l in ladder::RESNET_LADDER {
+        t.row(vec![
+            l.name.to_string(),
+            format!("{:.1}", l.flops_per_sample as f64 / 1e6),
+            format!("{:.1}", l.param_count as f64 / 1e3),
+            format!("{:.2}", l.max_accuracy),
+            format!("x{:.2}", l.flops_per_sample as f64 / base),
+        ]);
+    }
+    t.print("Table 2 (paper): ResNet ladder — simulator cost constants");
+
+    match Manifest::load("artifacts") {
+        Ok(man) => {
+            let mut t2 = Table::new(&["model", "#FLOP", "#Params", "ratio", "paper ratio"]);
+            let base = man.models["mlp-s"].flops_per_sample as f64;
+            let paper: Vec<f64> = ladder::RESNET_LADDER
+                .iter()
+                .map(|l| {
+                    l.flops_per_sample as f64
+                        / ladder::RESNET_LADDER[0].flops_per_sample as f64
+                })
+                .collect();
+            for (name, pr) in ladder::MLP_LADDER.iter().zip(&paper) {
+                let m = &man.models[*name];
+                let ratio = m.flops_per_sample as f64 / base;
+                assert!(
+                    (ratio - pr).abs() / pr < 0.02,
+                    "{name}: ratio {ratio:.3} vs paper {pr:.3}"
+                );
+                t2.row(vec![
+                    name.to_string(),
+                    m.flops_per_sample.to_string(),
+                    m.param_count.to_string(),
+                    format!("x{ratio:.2}"),
+                    format!("x{pr:.2}"),
+                ]);
+            }
+            t2.print("Table 2 (ours): AOT MLP ladder — ratio check PASSED");
+        }
+        Err(_) => println!("\n(no artifacts/; run `make artifacts` to check the AOT ladder)"),
+    }
+}

@@ -1,0 +1,307 @@
+//! Server-side aggregation algorithms (paper §5.1 evaluates three).
+//!
+//! All three take the participants' locally-trained parameter vectors and
+//! produce the next global model. Local training is identical plain SGD in
+//! every case — the methods differ only in the server update, which is why
+//! the real engine can share one AOT `train_step` artifact across them:
+//!
+//! * **FedAvg** (McMahan et al. '17): wᵍ ← Σ (n_k / n) w_k.
+//! * **FedNova** (Wang et al. '20): normalized averaging — each client's
+//!   *update direction* d_k = (wᵍ − w_k) / τ_k is data-weighted, then
+//!   scaled by the effective step count τ_eff = Σ p_k τ_k, removing the
+//!   objective inconsistency of heterogeneous local-step counts.
+//! * **FedAdagrad** (Reddi et al. '21): server-side adaptive step on the
+//!   average delta Δ = Σ p_k (w_k − wᵍ):
+//!   m ← β₁ m + (1−β₁) Δ;  v ← v + Δ²;  wᵍ ← wᵍ + η · m / (√v + τ).
+//!   (Paper §5.2 uses η = 0.1, β₁ = 0, τ = 1e-3.)
+
+use crate::model::ParamVec;
+
+/// Which aggregation algorithm a run uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggregatorKind {
+    FedAvg,
+    FedNova,
+    /// Server learning rate, momentum β₁ and adaptivity floor τ.
+    FedAdagrad { lr: f64, beta1: f64, tau: f64 },
+}
+
+impl AggregatorKind {
+    /// The paper's FedAdagrad hyper-parameters (§5.2).
+    pub fn fedadagrad_paper() -> AggregatorKind {
+        AggregatorKind::FedAdagrad { lr: 0.1, beta1: 0.0, tau: 1e-3 }
+    }
+
+    pub fn by_name(name: &str) -> Option<AggregatorKind> {
+        match name {
+            "fedavg" => Some(AggregatorKind::FedAvg),
+            "fednova" => Some(AggregatorKind::FedNova),
+            "fedadagrad" => Some(Self::fedadagrad_paper()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregatorKind::FedAvg => "fedavg",
+            AggregatorKind::FedNova => "fednova",
+            AggregatorKind::FedAdagrad { .. } => "fedadagrad",
+        }
+    }
+}
+
+/// One participant's contribution to a round.
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    /// Locally-trained parameters after E passes.
+    pub params: ParamVec,
+    /// Client dataset size n_k (FedAvg/Nova weights).
+    pub n: usize,
+    /// Number of local SGD steps τ_k actually taken (FedNova).
+    pub tau: usize,
+}
+
+/// Stateful server aggregator.
+#[derive(Debug, Clone)]
+pub struct Aggregator {
+    kind: AggregatorKind,
+    /// FedAdagrad state.
+    momentum: Option<ParamVec>,
+    accumulator: Option<ParamVec>,
+    rounds: usize,
+}
+
+impl Aggregator {
+    pub fn new(kind: AggregatorKind) -> Aggregator {
+        Aggregator { kind, momentum: None, accumulator: None, rounds: 0 }
+    }
+
+    pub fn kind(&self) -> AggregatorKind {
+        self.kind
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Fold a round of client updates into the global model (in place).
+    ///
+    /// Panics on empty updates (the coordinator never submits an empty
+    /// round) and on layout mismatches (programmer error).
+    pub fn aggregate(&mut self, global: &mut ParamVec, updates: &[ClientUpdate]) {
+        assert!(!updates.is_empty(), "aggregate with no updates");
+        let total_n: usize = updates.iter().map(|u| u.n).sum();
+        assert!(total_n > 0, "aggregate with zero total data points");
+        self.rounds += 1;
+
+        match self.kind {
+            AggregatorKind::FedAvg => {
+                let mut next = global.clone();
+                next.clear();
+                for u in updates {
+                    next.axpy((u.n as f64 / total_n as f64) as f32, &u.params);
+                }
+                *global = next;
+            }
+            AggregatorKind::FedNova => {
+                // d = Σ p_k (wᵍ − w_k)/τ_k, applied with τ_eff = Σ p_k τ_k.
+                let mut d = global.clone();
+                d.clear();
+                let mut tau_eff = 0.0f64;
+                for u in updates {
+                    let p_k = u.n as f64 / total_n as f64;
+                    let tau_k = u.tau.max(1) as f64;
+                    tau_eff += p_k * tau_k;
+                    let delta = global.delta(&u.params); // wᵍ − w_k
+                    d.axpy((p_k / tau_k) as f32, &delta);
+                }
+                global.axpy(-(tau_eff as f32), &d);
+            }
+            AggregatorKind::FedAdagrad { lr, beta1, tau } => {
+                // Δ = Σ p_k (w_k − wᵍ)
+                let mut delta = global.clone();
+                delta.clear();
+                for u in updates {
+                    let p_k = u.n as f64 / total_n as f64;
+                    let diff = u.params.delta(global); // w_k − wᵍ
+                    delta.axpy(p_k as f32, &diff);
+                }
+                let m = self
+                    .momentum
+                    .get_or_insert_with(|| {
+                        let mut z = global.clone();
+                        z.clear();
+                        z
+                    });
+                for (mi, di) in m.data.iter_mut().zip(&delta.data) {
+                    *mi = (beta1 as f32) * *mi + (1.0 - beta1 as f32) * di;
+                }
+                let v = self
+                    .accumulator
+                    .get_or_insert_with(|| {
+                        let mut z = global.clone();
+                        z.clear();
+                        z
+                    });
+                for (vi, di) in v.data.iter_mut().zip(&delta.data) {
+                    *vi += di * di;
+                }
+                for ((g, mi), vi) in
+                    global.data.iter_mut().zip(&m.data).zip(&v.data)
+                {
+                    *g += (lr as f32) * mi / (vi.sqrt() + tau as f32);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSpec;
+    use crate::util::rng::Rng;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w".into(), shape: vec![4, 2] },
+            ParamSpec { name: "b".into(), shape: vec![2] },
+        ]
+    }
+
+    fn rand_params(seed: u64) -> ParamVec {
+        ParamVec::init_he(&specs(), &mut Rng::new(seed))
+    }
+
+    fn upd(params: ParamVec, n: usize, tau: usize) -> ClientUpdate {
+        ClientUpdate { params, n, tau }
+    }
+
+    #[test]
+    fn kind_lookup() {
+        assert_eq!(AggregatorKind::by_name("fedavg"), Some(AggregatorKind::FedAvg));
+        assert_eq!(AggregatorKind::by_name("fednova"), Some(AggregatorKind::FedNova));
+        assert!(matches!(
+            AggregatorKind::by_name("fedadagrad"),
+            Some(AggregatorKind::FedAdagrad { .. })
+        ));
+        assert!(AggregatorKind::by_name("fedsgd").is_none());
+        assert_eq!(AggregatorKind::FedNova.name(), "fednova");
+    }
+
+    #[test]
+    fn fedavg_of_identical_params_is_identity() {
+        let p = rand_params(1);
+        let mut global = rand_params(2);
+        let mut agg = Aggregator::new(AggregatorKind::FedAvg);
+        agg.aggregate(
+            &mut global,
+            &[upd(p.clone(), 3, 5), upd(p.clone(), 9, 5)],
+        );
+        assert!(global.delta(&p).l2_norm() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_weights_by_data_size() {
+        let mut a = ParamVec::zeros(&specs());
+        a.data.iter_mut().for_each(|x| *x = 0.0);
+        let mut b = ParamVec::zeros(&specs());
+        b.data.iter_mut().for_each(|x| *x = 10.0);
+        let mut global = ParamVec::zeros(&specs());
+        let mut agg = Aggregator::new(AggregatorKind::FedAvg);
+        // 1 part zeros : 3 parts tens → 7.5 everywhere.
+        agg.aggregate(&mut global, &[upd(a, 25, 1), upd(b, 75, 1)]);
+        assert!(global.data.iter().all(|&x| (x - 7.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn fednova_equal_taus_reduces_to_fedavg() {
+        // With identical τ_k, FedNova == FedAvg exactly.
+        let global0 = rand_params(3);
+        let u1 = rand_params(4);
+        let u2 = rand_params(5);
+
+        let mut g_nova = global0.clone();
+        Aggregator::new(AggregatorKind::FedNova).aggregate(
+            &mut g_nova,
+            &[upd(u1.clone(), 10, 7), upd(u2.clone(), 30, 7)],
+        );
+
+        let mut g_avg = global0.clone();
+        Aggregator::new(AggregatorKind::FedAvg).aggregate(
+            &mut g_avg,
+            &[upd(u1, 10, 7), upd(u2, 30, 7)],
+        );
+
+        assert!(g_nova.delta(&g_avg).l2_norm() < 1e-4, "{}", g_nova.delta(&g_avg).l2_norm());
+    }
+
+    #[test]
+    fn fednova_normalizes_heterogeneous_taus() {
+        // A client that ran 10x more steps must NOT dominate the update
+        // direction under FedNova (it would under FedAvg).
+        let global0 = ParamVec::zeros(&specs());
+        // Client 1 moved far (many steps), client 2 moved a little.
+        let mut far = ParamVec::zeros(&specs());
+        far.data.iter_mut().for_each(|x| *x = -10.0);
+        let mut near = ParamVec::zeros(&specs());
+        near.data.iter_mut().for_each(|x| *x = -1.0);
+
+        let mut g = global0.clone();
+        Aggregator::new(AggregatorKind::FedNova).aggregate(
+            &mut g,
+            &[upd(far, 50, 10), upd(near, 50, 1)],
+        );
+        // Normalized per-step movement is 1.0 for both; τ_eff = 5.5 ⇒
+        // each coordinate moves by −5.5 · mean(1,1) = −5.5.
+        assert!(
+            g.data.iter().all(|&x| (x + 5.5).abs() < 1e-5),
+            "got {:?}",
+            &g.data[..4]
+        );
+    }
+
+    #[test]
+    fn fedadagrad_moves_toward_clients_and_adapts() {
+        let specs = specs();
+        let global0 = ParamVec::zeros(&specs);
+        let mut target = ParamVec::zeros(&specs);
+        target.data.iter_mut().for_each(|x| *x = 1.0);
+
+        let mut g = global0.clone();
+        let mut agg = Aggregator::new(AggregatorKind::fedadagrad_paper());
+        let step1 = {
+            agg.aggregate(&mut g, &[upd(target.clone(), 10, 1)]);
+            g.data[0]
+        };
+        assert!(step1 > 0.0, "must move toward clients");
+        // Second identical round: accumulator grew ⇒ smaller step.
+        let before = g.data[0];
+        agg.aggregate(&mut g, &[upd(target.clone(), 10, 1)]);
+        let step2 = g.data[0] - before;
+        assert!(step2 < step1, "adagrad steps must shrink: {step1} vs {step2}");
+        assert_eq!(agg.rounds(), 2);
+    }
+
+    #[test]
+    fn fedadagrad_beta1_zero_has_no_momentum_carryover() {
+        // With β₁=0 and a zero delta round, the update is ~zero.
+        let specs = specs();
+        let mut g = ParamVec::zeros(&specs);
+        let mut agg = Aggregator::new(AggregatorKind::fedadagrad_paper());
+        let mut t = ParamVec::zeros(&specs);
+        t.data.iter_mut().for_each(|x| *x = 1.0);
+        agg.aggregate(&mut g, &[upd(t, 10, 1)]);
+        let before = g.clone();
+        // Clients report exactly the global: delta = 0.
+        agg.aggregate(&mut g, &[upd(before.clone(), 10, 1)]);
+        assert!(g.delta(&before).l2_norm() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_round_panics() {
+        let mut g = ParamVec::zeros(&specs());
+        Aggregator::new(AggregatorKind::FedAvg).aggregate(&mut g, &[]);
+    }
+}

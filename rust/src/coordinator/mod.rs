@@ -1,0 +1,218 @@
+//! The FL server / leader loop.
+//!
+//! [`Server`] owns the round loop: select participants, run the round on
+//! the engine, account the four overheads (Eqs. 2–5), feed the schedule
+//! (fixed baseline or FedTune) and record the trace. It is generic over
+//! [`FlEngine`] — the table/figure benches drive it with the simulator,
+//! the end-to-end example with the real PJRT engine. This module is the
+//! "shared code" half of DESIGN.md's engine duality: everything the paper
+//! contributes runs here, identically, for both engines.
+
+pub mod selection;
+
+use anyhow::Result;
+
+use crate::engine::FlEngine;
+use crate::fedtune::schedule::Schedule;
+use crate::overhead::{CostModel, Costs};
+use crate::trace::{RoundRecord, Trace};
+use crate::util::rng::Rng;
+
+use selection::Selector;
+
+/// Why a run stopped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopReason {
+    TargetReached,
+    MaxRounds,
+}
+
+/// Everything a finished run reports.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub stop: StopReason,
+    pub rounds: usize,
+    pub final_accuracy: f64,
+    /// Cumulative overheads at stop (Eqs. 2–5).
+    pub costs: Costs,
+    /// (M, E) at stop — Table 4's "Final M / Final E" columns.
+    pub final_m: usize,
+    pub final_e: usize,
+    pub trace: Trace,
+}
+
+/// Server configuration independent of the engine.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub target_accuracy: f64,
+    pub max_rounds: usize,
+    pub cost_model: CostModel,
+    pub selector: Selector,
+    pub seed: u64,
+}
+
+/// The coordinator.
+pub struct Server<'e, E: FlEngine> {
+    engine: &'e mut E,
+    cfg: ServerConfig,
+    schedule: Schedule,
+    rng: Rng,
+}
+
+impl<'e, E: FlEngine> Server<'e, E> {
+    pub fn new(engine: &'e mut E, cfg: ServerConfig, schedule: Schedule) -> Server<'e, E> {
+        let rng = Rng::new(cfg.seed ^ 0xc00d);
+        Server { engine, cfg, schedule, rng }
+    }
+
+    /// Drive rounds until the target accuracy or the round cap.
+    pub fn run(mut self) -> Result<RunResult> {
+        let mut trace = Trace::new();
+        let mut cum = Costs::ZERO;
+        let mut accuracy = 0.0;
+        let mut round = 0;
+
+        let stop = loop {
+            if accuracy >= self.cfg.target_accuracy {
+                break StopReason::TargetReached;
+            }
+            if round >= self.cfg.max_rounds {
+                break StopReason::MaxRounds;
+            }
+            round += 1;
+
+            let (m, e) = self.schedule.current();
+            let participants = self.cfg.selector.select(
+                self.engine.client_sizes(),
+                m,
+                &mut self.rng,
+            );
+            let sizes: Vec<usize> = participants
+                .iter()
+                .map(|&k| self.engine.client_sizes()[k])
+                .collect();
+
+            let outcome = self.engine.run_round(&participants, e as f64)?;
+            accuracy = outcome.accuracy;
+
+            // Eqs. 2–5 — overheads accounted centrally, not per-engine.
+            let delta = self.cfg.cost_model.round_costs(&sizes, e as f64);
+            cum.add(&delta);
+
+            let decision = self.schedule.observe_round(round, accuracy, cum);
+
+            trace.push(RoundRecord {
+                round,
+                m,
+                e: e as f64,
+                accuracy,
+                train_loss: outcome.train_loss,
+                costs: cum,
+                fedtune_activated: decision.is_some(),
+            });
+            if let Some(d) = decision {
+                log::debug!(
+                    "round {round}: fedtune → M={} E={} (ΔM={:.3}, ΔE={:.3}, I={:.3})",
+                    d.m, d.e, d.delta_m, d.delta_e, d.comparison
+                );
+            }
+        };
+
+        let (final_m, final_e) = self.schedule.current();
+        Ok(RunResult {
+            stop,
+            rounds: round,
+            final_accuracy: accuracy,
+            costs: cum,
+            final_m,
+            final_e,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetProfile;
+    use crate::engine::sim::{SimEngine, SimParams};
+    use crate::fedtune::{FedTune, FedTuneConfig};
+    use crate::overhead::Preference;
+
+    fn cfg(target: f64, max_rounds: usize) -> ServerConfig {
+        ServerConfig {
+            target_accuracy: target,
+            max_rounds,
+            cost_model: CostModel::from_flops_params(12_500_000, 79_700),
+            selector: Selector::UniformRandom,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn fixed_run_reaches_target() {
+        let profile = DatasetProfile::speech();
+        let mut eng = SimEngine::new(&profile, SimParams::default(), 1);
+        let server = Server::new(&mut eng, cfg(0.8, 5000), Schedule::Fixed { m: 20, e: 20 });
+        let r = server.run().unwrap();
+        assert_eq!(r.stop, StopReason::TargetReached);
+        assert!(r.final_accuracy >= 0.8);
+        assert_eq!((r.final_m, r.final_e), (20, 20));
+        assert_eq!(r.trace.len(), r.rounds);
+        // Costs are monotone across the trace.
+        for w in r.trace.records().windows(2) {
+            assert!(w[1].costs.comp_t >= w[0].costs.comp_t);
+            assert!(w[1].costs.trans_t > w[0].costs.trans_t);
+        }
+    }
+
+    #[test]
+    fn round_cap_stops_runaways() {
+        let profile = DatasetProfile::speech();
+        let mut eng = SimEngine::new(&profile, SimParams::default(), 2);
+        let server = Server::new(&mut eng, cfg(0.99, 50), Schedule::Fixed { m: 5, e: 1 });
+        let r = server.run().unwrap();
+        assert_eq!(r.stop, StopReason::MaxRounds);
+        assert_eq!(r.rounds, 50);
+    }
+
+    #[test]
+    fn fedtune_run_changes_hyperparams() {
+        let profile = DatasetProfile::speech();
+        let mut eng = SimEngine::new(&profile, SimParams::default(), 3);
+        let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+        let ft = FedTune::new(
+            pref,
+            FedTuneConfig::paper_defaults(eng.num_clients()),
+            20,
+            20,
+        )
+        .unwrap();
+        // Pure-CompL runs drive M → 1, whose per-round progress is ~30x
+        // slower; give the round cap the paper-scale headroom.
+        let server = Server::new(&mut eng, cfg(0.8, 30_000), Schedule::Tuned(Box::new(ft)));
+        let r = server.run().unwrap();
+        assert_eq!(r.stop, StopReason::TargetReached);
+        // Pure-CompL preference must pull M down hard (paper Table 4: →1).
+        assert!(
+            r.final_m < 20,
+            "CompL preference should shrink M, got {}",
+            r.final_m
+        );
+    }
+
+    #[test]
+    fn trans_t_counts_rounds_exactly() {
+        let profile = DatasetProfile::speech();
+        let mut eng = SimEngine::new(&profile, SimParams::default(), 4);
+        let cm = CostModel { c1: 1.0, c2: 1.0, c3: 1.0, c4: 1.0 };
+        let server = Server::new(
+            &mut eng,
+            ServerConfig { cost_model: cm, ..cfg(0.5, 1000) },
+            Schedule::Fixed { m: 10, e: 1 },
+        );
+        let r = server.run().unwrap();
+        assert_eq!(r.costs.trans_t, r.rounds as f64); // Eq. 3 with C2 = 1
+        assert_eq!(r.costs.trans_l, (r.rounds * 10) as f64); // Eq. 5
+    }
+}

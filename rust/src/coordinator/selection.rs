@@ -1,0 +1,183 @@
+//! Participant selection policies.
+//!
+//! The paper trains with uniform random selection (§3: "randomly select a
+//! small fraction of clients in each training round") and lists guided
+//! selection (Oort) and deadline/first-M variants as extensions (§6).
+//! All three are implemented; the evaluation benches use
+//! [`Selector::UniformRandom`] to match the paper.
+
+use crate::util::rng::Rng;
+
+/// How the server picks the M participants of a round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Selector {
+    /// Paper default: uniform without replacement.
+    UniformRandom,
+    /// Oort-lite (§6 Extension 1): sample biased toward data-rich clients
+    /// (probability ∝ n_k^exploit), trading fairness for statistical
+    /// utility per round.
+    Guided { exploit: f64 },
+    /// Deadline variant (§6): uniformly sample, then keep only clients
+    /// whose n_k ≤ deadline-equivalent size (slow clients never finish).
+    Deadline { max_size: usize },
+}
+
+impl Selector {
+    pub fn by_name(name: &str) -> Option<Selector> {
+        match name {
+            "random" => Some(Selector::UniformRandom),
+            "guided" => Some(Selector::Guided { exploit: 1.0 }),
+            _ => None,
+        }
+    }
+
+    /// Select min(m, available) distinct client indices.
+    pub fn select(&self, sizes: &[usize], m: usize, rng: &mut Rng) -> Vec<usize> {
+        let k = sizes.len();
+        if k == 0 || m == 0 {
+            return Vec::new();
+        }
+        let m = m.min(k);
+        match *self {
+            Selector::UniformRandom => rng.sample_indices(k, m),
+            Selector::Guided { exploit } => {
+                // Weighted reservoir-ish: draw without replacement with
+                // probability ∝ n_k^exploit.
+                let mut weights: Vec<f64> =
+                    sizes.iter().map(|&n| (n.max(1) as f64).powf(exploit)).collect();
+                let mut picked = Vec::with_capacity(m);
+                for _ in 0..m {
+                    let i = rng.categorical(&weights);
+                    picked.push(i);
+                    weights[i] = 0.0;
+                }
+                picked
+            }
+            Selector::Deadline { max_size } => {
+                let eligible: Vec<usize> = (0..k)
+                    .filter(|&i| sizes[i] <= max_size)
+                    .collect();
+                if eligible.is_empty() {
+                    // Nobody can meet the deadline: fall back to the
+                    // single fastest client rather than stalling training.
+                    let fastest = (0..k).min_by_key(|&i| sizes[i]).unwrap();
+                    return vec![fastest];
+                }
+                let mm = m.min(eligible.len());
+                rng.sample_indices(eligible.len(), mm)
+                    .into_iter()
+                    .map(|j| eligible[j])
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes() -> Vec<usize> {
+        vec![1, 5, 10, 50, 100, 2, 8, 300, 40, 3]
+    }
+
+    #[test]
+    fn uniform_selects_exactly_m_distinct() {
+        let s = sizes();
+        let mut rng = Rng::new(1);
+        for m in 1..=s.len() {
+            let picked = Selector::UniformRandom.select(&s, m, &mut rng);
+            assert_eq!(picked.len(), m);
+            let mut p = picked.clone();
+            p.sort_unstable();
+            p.dedup();
+            assert_eq!(p.len(), m);
+        }
+    }
+
+    #[test]
+    fn m_larger_than_population_is_clamped() {
+        let s = sizes();
+        let mut rng = Rng::new(2);
+        let picked = Selector::UniformRandom.select(&s, 100, &mut rng);
+        assert_eq!(picked.len(), s.len());
+    }
+
+    #[test]
+    fn empty_population() {
+        let mut rng = Rng::new(3);
+        assert!(Selector::UniformRandom.select(&[], 5, &mut rng).is_empty());
+        assert!(Selector::UniformRandom.select(&sizes(), 0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn uniform_is_unbiased_ish() {
+        let s = vec![1usize; 20];
+        let mut rng = Rng::new(4);
+        let mut counts = vec![0usize; 20];
+        for _ in 0..5000 {
+            for i in Selector::UniformRandom.select(&s, 5, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        // Each client expected 1250 picks; allow ±15%.
+        for &c in &counts {
+            assert!((1060..1440).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn guided_prefers_data_rich_clients() {
+        let s = sizes(); // client 7 has 300 points
+        let mut rng = Rng::new(5);
+        let mut hits = 0;
+        for _ in 0..1000 {
+            if (Selector::Guided { exploit: 1.0 })
+                .select(&s, 3, &mut rng)
+                .contains(&7)
+            {
+                hits += 1;
+            }
+        }
+        // 300/519 of the mass: should appear in nearly every 3-draw.
+        assert!(hits > 800, "hits {hits}");
+    }
+
+    #[test]
+    fn guided_returns_distinct() {
+        let s = sizes();
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let p = Selector::Guided { exploit: 2.0 }.select(&s, 6, &mut rng);
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), p.len());
+        }
+    }
+
+    #[test]
+    fn deadline_excludes_slow_clients() {
+        let s = sizes();
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let p = Selector::Deadline { max_size: 10 }.select(&s, 5, &mut rng);
+            assert!(!p.is_empty());
+            assert!(p.iter().all(|&i| s[i] <= 10), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn deadline_fallback_when_nobody_qualifies() {
+        let s = vec![50usize, 80, 60];
+        let mut rng = Rng::new(8);
+        let p = Selector::Deadline { max_size: 10 }.select(&s, 2, &mut rng);
+        assert_eq!(p, vec![0]); // fastest client
+    }
+
+    #[test]
+    fn name_lookup() {
+        assert_eq!(Selector::by_name("random"), Some(Selector::UniformRandom));
+        assert!(Selector::by_name("oort").is_none());
+    }
+}

@@ -1,0 +1,38 @@
+//! Synthetic federated-dataset substrate.
+//!
+//! The paper's datasets (Google speech-to-command, EMNIST, CIFAR-100) are
+//! not available in this offline environment; per DESIGN.md §2 we replace
+//! them with generators that reproduce the three FL data properties the
+//! paper's system model actually depends on:
+//!
+//! * **massively distributed** — thousands of clients, small mean n_k;
+//! * **unbalanced** — power-law client sizes (speech: 1..316, Fig. 2a);
+//! * **non-IID** — Dirichlet(α) per-client label distributions.
+//!
+//! Two fidelity levels:
+//! * [`ClientSizes`] — just the n_k per client. This is all Eqs. (2)–(5)
+//!   and the simulator engine need.
+//! * [`FederatedDataset`] — actual features/labels for the real PJRT
+//!   engine: Gaussian class prototypes + per-client concept shift, so the
+//!   task is genuinely learnable and genuinely non-IID.
+
+pub mod profiles;
+pub mod synth;
+
+pub use profiles::DatasetProfile;
+pub use synth::{ClientSizes, FederatedDataset, TestSet};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reexports_compose() {
+        let prof = DatasetProfile::speech().scaled(0.05);
+        let sizes = ClientSizes::generate(&prof, &mut Rng::new(1));
+        assert_eq!(sizes.len(), prof.train_clients);
+        let ds = FederatedDataset::generate(&prof, 42);
+        assert_eq!(ds.clients.len(), prof.train_clients);
+    }
+}

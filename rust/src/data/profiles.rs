@@ -1,0 +1,160 @@
+//! Dataset profiles mirroring the paper's three benchmarks (§5.1).
+
+/// How client dataset sizes are drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeDistribution {
+    /// Bounded power law P(n) ∝ n^(−a), n ∈ [lo, hi] — the
+    /// speech-to-command shape (Fig. 2a: many 1-point clients, tail to 316).
+    PowerLaw { lo: usize, hi: usize, exponent: f64 },
+    /// Log-normal-ish moderate spread (EMNIST writers).
+    LogNormal { median: usize, sigma: f64, max: usize },
+    /// Every client has exactly n points (paper's CIFAR-100 split: 50).
+    Fixed { n: usize },
+}
+
+/// Static description of one synthetic federated dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetProfile {
+    pub name: String,
+    /// Flattened per-sample feature dimension.
+    pub input_dim: usize,
+    pub classes: usize,
+    pub train_clients: usize,
+    pub test_clients: usize,
+    pub size_dist: SizeDistribution,
+    /// Dirichlet concentration for per-client label skew (smaller = more
+    /// non-IID).
+    pub dirichlet_alpha: f64,
+    /// Class-prototype separation (controls task difficulty / reachable
+    /// accuracy of the synthetic task).
+    pub separation: f64,
+    /// Paper's per-dataset target accuracy (§5.1).
+    pub target_accuracy: f64,
+    /// Paper's mini-batch size for this dataset (§5.1).
+    pub batch_size: usize,
+    /// Task ceiling for the simulator: the best accuracy any model reaches
+    /// on this task (cifar-100's is low — the paper set a 0.2 target
+    /// because of exactly this). Combined as min(model a_max, ceiling).
+    pub sim_ceiling: f64,
+}
+
+impl DatasetProfile {
+    /// Speech-to-command stand-in: 2112 train / 506 test clients, 35
+    /// classes, power-law sizes 1..316, target accuracy 0.8.
+    pub fn speech() -> DatasetProfile {
+        DatasetProfile {
+            name: "speech".into(),
+            input_dim: 1024, // 32x32 spectrogram
+            classes: 35,
+            train_clients: 2112,
+            test_clients: 506,
+            size_dist: SizeDistribution::PowerLaw { lo: 1, hi: 316, exponent: 1.6 },
+            dirichlet_alpha: 0.3,
+            separation: 8.0,
+            target_accuracy: 0.8,
+            batch_size: 5,
+            sim_ceiling: 1.0,
+        }
+    }
+
+    /// EMNIST stand-in: ~70/30 writer split, 62 classes, target 0.7.
+    pub fn emnist() -> DatasetProfile {
+        DatasetProfile {
+            name: "emnist".into(),
+            input_dim: 784, // 28x28
+            classes: 62,
+            train_clients: 700,
+            test_clients: 300,
+            size_dist: SizeDistribution::LogNormal { median: 60, sigma: 0.8, max: 400 },
+            dirichlet_alpha: 0.5,
+            separation: 7.0,
+            target_accuracy: 0.7,
+            batch_size: 10,
+            sim_ceiling: 0.78,
+        }
+    }
+
+    /// CIFAR-100 stand-in: 1000 train / 200 test users × 50 points, 100
+    /// classes, target 0.2 (the paper's reduced threshold).
+    pub fn cifar() -> DatasetProfile {
+        DatasetProfile {
+            name: "cifar".into(),
+            input_dim: 3072, // 32x32x3
+            classes: 100,
+            train_clients: 1000,
+            test_clients: 200,
+            size_dist: SizeDistribution::Fixed { n: 50 },
+            dirichlet_alpha: 0.2,
+            separation: 9.0, // hard 100-way task: low target (0.2) like the paper
+            target_accuracy: 0.2,
+            batch_size: 10,
+            sim_ceiling: 0.45,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DatasetProfile> {
+        match name {
+            "speech" => Some(Self::speech()),
+            "emnist" => Some(Self::emnist()),
+            "cifar" => Some(Self::cifar()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<DatasetProfile> {
+        vec![Self::speech(), Self::emnist(), Self::cifar()]
+    }
+
+    /// Shrink client counts (and cap sizes) for fast tests / CPU-real runs
+    /// while preserving the distributional shape.
+    pub fn scaled(&self, factor: f64) -> DatasetProfile {
+        assert!(factor > 0.0 && factor <= 1.0);
+        let mut p = self.clone();
+        p.train_clients = ((self.train_clients as f64 * factor).round() as usize).max(4);
+        p.test_clients = ((self.test_clients as f64 * factor).round() as usize).max(2);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_parameters() {
+        let s = DatasetProfile::speech();
+        assert_eq!((s.train_clients, s.test_clients), (2112, 506));
+        assert_eq!(s.classes, 35);
+        assert_eq!(s.target_accuracy, 0.8);
+        assert_eq!(s.batch_size, 5);
+        let c = DatasetProfile::cifar();
+        assert_eq!(c.size_dist, SizeDistribution::Fixed { n: 50 });
+        assert_eq!(c.target_accuracy, 0.2);
+        let e = DatasetProfile::emnist();
+        assert_eq!(e.classes, 62);
+        assert_eq!(e.target_accuracy, 0.7);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in ["speech", "emnist", "cifar"] {
+            assert_eq!(DatasetProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(DatasetProfile::by_name("imagenet").is_none());
+        assert_eq!(DatasetProfile::all().len(), 3);
+    }
+
+    #[test]
+    fn scaling_preserves_shape() {
+        let p = DatasetProfile::speech().scaled(0.1);
+        assert_eq!(p.train_clients, 211);
+        assert_eq!(p.classes, 35);
+        assert_eq!(p.size_dist, DatasetProfile::speech().size_dist);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scale_rejects_zero() {
+        DatasetProfile::speech().scaled(0.0);
+    }
+}

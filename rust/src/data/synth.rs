@@ -1,0 +1,295 @@
+//! Synthetic federated data generation (sizes, features, labels).
+
+use crate::util::rng::Rng;
+
+use super::profiles::{DatasetProfile, SizeDistribution};
+
+/// Just the per-client dataset sizes n_k — all that the overhead
+/// equations and the simulator need.
+#[derive(Debug, Clone)]
+pub struct ClientSizes {
+    pub sizes: Vec<usize>,
+}
+
+impl ClientSizes {
+    pub fn generate(profile: &DatasetProfile, rng: &mut Rng) -> ClientSizes {
+        let sizes = (0..profile.train_clients)
+            .map(|_| draw_size(&profile.size_dist, rng))
+            .collect();
+        ClientSizes { sizes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sizes.is_empty()
+    }
+
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    pub fn max(&self) -> usize {
+        self.sizes.iter().copied().max().unwrap_or(0)
+    }
+}
+
+fn draw_size(dist: &SizeDistribution, rng: &mut Rng) -> usize {
+    match *dist {
+        SizeDistribution::PowerLaw { lo, hi, exponent } => {
+            rng.power_law(lo as f64, hi as f64, exponent).round().max(lo as f64) as usize
+        }
+        SizeDistribution::LogNormal { median, sigma, max } => {
+            let x = (median as f64) * (rng.gauss() * sigma).exp();
+            (x.round() as usize).clamp(1, max)
+        }
+        SizeDistribution::Fixed { n } => n,
+    }
+}
+
+/// One client's local shard (features flattened row-major).
+#[derive(Debug, Clone)]
+pub struct ClientData {
+    pub id: usize,
+    pub x: Vec<f32>, // n * input_dim
+    pub y: Vec<i32>, // n
+}
+
+impl ClientData {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+}
+
+/// Held-out evaluation set (pooled across test clients, as the paper pools
+/// the 506 test speakers).
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub input_dim: usize,
+}
+
+impl TestSet {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+}
+
+/// Fully materialized federated dataset for the real engine.
+///
+/// Generation model: each class c has a Gaussian prototype
+/// p_c ~ N(0, I) · separation / sqrt(dim); a sample of class c on client k
+/// is p_c + shift_k + N(0, I), where shift_k is a small per-client concept
+/// shift. Labels per client follow Dirichlet(α) over classes — together
+/// these give unbalanced, non-IID, learnable data.
+#[derive(Debug, Clone)]
+pub struct FederatedDataset {
+    pub profile: DatasetProfile,
+    pub clients: Vec<ClientData>,
+    pub test: TestSet,
+    /// n_k per client (same order as `clients`).
+    pub sizes: Vec<usize>,
+}
+
+impl FederatedDataset {
+    pub fn generate(profile: &DatasetProfile, seed: u64) -> FederatedDataset {
+        let mut rng = Rng::new(seed);
+        let dim = profile.input_dim;
+        let scale = profile.separation / (dim as f64).sqrt();
+
+        // Class prototypes.
+        let mut protos: Vec<Vec<f32>> = Vec::with_capacity(profile.classes);
+        let mut proto_rng = rng.fork(PROTO_TAG);
+        for _ in 0..profile.classes {
+            protos.push(
+                (0..dim).map(|_| (proto_rng.gauss() * scale) as f32).collect(),
+            );
+        }
+
+        let mut clients = Vec::with_capacity(profile.train_clients);
+        let mut sizes = Vec::with_capacity(profile.train_clients);
+        for id in 0..profile.train_clients {
+            let mut crng = rng.fork(id as u64 + 1);
+            let n = draw_size(&profile.size_dist, &mut crng);
+            let label_dist = crng.dirichlet(profile.dirichlet_alpha, profile.classes);
+            // Small per-client concept shift (non-IID features, not only
+            // labels) — kept below the class separation so the task stays
+            // globally learnable.
+            let shift: Vec<f32> = (0..dim)
+                .map(|_| (crng.gauss() * scale * 0.15) as f32)
+                .collect();
+            let mut x = Vec::with_capacity(n * dim);
+            let mut y = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = crng.categorical(&label_dist);
+                y.push(c as i32);
+                let p = &protos[c];
+                for d in 0..dim {
+                    x.push(p[d] + shift[d] + crng.gauss() as f32);
+                }
+            }
+            sizes.push(n);
+            clients.push(ClientData { id, x, y });
+        }
+
+        // Test pool: IID draws from the prototypes (no client shift) —
+        // global accuracy, like the paper's held-out speakers.
+        let mut trng = rng.fork(0xdead_beef);
+        let per_test_client = 8usize;
+        let n_test = profile.test_clients * per_test_client;
+        let mut x = Vec::with_capacity(n_test * dim);
+        let mut y = Vec::with_capacity(n_test);
+        for _ in 0..n_test {
+            let c = trng.below(profile.classes);
+            y.push(c as i32);
+            let p = &protos[c];
+            for d in 0..dim {
+                x.push(p[d] + trng.gauss() as f32);
+            }
+        }
+
+        FederatedDataset {
+            profile: profile.clone(),
+            clients,
+            test: TestSet { x, y, input_dim: dim },
+            sizes,
+        }
+    }
+}
+
+/// Fork tag for the prototype stream (distinct from client ids + 1 and the
+/// test-pool tag below).
+const PROTO_TAG: u64 = 0x7070_7070;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_speech() -> DatasetProfile {
+        let mut p = DatasetProfile::speech().scaled(0.02);
+        p.input_dim = 16; // keep tests fast
+        p
+    }
+
+    #[test]
+    fn sizes_respect_distribution_bounds() {
+        let mut rng = Rng::new(3);
+        let s = ClientSizes::generate(&DatasetProfile::speech(), &mut rng);
+        assert_eq!(s.len(), 2112);
+        assert!(s.sizes.iter().all(|&n| (1..=316).contains(&n)));
+        // Heavy head: median well below mean (Fig. 2a shape).
+        let mut v = s.sizes.clone();
+        v.sort_unstable();
+        let median = v[v.len() / 2] as f64;
+        let mean = s.total() as f64 / s.len() as f64;
+        assert!(median < mean, "median {median} !< mean {mean}");
+    }
+
+    #[test]
+    fn fixed_sizes_are_fixed() {
+        let mut rng = Rng::new(4);
+        let s = ClientSizes::generate(&DatasetProfile::cifar(), &mut rng);
+        assert!(s.sizes.iter().all(|&n| n == 50));
+    }
+
+    #[test]
+    fn dataset_shapes_consistent() {
+        let p = small_speech();
+        let ds = FederatedDataset::generate(&p, 11);
+        assert_eq!(ds.clients.len(), p.train_clients);
+        for (c, &n) in ds.clients.iter().zip(&ds.sizes) {
+            assert_eq!(c.n(), n);
+            assert_eq!(c.x.len(), n * p.input_dim);
+            assert!(c.y.iter().all(|&y| (y as usize) < p.classes));
+        }
+        assert_eq!(ds.test.x.len(), ds.test.n() * p.input_dim);
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let p = small_speech();
+        let a = FederatedDataset::generate(&p, 7);
+        let b = FederatedDataset::generate(&p, 7);
+        assert_eq!(a.sizes, b.sizes);
+        assert_eq!(a.clients[0].x, b.clients[0].x);
+        let c = FederatedDataset::generate(&p, 8);
+        assert_ne!(a.clients[0].y, c.clients[0].y);
+    }
+
+    #[test]
+    fn labels_are_non_iid_across_clients() {
+        let mut p = small_speech();
+        p.dirichlet_alpha = 0.1;
+        p.size_dist = SizeDistribution::Fixed { n: 40 };
+        let ds = FederatedDataset::generate(&p, 13);
+        // Chebyshev-ish check: per-client top-class share must far exceed
+        // the uniform share for at least half the clients.
+        let uniform = 1.0 / p.classes as f64;
+        let mut skewed = 0;
+        for c in &ds.clients {
+            let mut counts = vec![0usize; p.classes];
+            for &y in &c.y {
+                counts[y as usize] += 1;
+            }
+            let top = *counts.iter().max().unwrap() as f64 / c.n() as f64;
+            if top > 4.0 * uniform {
+                skewed += 1;
+            }
+        }
+        assert!(skewed * 2 >= ds.clients.len(), "{skewed}/{}", ds.clients.len());
+    }
+
+    #[test]
+    fn classes_are_separable_in_feature_space() {
+        // Nearest-prototype classification on the *test* pool should beat
+        // chance by a wide margin — guarantees the synthetic task is
+        // learnable by the real engine.
+        let mut p = small_speech();
+        p.input_dim = 32;
+        let ds = FederatedDataset::generate(&p, 17);
+        // Recover per-class means from train clients.
+        let dim = p.input_dim;
+        let mut means = vec![vec![0.0f64; dim]; p.classes];
+        let mut counts = vec![0usize; p.classes];
+        for c in &ds.clients {
+            for (i, &y) in c.y.iter().enumerate() {
+                counts[y as usize] += 1;
+                for d in 0..dim {
+                    means[y as usize][d] += c.x[i * dim + d] as f64;
+                }
+            }
+        }
+        for (m, &n) in means.iter_mut().zip(&counts) {
+            if n > 0 {
+                m.iter_mut().for_each(|v| *v /= n as f64);
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.test.n() {
+            let xi = &ds.test.x[i * dim..(i + 1) * dim];
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, m) in means.iter().enumerate() {
+                if counts[c] == 0 {
+                    continue;
+                }
+                let d2: f64 = xi
+                    .iter()
+                    .zip(m)
+                    .map(|(&a, &b)| (a as f64 - b).powi(2))
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == ds.test.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.test.n() as f64;
+        let chance = 1.0 / p.classes as f64;
+        assert!(acc > 5.0 * chance, "acc {acc} vs chance {chance}");
+    }
+}

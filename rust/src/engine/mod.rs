@@ -1,0 +1,42 @@
+//! Execution engines behind one trait.
+//!
+//! The coordinator (round loop, selection, overhead accounting, FedTune)
+//! is engine-agnostic. Two engines implement [`FlEngine`]:
+//!
+//! * [`sim::SimEngine`] — calibrated convergence simulator; used by every
+//!   table/figure bench (the paper's sweeps need thousands of rounds ×
+//!   dozens of configurations).
+//! * [`real::RealEngine`] — genuine FL training through the AOT PJRT
+//!   artifacts (Pallas-kernel MLPs, real SGD, real aggregation); used by
+//!   the end-to-end example and integration tests.
+//!
+//! The split is DESIGN.md §1's "engine duality": FedTune sees only
+//! (accuracy, Costs) either way.
+
+pub mod real;
+pub mod sim;
+
+/// What a round reports back to the coordinator.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundOutcome {
+    /// Test accuracy after the round's aggregation.
+    pub accuracy: f64,
+    /// Mean training loss across the round's local steps (diagnostic).
+    pub train_loss: f64,
+}
+
+/// One federated-learning execution backend.
+pub trait FlEngine {
+    /// Engine label for traces ("sim" / "real").
+    fn name(&self) -> &'static str;
+
+    /// Total number of registered clients K.
+    fn num_clients(&self) -> usize;
+
+    /// Per-client dataset sizes n_k (len == num_clients).
+    fn client_sizes(&self) -> &[usize];
+
+    /// Execute one training round with the given participants and local
+    /// pass count `e` (fractional passes allowed, §3.2's E = 0.5).
+    fn run_round(&mut self, participants: &[usize], e: f64) -> anyhow::Result<RoundOutcome>;
+}

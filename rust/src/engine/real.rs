@@ -1,0 +1,324 @@
+//! Real FL training engine: genuine SGD through the AOT PJRT artifacts.
+//!
+//! Every participant clones the global model, runs `E` passes of local
+//! mini-batch SGD by executing the Pallas-kernel `train_step` HLO, and
+//! the server folds the resulting parameter vectors with the configured
+//! [`Aggregator`]. Accuracy is measured by executing `eval_step` over the
+//! held-out pool. Python is never involved — the artifacts were lowered
+//! once at build time.
+//!
+//! Fractional passes: `E = 0.5` trains on ⌈0.5 · batches-per-pass⌉
+//! mini-batches, matching §3.2's "half of each client's local data".
+
+use anyhow::{Context, Result};
+
+use crate::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
+use crate::data::FederatedDataset;
+use crate::model::ParamVec;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use super::{FlEngine, RoundOutcome};
+
+/// Configuration for a real run.
+#[derive(Debug, Clone)]
+pub struct RealEngineConfig {
+    pub model: String,
+    pub lr: f32,
+    pub aggregator: AggregatorKind,
+    /// Cap on eval pool size per round (0 = use everything).
+    pub eval_subsample: usize,
+    pub seed: u64,
+}
+
+/// The PJRT-backed engine.
+pub struct RealEngine {
+    runtime: Runtime,
+    dataset: FederatedDataset,
+    cfg: RealEngineConfig,
+    global: ParamVec,
+    aggregator: Aggregator,
+    rng: Rng,
+    rounds_run: usize,
+    /// Cumulative local SGD steps executed (τ total) — perf accounting.
+    pub total_steps: u64,
+}
+
+impl RealEngine {
+    pub fn new(
+        mut runtime: Runtime,
+        dataset: FederatedDataset,
+        cfg: RealEngineConfig,
+    ) -> Result<RealEngine> {
+        runtime.load_model(&cfg.model)?;
+        let meta = runtime.model_meta(&cfg.model)?.clone();
+        anyhow::ensure!(
+            meta.input_dim() == dataset.profile.input_dim,
+            "model {} expects input dim {}, dataset {} has {}",
+            meta.name,
+            meta.input_dim(),
+            dataset.profile.name,
+            dataset.profile.input_dim
+        );
+        anyhow::ensure!(
+            meta.classes == dataset.profile.classes,
+            "model/dataset class mismatch: {} vs {}",
+            meta.classes,
+            dataset.profile.classes
+        );
+        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        let global = ParamVec::init_he(&meta.params, &mut rng);
+        let aggregator = Aggregator::new(cfg.aggregator);
+        Ok(RealEngine {
+            runtime,
+            dataset,
+            cfg,
+            global,
+            aggregator,
+            rng,
+            rounds_run: 0,
+            total_steps: 0,
+        })
+    }
+
+    pub fn global_params(&self) -> &ParamVec {
+        &self.global
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn rounds_run(&self) -> usize {
+        self.rounds_run
+    }
+
+    /// Local training for one client: E passes of mini-batch SGD.
+    /// Returns (trained params, steps taken, mean loss).
+    fn train_client(
+        &mut self,
+        client_idx: usize,
+        e: f64,
+    ) -> Result<(ParamVec, usize, f64)> {
+        let meta = self.runtime.model_meta(&self.cfg.model)?.clone();
+        let b = meta.train.batch;
+        let dim = meta.input_dim();
+        let client = &self.dataset.clients[client_idx];
+        let n = client.n();
+        anyhow::ensure!(n > 0, "client {client_idx} has no data");
+
+        let batches_per_pass = n.div_ceil(b);
+        let total_batches = ((e * batches_per_pass as f64).ceil() as usize).max(1);
+
+        // Shuffled index order, re-drawn per round.
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+
+        let mut params = self.global.clone();
+
+        let cx = client.x.clone(); // borrow gymnastics: runtime is &mut self
+        let cy = client.y.clone();
+
+        // Fast path: scan-of-K-steps artifacts amortize the host↔device
+        // parameter round-trip over K mini-batches (§Perf: 19-22% → <5%
+        // marshalling overhead). Greedy planner: largest K that does not
+        // overshoot the remaining batches by more than half its size
+        // (bounding padded no-op compute), tail padded with zero masks.
+        let chunk_sizes = self.runtime.chunk_sizes(&self.cfg.model);
+        if !chunk_sizes.is_empty() {
+            let mut loss_sum = 0.0f64;
+            let mut chunks = 0usize;
+            let mut step = 0usize;
+            while step < total_batches {
+                let remaining = total_batches - step;
+                let k = *chunk_sizes
+                    .iter()
+                    .rev()
+                    .find(|&&k| remaining >= k / 2 + 1)
+                    .unwrap_or(&chunk_sizes[0]);
+                let in_chunk = remaining.min(k);
+                let mut xs = vec![0.0f32; k * b * dim];
+                let mut ys = vec![0i32; k * b];
+                let mut masks = vec![0.0f32; k * b];
+                for s in 0..in_chunk {
+                    fill_batch(
+                        &mut xs[s * b * dim..(s + 1) * b * dim],
+                        &mut ys[s * b..(s + 1) * b],
+                        &mut masks[s * b..(s + 1) * b],
+                        &cx,
+                        &cy,
+                        &order,
+                        (step + s) * b,
+                        dim,
+                    );
+                }
+                let loss = self.runtime.train_chunk(
+                    &self.cfg.model,
+                    k,
+                    &mut params,
+                    &xs,
+                    &ys,
+                    &masks,
+                    self.cfg.lr,
+                )?;
+                loss_sum += loss as f64;
+                chunks += 1;
+                step += in_chunk;
+                self.total_steps += in_chunk as u64;
+            }
+            return Ok((params, total_batches, loss_sum / chunks.max(1) as f64));
+        }
+
+        // Fallback: per-batch dispatch against the single-step artifact.
+        let mut x = vec![0.0f32; b * dim];
+        let mut y = vec![0i32; b];
+        let mut mask = vec![0.0f32; b];
+        let mut loss_sum = 0.0f64;
+
+        for step in 0..total_batches {
+            fill_batch(&mut x, &mut y, &mut mask, &cx, &cy, &order, step * b, dim);
+            let loss = self.runtime.train_step(
+                &self.cfg.model,
+                &mut params,
+                &x,
+                &y,
+                &mask,
+                self.cfg.lr,
+            )?;
+            loss_sum += loss as f64;
+            self.total_steps += 1;
+        }
+        Ok((params, total_batches, loss_sum / total_batches as f64))
+    }
+
+    /// Evaluate the global model on the held-out pool.
+    pub fn evaluate(&mut self) -> Result<f64> {
+        let meta = self.runtime.model_meta(&self.cfg.model)?.clone();
+        let b = meta.eval.batch;
+        let dim = meta.input_dim();
+        let test = &self.dataset.test;
+        let n_all = test.n();
+        let n = if self.cfg.eval_subsample > 0 {
+            n_all.min(self.cfg.eval_subsample)
+        } else {
+            n_all
+        };
+        anyhow::ensure!(n > 0, "empty test set");
+
+        let tx = test.x.clone();
+        let ty = test.y.clone();
+        let mut correct = 0.0f64;
+        let mut counted = 0usize;
+        let mut x = vec![0.0f32; b * dim];
+        let mut y = vec![0i32; b];
+        let mut mask = vec![0.0f32; b];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(b);
+            for row in 0..b {
+                if row < take {
+                    let src = i + row;
+                    x[row * dim..(row + 1) * dim]
+                        .copy_from_slice(&tx[src * dim..(src + 1) * dim]);
+                    y[row] = ty[src];
+                    mask[row] = 1.0;
+                } else {
+                    x[row * dim..(row + 1) * dim].fill(0.0);
+                    y[row] = 0;
+                    mask[row] = 0.0;
+                }
+            }
+            let global = self.global.clone();
+            let (c, _l) = self
+                .runtime
+                .eval_step(&self.cfg.model, &global, &x, &y, &mask)?;
+            correct += c as f64;
+            counted += take;
+            i += take;
+        }
+        Ok(correct / counted as f64)
+    }
+}
+
+/// Fill one mini-batch from a client shard.
+///
+/// * `n ≥ b`: cyclic walk over the shuffled `order` starting at `start` —
+///   every row is real data (mask 1).
+/// * `n < b`: the client's whole shard in the first `n` rows, zero padding
+///   (mask 0) after — padding is excluded from loss and gradients by the
+///   lowered computation.
+#[allow(clippy::too_many_arguments)]
+fn fill_batch(
+    x: &mut [f32],
+    y: &mut [i32],
+    mask: &mut [f32],
+    cx: &[f32],
+    cy: &[i32],
+    order: &[usize],
+    start: usize,
+    dim: usize,
+) {
+    let n = order.len();
+    let b = y.len();
+    for row in 0..b {
+        if n >= b {
+            let src = order[(start + row) % n];
+            x[row * dim..(row + 1) * dim]
+                .copy_from_slice(&cx[src * dim..(src + 1) * dim]);
+            y[row] = cy[src];
+            mask[row] = 1.0;
+        } else if row < n {
+            let src = order[row];
+            x[row * dim..(row + 1) * dim]
+                .copy_from_slice(&cx[src * dim..(src + 1) * dim]);
+            y[row] = cy[src];
+            mask[row] = 1.0;
+        } else {
+            x[row * dim..(row + 1) * dim].fill(0.0);
+            y[row] = 0;
+            mask[row] = 0.0;
+        }
+    }
+}
+
+impl FlEngine for RealEngine {
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    fn num_clients(&self) -> usize {
+        self.dataset.clients.len()
+    }
+
+    fn client_sizes(&self) -> &[usize] {
+        &self.dataset.sizes
+    }
+
+    fn run_round(&mut self, participants: &[usize], e: f64) -> Result<RoundOutcome> {
+        anyhow::ensure!(!participants.is_empty(), "round with no participants");
+        anyhow::ensure!(e > 0.0, "non-positive pass count {e}");
+
+        let mut updates = Vec::with_capacity(participants.len());
+        let mut loss_sum = 0.0;
+        for &k in participants {
+            anyhow::ensure!(k < self.num_clients(), "participant {k} out of range");
+            let (params, tau, loss) = self
+                .train_client(k, e)
+                .with_context(|| format!("training client {k}"))?;
+            loss_sum += loss;
+            updates.push(ClientUpdate { params, n: self.dataset.sizes[k], tau });
+        }
+        self.aggregator.aggregate(&mut self.global, &updates);
+        anyhow::ensure!(
+            self.global.all_finite(),
+            "global model diverged to non-finite values (round {})",
+            self.rounds_run
+        );
+        self.rounds_run += 1;
+        let accuracy = self.evaluate()?;
+        Ok(RoundOutcome {
+            accuracy,
+            train_loss: loss_sum / participants.len() as f64,
+        })
+    }
+}

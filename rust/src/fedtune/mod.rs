@@ -1,0 +1,439 @@
+//! The FedTune controller — the paper's Algorithm 1 (§4).
+//!
+//! FedTune adjusts (M, E) online, during a single training run, respecting
+//! the application preference (α, β, γ, δ) over CompT/TransT/CompL/TransL:
+//!
+//! 1. **Activation** (line 13): a decision is made whenever test accuracy
+//!    improved by at least ε since the last decision.
+//! 2. **Normalization** (line 14): the overheads accumulated in the
+//!    interval are divided by the accuracy gain — "cost per unit of
+//!    accuracy", making intervals comparable.
+//! 3. **Comparison** (line 15, Eq. 6): was the previous decision good?
+//! 4. **Slope update** (lines 16–25): the derivative estimates η (for M)
+//!    and ζ (for E) are refreshed for the overheads that *favored* the
+//!    direction just taken: η_t, η_q when M grew (CompT/TransT prefer
+//!    larger M per Table 3), η_z, η_v when it shrank; ζ_q, ζ_v when E
+//!    grew, ζ_t, ζ_z when it shrank. η/ζ are ratio slopes
+//!    |x_cur − x_prv| / |x_prv − x_prvprv|.
+//! 5. **Penalty** (lines 18–20): if the comparison says the last move was
+//!    bad (I > 0), the parameters *against* that move are multiplied by
+//!    D ≥ 1, pushing the next decision the other way (§5.4 sets D = 10).
+//! 6. **Decision** (Eqs. 10–11, lines 26–36): ΔM and ΔE combine the four
+//!    weighted slope terms with the Table 3 signs; M and E move ±1.
+//!
+//! The controller is engine-agnostic: it sees only (accuracy, cumulative
+//! Costs) and emits (M, E) — identical over the simulator and the real
+//! PJRT engine. Its own compute cost is a few dozen multiply-adds per
+//! activation ("lightweight", §4.3); `perf_micro` benchmarks it.
+
+use crate::overhead::{Costs, Preference};
+
+pub mod schedule;
+
+/// Table 3 signs: does overhead i ∈ {CompT, TransT, CompL, TransL} prefer
+/// larger M? (Eq. 10's (+1)/(−1) factors.)
+const SIGN_M: [f64; 4] = [1.0, 1.0, -1.0, -1.0];
+/// Does overhead i prefer larger E? (Eq. 11.)
+const SIGN_E: [f64; 4] = [-1.0, 1.0, -1.0, 1.0];
+
+/// Tuning limits and constants.
+#[derive(Debug, Clone, Copy)]
+pub struct FedTuneConfig {
+    /// Minimum accuracy improvement that triggers a decision (paper: 0.01).
+    pub eps: f64,
+    /// Penalty factor D ≥ 1 (paper: 10; D = 1 disables the mechanism).
+    pub penalty: f64,
+    pub m_min: usize,
+    pub m_max: usize,
+    pub e_min: usize,
+    pub e_max: usize,
+}
+
+impl FedTuneConfig {
+    pub fn paper_defaults(num_clients: usize) -> FedTuneConfig {
+        FedTuneConfig {
+            eps: 0.01,
+            penalty: 10.0,
+            m_min: 1,
+            m_max: num_clients,
+            e_min: 1,
+            // The paper lets E grow freely (traces reach ~49); cap safely.
+            e_max: 256,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.eps <= 0.0 {
+            return Err("eps must be > 0".into());
+        }
+        if self.penalty < 1.0 {
+            return Err("penalty factor D must be >= 1".into());
+        }
+        if self.m_min < 1 || self.m_min > self.m_max {
+            return Err(format!("bad M bounds [{}, {}]", self.m_min, self.m_max));
+        }
+        if self.e_min < 1 || self.e_min > self.e_max {
+            return Err(format!("bad E bounds [{}, {}]", self.e_min, self.e_max));
+        }
+        Ok(())
+    }
+}
+
+/// One FedTune decision, for traces and tests.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub round: usize,
+    pub m: usize,
+    pub e: usize,
+    pub delta_m: f64,
+    pub delta_e: f64,
+    /// Eq. 6 comparison of (prv, cur) — positive means the last move was bad.
+    pub comparison: f64,
+    pub accuracy: f64,
+}
+
+/// Controller state (one per training run).
+#[derive(Debug, Clone)]
+pub struct FedTune {
+    pref: Preference,
+    cfg: FedTuneConfig,
+
+    m_cur: usize,
+    e_cur: usize,
+    m_prv: usize,
+    e_prv: usize,
+
+    /// Accuracy at the last activation.
+    a_prv: f64,
+    /// Cumulative costs at the last activation boundary.
+    cum_prv: Costs,
+
+    /// Normalized per-interval overheads at the last activation
+    /// (x_prv in the paper's notation), indexed CompT/TransT/CompL/TransL.
+    x_prv: [f64; 4],
+    /// |x_prv − x_prvprv| — the denominators of the η/ζ ratio slopes.
+    diff_prv: [f64; 4],
+
+    /// η (M-direction slopes) and ζ (E-direction slopes).
+    eta: [f64; 4],
+    zeta: [f64; 4],
+
+    activations: usize,
+    decisions: Vec<Decision>,
+}
+
+impl FedTune {
+    pub fn new(pref: Preference, cfg: FedTuneConfig, m0: usize, e0: usize) -> Result<FedTune, String> {
+        cfg.validate()?;
+        if !(cfg.m_min..=cfg.m_max).contains(&m0) {
+            return Err(format!("M0 = {m0} outside [{}, {}]", cfg.m_min, cfg.m_max));
+        }
+        if !(cfg.e_min..=cfg.e_max).contains(&e0) {
+            return Err(format!("E0 = {e0} outside [{}, {}]", cfg.e_min, cfg.e_max));
+        }
+        Ok(FedTune {
+            pref,
+            cfg,
+            m_cur: m0,
+            e_cur: e0,
+            m_prv: m0,
+            e_prv: e0,
+            a_prv: 0.0,
+            cum_prv: Costs::ZERO,
+            x_prv: [0.0; 4],
+            diff_prv: [0.0; 4],
+            eta: [1.0; 4],
+            zeta: [1.0; 4],
+            activations: 0,
+            decisions: Vec::new(),
+        })
+    }
+
+    pub fn m(&self) -> usize {
+        self.m_cur
+    }
+
+    pub fn e(&self) -> usize {
+        self.e_cur
+    }
+
+    pub fn activations(&self) -> usize {
+        self.activations
+    }
+
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+
+    pub fn eta(&self) -> [f64; 4] {
+        self.eta
+    }
+
+    pub fn zeta(&self) -> [f64; 4] {
+        self.zeta
+    }
+
+    /// Feed one finished round. Returns a [`Decision`] when FedTune
+    /// activates (accuracy gain > ε) and changes (M, E).
+    pub fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        cumulative: Costs,
+    ) -> Option<Decision> {
+        let gain = accuracy - self.a_prv;
+        if gain <= self.cfg.eps {
+            return None; // line 13: not activated
+        }
+        self.activations += 1;
+
+        // Line 14: interval overheads normalized by the accuracy gain.
+        let interval = cumulative.minus(&self.cum_prv);
+        let x_cur: [f64; 4] = [
+            interval.comp_t / gain,
+            interval.trans_t / gain,
+            interval.comp_l / gain,
+            interval.trans_l / gain,
+        ];
+
+        if self.activations == 1 {
+            // Warm-up: nothing to compare against yet. Record and keep S.
+            self.a_prv = accuracy;
+            self.cum_prv = cumulative;
+            self.x_prv = x_cur;
+            return None;
+        }
+
+        // Line 15, Eq. 6 over the normalized interval overheads.
+        let prv = Costs {
+            comp_t: self.x_prv[0],
+            trans_t: self.x_prv[1],
+            comp_l: self.x_prv[2],
+            trans_l: self.x_prv[3],
+        };
+        let cur = Costs {
+            comp_t: x_cur[0],
+            trans_t: x_cur[1],
+            comp_l: x_cur[2],
+            trans_l: x_cur[3],
+        };
+        let comparison = prv.compare(&cur, &self.pref);
+
+        let diff_cur: [f64; 4] = [
+            (x_cur[0] - self.x_prv[0]).abs(),
+            (x_cur[1] - self.x_prv[1]).abs(),
+            (x_cur[2] - self.x_prv[2]).abs(),
+            (x_cur[3] - self.x_prv[3]).abs(),
+        ];
+
+        // Lines 16–25: refresh the slopes that favored the last move; on a
+        // bad move (I > 0) penalize the slopes *against* it.
+        let slope = |i: usize, diff_cur: &[f64; 4], diff_prv: &[f64; 4]| -> f64 {
+            if diff_prv[i] > 1e-30 {
+                (diff_cur[i] / diff_prv[i]).clamp(1e-3, 1e3)
+            } else {
+                1.0
+            }
+        };
+        let bad = comparison > 0.0;
+        if self.activations >= 3 {
+            if self.m_cur > self.m_prv {
+                // CompT (0) and TransT (1) favor larger M.
+                self.eta[0] = slope(0, &diff_cur, &self.diff_prv);
+                self.eta[1] = slope(1, &diff_cur, &self.diff_prv);
+                if bad {
+                    self.eta[2] *= self.cfg.penalty;
+                    self.eta[3] *= self.cfg.penalty;
+                }
+            } else {
+                self.eta[2] = slope(2, &diff_cur, &self.diff_prv);
+                self.eta[3] = slope(3, &diff_cur, &self.diff_prv);
+                if bad {
+                    self.eta[0] *= self.cfg.penalty;
+                    self.eta[1] *= self.cfg.penalty;
+                }
+            }
+            if self.e_cur > self.e_prv {
+                // TransT (1) and TransL (3) favor larger E.
+                self.zeta[1] = slope(1, &diff_cur, &self.diff_prv);
+                self.zeta[3] = slope(3, &diff_cur, &self.diff_prv);
+                if bad {
+                    self.zeta[0] *= self.cfg.penalty;
+                    self.zeta[2] *= self.cfg.penalty;
+                }
+            } else {
+                self.zeta[0] = slope(0, &diff_cur, &self.diff_prv);
+                self.zeta[2] = slope(2, &diff_cur, &self.diff_prv);
+                if bad {
+                    self.zeta[1] *= self.cfg.penalty;
+                    self.zeta[3] *= self.cfg.penalty;
+                }
+            }
+            // Keep slopes bounded — a long streak of penalties must not
+            // overflow and freeze the controller.
+            for v in self.eta.iter_mut().chain(self.zeta.iter_mut()) {
+                *v = v.clamp(1e-6, 1e12);
+            }
+        }
+
+        // Eqs. 10–11.
+        let w = self.pref.as_array();
+        let mut delta_m = 0.0;
+        let mut delta_e = 0.0;
+        for i in 0..4 {
+            let denom = x_cur[i].max(1e-30);
+            delta_m += SIGN_M[i] * w[i] * self.eta[i] * diff_cur[i] / denom;
+            delta_e += SIGN_E[i] * w[i] * self.zeta[i] * diff_cur[i] / denom;
+        }
+
+        // Lines 28–36: move each hyper-parameter by one, clamped.
+        self.m_prv = self.m_cur;
+        self.e_prv = self.e_cur;
+        self.m_cur = if delta_m > 0.0 {
+            (self.m_cur + 1).min(self.cfg.m_max)
+        } else {
+            self.m_cur.saturating_sub(1).max(self.cfg.m_min)
+        };
+        self.e_cur = if delta_e > 0.0 {
+            (self.e_cur + 1).min(self.cfg.e_max)
+        } else {
+            self.e_cur.saturating_sub(1).max(self.cfg.e_min)
+        };
+
+        // Line 39: rotate history.
+        self.a_prv = accuracy;
+        self.cum_prv = cumulative;
+        self.diff_prv = diff_cur;
+        self.x_prv = x_cur;
+
+        let d = Decision {
+            round,
+            m: self.m_cur,
+            e: self.e_cur,
+            delta_m,
+            delta_e,
+            comparison,
+            accuracy,
+        };
+        self.decisions.push(d);
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pref(a: f64, b: f64, g: f64, d: f64) -> Preference {
+        Preference::new(a, b, g, d).unwrap()
+    }
+
+    fn cfg() -> FedTuneConfig {
+        FedTuneConfig { eps: 0.01, penalty: 10.0, m_min: 1, m_max: 100, e_min: 1, e_max: 256 }
+    }
+
+    fn cum(t: f64, q: f64, z: f64, v: f64) -> Costs {
+        Costs { comp_t: t, trans_t: q, comp_l: z, trans_l: v }
+    }
+
+    #[test]
+    fn no_activation_below_eps() {
+        let mut ft = FedTune::new(pref(0.25, 0.25, 0.25, 0.25), cfg(), 20, 20).unwrap();
+        assert!(ft.observe_round(1, 0.005, cum(1.0, 1.0, 1.0, 1.0)).is_none());
+        assert_eq!(ft.activations(), 0);
+        assert_eq!((ft.m(), ft.e()), (20, 20));
+    }
+
+    #[test]
+    fn first_activation_warms_up_without_moving() {
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20).unwrap();
+        assert!(ft.observe_round(1, 0.05, cum(10.0, 1.0, 10.0, 20.0)).is_none());
+        assert_eq!(ft.activations(), 1);
+        assert_eq!((ft.m(), ft.e()), (20, 20));
+    }
+
+    #[test]
+    fn second_activation_moves_by_one() {
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20).unwrap();
+        ft.observe_round(1, 0.05, cum(10.0, 1.0, 10.0, 20.0));
+        let d = ft
+            .observe_round(2, 0.10, cum(30.0, 2.0, 20.0, 40.0))
+            .expect("second activation decides");
+        assert!(
+            (d.m as i64 - 20).abs() == 1,
+            "M must move by exactly 1, got {}",
+            d.m
+        );
+        assert!((d.e as i64 - 20).abs() == 1);
+    }
+
+    #[test]
+    fn bounds_are_respected() {
+        let c = FedTuneConfig { m_min: 1, m_max: 2, e_min: 1, e_max: 2, ..cfg() };
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 1, 1).unwrap();
+        let mut cumc = Costs::ZERO;
+        for r in 1..50 {
+            cumc.add(&cum(5.0, 1.0, 5.0, 1.0));
+            ft.observe_round(r, 0.02 * r as f64, cumc);
+            assert!((1..=2).contains(&ft.m()), "M escaped bounds: {}", ft.m());
+            assert!((1..=2).contains(&ft.e()), "E escaped bounds: {}", ft.e());
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(FedTuneConfig { eps: 0.0, ..cfg() }.validate().is_err());
+        assert!(FedTuneConfig { penalty: 0.5, ..cfg() }.validate().is_err());
+        assert!(FedTuneConfig { m_min: 5, m_max: 2, ..cfg() }.validate().is_err());
+        assert!(cfg().validate().is_ok());
+        assert!(FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 500, 20).is_err());
+    }
+
+    #[test]
+    fn pure_comp_t_preference_grows_m_when_comp_t_per_gain_shrinks() {
+        // Construct a stream where growing M visibly reduces normalized
+        // CompT; the controller should keep pushing M up (Table 3: CompT
+        // prefers larger M).
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 10, 10).unwrap();
+        let mut cumc = Costs::ZERO;
+        let mut acc = 0.0;
+        for r in 1..60 {
+            // Normalized CompT falls as M rises.
+            let per_round = cum(100.0 / ft.m() as f64, 1.0, ft.m() as f64, ft.m() as f64);
+            cumc.add(&per_round);
+            acc += 0.02;
+            ft.observe_round(r, acc, cumc);
+        }
+        assert!(ft.m() > 10, "expected M to grow, got {}", ft.m());
+    }
+
+    #[test]
+    fn decisions_are_recorded() {
+        let mut ft = FedTune::new(pref(0.25, 0.25, 0.25, 0.25), cfg(), 20, 20).unwrap();
+        let mut cumc = Costs::ZERO;
+        for r in 1..10 {
+            cumc.add(&cum(1.0 + r as f64, 1.0, 1.0, 1.0));
+            ft.observe_round(r, 0.05 * r as f64, cumc);
+        }
+        assert_eq!(ft.decisions().len(), ft.activations() - 1);
+        for d in ft.decisions() {
+            assert!(d.m >= 1 && d.e >= 1);
+            assert!(d.comparison.is_finite());
+        }
+    }
+
+    #[test]
+    fn slopes_stay_bounded_under_penalty_streak() {
+        let mut ft = FedTune::new(pref(0.0, 0.0, 1.0, 0.0), cfg(), 20, 20).unwrap();
+        let mut cumc = Costs::ZERO;
+        for r in 1..200 {
+            // Erratic costs force many bad comparisons → many penalties.
+            let wob = if r % 2 == 0 { 10.0 } else { 0.1 };
+            cumc.add(&cum(wob, wob, wob * 3.0, wob));
+            ft.observe_round(r, 0.02 * r as f64, cumc);
+        }
+        for v in ft.eta().iter().chain(ft.zeta().iter()) {
+            assert!(v.is_finite() && *v <= 1e12 && *v >= 1e-6);
+        }
+    }
+}

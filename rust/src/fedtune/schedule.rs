@@ -1,0 +1,89 @@
+//! Hyper-parameter schedule: fixed (M, E) baseline vs FedTune-controlled.
+//!
+//! The coordinator is agnostic to which one drives a run — the paper's
+//! baseline ("the practice of using fixed M and E", §5.1) is just the
+//! `Fixed` variant.
+
+use crate::overhead::Costs;
+
+use super::{Decision, FedTune};
+
+/// What sets (M, E) each round.
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    /// The paper's baseline: constants for the whole run.
+    Fixed { m: usize, e: usize },
+    /// FedTune (Algorithm 1).
+    Tuned(Box<FedTune>),
+}
+
+impl Schedule {
+    pub fn current(&self) -> (usize, usize) {
+        match self {
+            Schedule::Fixed { m, e } => (*m, *e),
+            Schedule::Tuned(ft) => (ft.m(), ft.e()),
+        }
+    }
+
+    /// Feed the finished round; fixed schedules never react.
+    pub fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        cumulative: Costs,
+    ) -> Option<Decision> {
+        match self {
+            Schedule::Fixed { .. } => None,
+            Schedule::Tuned(ft) => ft.observe_round(round, accuracy, cumulative),
+        }
+    }
+
+    pub fn is_tuned(&self) -> bool {
+        matches!(self, Schedule::Tuned(_))
+    }
+
+    pub fn fedtune(&self) -> Option<&FedTune> {
+        match self {
+            Schedule::Tuned(ft) => Some(ft),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fedtune::FedTuneConfig;
+    use crate::overhead::Preference;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut s = Schedule::Fixed { m: 20, e: 20 };
+        for r in 0..10 {
+            let d = s.observe_round(
+                r,
+                0.1 * r as f64,
+                Costs { comp_t: r as f64, trans_t: 1.0, comp_l: 1.0, trans_l: 1.0 },
+            );
+            assert!(d.is_none());
+            assert_eq!(s.current(), (20, 20));
+        }
+        assert!(!s.is_tuned());
+    }
+
+    #[test]
+    fn tuned_delegates() {
+        let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+        let ft =
+            FedTune::new(pref, FedTuneConfig::paper_defaults(100), 20, 20).unwrap();
+        let mut s = Schedule::Tuned(Box::new(ft));
+        assert_eq!(s.current(), (20, 20));
+        assert!(s.is_tuned());
+        let mut cum = Costs::ZERO;
+        for r in 1..20 {
+            cum.add(&Costs { comp_t: 2.0, trans_t: 1.0, comp_l: 3.0, trans_l: 4.0 });
+            s.observe_round(r, 0.03 * r as f64, cum);
+        }
+        assert!(s.fedtune().unwrap().activations() > 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! # FedTune — FL hyper-parameter tuning from a system perspective
+//!
+//! Rust + JAX + Pallas reproduction of *"Federated Learning Hyper-Parameter
+//! Tuning From A System Perspective"* (Zhang et al., 2022).
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — FL coordinator: round scheduling, participant
+//!   selection, aggregation (FedAvg/FedNova/FedAdagrad), the four system
+//!   overheads (CompT/TransT/CompL/TransL, Eqs. 2–5), and the FedTune
+//!   controller (Alg. 1, Eqs. 6–11).
+//! * **L2/L1 (python/, build-time only)** — JAX models whose dense layers
+//!   run through a tiled Pallas matmul kernel, AOT-lowered to HLO text and
+//!   executed here via PJRT ([`runtime`]).
+//!
+//! Quick tour: [`config::ExperimentConfig`] describes a run;
+//! [`engine::sim::SimEngine`] or [`engine::real::RealEngine`] execute
+//! rounds; [`coordinator::Server`] drives either engine to a target
+//! accuracy with or without [`fedtune::FedTune`] adjusting (M, E).
+
+pub mod util;
+
+pub mod aggregation;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod fedtune;
+pub mod metrics;
+pub mod model;
+pub mod overhead;
+pub mod runtime;
+pub mod trace;

@@ -1,0 +1,342 @@
+//! `fedtune` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//! * `run`            — execute one experiment (sim or real engine)
+//! * `grid`           — 15-preference FedTune-vs-baseline comparison
+//! * `check-runtime`  — load the AOT artifacts, run one train/eval step
+//! * `info`           — print manifest / ladder / profile inventory
+//!
+//! `fedtune <cmd> --help` lists per-command options.
+
+use anyhow::{bail, Context, Result};
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::baselines;
+use fedtune::config::{EngineKind, ExperimentConfig};
+use fedtune::coordinator::{Server, ServerConfig};
+use fedtune::data::FederatedDataset;
+use fedtune::engine::real::{RealEngine, RealEngineConfig};
+use fedtune::engine::FlEngine;
+use fedtune::fedtune::schedule::Schedule;
+use fedtune::fedtune::{FedTune, FedTuneConfig};
+use fedtune::model::{ladder, Manifest, ParamVec};
+use fedtune::overhead::{CostModel, Preference};
+use fedtune::util::cli::Cli;
+use fedtune::util::logging;
+use fedtune::util::rng::Rng;
+
+fn main() {
+    logging::init();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if args.is_empty() { "help".to_string() } else { args.remove(0) };
+    let result = match cmd.as_str() {
+        "run" => cmd_run(args),
+        "grid" => cmd_grid(args),
+        "check-runtime" => cmd_check_runtime(args),
+        "info" => cmd_info(args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown subcommand {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fedtune — FL hyper-parameter tuning from a system perspective\n\n\
+         USAGE: fedtune <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n  \
+         run            execute one experiment (see `run --help`)\n  \
+         grid           FedTune vs baseline over the 15-preference grid\n  \
+         check-runtime  smoke-test the AOT artifact → PJRT path\n  \
+         info           print models / datasets / artifact inventory\n"
+    );
+}
+
+fn common_cli(name: &str, about: &str) -> Cli {
+    Cli::new(name, about)
+        .opt("config", "", "JSON config file (CLI flags override it)")
+        .opt("dataset", "speech", "dataset profile: speech|emnist|cifar")
+        .opt("model", "resnet-10", "ladder model (sim) or manifest model (real)")
+        .opt("aggregator", "fedavg", "fedavg|fednova|fedadagrad")
+        .opt("engine", "sim", "sim|real")
+        .opt("m0", "20", "initial participants per round")
+        .opt("e0", "20", "initial local passes")
+        .opt("preference", "", "alpha,beta,gamma,delta (empty = fixed baseline)")
+        .opt("eps", "0.01", "FedTune activation threshold")
+        .opt("penalty", "10", "FedTune penalty factor D")
+        .opt("target", "0", "target accuracy (0 = dataset default)")
+        .opt("max-rounds", "20000", "round cap")
+        .opt("lr", "0.05", "client learning rate (real engine)")
+        .opt("seed", "1", "random seed")
+        .opt("scale", "1.0", "client-population scale factor (real engine)")
+        .opt("artifacts", "artifacts", "artifact directory (real engine)")
+        .opt("trace-out", "", "write per-round trace CSV here")
+}
+
+fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
+    let mut cfg = {
+        let path = cli.get_str("config");
+        if path.is_empty() {
+            ExperimentConfig::default()
+        } else {
+            ExperimentConfig::load(&path)?
+        }
+    };
+    cfg.dataset = cli.get_str("dataset");
+    cfg.model = cli.get_str("model");
+    cfg.aggregator = AggregatorKind::by_name(&cli.get_str("aggregator"))
+        .with_context(|| format!("unknown aggregator {:?}", cli.get_str("aggregator")))?;
+    cfg.engine = match cli.get_str("engine").as_str() {
+        "sim" => EngineKind::Sim,
+        "real" => EngineKind::Real,
+        other => bail!("unknown engine {other:?}"),
+    };
+    cfg.m0 = cli.get("m0").map_err(anyhow::Error::msg)?;
+    cfg.e0 = cli.get("e0").map_err(anyhow::Error::msg)?;
+    cfg.eps = cli.get("eps").map_err(anyhow::Error::msg)?;
+    cfg.penalty = cli.get("penalty").map_err(anyhow::Error::msg)?;
+    cfg.target_accuracy = cli.get("target").map_err(anyhow::Error::msg)?;
+    cfg.max_rounds = cli.get("max-rounds").map_err(anyhow::Error::msg)?;
+    cfg.lr = cli.get("lr").map_err(anyhow::Error::msg)?;
+    cfg.seed = cli.get("seed").map_err(anyhow::Error::msg)?;
+    cfg.scale = cli.get("scale").map_err(anyhow::Error::msg)?;
+    let pref = cli.get_str("preference");
+    if !pref.is_empty() {
+        let w: Vec<f64> = pref
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<Vec<_>, _>>()
+            .context("parsing --preference")?;
+        if w.len() != 4 {
+            bail!("--preference needs 4 comma-separated weights");
+        }
+        cfg.preference =
+            Some(Preference::new(w[0], w[1], w[2], w[3]).map_err(anyhow::Error::msg)?);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: Vec<String>) -> Result<()> {
+    let cli = common_cli("fedtune run", "execute one experiment")
+        .parse(args)
+        .map_err(anyhow::Error::msg)?;
+    let cfg = parse_config(&cli)?;
+    let result = match cfg.engine {
+        EngineKind::Sim => baselines::run_sim(&cfg, cfg.seed)?,
+        EngineKind::Real => run_real(&cli, &cfg)?,
+    };
+    println!(
+        "stop={:?} rounds={} accuracy={:.4} final M={} E={}",
+        result.stop, result.rounds, result.final_accuracy, result.final_m, result.final_e
+    );
+    println!(
+        "CompT={:.4e}  TransT={:.4e}  CompL={:.4e}  TransL={:.4e}",
+        result.costs.comp_t, result.costs.trans_t, result.costs.comp_l, result.costs.trans_l
+    );
+    let trace_out = cli.get_str("trace-out");
+    if !trace_out.is_empty() {
+        result.trace.write_csv(&trace_out)?;
+        println!("trace written to {trace_out}");
+    }
+    Ok(())
+}
+
+fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::RunResult> {
+    let artifacts = cli.get_str("artifacts");
+    let runtime = fedtune::runtime::Runtime::new(&artifacts)?;
+    let meta = runtime.model_meta(&cfg.model)?.clone();
+    let profile = cfg.profile()?;
+    anyhow::ensure!(
+        meta.dataset == profile.name,
+        "model {} was exported for dataset {}, not {}",
+        meta.name,
+        meta.dataset,
+        profile.name
+    );
+    log::info!(
+        "generating federated dataset {} ({} clients)...",
+        profile.name,
+        profile.train_clients
+    );
+    let dataset = FederatedDataset::generate(&profile, cfg.seed);
+    let cost_model = CostModel::from_flops_params(meta.flops_per_sample, meta.param_count as u64);
+    let mut engine = RealEngine::new(
+        runtime,
+        dataset,
+        RealEngineConfig {
+            model: cfg.model.clone(),
+            lr: cfg.lr,
+            aggregator: cfg.aggregator,
+            eval_subsample: 1024,
+            seed: cfg.seed,
+        },
+    )?;
+    let num_clients = engine.num_clients();
+    let server_cfg = ServerConfig {
+        target_accuracy: cfg.target()?,
+        max_rounds: cfg.max_rounds,
+        cost_model,
+        selector: cfg.selector,
+        seed: cfg.seed,
+    };
+    let schedule = match &cfg.preference {
+        None => Schedule::Fixed { m: cfg.m0, e: cfg.e0 },
+        Some(pref) => {
+            let ft_cfg = FedTuneConfig {
+                eps: cfg.eps,
+                penalty: cfg.penalty,
+                ..FedTuneConfig::paper_defaults(num_clients)
+            };
+            Schedule::Tuned(Box::new(
+                FedTune::new(*pref, ft_cfg, cfg.m0, cfg.e0).map_err(anyhow::Error::msg)?,
+            ))
+        }
+    };
+    Server::new(&mut engine, server_cfg, schedule).run()
+}
+
+fn cmd_grid(args: Vec<String>) -> Result<()> {
+    let cli = common_cli("fedtune grid", "15-preference FedTune vs fixed baseline")
+        .opt("seeds", "1,2,3", "comma-separated seeds")
+        .parse(args)
+        .map_err(anyhow::Error::msg)?;
+    let cfg = parse_config(&cli)?;
+    anyhow::ensure!(
+        cfg.engine == EngineKind::Sim,
+        "grid sweeps run on the sim engine"
+    );
+    let seeds: Vec<u64> = cli
+        .get_list("seeds")
+        .iter()
+        .map(|s| s.parse::<u64>().context("parsing --seeds"))
+        .collect::<Result<Vec<_>>>()?;
+    let (mean, std, rows) = baselines::grid_mean_improvement(&cfg, &seeds)?;
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>14} {:>9} {:>9} {:>10}",
+        "pref a/b/g/d", "CompT", "TransT", "CompL", "TransL", "final M", "final E", "overall"
+    );
+    for c in &rows {
+        println!(
+            "{:<22} {:>12.3e} {:>12.3e} {:>12.3e} {:>14.3e} {:>9.1} {:>9.1} {:>+9.2}%",
+            c.preference.label(),
+            c.fedtune_costs[0],
+            c.fedtune_costs[1],
+            c.fedtune_costs[2],
+            c.fedtune_costs[3],
+            c.final_m_mean,
+            c.final_e_mean,
+            c.improvement_pct
+        );
+    }
+    println!("\nmean improvement over grid: {mean:+.2}% (std {std:.2}%)");
+    Ok(())
+}
+
+fn cmd_check_runtime(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fedtune check-runtime", "smoke-test artifact → PJRT path")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("model", "mlp-s", "manifest model to exercise")
+        .parse(args)
+        .map_err(anyhow::Error::msg)?;
+    let dir = cli.get_str("artifacts");
+    let name = cli.get_str("model");
+    let mut rt = fedtune::runtime::Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    rt.load_model(&name)?;
+    let meta = rt.model_meta(&name)?.clone();
+    println!(
+        "model {}: {} params in {} tensors, {} FLOPs/sample",
+        meta.name,
+        meta.param_count,
+        meta.params.len(),
+        meta.flops_per_sample
+    );
+
+    let mut rng = Rng::new(7);
+    let mut params = ParamVec::init_he(&meta.params, &mut rng);
+    let b = meta.train.batch;
+    let dim = meta.input_dim();
+    let x: Vec<f32> = (0..b * dim).map(|_| rng.gauss() as f32 * 0.1).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % meta.classes) as i32).collect();
+    let mask = vec![1.0f32; b];
+
+    let before = params.clone();
+    let loss1 = rt.train_step(&name, &mut params, &x, &y, &mask, 0.05)?;
+    let moved = params.delta(&before).l2_norm();
+    println!("train_step: loss={loss1:.4}, |Δparams|={moved:.4e}");
+    anyhow::ensure!(moved > 0.0, "train step did not move parameters");
+    anyhow::ensure!(loss1.is_finite() && loss1 > 0.0, "bad loss {loss1}");
+
+    // A couple more steps on the same batch must reduce the loss.
+    let mut loss = loss1;
+    for _ in 0..5 {
+        loss = rt.train_step(&name, &mut params, &x, &y, &mask, 0.05)?;
+    }
+    println!("after 6 steps on one batch: loss={loss:.4}");
+    anyhow::ensure!(loss < loss1, "loss did not decrease ({loss1} → {loss})");
+
+    let be = meta.eval.batch;
+    let xe: Vec<f32> = (0..be * dim).map(|_| rng.gauss() as f32 * 0.1).collect();
+    let ye: Vec<i32> = (0..be).map(|i| (i % meta.classes) as i32).collect();
+    let maske = vec![1.0f32; be];
+    let (correct, loss_sum) = rt.eval_step(&name, &params, &xe, &ye, &maske)?;
+    println!("eval_step: correct={correct}/{be}, loss_sum={loss_sum:.3}");
+    anyhow::ensure!((0.0..=be as f32).contains(&correct));
+
+    println!(
+        "runtime stats: {} execs, exec {:.3}s, marshal {:.3}s ({:.1}% overhead)",
+        rt.stats.executions,
+        rt.stats.exec_secs(),
+        rt.stats.marshal_secs(),
+        rt.stats.overhead_fraction() * 100.0
+    );
+    println!("check-runtime OK");
+    Ok(())
+}
+
+fn cmd_info(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fedtune info", "inventory of models, datasets, artifacts")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .parse(args)
+        .map_err(anyhow::Error::msg)?;
+    println!("== static ladder (paper Table 2) ==");
+    for l in ladder::RESNET_LADDER {
+        println!(
+            "  {:<10} {:>12} FLOPs/sample {:>9} params  a_max {:.2}",
+            l.name, l.flops_per_sample, l.param_count, l.max_accuracy
+        );
+    }
+    println!("\n== dataset profiles ==");
+    for p in fedtune::data::DatasetProfile::all() {
+        println!(
+            "  {:<8} dim {:>5} classes {:>3} clients {:>5}+{:<4} target {:.2} batch {}",
+            p.name, p.input_dim, p.classes, p.train_clients, p.test_clients,
+            p.target_accuracy, p.batch_size
+        );
+    }
+    let dir = cli.get_str("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("\n== AOT artifacts ({dir}) ==");
+            for (name, meta) in &m.models {
+                println!(
+                    "  {:<12} dataset {:<7} {:>9} params {:>12} FLOPs/sample (train b={}, eval b={})",
+                    name, meta.dataset, meta.param_count, meta.flops_per_sample,
+                    meta.train.batch, meta.eval.batch
+                );
+            }
+        }
+        Err(_) => println!("\n(no artifacts at {dir}; run `make artifacts`)"),
+    }
+    Ok(())
+}

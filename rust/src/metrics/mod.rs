@@ -1,0 +1,175 @@
+//! Process-wide metrics registry: named counters and timers.
+//!
+//! Deliberately simple (atomics + a mutexed map); used by the coordinator
+//! and runtime to expose where time goes, and by `fedtune info --metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Accumulated duration + call count.
+#[derive(Debug, Default)]
+pub struct Timer {
+    nanos: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl Timer {
+    /// Time a closure.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    pub fn record_nanos(&self, n: u64) {
+        self.nanos.fetch_add(n, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        let c = self.calls();
+        if c == 0 {
+            0.0
+        } else {
+            self.nanos.load(Ordering::Relaxed) as f64 / c as f64 * 1e-3
+        }
+    }
+}
+
+/// Registry of named metrics (static lifetime, global by convention).
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, (u64, u64)>>, // (nanos, calls)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn count(&self, name: &str, v: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let n = t0.elapsed().as_nanos() as u64;
+        let mut timers = self.timers.lock().unwrap();
+        let e = timers.entry(name.to_string()).or_insert((0, 0));
+        e.0 += n;
+        e.1 += 1;
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer_secs(&self, name: &str) -> f64 {
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|(n, _)| *n as f64 * 1e-9)
+            .unwrap_or(0.0)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let timers = self.timers.lock().unwrap();
+        let mut c = Json::obj();
+        for (k, v) in counters.iter() {
+            c.set(k, (*v).into());
+        }
+        let mut t = Json::obj();
+        for (k, (nanos, calls)) in timers.iter() {
+            t.set(
+                k,
+                Json::from_pairs(vec![
+                    ("secs", (*nanos as f64 * 1e-9).into()),
+                    ("calls", (*calls).into()),
+                ]),
+            );
+        }
+        Json::from_pairs(vec![("counters", c), ("timers", t)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn timer_tracks_calls() {
+        let t = Timer::default();
+        let out = t.time(|| 21 * 2);
+        assert_eq!(out, 42);
+        t.record_nanos(1_000_000);
+        assert_eq!(t.calls(), 2);
+        assert!(t.total_secs() >= 1e-3);
+        assert!(t.mean_micros() > 0.0);
+    }
+
+    #[test]
+    fn registry_snapshot() {
+        let r = Registry::new();
+        r.count("rounds", 3);
+        r.count("rounds", 2);
+        r.time("agg", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(r.counter("rounds"), 5);
+        assert!(r.timer_secs("agg") >= 1e-3);
+        let snap = r.snapshot();
+        assert_eq!(snap.path(&["counters", "rounds"]).unwrap().as_usize(), Some(5));
+        assert!(snap.path(&["timers", "agg", "secs"]).is_some());
+    }
+
+    #[test]
+    fn missing_names_default_to_zero() {
+        let r = Registry::new();
+        assert_eq!(r.counter("nope"), 0);
+        assert_eq!(r.timer_secs("nope"), 0.0);
+    }
+}

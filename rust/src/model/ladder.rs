@@ -1,0 +1,82 @@
+//! The model-complexity ladder (paper Table 2), usable without artifacts.
+//!
+//! The paper's measurement study compares ResNet-10/18/26/34 purely through
+//! three numbers: FLOPs per input (C1 = C3), parameter count (C2 = C4) and
+//! the final reachable accuracy. The simulator engine and the Fig. 5 /
+//! Table 2 benches consume this static ladder; the real engine gets the
+//! same numbers from the AOT manifest instead (our MLP ladder mirrors the
+//! FLOP ratios — see python/compile/model.py).
+
+/// Static complexity description of one ladder rung.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LadderModel {
+    pub name: &'static str,
+    /// Forward FLOPs for one input (paper Table 2, x1e6).
+    pub flops_per_sample: u64,
+    /// Parameter count (paper Table 2, x1e3).
+    pub param_count: u64,
+    /// Final reachable accuracy (paper Table 2 bottom row).
+    pub max_accuracy: f64,
+}
+
+/// Paper Table 2, verbatim.
+pub const RESNET_LADDER: [LadderModel; 4] = [
+    LadderModel { name: "resnet-10", flops_per_sample: 12_500_000, param_count: 79_700, max_accuracy: 0.88 },
+    LadderModel { name: "resnet-18", flops_per_sample: 26_800_000, param_count: 177_200, max_accuracy: 0.90 },
+    LadderModel { name: "resnet-26", flops_per_sample: 41_100_000, param_count: 274_600, max_accuracy: 0.90 },
+    LadderModel { name: "resnet-34", flops_per_sample: 60_100_000, param_count: 515_600, max_accuracy: 0.92 },
+];
+
+/// The paper's EMNIST model (§5.1): a 1-hidden-layer (200, ReLU) MLP.
+/// FLOPs = 2·(784·200 + 200·62); params = 784·200+200 + 200·62+62.
+pub const MLP_200: LadderModel = LadderModel {
+    name: "mlp-200",
+    flops_per_sample: 338_400,
+    param_count: 169_462,
+    max_accuracy: 0.80,
+};
+
+/// Our AOT MLP ladder's ratio-preserving mirror (names match the manifest).
+pub const MLP_LADDER: [&str; 4] = ["mlp-s", "mlp-m", "mlp-l", "mlp-xl"];
+
+pub fn by_name(name: &str) -> Option<&'static LadderModel> {
+    if name == MLP_200.name {
+        return Some(&MLP_200);
+    }
+    RESNET_LADDER.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_matches_paper_table2() {
+        assert_eq!(RESNET_LADDER[0].flops_per_sample, 12_500_000);
+        assert_eq!(RESNET_LADDER[3].param_count, 515_600);
+        assert_eq!(by_name("resnet-26").unwrap().max_accuracy, 0.90);
+        assert!(by_name("resnet-99").is_none());
+    }
+
+    #[test]
+    fn flop_ratios_are_monotone() {
+        for w in RESNET_LADDER.windows(2) {
+            assert!(w[1].flops_per_sample > w[0].flops_per_sample);
+            assert!(w[1].param_count > w[0].param_count);
+            assert!(w[1].max_accuracy >= w[0].max_accuracy);
+        }
+    }
+
+    #[test]
+    fn table2_ratio_shape() {
+        // x1 : x2.14 : x3.29 : x4.81 within 2%.
+        let base = RESNET_LADDER[0].flops_per_sample as f64;
+        let ratios: Vec<f64> = RESNET_LADDER
+            .iter()
+            .map(|m| m.flops_per_sample as f64 / base)
+            .collect();
+        for (r, expect) in ratios.iter().zip([1.0, 2.144, 3.288, 4.808]) {
+            assert!((r - expect).abs() / expect < 0.02, "{r} vs {expect}");
+        }
+    }
+}

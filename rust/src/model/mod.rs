@@ -1,0 +1,465 @@
+//! Model metadata and the flat parameter store.
+//!
+//! The AOT manifest (`artifacts/manifest.json`, written by
+//! `python -m compile.aot`) is the contract between the build-time Python
+//! layers and the runtime coordinator: it fixes the ordered parameter
+//! layout, the artifact input/output signatures, the FLOPs-per-sample
+//! constant (the paper's C1 = C3) and the parameter count (C2 = C4).
+//!
+//! Parameters live in a single contiguous `Vec<f32>` ([`ParamVec`]) with
+//! per-tensor offsets — aggregation (the L3 hot path) is then pure
+//! slice arithmetic, and marshalling to PJRT literals is a per-tensor
+//! bytemuck-style copy.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub mod ladder;
+
+/// One tensor in the parameter layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Fan-in for He initialization (product of all but the last dim).
+    pub fn fan_in(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    pub fn is_bias(&self) -> bool {
+        self.shape.len() == 1
+    }
+}
+
+/// Signature of one AOT artifact (train / train_chunk / eval step).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// File name inside the artifact dir.
+    pub path: String,
+    /// Static batch size the HLO was lowered with.
+    pub batch: usize,
+    /// Mini-batches folded into one call (1 except for train_chunk).
+    pub chunk: usize,
+    pub sha256: String,
+}
+
+/// Everything the coordinator knows about one model.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub dataset: String,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub param_count: usize,
+    /// Forward FLOPs for one sample: the paper's C1 (time) and C3 (load)
+    /// constants (§3.1 assigns the model's per-input FLOPs to both).
+    pub flops_per_sample: u64,
+    pub train: ArtifactMeta,
+    /// Scan-of-K-steps artifacts (ascending K; the §Perf hot path). Empty
+    /// for manifests produced before the chunked exporter.
+    pub train_chunks: Vec<ArtifactMeta>,
+    pub eval: ArtifactMeta,
+}
+
+impl ModelMeta {
+    /// Per-sample input feature count (flattened).
+    pub fn input_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// The paper's C2 = C4 constant: model size in parameters.
+    pub fn transmission_unit(&self) -> u64 {
+        self.param_count as u64
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let ver = j
+            .get("format_version")
+            .and_then(Json::as_usize)
+            .context("manifest: format_version")?;
+        if ver != 1 {
+            bail!("unsupported manifest format_version {ver}");
+        }
+        let mut models = BTreeMap::new();
+        let mobj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("manifest: models")?;
+        for (name, m) in mobj {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, art: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&art.path)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
+    let ctx = |f: &str| format!("manifest model {name}: {f}");
+    let params = m
+        .get("params")
+        .and_then(Json::as_arr)
+        .with_context(|| ctx("params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| ctx("param name"))?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .with_context(|| ctx("param shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().with_context(|| ctx("param dim")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let art = |key: &str| -> Result<ArtifactMeta> {
+        let a = m.get(key).with_context(|| ctx(key))?;
+        parse_artifact(a, name)
+    };
+
+    let param_count = m
+        .get("param_count")
+        .and_then(Json::as_usize)
+        .with_context(|| ctx("param_count"))?;
+    let declared: usize = params.iter().map(ParamSpec::elems).sum();
+    if declared != param_count {
+        bail!("manifest model {name}: param_count {param_count} != sum of shapes {declared}");
+    }
+
+    Ok(ModelMeta {
+        name: name.to_string(),
+        dataset: m
+            .get("dataset")
+            .and_then(Json::as_str)
+            .with_context(|| ctx("dataset"))?
+            .to_string(),
+        input_shape: m
+            .get("input_shape")
+            .and_then(Json::as_arr)
+            .with_context(|| ctx("input_shape"))?
+            .iter()
+            .map(|d| d.as_usize().with_context(|| ctx("input dim")))
+            .collect::<Result<Vec<_>>>()?,
+        classes: m
+            .get("classes")
+            .and_then(Json::as_usize)
+            .with_context(|| ctx("classes"))?,
+        params,
+        param_count,
+        flops_per_sample: m
+            .get("flops_per_sample")
+            .and_then(Json::as_usize)
+            .with_context(|| ctx("flops_per_sample"))? as u64,
+        train: art("train")?,
+        train_chunks: {
+            let mut v = Vec::new();
+            if let Some(arr) = m.get("train_chunks").and_then(Json::as_arr) {
+                for a in arr {
+                    v.push(parse_artifact(a, name)?);
+                }
+                v.sort_by_key(|a| a.chunk);
+            }
+            v
+        },
+        eval: art("eval")?,
+    })
+}
+
+fn parse_artifact(a: &Json, model: &str) -> Result<ArtifactMeta> {
+    let ctx = |f: &str| format!("manifest model {model}: artifact {f}");
+    Ok(ArtifactMeta {
+        path: a
+            .get("path")
+            .and_then(Json::as_str)
+            .with_context(|| ctx("path"))?
+            .to_string(),
+        batch: a
+            .get("batch")
+            .and_then(Json::as_usize)
+            .with_context(|| ctx("batch"))?,
+        chunk: a.get("chunk").and_then(Json::as_usize).unwrap_or(1),
+        sha256: a
+            .get("sha256")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// ParamVec
+// ---------------------------------------------------------------------------
+
+/// Flat parameter vector: all tensors contiguous, offsets per tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamVec {
+    pub data: Vec<f32>,
+    offsets: Vec<usize>, // len = params.len() + 1
+}
+
+impl ParamVec {
+    /// All-zeros vector matching the layout.
+    pub fn zeros(specs: &[ParamSpec]) -> ParamVec {
+        let mut offsets = Vec::with_capacity(specs.len() + 1);
+        let mut total = 0;
+        offsets.push(0);
+        for s in specs {
+            total += s.elems();
+            offsets.push(total);
+        }
+        ParamVec { data: vec![0.0; total], offsets }
+    }
+
+    /// He-normal init (matches python/compile/model.py::init_params in
+    /// distribution; exact values differ because the RNGs differ, which is
+    /// fine — rust owns initialization at runtime).
+    pub fn init_he(specs: &[ParamSpec], rng: &mut Rng) -> ParamVec {
+        let mut pv = ParamVec::zeros(specs);
+        for (i, s) in specs.iter().enumerate() {
+            if s.is_bias() {
+                continue; // biases stay zero
+            }
+            let std = (2.0 / s.fan_in() as f64).sqrt();
+            let (lo, hi) = (pv.offsets[i], pv.offsets[i + 1]);
+            for x in &mut pv.data[lo..hi] {
+                *x = rng.normal(0.0, std) as f32;
+            }
+        }
+        pv
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        &self.data[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    pub fn tensor_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Replace tensor `i` with `src` (lengths must match).
+    pub fn set_tensor(&mut self, i: usize, src: &[f32]) {
+        let dst = self.tensor_mut(i);
+        assert_eq!(dst.len(), src.len(), "tensor {i} length mismatch");
+        dst.copy_from_slice(src);
+    }
+
+    /// self += alpha * other   (the aggregation hot loop).
+    pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
+        debug_assert_eq!(self.len(), other.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// self = 0.
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|a| *a = 0.0);
+    }
+
+    /// Element-wise difference `self - other` into a new vector.
+    pub fn delta(&self, other: &ParamVec) -> ParamVec {
+        debug_assert_eq!(self.len(), other.len());
+        ParamVec {
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+            offsets: self.offsets.clone(),
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w0".into(), shape: vec![4, 3] },
+            ParamSpec { name: "b0".into(), shape: vec![3] },
+            ParamSpec { name: "w1".into(), shape: vec![3, 2] },
+        ]
+    }
+
+    #[test]
+    fn zeros_layout() {
+        let pv = ParamVec::zeros(&toy_specs());
+        assert_eq!(pv.len(), 12 + 3 + 6);
+        assert_eq!(pv.num_tensors(), 3);
+        assert_eq!(pv.tensor(0).len(), 12);
+        assert_eq!(pv.tensor(1).len(), 3);
+        assert_eq!(pv.tensor(2).len(), 6);
+    }
+
+    #[test]
+    fn he_init_leaves_biases_zero() {
+        let mut rng = Rng::new(5);
+        let pv = ParamVec::init_he(&toy_specs(), &mut rng);
+        assert!(pv.tensor(1).iter().all(|&x| x == 0.0));
+        assert!(pv.tensor(0).iter().any(|&x| x != 0.0));
+        assert!(pv.all_finite());
+    }
+
+    #[test]
+    fn he_init_std_tracks_fan_in() {
+        let specs = vec![ParamSpec { name: "w".into(), shape: vec![1000, 50] }];
+        let mut rng = Rng::new(6);
+        let pv = ParamVec::init_he(&specs, &mut rng);
+        let n = pv.len() as f64;
+        let var =
+            pv.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / n;
+        let expect = 2.0 / 1000.0;
+        assert!((var - expect).abs() < 0.2 * expect, "var={var} expect={expect}");
+    }
+
+    #[test]
+    fn axpy_scale_delta() {
+        let specs = toy_specs();
+        let mut rng = Rng::new(7);
+        let a = ParamVec::init_he(&specs, &mut rng);
+        let mut acc = ParamVec::zeros(&specs);
+        acc.axpy(2.0, &a);
+        acc.scale(0.5);
+        // acc == a now
+        let d = acc.delta(&a);
+        assert!(d.l2_norm() < 1e-6);
+    }
+
+    #[test]
+    fn set_tensor_roundtrip() {
+        let mut pv = ParamVec::zeros(&toy_specs());
+        let src: Vec<f32> = (0..3).map(|i| i as f32).collect();
+        pv.set_tensor(1, &src);
+        assert_eq!(pv.tensor(1), &[0.0, 1.0, 2.0]);
+        assert!(pv.tensor(0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let text = r#"{
+          "format_version": 1,
+          "models": {
+            "m": {
+              "dataset": "speech",
+              "input_shape": [4],
+              "classes": 2,
+              "params": [{"name": "w", "shape": [4, 2]}, {"name": "b", "shape": [2]}],
+              "param_count": 10,
+              "flops_per_sample": 16,
+              "train": {"path": "m_train.hlo.txt", "batch": 8, "sha256": ""},
+              "eval": {"path": "m_eval.hlo.txt", "batch": 64, "sha256": ""}
+            }
+          }
+        }"#;
+        let man = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.flops_per_sample, 16);
+        assert_eq!(m.train.batch, 8);
+        assert_eq!(m.input_dim(), 4);
+        assert!(man.model("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_param_count_mismatch() {
+        let text = r#"{
+          "format_version": 1,
+          "models": {
+            "m": {
+              "dataset": "speech", "input_shape": [4], "classes": 2,
+              "params": [{"name": "w", "shape": [4, 2]}],
+              "param_count": 9, "flops_per_sample": 16,
+              "train": {"path": "t", "batch": 8, "sha256": ""},
+              "eval": {"path": "e", "batch": 64, "sha256": ""}
+            }
+          }
+        }"#;
+        assert!(Manifest::parse(text, PathBuf::from("/tmp")).is_err());
+    }
+}

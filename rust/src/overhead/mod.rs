@@ -1,0 +1,278 @@
+//! System-overhead accounting — the paper's §3.1 system model.
+//!
+//! Four overheads accumulate over training (Eqs. 2–5), with per-round
+//! increments:
+//!
+//! * CompT  += C1 · E · max_{k ∈ participants} n_k      (slowest client)
+//! * TransT += C2                                        (one round trip)
+//! * CompL  += C3 · E · Σ_{k ∈ participants} n_k         (total FLOPs)
+//! * TransL += C4 · M                                    (M up+downloads)
+//!
+//! Clients are homogeneous (paper assumption), so C1..C4 are global: the
+//! paper assigns the model's per-input FLOPs to C1 and C3 and its
+//! parameter count to C2 and C4 — [`CostModel::from_flops_params`] does
+//! exactly that.
+//!
+//! [`Preference`] carries the application's (α, β, γ, δ) weights and
+//! [`Costs::compare`] implements the paper's comparison function Eq. (6):
+//! I(S1, S2) < 0 ⇔ S2 is the better hyper-parameter set.
+
+/// Cumulative (or incremental) values of the four overheads.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Costs {
+    /// Computation time (modelled seconds; unit = C1 · data-point · pass).
+    pub comp_t: f64,
+    /// Transmission time (unit = C2 per round).
+    pub trans_t: f64,
+    /// Computation load (FLOPs).
+    pub comp_l: f64,
+    /// Transmission load (parameters transmitted).
+    pub trans_l: f64,
+}
+
+impl Costs {
+    pub const ZERO: Costs = Costs { comp_t: 0.0, trans_t: 0.0, comp_l: 0.0, trans_l: 0.0 };
+
+    pub fn add(&mut self, other: &Costs) {
+        self.comp_t += other.comp_t;
+        self.trans_t += other.trans_t;
+        self.comp_l += other.comp_l;
+        self.trans_l += other.trans_l;
+    }
+
+    pub fn minus(&self, other: &Costs) -> Costs {
+        Costs {
+            comp_t: self.comp_t - other.comp_t,
+            trans_t: self.trans_t - other.trans_t,
+            comp_l: self.comp_l - other.comp_l,
+            trans_l: self.trans_l - other.trans_l,
+        }
+    }
+
+    pub fn scaled(&self, s: f64) -> Costs {
+        Costs {
+            comp_t: self.comp_t * s,
+            trans_t: self.trans_t * s,
+            comp_l: self.comp_l * s,
+            trans_l: self.trans_l * s,
+        }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.comp_t.is_finite()
+            && self.trans_t.is_finite()
+            && self.comp_l.is_finite()
+            && self.trans_l.is_finite()
+    }
+
+    pub fn all_nonneg(&self) -> bool {
+        self.comp_t >= 0.0 && self.trans_t >= 0.0 && self.comp_l >= 0.0 && self.trans_l >= 0.0
+    }
+
+    /// Paper Eq. (6): preference-weighted relative change from `self` (S1)
+    /// to `other` (S2). Negative ⇒ `other` is better.
+    pub fn compare(&self, other: &Costs, pref: &Preference) -> f64 {
+        let rel = |a: f64, b: f64| if a > 0.0 { (b - a) / a } else { 0.0 };
+        pref.alpha * rel(self.comp_t, other.comp_t)
+            + pref.beta * rel(self.trans_t, other.trans_t)
+            + pref.gamma * rel(self.comp_l, other.comp_l)
+            + pref.delta * rel(self.trans_l, other.trans_l)
+    }
+
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.comp_t, self.trans_t, self.comp_l, self.trans_l]
+    }
+}
+
+/// The homogeneous-client cost constants C1..C4 of §3.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub c1: f64,
+    pub c2: f64,
+    pub c3: f64,
+    pub c4: f64,
+}
+
+impl CostModel {
+    /// Unit constants (the paper's Fig. 3 illustration uses C1..C4 = 1).
+    pub const UNIT: CostModel = CostModel { c1: 1.0, c2: 1.0, c3: 1.0, c4: 1.0 };
+
+    /// The paper's experimental assignment: FLOPs/input → C1, C3;
+    /// parameter count → C2, C4.
+    pub fn from_flops_params(flops_per_sample: u64, param_count: u64) -> CostModel {
+        CostModel {
+            c1: flops_per_sample as f64,
+            c2: param_count as f64,
+            c3: flops_per_sample as f64,
+            c4: param_count as f64,
+        }
+    }
+
+    /// Per-round increment, Eqs. (2)–(5). `sizes` are the participants'
+    /// n_k; `e` is the number of local passes (0.5 allowed, §3.2).
+    pub fn round_costs(&self, sizes: &[usize], e: f64) -> Costs {
+        let m = sizes.len() as f64;
+        let max_n = sizes.iter().copied().max().unwrap_or(0) as f64;
+        let sum_n: usize = sizes.iter().sum();
+        Costs {
+            comp_t: self.c1 * e * max_n,
+            trans_t: self.c2,
+            comp_l: self.c3 * e * sum_n as f64,
+            trans_l: self.c4 * m,
+        }
+    }
+}
+
+/// Application training preference (α, β, γ, δ), §4: weights on
+/// CompT, TransT, CompL, TransL. Must sum to 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Preference {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+}
+
+impl Preference {
+    pub fn new(alpha: f64, beta: f64, gamma: f64, delta: f64) -> Result<Preference, String> {
+        let p = Preference { alpha, beta, gamma, delta };
+        let s = alpha + beta + gamma + delta;
+        if !(0.999..=1.001).contains(&s) {
+            return Err(format!("preference weights must sum to 1, got {s}"));
+        }
+        if [alpha, beta, gamma, delta].iter().any(|&w| w < 0.0) {
+            return Err("preference weights must be non-negative".to_string());
+        }
+        Ok(p)
+    }
+
+    /// The 15 evaluation combinations from Table 4's first column.
+    pub fn paper_grid() -> Vec<Preference> {
+        let t = 1.0 / 3.0;
+        let raw: [[f64; 4]; 15] = [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+            [0.5, 0.5, 0.0, 0.0],
+            [0.5, 0.0, 0.5, 0.0],
+            [0.5, 0.0, 0.0, 0.5],
+            [0.0, 0.5, 0.5, 0.0],
+            [0.0, 0.5, 0.0, 0.5],
+            [0.0, 0.0, 0.5, 0.5],
+            [t, t, t, 0.0],
+            [t, t, 0.0, t],
+            [t, 0.0, t, t],
+            [0.0, t, t, t],
+            [0.25, 0.25, 0.25, 0.25],
+        ];
+        raw.iter()
+            .map(|w| Preference::new(w[0], w[1], w[2], w[3]).unwrap())
+            .collect()
+    }
+
+    /// Short label like "1/0/0/0" or ".33/.33/0/.33" for tables.
+    pub fn label(&self) -> String {
+        let f = |x: f64| {
+            if x == 0.0 {
+                "0".to_string()
+            } else if (x - 1.0).abs() < 1e-9 {
+                "1".to_string()
+            } else {
+                format!("{:.2}", x).trim_start_matches('0').to_string()
+            }
+        };
+        format!("{}/{}/{}/{}", f(self.alpha), f(self.beta), f(self.gamma), f(self.delta))
+    }
+
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.alpha, self.beta, self.gamma, self.delta]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_costs_match_equations() {
+        let cm = CostModel::from_flops_params(100, 10);
+        // Participants with 3, 7, 5 data points, E = 2.
+        let c = cm.round_costs(&[3, 7, 5], 2.0);
+        assert_eq!(c.comp_t, 100.0 * 2.0 * 7.0); // slowest client
+        assert_eq!(c.trans_t, 10.0); // one round
+        assert_eq!(c.comp_l, 100.0 * 2.0 * 15.0); // sum
+        assert_eq!(c.trans_l, 10.0 * 3.0); // M = 3
+    }
+
+    #[test]
+    fn half_pass_supported() {
+        let cm = CostModel::UNIT;
+        let c = cm.round_costs(&[10], 0.5);
+        assert_eq!(c.comp_t, 5.0);
+        assert_eq!(c.comp_l, 5.0);
+    }
+
+    #[test]
+    fn empty_round_is_free_compute() {
+        let cm = CostModel::UNIT;
+        let c = cm.round_costs(&[], 1.0);
+        assert_eq!(c.comp_t, 0.0);
+        assert_eq!(c.comp_l, 0.0);
+        assert_eq!(c.trans_l, 0.0);
+        assert_eq!(c.trans_t, 1.0); // a round still happened
+    }
+
+    #[test]
+    fn compare_sign_semantics() {
+        let pref = Preference::new(1.0, 0.0, 0.0, 0.0).unwrap();
+        let s1 = Costs { comp_t: 10.0, trans_t: 1.0, comp_l: 1.0, trans_l: 1.0 };
+        let s2 = Costs { comp_t: 5.0, ..s1 };
+        // s2 halves CompT under a pure-CompT preference: improvement < 0.
+        assert!(s1.compare(&s2, &pref) < 0.0);
+        assert!(s2.compare(&s1, &pref) > 0.0);
+        // Identical sets compare equal.
+        assert_eq!(s1.compare(&s1, &pref), 0.0);
+    }
+
+    #[test]
+    fn compare_weights_tradeoffs() {
+        // s2 is 10% better on CompT but 10% worse on TransL.
+        let s1 = Costs { comp_t: 100.0, trans_t: 1.0, comp_l: 1.0, trans_l: 100.0 };
+        let s2 = Costs { comp_t: 90.0, trans_t: 1.0, comp_l: 1.0, trans_l: 110.0 };
+        let comp_heavy = Preference::new(0.9, 0.0, 0.0, 0.1).unwrap();
+        let trans_heavy = Preference::new(0.1, 0.0, 0.0, 0.9).unwrap();
+        assert!(s1.compare(&s2, &comp_heavy) < 0.0);
+        assert!(s1.compare(&s2, &trans_heavy) > 0.0);
+    }
+
+    #[test]
+    fn preference_validation() {
+        assert!(Preference::new(0.5, 0.5, 0.0, 0.0).is_ok());
+        assert!(Preference::new(0.5, 0.6, 0.0, 0.0).is_err());
+        assert!(Preference::new(1.5, -0.5, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn paper_grid_is_15_valid_prefs() {
+        let g = Preference::paper_grid();
+        assert_eq!(g.len(), 15);
+        for p in &g {
+            let s = p.alpha + p.beta + p.gamma + p.delta;
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+        // First four are the pure preferences.
+        assert_eq!(g[0].alpha, 1.0);
+        assert_eq!(g[3].delta, 1.0);
+    }
+
+    #[test]
+    fn costs_add_minus_scaled() {
+        let mut a = Costs { comp_t: 1.0, trans_t: 2.0, comp_l: 3.0, trans_l: 4.0 };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.comp_t, 2.0);
+        assert_eq!(a.minus(&b), b);
+        assert_eq!(b.scaled(2.0).trans_l, 8.0);
+    }
+}

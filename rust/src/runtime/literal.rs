@@ -1,0 +1,92 @@
+//! Literal marshalling helpers: flat rust slices ↔ PJRT literals.
+
+use anyhow::{anyhow, bail, Result};
+
+/// f32 tensor literal from a flat slice (row-major).
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if elems != data.len() {
+        bail!("lit_f32: shape {shape:?} wants {elems} elems, got {}", data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )
+    .map_err(|e| anyhow!("lit_f32: {e}"))
+}
+
+/// i32 tensor literal from a flat slice.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if elems != data.len() {
+        bail!("lit_i32: shape {shape:?} wants {elems} elems, got {}", data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )
+    .map_err(|e| anyhow!("lit_i32: {e}"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn read_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("read_scalar_f32: {e}"))
+}
+
+/// Copy an f32 tensor literal into a Vec.
+pub fn tensor_to_vec(lit: &mut xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("tensor_to_vec: {e}"))
+}
+
+/// Copy an f32 tensor literal directly into a slice (no allocation) —
+/// the hot read-back path for train_step outputs.
+pub fn tensor_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to::<f32>(dst)
+        .map_err(|e| anyhow!("tensor_into: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = [1.0f32, -2.5, 3.25, 0.0, 5.0, 6.5];
+        let mut lit = lit_f32(&[2, 3], &data).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(tensor_to_vec(&mut lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = [3i32, -7, 11];
+        let lit = lit_i32(&[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_scalar_f32(0.01);
+        assert_eq!(read_scalar_f32(&lit).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0, 2.0, 3.0]).is_err());
+        assert!(lit_i32(&[4], &[1, 2, 3]).is_err());
+    }
+}

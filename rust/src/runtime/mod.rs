@@ -1,0 +1,463 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them (L3 hot path).
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Compiled executables are cached per
+//! artifact, so each model variant compiles exactly once per process.
+//!
+//! Marshalling notes:
+//! * parameters are kept in [`ParamVec`] (flat f32) and converted to one
+//!   PJRT literal per tensor via an untyped byte copy;
+//! * the train/eval computations were lowered with `return_tuple=True`, so
+//!   each execute returns a single tuple literal that we decompose;
+//! * Python is *never* on this path — artifacts are produced once by
+//!   `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{Manifest, ModelMeta, ParamVec};
+
+pub mod literal;
+
+use literal::read_scalar_f32;
+
+/// Counters for the §Perf pass: where does a round's wall time go?
+///
+/// Host↔device traffic is split into two buckets because only one of them
+/// is *avoidable* overhead:
+/// * `data_nanos` — uploading the training batches (x/y/mask). Any
+///   training system pays this (it is the data loader's job);
+/// * `param_nanos` — round-tripping model parameters per dispatch, which
+///   a device-resident design would avoid. This is what the <5% §Perf
+///   target bounds, and what the chunked train artifacts amortize.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    /// Time spent inside PJRT `execute` (compute).
+    pub exec_nanos: u64,
+    /// Batch-data upload (useful work).
+    pub data_nanos: u64,
+    /// Parameter upload + readback + tuple decompose (avoidable overhead).
+    pub param_nanos: u64,
+    pub compile_nanos: u64,
+}
+
+impl RuntimeStats {
+    pub fn exec_secs(&self) -> f64 {
+        self.exec_nanos as f64 * 1e-9
+    }
+    pub fn marshal_secs(&self) -> f64 {
+        (self.data_nanos + self.param_nanos) as f64 * 1e-9
+    }
+    pub fn param_secs(&self) -> f64 {
+        self.param_nanos as f64 * 1e-9
+    }
+    /// Fraction of runtime spent on avoidable parameter marshalling
+    /// (perf target: <5% on the chunked path).
+    pub fn overhead_fraction(&self) -> f64 {
+        let total = (self.exec_nanos + self.data_nanos + self.param_nanos) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.param_nanos as f64 / total
+        }
+    }
+}
+
+/// A compiled model: train + eval (+ chunked train) executables.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    train: xla::PjRtLoadedExecutable,
+    /// scan-of-K-steps variants, one per manifest chunk size (ascending K)
+    /// — the §Perf hot path.
+    train_chunks: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    eval: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, a cache of compiled models.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    models: HashMap<String, LoadedModel>,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the given artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            models: HashMap::new(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&mut self, path: &PathBuf) -> Result<xla::PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+        self.stats.compile_nanos += t0.elapsed().as_nanos() as u64;
+        Ok(exe)
+    }
+
+    /// Load (compile) a model by manifest name; cached afterwards.
+    pub fn load_model(&mut self, name: &str) -> Result<()> {
+        if self.models.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.model(name)?.clone();
+        let train_path = self.manifest.artifact_path(&meta.train);
+        let eval_path = self.manifest.artifact_path(&meta.eval);
+        let train = self.compile_file(&train_path)?;
+        let mut train_chunks = Vec::new();
+        for art in &meta.train_chunks {
+            let p = self.manifest.artifact_path(art);
+            train_chunks.push((art.chunk, self.compile_file(&p)?));
+        }
+        let eval = self.compile_file(&eval_path)?;
+        self.models
+            .insert(name.to_string(), LoadedModel { meta, train, train_chunks, eval });
+        Ok(())
+    }
+
+    pub fn model_meta(&self, name: &str) -> Result<&ModelMeta> {
+        self.manifest.model(name)
+    }
+
+    /// One SGD mini-batch: params ← train_step(params, x, y, mask, lr).
+    ///
+    /// `x` is the flattened batch (batch * input_dim f32), `y` int32 labels,
+    /// `mask` 1.0 for real rows / 0.0 for padding. Returns the batch loss.
+    pub fn train_step(
+        &mut self,
+        name: &str,
+        params: &mut ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let model = self
+            .models
+            .get(name)
+            .with_context(|| format!("model {name} not loaded"))?;
+        let meta = &model.meta;
+        let batch = meta.train.batch;
+        check_batch(meta, batch, x, y, mask)?;
+
+        // NOTE: we marshal inputs into self-managed PjRtBuffers and call
+        // `execute_b`, NOT `execute`: the crate's C++ `execute` wrapper
+        // creates device buffers from the input literals and leaks them
+        // (xla_rs.cc `execute`: `buffer.release()` with no matching free).
+        // With buffers we own, Drop releases them — RSS stays flat over
+        // millions of steps (see EXPERIMENTS.md §Perf).
+        let tm = Instant::now();
+        let mut args: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(meta.params.len() + 4);
+        for (i, spec) in meta.params.iter().enumerate() {
+            args.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(params.tensor(i), &spec.shape, None)
+                    .map_err(|e| anyhow!("param buffer {i}: {e}"))?,
+            );
+        }
+        let param_in = tm.elapsed().as_nanos() as u64;
+        let td = Instant::now();
+        let mut xshape = vec![batch];
+        xshape.extend_from_slice(&meta.input_shape);
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(x, &xshape, None)
+                .map_err(|e| anyhow!("x buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<i32>(y, &[batch], None)
+                .map_err(|e| anyhow!("y buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(mask, &[batch], None)
+                .map_err(|e| anyhow!("mask buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(&[lr], &[], None)
+                .map_err(|e| anyhow!("lr buffer: {e}"))?,
+        );
+        let data_in = td.elapsed().as_nanos() as u64;
+
+        let t0 = Instant::now();
+        let result = model
+            .train
+            .execute_b::<xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("train_step execute: {e}"))?;
+        let exec = t0.elapsed().as_nanos() as u64;
+
+        let tm2 = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose train tuple: {e}"))?;
+        if outs.len() != meta.params.len() + 1 {
+            bail!(
+                "train_step returned {} outputs, expected {}",
+                outs.len(),
+                meta.params.len() + 1
+            );
+        }
+        let loss = read_scalar_f32(&outs[meta.params.len()])?;
+        for (i, _spec) in meta.params.iter().enumerate() {
+            literal::tensor_into(&outs[i], params.tensor_mut(i))?;
+        }
+        let marshal_out = tm2.elapsed().as_nanos() as u64;
+
+        self.stats.executions += 1;
+        self.stats.exec_nanos += exec;
+        self.stats.data_nanos += data_in;
+        self.stats.param_nanos += param_in + marshal_out;
+        Ok(loss)
+    }
+
+    /// Chunk sizes available for `train_chunk` (ascending).
+    pub fn chunk_sizes(&self, name: &str) -> Vec<usize> {
+        self.models
+            .get(name)
+            .map(|m| m.train_chunks.iter().map(|(k, _)| *k).collect())
+            .unwrap_or_default()
+    }
+
+    /// K sequential SGD mini-batches in ONE PJRT call (the §Perf hot
+    /// path): `xs` is (K·B·dim), `ys`/`masks` are (K·B), with `k` one of
+    /// [`Runtime::chunk_sizes`]. All-zero-mask batches are exact no-ops,
+    /// so callers pad the tail freely. Returns the mean loss over
+    /// non-empty batches.
+    pub fn train_chunk(
+        &mut self,
+        name: &str,
+        k: usize,
+        params: &mut ParamVec,
+        xs: &[f32],
+        ys: &[i32],
+        masks: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let model = self
+            .models
+            .get(name)
+            .with_context(|| format!("model {name} not loaded"))?;
+        let meta = &model.meta;
+        let exe = model
+            .train_chunks
+            .iter()
+            .find(|(kk, _)| *kk == k)
+            .map(|(_, e)| e)
+            .with_context(|| {
+                format!("model {name} has no K={k} chunk artifact")
+            })?;
+        let b = meta.train.batch;
+        let dim = meta.input_dim();
+        anyhow::ensure!(
+            xs.len() == k * b * dim && ys.len() == k * b && masks.len() == k * b,
+            "train_chunk shapes: xs {} ys {} masks {} (want {}/{}/{})",
+            xs.len(), ys.len(), masks.len(), k * b * dim, k * b, k * b
+        );
+
+        let tm = Instant::now();
+        let mut args: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(meta.params.len() + 4);
+        for (i, spec) in meta.params.iter().enumerate() {
+            args.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(params.tensor(i), &spec.shape, None)
+                    .map_err(|e| anyhow!("param buffer {i}: {e}"))?,
+            );
+        }
+        let param_in = tm.elapsed().as_nanos() as u64;
+        let td = Instant::now();
+        let mut xshape = vec![k, b];
+        xshape.extend_from_slice(&meta.input_shape);
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(xs, &xshape, None)
+                .map_err(|e| anyhow!("xs buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<i32>(ys, &[k, b], None)
+                .map_err(|e| anyhow!("ys buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(masks, &[k, b], None)
+                .map_err(|e| anyhow!("masks buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(&[lr], &[], None)
+                .map_err(|e| anyhow!("lr buffer: {e}"))?,
+        );
+        let data_in = td.elapsed().as_nanos() as u64;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("train_chunk execute: {e}"))?;
+        let exec = t0.elapsed().as_nanos() as u64;
+
+        let tm2 = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose train_chunk tuple: {e}"))?;
+        anyhow::ensure!(
+            outs.len() == meta.params.len() + 1,
+            "train_chunk returned {} outputs, expected {}",
+            outs.len(),
+            meta.params.len() + 1
+        );
+        let loss = read_scalar_f32(&outs[meta.params.len()])?;
+        for i in 0..meta.params.len() {
+            literal::tensor_into(&outs[i], params.tensor_mut(i))?;
+        }
+        let marshal_out = tm2.elapsed().as_nanos() as u64;
+
+        self.stats.executions += 1;
+        self.stats.exec_nanos += exec;
+        self.stats.data_nanos += data_in;
+        self.stats.param_nanos += param_in + marshal_out;
+        Ok(loss)
+    }
+
+    /// One eval batch: returns (correct_count, loss_sum) over masked rows.
+    pub fn eval_step(
+        &mut self,
+        name: &str,
+        params: &ParamVec,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32)> {
+        let model = self
+            .models
+            .get(name)
+            .with_context(|| format!("model {name} not loaded"))?;
+        let meta = &model.meta;
+        let batch = meta.eval.batch;
+        check_batch(meta, batch, x, y, mask)?;
+
+        // Buffer-based marshalling for the same leak reason as train_step.
+        let tm = Instant::now();
+        let mut args: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(meta.params.len() + 3);
+        for (i, spec) in meta.params.iter().enumerate() {
+            args.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(params.tensor(i), &spec.shape, None)
+                    .map_err(|e| anyhow!("param buffer {i}: {e}"))?,
+            );
+        }
+        let param_in = tm.elapsed().as_nanos() as u64;
+        let td = Instant::now();
+        let mut xshape = vec![batch];
+        xshape.extend_from_slice(&meta.input_shape);
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(x, &xshape, None)
+                .map_err(|e| anyhow!("x buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<i32>(y, &[batch], None)
+                .map_err(|e| anyhow!("y buffer: {e}"))?,
+        );
+        args.push(
+            self.client
+                .buffer_from_host_buffer::<f32>(mask, &[batch], None)
+                .map_err(|e| anyhow!("mask buffer: {e}"))?,
+        );
+        let data_in = td.elapsed().as_nanos() as u64;
+
+        let t0 = Instant::now();
+        let result = model
+            .eval
+            .execute_b::<xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("eval_step execute: {e}"))?;
+        let exec = t0.elapsed().as_nanos() as u64;
+
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose eval tuple: {e}"))?;
+        if outs.len() != 2 {
+            bail!("eval_step returned {} outputs, expected 2", outs.len());
+        }
+        let correct = read_scalar_f32(&outs[0])?;
+        let loss_sum = read_scalar_f32(&outs[1])?;
+
+        self.stats.executions += 1;
+        self.stats.exec_nanos += exec;
+        self.stats.data_nanos += data_in;
+        self.stats.param_nanos += param_in;
+        Ok((correct, loss_sum))
+    }
+}
+
+fn check_batch(
+    meta: &ModelMeta,
+    batch: usize,
+    x: &[f32],
+    y: &[i32],
+    mask: &[f32],
+) -> Result<()> {
+    let want_x = batch * meta.input_dim();
+    if x.len() != want_x {
+        bail!(
+            "model {}: x has {} elements, expected {} (batch {} x dim {})",
+            meta.name,
+            x.len(),
+            want_x,
+            batch,
+            meta.input_dim()
+        );
+    }
+    if y.len() != batch || mask.len() != batch {
+        bail!(
+            "model {}: y/mask length {}/{} != batch {}",
+            meta.name,
+            y.len(),
+            mask.len(),
+            batch
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Training traces: per-round records, JSON/CSV emitters, summaries.
+//!
+//! Fig. 3 (training profiles), Fig. 7 (M/E trajectories) and the §Perf
+//! logs are all rendered from [`Trace`]s.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::overhead::Costs;
+use crate::util::json::Json;
+
+/// One finished round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Hyper-parameters used this round.
+    pub m: usize,
+    pub e: f64,
+    pub accuracy: f64,
+    pub train_loss: f64,
+    /// Cumulative overheads after this round.
+    pub costs: Costs,
+    pub fedtune_activated: bool,
+}
+
+/// A full run's per-round history.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    records: Vec<RoundRecord>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace { records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.records.last()
+    }
+
+    /// First round index whose accuracy reaches `target`, if any.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.accuracy >= target).map(|r| r.round)
+    }
+
+    /// Cumulative costs at the first round reaching `target`.
+    pub fn costs_at_accuracy(&self, target: f64) -> Option<Costs> {
+        self.records.iter().find(|r| r.accuracy >= target).map(|r| r.costs)
+    }
+
+    /// (round, M, E) series — Fig. 7's trajectories.
+    pub fn hyperparam_series(&self) -> Vec<(usize, usize, f64)> {
+        self.records.iter().map(|r| (r.round, r.m, r.e)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("round", r.round.into()),
+                    ("m", r.m.into()),
+                    ("e", r.e.into()),
+                    ("accuracy", r.accuracy.into()),
+                    ("train_loss", r.train_loss.into()),
+                    ("comp_t", r.costs.comp_t.into()),
+                    ("trans_t", r.costs.trans_t.into()),
+                    ("comp_l", r.costs.comp_l.into()),
+                    ("trans_l", r.costs.trans_l.into()),
+                    ("fedtune_activated", r.fedtune_activated.into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![("rounds", Json::Arr(rows))])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,m,e,accuracy,train_loss,comp_t,trans_t,comp_l,trans_l,fedtune_activated\n",
+        );
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{}\n",
+                r.round,
+                r.m,
+                r.e,
+                r.accuracy,
+                r.train_loss,
+                r.costs.comp_t,
+                r.costs.trans_t,
+                r.costs.comp_l,
+                r.costs.trans_l,
+                r.fedtune_activated
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            m: 20,
+            e: 2.0,
+            accuracy: acc,
+            train_loss: 1.0 - acc,
+            costs: Costs {
+                comp_t: round as f64 * 10.0,
+                trans_t: round as f64,
+                comp_l: round as f64 * 100.0,
+                trans_l: round as f64 * 20.0,
+            },
+            fedtune_activated: round % 3 == 0,
+        }
+    }
+
+    fn toy() -> Trace {
+        let mut t = Trace::new();
+        for r in 1..=10 {
+            t.push(record(r, r as f64 * 0.05));
+        }
+        t
+    }
+
+    #[test]
+    fn rounds_to_accuracy_finds_first_crossing() {
+        let t = toy();
+        assert_eq!(t.rounds_to_accuracy(0.25), Some(5));
+        assert_eq!(t.rounds_to_accuracy(0.5), Some(10));
+        assert_eq!(t.rounds_to_accuracy(0.9), None);
+        let c = t.costs_at_accuracy(0.25).unwrap();
+        assert_eq!(c.trans_t, 5.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let t = toy();
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 11);
+        assert!(lines[0].starts_with("round,m,e,accuracy"));
+        assert!(lines[1].starts_with("1,20,2,"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let t = toy();
+        let j = t.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        let rows = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 10);
+        assert_eq!(rows[4].get("round").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn file_emitters_work() {
+        let t = toy();
+        let dir = std::env::temp_dir();
+        let csv_path = dir.join("fedtune_test_trace.csv");
+        let json_path = dir.join("fedtune_test_trace.json");
+        t.write_csv(&csv_path).unwrap();
+        t.write_json(&json_path).unwrap();
+        assert!(std::fs::read_to_string(&csv_path).unwrap().contains("accuracy"));
+        assert!(std::fs::read_to_string(&json_path).unwrap().contains("rounds"));
+        let _ = std::fs::remove_file(csv_path);
+        let _ = std::fs::remove_file(json_path);
+    }
+
+    #[test]
+    fn hyperparam_series_shape() {
+        let t = toy();
+        let s = t.hyperparam_series();
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0], (1, 20, 2.0));
+    }
+}

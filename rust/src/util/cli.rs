@@ -1,0 +1,230 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, `--help`
+//! generation, and typed getters with defaults. Every binary (main CLI,
+//! examples, benches) parses through this.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    bin: String,
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Cli {
+        Cli { bin: bin.to_string(), about: about.to_string(), ..Default::default() }
+    }
+
+    /// Declare a `--key value` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Cli {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Cli {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.bin, self.about);
+        let _ = writeln!(s, "USAGE: {} [OPTIONS] [ARGS...]\n\nOPTIONS:", self.bin);
+        for spec in &self.specs {
+            if spec.is_flag {
+                let _ = writeln!(s, "  --{:<24} {}", spec.name, spec.help);
+            } else {
+                let _ = writeln!(
+                    s,
+                    "  --{:<24} {} [default: {}]",
+                    format!("{} <VALUE>", spec.name),
+                    spec.help,
+                    spec.default.as_deref().unwrap_or("")
+                );
+            }
+        }
+        let _ = writeln!(s, "  --{:<24} print this help", "help");
+        s
+    }
+
+    /// Parse; on `--help` prints help and exits; on unknown option errors.
+    pub fn parse(self, args: impl IntoIterator<Item = String>) -> Result<Cli, String> {
+        let mut me = self;
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                print!("{}", me.help_text());
+                std::process::exit(0);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = me
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key} (see --help)"))?
+                    .clone();
+                if spec.is_flag {
+                    if let Some(v) = inline_val {
+                        let b = v
+                            .parse::<bool>()
+                            .map_err(|_| format!("--{key} expects true/false, got {v:?}"))?;
+                        me.flags.insert(key, b);
+                    } else {
+                        me.flags.insert(key, true);
+                    }
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    me.values.insert(key, val);
+                }
+            } else {
+                me.positionals.push(arg);
+            }
+        }
+        Ok(me)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse_env(self) -> Result<Cli, String> {
+        self.parse(std::env::args().skip(1))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} was never declared"))
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get_str(name);
+        raw.parse::<T>()
+            .map_err(|e| format!("--{name}={raw:?}: {e}"))
+    }
+
+    /// Comma-separated list getter.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get_str(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn base() -> Cli {
+        Cli::new("t", "test")
+            .opt("rounds", "100", "number of rounds")
+            .opt("models", "a,b", "model list")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = base().parse(args(&[])).unwrap();
+        assert_eq!(c.get::<usize>("rounds").unwrap(), 100);
+        assert!(!c.get_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let c = base()
+            .parse(args(&["--rounds", "7", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.get::<usize>("rounds").unwrap(), 7);
+        assert!(c.get_flag("verbose"));
+        let c = base().parse(args(&["--rounds=9"])).unwrap();
+        assert_eq!(c.get::<usize>("rounds").unwrap(), 9);
+    }
+
+    #[test]
+    fn flag_with_explicit_value() {
+        let c = base().parse(args(&["--verbose=false"])).unwrap();
+        assert!(!c.get_flag("verbose"));
+    }
+
+    #[test]
+    fn lists_and_positionals() {
+        let c = base()
+            .parse(args(&["pos1", "--models", "x, y,z", "pos2"]))
+            .unwrap();
+        assert_eq!(c.get_list("models"), vec!["x", "y", "z"]);
+        assert_eq!(c.positionals(), &["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(base().parse(args(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(base().parse(args(&["--rounds"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_name() {
+        let c = base().parse(args(&["--rounds", "xyz"])).unwrap();
+        let err = c.get::<usize>("rounds").unwrap_err();
+        assert!(err.contains("rounds"));
+    }
+}

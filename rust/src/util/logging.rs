@@ -1,0 +1,68 @@
+//! Minimal `log`-facade backend (no env_logger offline).
+//!
+//! `FEDTUNE_LOG=debug|info|warn|error|off` controls verbosity; default
+//! `info`. Timestamps are milliseconds since logger init (wall-clock dates
+//! are irrelevant for experiment logs and this keeps output diff-able).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct SimpleLogger {
+    start: Instant,
+}
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let ms = self.start.elapsed().as_millis();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{ms:>8}ms {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static INITIALIZED: AtomicBool = AtomicBool::new(false);
+
+/// Install the logger (idempotent). Level from `FEDTUNE_LOG`.
+pub fn init() {
+    if INITIALIZED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("FEDTUNE_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(SimpleLogger { start: Instant::now() });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

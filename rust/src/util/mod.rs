@@ -1,0 +1,11 @@
+//! Offline substrates: the pieces we would normally pull from crates.io
+//! (serde, rand, clap, criterion, proptest, env_logger) built in-repo
+//! because this environment has no network access. See DESIGN.md §2.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,135 @@
+//! Scoped thread-pool substrate (no tokio/rayon offline).
+//!
+//! The real engine trains the M participants of a round concurrently; this
+//! pool gives us a deterministic-join `scope_map` over a worker set sized
+//! to the machine. Plain std threads + channels — the workload is
+//! CPU-bound PJRT executions, so async buys nothing here.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Number of workers to use by default (cores, capped).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Apply `f` to every item (in unspecified order) on up to `workers`
+/// threads; results are returned in input order. Panics in workers are
+/// propagated as Err strings rather than poisoning the caller.
+pub fn scope_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<Result<R, String>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        // Fast path, no threads: keeps single-worker runs fully deterministic
+        // and avoids thread overhead for tiny rounds.
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item)))
+                    .map_err(|e| panic_msg(&e))
+            })
+            .collect();
+    }
+
+    let queue: Arc<Mutex<Vec<(usize, T)>>> =
+        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let f = &f;
+            s.spawn(move || loop {
+                let next = queue.lock().unwrap().pop();
+                match next {
+                    None => break,
+                    Some((i, item)) => {
+                        let r = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| f(i, item)),
+                        )
+                        .map_err(|e| panic_msg(&e));
+                        if tx.send((i, r)).is_err() {
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err("worker died before producing a result".into())))
+            .collect()
+    })
+}
+
+fn panic_msg(e: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = scope_map((0..100).collect(), 8, |_, x: i32| x * 2);
+        let vals: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = scope_map(vec![1, 2, 3], 1, |i, x: i32| x + i as i32);
+        let vals: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<Result<i32, String>> = scope_map(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panics_become_errors() {
+        let out = scope_map(vec![1, 2, 3], 2, |_, x: i32| {
+            if x == 2 {
+                panic!("boom {x}");
+            }
+            x
+        });
+        assert!(out[0].is_ok());
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert!(out[2].is_ok());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = scope_map(vec![5], 16, |_, x: i32| x);
+        assert_eq!(out.len(), 1);
+        assert_eq!(*out[0].as_ref().unwrap(), 5);
+    }
+}

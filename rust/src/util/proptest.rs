@@ -1,0 +1,190 @@
+//! Property-testing substrate (no `proptest` crate offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen` from a seeded [`Rng`]; on failure it retries with a
+//! simple halving shrinker over the generator's *seed trail* (we re-draw
+//! with smaller "size" hints) and reports the seed so the case is
+//! reproducible with `FEDTUNE_PROPTEST_SEED`.
+//!
+//! This is deliberately small: deterministic seeds + a size-aware generator
+//! cover what the FL invariants need (see rust/tests/prop_*.rs).
+
+use crate::util::rng::Rng;
+
+/// Generation context handed to generators: RNG + a size hint in [1, 100].
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, hi] scaled-ish by size (small sizes bias small vals).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = (hi - lo).max(0);
+        let scaled = (span as f64 * (self.size as f64 / 100.0)).ceil() as i64;
+        self.rng.range(lo, lo + scaled.clamp(0, span))
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = self.usize(0, max_len);
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let len = self.usize(0, max_len);
+        (0..len)
+            .map(|_| self.f64(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+}
+
+/// Outcome of a property check (for tests asserting failure reporting).
+#[derive(Debug)]
+pub struct PropFailure {
+    pub name: String,
+    pub seed: u64,
+    pub case: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property {:?} failed on case {} (reproduce with FEDTUNE_PROPTEST_SEED={}): {}",
+            self.name, self.case, self.seed, self.message
+        )
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("FEDTUNE_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfed7_0e5e)
+}
+
+/// Run `prop` on `cases` generated inputs; panic with a reproducible
+/// diagnostic on the first failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    if let Some(f) = check_quiet(name, cases, &mut generate, &mut prop) {
+        panic!("{f}\nfailing input (re-generated at min size): see seed");
+    }
+}
+
+/// Non-panicking variant used by the substrate's own tests.
+pub fn check_quiet<T, G, P>(
+    name: &str,
+    cases: usize,
+    generate: &mut G,
+    prop: &mut P,
+) -> Option<PropFailure>
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        // Size ramps up: early cases are small (easy to eyeball), later
+        // cases stress larger structures.
+        let size = 1 + (case * 99) / cases.max(1);
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let mut g = Gen { rng: &mut rng, size };
+        let input = generate(&mut g);
+        if let Err(message) = prop(&input) {
+            // Shrink: re-draw the same case seed at smaller sizes and keep
+            // the smallest size that still fails.
+            let mut best = (size, message.clone(), format!("{input:?}"));
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(
+                    seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15),
+                );
+                let mut g = Gen { rng: &mut rng, size: s };
+                let small = generate(&mut g);
+                if let Err(m) = prop(&small) {
+                    best = (s, m, format!("{small:?}"));
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            return Some(PropFailure {
+                name: name.to_string(),
+                seed,
+                case,
+                message: format!("{} [shrunk to size {}] input={}", best.1, best.0, best.2),
+            });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 200, |g| (g.int(-100, 100), g.int(-100, 100)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed_and_shrinks() {
+        let mut gen = |g: &mut Gen| g.usize(0, 1000);
+        let mut prop = |x: &usize| {
+            if *x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        };
+        let f = check_quiet("fails", 500, &mut gen, &mut prop).expect("must fail");
+        assert!(f.message.contains("too big"));
+        // Shrinker should have pushed the size down.
+        assert!(f.message.contains("shrunk"));
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut max_seen = 0usize;
+        let mut min_seen = usize::MAX;
+        check(
+            "size-ramp",
+            100,
+            |g| {
+                max_seen = max_seen.max(g.size);
+                min_seen = min_seen.min(g.size);
+                g.size
+            },
+            |_| Ok(()),
+        );
+        assert_eq!(min_seen, 1);
+        assert!(max_seen >= 95);
+    }
+}

@@ -1,0 +1,354 @@
+//! Deterministic RNG substrate (no `rand` crate offline).
+//!
+//! PCG64 (XSL-RR 128/64) core with the distribution helpers the FL stack
+//! needs: uniforms, Gaussians (Box–Muller), gamma/Dirichlet (Marsaglia–Tsang)
+//! for non-IID label skew, Zipf-like power-law sampling for client dataset
+//! sizes (Fig. 2a shape), shuffling, and sampling without replacement for
+//! participant selection.
+//!
+//! Everything is reproducible from a single `u64` seed; all experiment
+//! drivers thread seeds explicitly so that every table/figure bench is
+//! deterministic.
+
+/// PCG64 XSL-RR generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// Cached second Gaussian from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Seed the generator. Two different seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into state/inc.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let state = ((next() as u128) << 64) | next() as u128;
+        let inc = (((next() as u128) << 64) | next() as u128) | 1;
+        let mut rng = Rng { state, inc, gauss_spare: None };
+        // Warm up so low-entropy seeds decorrelate.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive a child stream (stable: depends only on parent state + tag).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let s = self.next_u64() ^ tag.rotate_left(17);
+        Rng::new(s)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 bits of mantissa.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) (n > 0), bias-free via rejection.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.f64();
+            let u2 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let t = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * t.sin());
+            return r * t.cos();
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gauss()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (shape > 0).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^{1/a}.
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gauss();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * ones(k)) sample — the non-IID label-skew driver.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        assert!(k > 0);
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s <= 0.0 {
+            // Degenerate fallback: uniform.
+            return vec![1.0 / k as f64; k];
+        }
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Draw from a discrete distribution given (unnormalized) weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical with zero mass");
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Bounded power-law sample in [lo, hi]: P(x) ∝ x^(-a).
+    ///
+    /// Used to reproduce the speech-to-command client-size distribution
+    /// (many 1-data-point clients, a heavy tail up to 316; Fig. 2a).
+    pub fn power_law(&mut self, lo: f64, hi: f64, a: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        let u = self.f64();
+        if (a - 1.0).abs() < 1e-9 {
+            return lo * (hi / lo).powf(u);
+        }
+        let e = 1.0 - a;
+        (lo.powf(e) + u * (hi.powf(e) - lo.powf(e))).powf(1.0 / e)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from [0, n) (m <= n), uniform.
+    ///
+    /// Partial Fisher–Yates — O(n) memory, O(m) swaps; the participant
+    /// selector (paper's random selection) calls this every round.
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "sample {m} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+
+    /// Gaussian-perturbed multiplicative noise: x * max(0, N(1, cv)).
+    pub fn jitter(&mut self, x: f64, cv: f64) -> f64 {
+        x * self.normal(1.0, cv).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(13);
+        for &shape in &[0.3, 1.0, 4.5] {
+            let n = 50_000;
+            let mean: f64 =
+                (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(0.5),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(17);
+        for _ in 0..100 {
+            let v = r.dirichlet(0.3, 10);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(19);
+        for _ in 0..100 {
+            let m = r.below(50) + 1;
+            let v = r.sample_indices(100, m);
+            assert_eq!(v.len(), m);
+            let mut s = v.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), m, "duplicates in {v:?}");
+            assert!(v.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn power_law_bounded() {
+        let mut r = Rng::new(23);
+        for _ in 0..10_000 {
+            let x = r.power_law(1.0, 316.0, 1.6);
+            assert!((1.0..=316.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn power_law_is_heavy_headed() {
+        // Most mass near the low end, as in Fig. 2a.
+        let mut r = Rng::new(29);
+        let n = 20_000;
+        let small = (0..n)
+            .filter(|_| r.power_law(1.0, 316.0, 1.6) < 10.0)
+            .count();
+        assert!(small as f64 > 0.5 * n as f64, "small={small}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(31);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > 2 * counts[0]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(37);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut parent = Rng::new(41);
+        let mut a = parent.fork(0);
+        let mut b = parent.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

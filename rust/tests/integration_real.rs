@@ -1,0 +1,203 @@
+//! Integration: the REAL engine over the AOT artifacts — Pallas-kernel
+//! HLO executed through PJRT, aggregation on genuine parameter vectors.
+//!
+//! These tests skip (with a message) when `artifacts/` is missing so that
+//! `cargo test` works before `make artifacts`; CI runs them after it.
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::coordinator::selection::Selector;
+use fedtune::coordinator::{Server, ServerConfig, StopReason};
+use fedtune::data::{DatasetProfile, FederatedDataset};
+use fedtune::engine::real::{RealEngine, RealEngineConfig};
+use fedtune::engine::FlEngine;
+use fedtune::fedtune::schedule::Schedule;
+use fedtune::model::ParamVec;
+use fedtune::overhead::CostModel;
+use fedtune::runtime::Runtime;
+use fedtune::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(r) => Some(r),
+        Err(_) => {
+            eprintln!("skipping real-engine test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+fn engine(model: &str, dataset: &str, scale: f64, agg: AggregatorKind, seed: u64) -> Option<RealEngine> {
+    let runtime = runtime()?;
+    let profile = DatasetProfile::by_name(dataset).unwrap().scaled(scale);
+    let ds = FederatedDataset::generate(&profile, seed);
+    Some(
+        RealEngine::new(
+            runtime,
+            ds,
+            RealEngineConfig {
+                model: model.into(),
+                lr: 0.1,
+                aggregator: agg,
+                eval_subsample: 512,
+                seed,
+            },
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn train_step_descends_and_eval_is_bounded() {
+    let Some(mut rt) = runtime() else { return };
+    rt.load_model("mlp-s").unwrap();
+    let meta = rt.model_meta("mlp-s").unwrap().clone();
+    let mut rng = Rng::new(3);
+    let mut params = ParamVec::init_he(&meta.params, &mut rng);
+    let b = meta.train.batch;
+    let dim = meta.input_dim();
+    let x: Vec<f32> = (0..b * dim).map(|_| rng.gauss() as f32).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % meta.classes) as i32).collect();
+    let mask = vec![1.0f32; b];
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        losses.push(rt.train_step("mlp-s", &mut params, &x, &y, &mask, 0.1).unwrap());
+    }
+    assert!(losses[9] < losses[0], "{losses:?}");
+    assert!(params.all_finite());
+}
+
+#[test]
+fn chunked_and_stepwise_training_agree() {
+    // Same data, same params: K-chunked scan must equal K single steps.
+    let Some(mut rt) = runtime() else { return };
+    rt.load_model("mlp-s").unwrap();
+    let meta = rt.model_meta("mlp-s").unwrap().clone();
+    let k = *rt.chunk_sizes("mlp-s").first().unwrap();
+    let b = meta.train.batch;
+    let dim = meta.input_dim();
+    let mut rng = Rng::new(4);
+    let p0 = ParamVec::init_he(&meta.params, &mut rng);
+    let xs: Vec<f32> = (0..k * b * dim).map(|_| rng.gauss() as f32).collect();
+    let ys: Vec<i32> = (0..k * b).map(|i| (i * 7 % meta.classes) as i32).collect();
+    let masks = vec![1.0f32; k * b];
+
+    let mut p_chunk = p0.clone();
+    rt.train_chunk("mlp-s", k, &mut p_chunk, &xs, &ys, &masks, 0.05).unwrap();
+
+    let mut p_steps = p0.clone();
+    for s in 0..k {
+        rt.train_step(
+            "mlp-s",
+            &mut p_steps,
+            &xs[s * b * dim..(s + 1) * b * dim],
+            &ys[s * b..(s + 1) * b],
+            &masks[s * b..(s + 1) * b],
+            0.05,
+        )
+        .unwrap();
+    }
+    let diff = p_chunk.delta(&p_steps).max_abs();
+    assert!(diff < 1e-4, "chunked vs stepwise diverged: {diff}");
+}
+
+#[test]
+fn zero_mask_chunk_is_a_noop() {
+    let Some(mut rt) = runtime() else { return };
+    rt.load_model("mlp-s").unwrap();
+    let meta = rt.model_meta("mlp-s").unwrap().clone();
+    let k = *rt.chunk_sizes("mlp-s").first().unwrap();
+    let b = meta.train.batch;
+    let dim = meta.input_dim();
+    let mut rng = Rng::new(5);
+    let p0 = ParamVec::init_he(&meta.params, &mut rng);
+    let xs: Vec<f32> = (0..k * b * dim).map(|_| rng.gauss() as f32).collect();
+    let ys = vec![0i32; k * b];
+    let masks = vec![0.0f32; k * b];
+    let mut p = p0.clone();
+    rt.train_chunk("mlp-s", k, &mut p, &xs, &ys, &masks, 0.5).unwrap();
+    assert!(
+        p.delta(&p0).max_abs() == 0.0,
+        "all-masked chunk must not move params"
+    );
+}
+
+#[test]
+fn real_fl_round_improves_accuracy_over_chance() {
+    let Some(mut eng) = engine("mlp-s", "speech", 0.03, AggregatorKind::FedAvg, 7) else {
+        return;
+    };
+    let chance = 1.0 / 35.0;
+    let parts: Vec<usize> = (0..8.min(eng.num_clients())).collect();
+    let mut acc = 0.0;
+    for _ in 0..12 {
+        acc = eng.run_round(&parts, 1.0).unwrap().accuracy;
+    }
+    assert!(acc > 3.0 * chance, "accuracy {acc} not above chance");
+}
+
+#[test]
+fn full_real_training_reaches_target_with_all_aggregators() {
+    for agg in [
+        AggregatorKind::FedAvg,
+        AggregatorKind::FedNova,
+        AggregatorKind::fedadagrad_paper(),
+    ] {
+        let Some(mut eng) = engine("mlp-s", "speech", 0.05, agg, 11) else { return };
+        let meta = eng.runtime().manifest().model("mlp-s").unwrap().clone();
+        let server = Server::new(
+            &mut eng,
+            ServerConfig {
+                target_accuracy: 0.6,
+                max_rounds: 60,
+                cost_model: CostModel::from_flops_params(
+                    meta.flops_per_sample,
+                    meta.param_count as u64,
+                ),
+                selector: Selector::UniformRandom,
+                seed: 11,
+            },
+            Schedule::Fixed { m: 10, e: 2 },
+        );
+        let r = server.run().unwrap();
+        assert_eq!(
+            r.stop,
+            StopReason::TargetReached,
+            "{:?} only reached {:.3}",
+            agg,
+            r.final_accuracy
+        );
+    }
+}
+
+#[test]
+fn emnist_real_model_trains() {
+    let Some(mut eng) = engine("mlp-emnist", "emnist", 0.04, AggregatorKind::FedAvg, 13) else {
+        return;
+    };
+    let parts: Vec<usize> = (0..10.min(eng.num_clients())).collect();
+    let mut acc = 0.0;
+    for _ in 0..10 {
+        acc = eng.run_round(&parts, 2.0).unwrap().accuracy;
+    }
+    assert!(acc > 0.3, "emnist accuracy {acc}");
+}
+
+#[test]
+fn model_dataset_mismatch_rejected() {
+    let Some(runtime) = runtime() else { return };
+    let profile = DatasetProfile::emnist().scaled(0.02);
+    let ds = FederatedDataset::generate(&profile, 1);
+    // mlp-s expects 1024-dim speech inputs, not 784-dim emnist.
+    let err = RealEngine::new(
+        runtime,
+        ds,
+        RealEngineConfig {
+            model: "mlp-s".into(),
+            lr: 0.1,
+            aggregator: AggregatorKind::FedAvg,
+            eval_subsample: 64,
+            seed: 1,
+        },
+    );
+    assert!(err.is_err());
+}

@@ -1,0 +1,124 @@
+//! Integration: coordinator + FedTune + overhead accounting over the
+//! simulator engine — full runs through the public API.
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::coordinator::StopReason;
+use fedtune::overhead::Preference;
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig { max_rounds: 30_000, ..ExperimentConfig::default() }
+}
+
+#[test]
+fn baseline_reaches_speech_target_in_sane_rounds() {
+    let r = baselines::run_sim(&cfg(), 5).unwrap();
+    assert_eq!(r.stop, StopReason::TargetReached);
+    assert!(r.final_accuracy >= 0.8);
+    // Calibration: paper's baseline ≈ 146 rounds; allow a wide band.
+    assert!(
+        (60..600).contains(&r.rounds),
+        "baseline rounds {} out of band",
+        r.rounds
+    );
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    let a = baselines::run_sim(&cfg(), 9).unwrap();
+    let b = baselines::run_sim(&cfg(), 9).unwrap();
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.costs, b.costs);
+    // A different seed draws different client sizes → different costs
+    // (round counts can coincide by chance; costs cannot).
+    let c = baselines::run_sim(&cfg(), 10).unwrap();
+    assert_ne!(a.costs, c.costs);
+}
+
+#[test]
+fn costs_accumulate_monotonically_and_match_round_count() {
+    let r = baselines::run_sim(&cfg(), 11).unwrap();
+    let recs = r.trace.records();
+    for w in recs.windows(2) {
+        assert!(w[1].costs.comp_t >= w[0].costs.comp_t);
+        assert!(w[1].costs.comp_l >= w[0].costs.comp_l);
+        assert!(w[1].costs.trans_t > w[0].costs.trans_t);
+        assert!(w[1].costs.trans_l > w[0].costs.trans_l);
+    }
+    // Eq. 3: TransT = C2 * R exactly.
+    let c2 = 79_700.0;
+    assert!((r.costs.trans_t - c2 * r.rounds as f64).abs() < 1e-6);
+}
+
+#[test]
+fn fedtune_beats_baseline_for_pure_comp_l() {
+    let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+    let c = baselines::compare(&cfg(), pref, &[1, 2, 3]).unwrap();
+    assert!(c.improvement_pct > 20.0, "got {:+.2}%", c.improvement_pct);
+    assert!(c.final_m_mean <= 5.0);
+}
+
+#[test]
+fn fedtune_tracks_pure_preferences_directionally() {
+    // α=1 grows M; δ=1 grows E and shrinks M (paper Table 4).
+    let a = baselines::compare(&cfg(), Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(), &[4]).unwrap();
+    assert!(a.final_m_mean > 20.0, "α=1 final M {}", a.final_m_mean);
+    let d = baselines::compare(&cfg(), Preference::new(0.0, 0.0, 0.0, 1.0).unwrap(), &[4]).unwrap();
+    assert!(d.final_m_mean < 20.0 && d.final_e_mean > 20.0);
+}
+
+#[test]
+fn all_aggregators_and_datasets_run() {
+    for agg in ["fedavg", "fednova", "fedadagrad"] {
+        for (ds, model) in [("speech", "resnet-10"), ("emnist", "mlp-200"), ("cifar", "resnet-10")] {
+            let c = ExperimentConfig {
+                dataset: ds.into(),
+                model: model.into(),
+                aggregator: AggregatorKind::by_name(agg).unwrap(),
+                max_rounds: 30_000,
+                ..ExperimentConfig::default()
+            };
+            let r = baselines::run_sim(&c, 3).unwrap();
+            assert_eq!(r.stop, StopReason::TargetReached, "{agg}/{ds}");
+        }
+    }
+}
+
+#[test]
+fn fedtune_never_leaves_bounds_across_grid() {
+    for (i, pref) in Preference::paper_grid().into_iter().enumerate() {
+        let mut c = cfg();
+        c.preference = Some(pref);
+        c.max_rounds = 4000;
+        let r = baselines::run_sim(&c, 100 + i as u64).unwrap();
+        for rec in r.trace.records() {
+            assert!(rec.m >= 1 && rec.m <= 2112, "M {} out of bounds", rec.m);
+            assert!(rec.e >= 1.0 && rec.e <= 256.0);
+        }
+    }
+}
+
+#[test]
+fn trace_csv_roundtrip_has_all_rounds() {
+    let r = baselines::run_sim(&cfg(), 21).unwrap();
+    let csv = r.trace.to_csv();
+    assert_eq!(csv.lines().count(), r.rounds + 1);
+    let dir = std::env::temp_dir().join("fedtune_int_trace.csv");
+    r.trace.write_csv(&dir).unwrap();
+    std::fs::remove_file(dir).unwrap();
+}
+
+#[test]
+fn config_file_drives_run() {
+    let mut c = cfg();
+    c.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
+    c.seed = 77;
+    let path = std::env::temp_dir().join("fedtune_int_cfg.json");
+    c.save(&path).unwrap();
+    let loaded = ExperimentConfig::load(&path).unwrap();
+    let a = baselines::run_sim(&c, c.seed).unwrap();
+    let b = baselines::run_sim(&loaded, loaded.seed).unwrap();
+    assert_eq!(a.rounds, b.rounds);
+    std::fs::remove_file(path).unwrap();
+}

@@ -1,0 +1,282 @@
+//! Property-based tests over the FL invariants (DESIGN.md §7), using the
+//! in-repo property-testing substrate (util::proptest).
+
+use fedtune::coordinator::selection::Selector;
+use fedtune::fedtune::{FedTune, FedTuneConfig};
+use fedtune::model::{ParamSpec, ParamVec};
+use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
+use fedtune::overhead::{CostModel, Costs, Preference};
+use fedtune::util::json::Json;
+use fedtune::util::proptest::{check, Gen};
+use fedtune::util::rng::Rng;
+
+#[test]
+fn prop_selection_returns_distinct_valid_clients() {
+    check(
+        "selection-distinct",
+        300,
+        |g: &mut Gen| {
+            let k = g.usize(1, 500);
+            let m = g.usize(1, 600);
+            let sizes: Vec<usize> = (0..k).map(|_| g.usize(1, 316)).collect();
+            let seed = g.rng.next_u64();
+            (sizes, m, seed)
+        },
+        |(sizes, m, seed)| {
+            let mut rng = Rng::new(*seed);
+            let picked = Selector::UniformRandom.select(sizes, *m, &mut rng);
+            if picked.len() != (*m).min(sizes.len()) {
+                return Err(format!("picked {} of {}", picked.len(), m));
+            }
+            let mut s = picked.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != picked.len() {
+                return Err("duplicates".into());
+            }
+            if picked.iter().any(|&i| i >= sizes.len()) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_costs_match_equations_exactly() {
+    check(
+        "eqs-2-to-5",
+        300,
+        |g: &mut Gen| {
+            let sizes: Vec<usize> = (0..g.usize(1, 60)).map(|_| g.usize(1, 316)).collect();
+            let e = g.f64(0.25, 16.0);
+            let c1 = g.f64(1.0, 1e8);
+            let c2 = g.f64(1.0, 1e6);
+            (sizes, e, c1, c2)
+        },
+        |(sizes, e, c1, c2)| {
+            let cm = CostModel { c1: *c1, c2: *c2, c3: *c1, c4: *c2 };
+            let c = cm.round_costs(sizes, *e);
+            let max = *sizes.iter().max().unwrap() as f64;
+            let sum: usize = sizes.iter().sum();
+            let checks = [
+                (c.comp_t, c1 * e * max),
+                (c.trans_t, *c2),
+                (c.comp_l, c1 * e * sum as f64),
+                (c.trans_l, c2 * sizes.len() as f64),
+            ];
+            for (got, want) in checks {
+                if (got - want).abs() > want.abs() * 1e-12 {
+                    return Err(format!("{got} != {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fedavg_preserves_convex_hull_and_identity() {
+    check(
+        "fedavg-convexity",
+        150,
+        |g: &mut Gen| {
+            let n_params = g.usize(1, 64);
+            let n_clients = g.usize(1, 8);
+            let seed = g.rng.next_u64();
+            (n_params, n_clients, seed)
+        },
+        |(n_params, n_clients, seed)| {
+            let specs = vec![ParamSpec { name: "w".into(), shape: vec![*n_params] }];
+            let mut rng = Rng::new(*seed);
+            let updates: Vec<ClientUpdate> = (0..*n_clients)
+                .map(|i| ClientUpdate {
+                    params: ParamVec::init_he(&specs, &mut rng),
+                    n: 1 + i,
+                    tau: 3,
+                })
+                .collect();
+            let mut global = ParamVec::zeros(&specs);
+            Aggregator::new(AggregatorKind::FedAvg).aggregate(&mut global, &updates);
+            // Every coordinate must lie in the clients' min/max hull.
+            for j in 0..*n_params {
+                let lo = updates.iter().map(|u| u.params.data[j]).fold(f32::INFINITY, f32::min);
+                let hi = updates.iter().map(|u| u.params.data[j]).fold(f32::NEG_INFINITY, f32::max);
+                let v = global.data[j];
+                if v < lo - 1e-5 || v > hi + 1e-5 {
+                    return Err(format!("coord {j}: {v} outside [{lo}, {hi}]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fedtune_stays_in_bounds_and_moves_by_one() {
+    check(
+        "fedtune-bounds",
+        100,
+        |g: &mut Gen| {
+            let pref_idx = g.usize(0, 14);
+            let seed = g.rng.next_u64();
+            let rounds = g.usize(5, 200);
+            (pref_idx, seed, rounds)
+        },
+        |(pref_idx, seed, rounds)| {
+            let pref = Preference::paper_grid()[*pref_idx];
+            let cfg = FedTuneConfig { m_max: 50, e_max: 64, ..FedTuneConfig::paper_defaults(50) };
+            let mut ft = FedTune::new(pref, cfg, 20, 20).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(*seed);
+            let mut cum = Costs::ZERO;
+            let mut acc: f64 = 0.0;
+            let (mut last_m, mut last_e) = (ft.m(), ft.e());
+            for r in 0..*rounds {
+                acc = (acc + rng.f64() * 0.05).min(0.99);
+                cum.add(&Costs {
+                    comp_t: rng.f64() * 100.0,
+                    trans_t: 1.0,
+                    comp_l: rng.f64() * 1000.0,
+                    trans_l: rng.f64() * 50.0,
+                });
+                ft.observe_round(r, acc, cum);
+                let (m, e) = (ft.m(), ft.e());
+                if !(1..=50).contains(&m) || !(1..=64).contains(&e) {
+                    return Err(format!("out of bounds: M={m} E={e}"));
+                }
+                if m.abs_diff(last_m) > 1 || e.abs_diff(last_e) > 1 {
+                    return Err(format!(
+                        "moved more than one: {last_m}->{m}, {last_e}->{e}"
+                    ));
+                }
+                last_m = m;
+                last_e = e;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_comparison_antisymmetric_for_single_aspect() {
+    // For pure preferences, sign(I(a,b)) must be opposite of sign(I(b,a)).
+    check(
+        "eq6-antisymmetry",
+        300,
+        |g: &mut Gen| {
+            let a = Costs {
+                comp_t: g.f64(1.0, 1e6),
+                trans_t: g.f64(1.0, 1e6),
+                comp_l: g.f64(1.0, 1e6),
+                trans_l: g.f64(1.0, 1e6),
+            };
+            let b = Costs {
+                comp_t: g.f64(1.0, 1e6),
+                trans_t: g.f64(1.0, 1e6),
+                comp_l: g.f64(1.0, 1e6),
+                trans_l: g.f64(1.0, 1e6),
+            };
+            let idx = g.usize(0, 3);
+            (a, b, idx)
+        },
+        |(a, b, idx)| {
+            let w = |i: usize| if i == *idx { 1.0 } else { 0.0 };
+            let pref = Preference::new(w(0), w(1), w(2), w(3)).unwrap();
+            let ab = a.compare(b, &pref);
+            let ba = b.compare(a, &pref);
+            if ab.abs() < 1e-12 && ba.abs() < 1e-12 {
+                return Ok(());
+            }
+            if ab.signum() == ba.signum() {
+                return Err(format!("I(a,b)={ab} and I(b,a)={ba} same sign"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrips_arbitrary_trees() {
+    check(
+        "json-roundtrip",
+        200,
+        |g: &mut Gen| gen_json(g, 3),
+        |j| {
+            let s = j.pretty();
+            let parsed = Json::parse(&s).map_err(|e| e.to_string())?;
+            if &parsed != j {
+                return Err(format!("roundtrip mismatch: {s}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gen_json(g: &mut Gen, depth: usize) -> Json {
+    let pick = g.usize(0, if depth == 0 { 3 } else { 5 });
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        // Integers only: float text roundtrip equality is a separate test.
+        2 => Json::Num(g.int(-1_000_000, 1_000_000) as f64),
+        3 => Json::Str(format!("s{}-\"quote\n", g.usize(0, 999))),
+        4 => Json::Arr((0..g.usize(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+        _ => {
+            let mut o = Json::obj();
+            for i in 0..g.usize(0, 4) {
+                o.set(&format!("k{i}"), gen_json(g, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+#[test]
+fn prop_rng_streams_reproducible_and_bounded() {
+    check(
+        "rng-repro",
+        200,
+        |g: &mut Gen| (g.rng.next_u64(), g.usize(1, 1000)),
+        |(seed, n)| {
+            let mut a = Rng::new(*seed);
+            let mut b = Rng::new(*seed);
+            for _ in 0..50 {
+                let x = a.below(*n);
+                if x != b.below(*n) {
+                    return Err("streams diverged".into());
+                }
+                if x >= *n {
+                    return Err("below() out of range".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_paramvec_axpy_linear() {
+    check(
+        "axpy-linearity",
+        200,
+        |g: &mut Gen| {
+            let n = g.usize(1, 256);
+            (n, g.rng.next_u64(), g.f64(-2.0, 2.0))
+        },
+        |(n, seed, alpha)| {
+            let specs = vec![ParamSpec { name: "w".into(), shape: vec![*n] }];
+            let mut rng = Rng::new(*seed);
+            let a = ParamVec::init_he(&specs, &mut rng);
+            let b = ParamVec::init_he(&specs, &mut rng);
+            // (a + αb) - αb == a
+            let mut acc = a.clone();
+            acc.axpy(*alpha as f32, &b);
+            acc.axpy(-(*alpha as f32), &b);
+            let err = acc.delta(&a).max_abs();
+            if err > 1e-4 {
+                return Err(format!("axpy not invertible: {err}"));
+            }
+            Ok(())
+        },
+    );
+}
