@@ -10,7 +10,7 @@
 //! Table-2 ResNet-18 mirror), FedAvg aggregation with a deliberately
 //! conservative client LR (hundreds of rounds of horizon), target 0.90, balanced preference. Both the FedTune run and the fixed (10, 2)
 //! baseline are executed for a real Eq. 6 comparison; loss/accuracy curves
-//! land in traces/ and EXPERIMENTS.md records a reference run.
+//! land in traces/. Requires a `pjrt`-enabled build plus `make artifacts`.
 //!
 //!     make artifacts && cargo run --release --example e2e_train
 

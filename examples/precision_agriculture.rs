@@ -9,8 +9,8 @@
 //!
 //!     cargo run --release --example precision_agriculture
 
-use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
 use fedtune::overhead::Preference;
 
 fn main() -> anyhow::Result<()> {
@@ -23,20 +23,26 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("precision agriculture: energy-sensitive (γ=0.5, δ=0.5)\n");
-    let c = baselines::compare(&cfg, pref, &[31, 32, 33])?;
+    let result = Grid::new(cfg)
+        .preferences(&[pref])
+        .seeds(&[31, 32, 33])
+        .compare_baseline(true)
+        .run()?;
+    let c = &result.cells[0];
+    let imp = c.improvement.expect("compare_baseline reports improvement");
     println!(
         "FedTune vs fixed (20,20):  {:+.2}% (std {:.2}%) weighted-overhead reduction",
-        c.improvement_pct, c.improvement_std
+        imp.mean, imp.std
     );
     println!(
         "final hyper-parameters:    M = {:.1} (std {:.1}), E = {:.1} (std {:.1})",
-        c.final_m_mean, c.final_m_std, c.final_e_mean, c.final_e_std
+        c.final_m.mean, c.final_m.std, c.final_e.mean, c.final_e.std
     );
 
     anyhow::ensure!(
-        c.final_m_mean < 20.0,
+        c.final_m.mean < 20.0,
         "energy-sensitive apps should shrink M (paper: →1), got {:.1}",
-        c.final_m_mean
+        c.final_m.mean
     );
     println!("\nM shrank as the paper's (0,0,.5,.5) row predicts ✓");
     Ok(())

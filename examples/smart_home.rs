@@ -9,8 +9,8 @@
 //!
 //!     cargo run --release --example smart_home
 
-use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
 use fedtune::overhead::Preference;
 
 fn main() -> anyhow::Result<()> {
@@ -23,26 +23,32 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("smart-home HVAC: computation-sensitive (α=0.5, γ=0.5)\n");
-    let c = baselines::compare(&cfg, pref, &[7, 8, 9])?;
+    let result = Grid::new(cfg)
+        .preferences(&[pref])
+        .seeds(&[7, 8, 9])
+        .compare_baseline(true)
+        .run()?;
+    let c = &result.cells[0];
+    let imp = c.improvement.expect("compare_baseline reports improvement");
     println!(
         "FedTune vs fixed (20,20):  {:+.2}% (std {:.2}%) weighted-overhead reduction",
-        c.improvement_pct, c.improvement_std
+        imp.mean, imp.std
     );
     println!(
         "final hyper-parameters:    M = {:.1} (std {:.1}), E = {:.1} (std {:.1})",
-        c.final_m_mean, c.final_m_std, c.final_e_mean, c.final_e_std
+        c.final_m.mean, c.final_m.std, c.final_e.mean, c.final_e.std
     );
     println!(
         "FedTune overheads:         CompT {:.3e}  TransT {:.3e}  CompL {:.3e}  TransL {:.3e}",
-        c.fedtune_costs[0], c.fedtune_costs[1], c.fedtune_costs[2], c.fedtune_costs[3]
+        c.costs[0].mean, c.costs[1].mean, c.costs[2].mean, c.costs[3].mean
     );
 
     // The computation-sensitive controller must slash E (Table 3: both
     // CompT and CompL prefer small E).
     anyhow::ensure!(
-        c.final_e_mean < 20.0,
+        c.final_e.mean < 20.0,
         "expected E to shrink for a computation-sensitive app, got {:.1}",
-        c.final_e_mean
+        c.final_e.mean
     );
     println!("\nE shrank as Table 3 predicts for computation-sensitive apps ✓");
     Ok(())

@@ -5,16 +5,14 @@
 //! (b) accuracy-to-CompT, (c) round time growth with M, (d) accuracy-to-
 //! CompL, (e) accuracy-to-TransT, (f) accuracy-to-TransL — and asserts the
 //! paper's qualitative ordering (more participants: better round/CompT/
-//! TransT, worse CompL/TransL).
+//! TransT, worse CompL/TransL). The four profiles run concurrently through
+//! `experiment::Grid` with traces retained.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::config::ExperimentConfig;
-use fedtune::coordinator::{Server, ServerConfig};
-use fedtune::coordinator::selection::Selector;
-use fedtune::engine::sim::{SimEngine, SimParams};
-use fedtune::fedtune::schedule::Schedule;
+use fedtune::experiment::Grid;
 use fedtune::overhead::CostModel;
 use fedtune::trace::Trace;
 use harness::Table;
@@ -23,31 +21,26 @@ const MS: [usize; 4] = [1, 10, 20, 50];
 const TARGET: f64 = 0.8;
 const ACC_GRID: [f64; 7] = [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
 
-fn run_profile(m: usize, seed: u64) -> Trace {
-    let cfg = ExperimentConfig {
+fn main() {
+    let base = ExperimentConfig {
         model: "resnet-18".into(),
+        target_accuracy: TARGET,
+        max_rounds: 60_000,
         ..ExperimentConfig::default()
     };
-    let profile = cfg.profile().unwrap();
-    let params = SimParams::default().with_a_max(0.90); // resnet-18 ceiling
-    let mut engine = SimEngine::new(&profile, params, seed);
-    let server = Server::new(
-        &mut engine,
-        ServerConfig {
-            target_accuracy: TARGET,
-            max_rounds: 60_000,
-            cost_model: CostModel::UNIT, // the paper's Fig. 3 setting
-            selector: Selector::UniformRandom,
-            seed,
-        },
-        Schedule::Fixed { m, e: 1 },
-    );
-    server.run().unwrap().trace
-}
-
-fn main() {
-    let traces: Vec<(usize, Trace)> =
-        MS.iter().map(|&m| (m, run_profile(m, 7))).collect();
+    let result = Grid::new(base)
+        .m0s(&MS)
+        .e0s(&[1.0])
+        .seeds(&[7])
+        .cost_model(CostModel::UNIT) // the paper's Fig. 3 setting
+        .keep_traces(true)
+        .run()
+        .unwrap();
+    let traces: Vec<(usize, &Trace)> = result
+        .cells
+        .iter()
+        .map(|c| (c.cell.m0, c.runs[0].trace.as_ref().unwrap()))
+        .collect();
 
     // Panel (a)/(b)/(d)/(e)/(f): overheads at each accuracy milestone.
     for (panel, pick) in [

@@ -1,84 +1,47 @@
 //! Paper Fig. 4: CompT / TransT / CompL / TransL over the
 //! M ∈ {1, 10, 20, 50} × E ∈ {0.5, 1, 2, 4, 8} grid (speech, ResNet-18,
 //! target 0.8, averaged over 3 runs, normalized to the largest overhead).
+//!
+//! All 60 (M, E, seed) runs execute concurrently through
+//! `experiment::Grid`; the fractional E = 0.5 column uses the grid's
+//! fixed-schedule fractional runner.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::config::ExperimentConfig;
-use fedtune::coordinator::selection::Selector;
-use fedtune::coordinator::{Server, ServerConfig};
-use fedtune::engine::sim::{SimEngine, SimParams};
-use fedtune::fedtune::schedule::Schedule;
-use fedtune::overhead::{CostModel, Costs};
-use fedtune::util::stats;
+use fedtune::experiment::Grid;
 use harness::{Table, SEEDS3};
 
 const MS: [usize; 4] = [1, 10, 20, 50];
 const ES: [f64; 5] = [0.5, 1.0, 2.0, 4.0, 8.0];
 
-/// Run to target with fixed (M, E) — E may be fractional, so we bypass the
-/// integer schedule and drive the server loop manually via Schedule::Fixed
-/// with e=1 ... instead we run the engine directly.
-fn run_cell(m: usize, e: f64, seed: u64) -> Costs {
-    let cfg = ExperimentConfig {
+fn main() {
+    let base = ExperimentConfig {
         model: "resnet-18".into(),
+        target_accuracy: 0.8,
+        max_rounds: 60_000,
         ..ExperimentConfig::default()
     };
-    let profile = cfg.profile().unwrap();
-    let cost_model =
-        CostModel::from_flops_params(26_800_000, 177_200); // resnet-18
-    let params = SimParams::default().with_a_max(0.90);
-    let mut engine = SimEngine::new(&profile, params, seed);
+    let result = Grid::new(base)
+        .m0s(&MS)
+        .e0s(&ES)
+        .seeds(&SEEDS3)
+        .run()
+        .unwrap();
+    let cell = |mi: usize, ei: usize| {
+        result
+            .find_cell(|c| c.m0 == MS[mi] && c.e0 == ES[ei])
+            .unwrap()
+    };
 
-    if e.fract() == 0.0 {
-        let server = Server::new(
-            &mut engine,
-            ServerConfig {
-                target_accuracy: 0.8,
-                max_rounds: 60_000,
-                cost_model,
-                selector: Selector::UniformRandom,
-                seed,
-            },
-            Schedule::Fixed { m, e: e as usize },
-        );
-        return server.run().unwrap().costs;
-    }
-
-    // Fractional E (the paper's 0.5): drive rounds directly.
-    use fedtune::engine::FlEngine;
-    use fedtune::util::rng::Rng;
-    let mut rng = Rng::new(seed ^ 0xc00d);
-    let mut cum = Costs::ZERO;
-    let mut acc = 0.0;
-    let mut rounds = 0;
-    while acc < 0.8 && rounds < 60_000 {
-        rounds += 1;
-        let participants = Selector::UniformRandom.select(engine.client_sizes(), m, &mut rng);
-        let sizes: Vec<usize> =
-            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
-        acc = engine.run_round(&participants, e).unwrap().accuracy;
-        cum.add(&cost_model.round_costs(&sizes, e));
-    }
-    cum
-}
-
-fn main() {
     // grid[e][m] per overhead, averaged over seeds.
     let mut grids: [Vec<Vec<f64>>; 4] =
         std::array::from_fn(|_| vec![vec![0.0; MS.len()]; ES.len()]);
-    for (ei, &e) in ES.iter().enumerate() {
-        for (mi, &m) in MS.iter().enumerate() {
-            let mut acc = [vec![], vec![], vec![], vec![]];
-            for &seed in &SEEDS3 {
-                let c = run_cell(m, e, seed);
-                for (a, v) in acc.iter_mut().zip(c.as_array()) {
-                    a.push(v);
-                }
-            }
-            for k in 0..4 {
-                grids[k][ei][mi] = stats::mean(&acc[k]);
+    for (k, grid) in grids.iter_mut().enumerate() {
+        for ei in 0..ES.len() {
+            for mi in 0..MS.len() {
+                grid[ei][mi] = cell(mi, ei).costs[k].mean;
             }
         }
     }

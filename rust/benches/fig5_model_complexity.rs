@@ -5,37 +5,44 @@
 //!
 //! Shape claims asserted: (1) smaller models win at every reachable target;
 //! (2) heavier models have steeper overhead growth vs accuracy.
+//!
+//! The four ladder models run concurrently through `experiment::Grid`,
+//! each stopped just under its own accuracy ceiling via the per-profile
+//! target override.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
 use fedtune::model::ladder::RESNET_LADDER;
 use fedtune::trace::Trace;
 use harness::Table;
 
 const TARGETS: [f64; 5] = [0.60, 0.70, 0.75, 0.80, 0.85];
 
-fn run_model(name: &str, seed: u64) -> Trace {
-    let cfg = ExperimentConfig {
-        model: name.into(),
+fn main() {
+    let base = ExperimentConfig {
         m0: 1,
         e0: 1,
-        target_accuracy: 0.87, // run deep so every target is crossed
         max_rounds: 120_000,
         ..ExperimentConfig::default()
     };
-    // resnet-10 tops out at 0.88; for smaller ceilings stop below them.
-    let l = fedtune::model::ladder::by_name(name).unwrap();
-    let mut cfg = cfg;
-    cfg.target_accuracy = (l.max_accuracy - 0.02).min(0.87);
-    fedtune::baselines::run_sim(&cfg, seed).unwrap().trace
-}
-
-fn main() {
-    let traces: Vec<(&str, Trace)> = RESNET_LADDER
+    // Run deep so every milestone is crossed; ceilings differ per model.
+    let profiles: Vec<(&str, &str, f64)> = RESNET_LADDER
         .iter()
-        .map(|l| (l.name, run_model(l.name, 11)))
+        .map(|l| ("speech", l.name, (l.max_accuracy - 0.02).min(0.87)))
+        .collect();
+    let result = Grid::new(base)
+        .profiles_with_targets(&profiles)
+        .seeds(&[11])
+        .keep_traces(true)
+        .run()
+        .unwrap();
+    let traces: Vec<(&str, &Trace)> = result
+        .cells
+        .iter()
+        .map(|c| (c.cell.model.as_str(), c.runs[0].trace.as_ref().unwrap()))
         .collect();
 
     for (panel, pick) in

@@ -3,32 +3,39 @@
 //! become per-preference series; we print snapshots and assert the
 //! direction-of-travel claims (pure preferences pull (M, E) the way
 //! Table 3 predicts; FedTune is not monotone — it revisits values).
+//!
+//! The 15 preference runs execute concurrently through `experiment::Grid`
+//! with traces retained.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::aggregation::AggregatorKind;
-use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::{CellResult, Grid};
 use fedtune::overhead::Preference;
 use harness::Table;
 
 fn main() {
-    let prefs = Preference::paper_grid();
+    let base = ExperimentConfig {
+        aggregator: AggregatorKind::fedadagrad_paper(),
+        model: "resnet-10".into(),
+        ..ExperimentConfig::default()
+    };
+    let result = Grid::new(base)
+        .preferences(&Preference::paper_grid())
+        .seeds(&[17])
+        .keep_traces(true)
+        .run()
+        .unwrap();
+
     let mut t = Table::new(&[
         "a/b/g/d", "round snapshots (round:M/E)", "final M/E",
     ]);
     let mut nonmonotone = 0usize;
-    let mut results = Vec::new();
-    for pref in &prefs {
-        let cfg = ExperimentConfig {
-            aggregator: AggregatorKind::fedadagrad_paper(),
-            model: "resnet-10".into(),
-            preference: Some(*pref),
-            ..ExperimentConfig::default()
-        };
-        let r = baselines::run_sim(&cfg, 17).unwrap();
-        let series = r.trace.hyperparam_series();
+    for c in &result.cells {
+        let run = &c.runs[0];
+        let series = run.trace.as_ref().unwrap().hyperparam_series();
         let n = series.len();
         let picks: Vec<String> = [0, n / 4, n / 2, 3 * n / 4, n - 1]
             .iter()
@@ -45,34 +52,33 @@ fn main() {
             nonmonotone += 1;
         }
         t.row(vec![
-            pref.label(),
+            c.cell.preference.unwrap().label(),
             picks.join("  "),
-            format!("{}/{}", r.final_m, r.final_e),
+            format!("{}/{:.0}", run.final_m, run.final_e),
         ]);
-        results.push((*pref, r));
     }
     t.print("Fig. 7 — (M, E) trajectories per preference (speech + FedAdagrad, seed 17)");
 
     // Direction-of-travel assertions for the pure preferences.
-    let find = |a: f64, b: f64, g: f64, d: f64| {
-        results
+    fn find<'a>(cells: &'a [CellResult], a: f64, b: f64, g: f64, d: f64) -> &'a CellResult {
+        cells
             .iter()
-            .find(|(p, _)| {
+            .find(|c| {
+                let p = c.cell.preference.unwrap();
                 (p.alpha - a).abs() < 1e-9
                     && (p.beta - b).abs() < 1e-9
                     && (p.gamma - g).abs() < 1e-9
                     && (p.delta - d).abs() < 1e-9
             })
-            .map(|(_, r)| r)
             .unwrap()
-    };
-    let comp_t = find(1.0, 0.0, 0.0, 0.0);
+    }
+    let comp_t = &find(&result.cells, 1.0, 0.0, 0.0, 0.0).runs[0];
     assert!(comp_t.final_m >= 20, "α=1 should not shrink M (paper: 57)");
-    let comp_l = find(0.0, 0.0, 1.0, 0.0);
+    let comp_l = &find(&result.cells, 0.0, 0.0, 1.0, 0.0).runs[0];
     assert!(comp_l.final_m < 20, "γ=1 must shrink M (paper: 1)");
-    let trans_l = find(0.0, 0.0, 0.0, 1.0);
+    let trans_l = &find(&result.cells, 0.0, 0.0, 0.0, 1.0).runs[0];
     assert!(
-        trans_l.final_m < 20 && trans_l.final_e >= 20,
+        trans_l.final_m < 20 && trans_l.final_e >= 20.0,
         "δ=1 must shrink M and grow E (paper: 1 / 46.7), got {}/{}",
         trans_l.final_m,
         trans_l.final_e

@@ -2,13 +2,16 @@
 //! (speech + FedAvg). Without the penalty (D = 1) the paper found three
 //! degraded preferences — (0,.5,.5,0), (0,0,.5,.5), (.33,.33,0,.33); the
 //! penalty mitigates the degradation and stays stable for moderate D.
+//!
+//! The 3 preferences × 5 penalties × 3 seeds (× baseline comparison) run
+//! concurrently through `experiment::Grid`.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::aggregation::AggregatorKind;
-use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
 use fedtune::overhead::Preference;
 use fedtune::util::stats;
 use harness::{pct_std, Table, SEEDS3};
@@ -25,20 +28,33 @@ fn degraded_cases() -> Vec<Preference> {
 }
 
 fn main() {
+    let base = ExperimentConfig {
+        aggregator: AggregatorKind::FedAvg,
+        model: "resnet-10".into(),
+        ..ExperimentConfig::default()
+    };
+    let prefs = degraded_cases();
+    let result = Grid::new(base)
+        .preferences(&prefs)
+        .penalties(&DS)
+        .seeds(&SEEDS3)
+        .compare_baseline(true)
+        .run()
+        .unwrap();
+    let cell = |pref: &Preference, d: f64| {
+        result
+            .find_cell(|c| c.preference == Some(*pref) && c.penalty == d)
+            .unwrap()
+    };
+
     let mut t = Table::new(&["a/b/g/d", "D=1", "D=5", "D=10", "D=15", "D=20"]);
     let mut by_d: Vec<Vec<f64>> = vec![Vec::new(); DS.len()];
-    for pref in degraded_cases() {
+    for pref in prefs.iter() {
         let mut row = vec![pref.label()];
         for (di, &d) in DS.iter().enumerate() {
-            let cfg = ExperimentConfig {
-                aggregator: AggregatorKind::FedAvg,
-                model: "resnet-10".into(),
-                penalty: d,
-                ..ExperimentConfig::default()
-            };
-            let c = baselines::compare(&cfg, pref, &SEEDS3).unwrap();
-            row.push(pct_std(c.improvement_pct, c.improvement_std));
-            by_d[di].push(c.improvement_pct);
+            let imp = cell(pref, d).improvement.unwrap();
+            row.push(pct_std(imp.mean, imp.std));
+            by_d[di].push(imp.mean);
         }
         t.row(row);
     }

@@ -9,62 +9,67 @@
 //!   TransT: M '>', E '>', complexity '<'
 //!   TransL: M '<', E '>', complexity '<'
 //! ('>' = the larger the better, '<' = the smaller the better.)
+//!
+//! The six measured configurations (M sweep, E sweep, complexity sweep
+//! × 3 seeds) run concurrently through `experiment::Grid`.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::config::ExperimentConfig;
-use fedtune::overhead::Costs;
-use fedtune::util::stats;
+use fedtune::experiment::Grid;
 use harness::{Table, SEEDS3};
 
-fn run(model: &str, m: usize, e: usize, seed: u64) -> Costs {
-    let cfg = ExperimentConfig {
-        model: model.into(),
-        m0: m,
-        e0: e,
+fn main() {
+    let base = ExperimentConfig {
+        model: "resnet-10".into(),
         max_rounds: 60_000,
         ..ExperimentConfig::default()
     };
-    fedtune::baselines::run_sim(&cfg, seed).unwrap().costs
-}
+    // Three small pooled sweeps cover exactly the six configurations the
+    // sign table reads (a full axis product would discard 10 cells).
+    let m_sweep = Grid::new(base.clone())
+        .m0s(&[1, 2, 20, 40])
+        .e0s(&[1.0])
+        .seeds(&SEEDS3)
+        .run()
+        .unwrap();
+    let e_sweep = Grid::new(base.clone())
+        .m0s(&[20])
+        .e0s(&[8.0])
+        .seeds(&SEEDS3)
+        .run()
+        .unwrap();
+    let heavy = Grid::new(ExperimentConfig { model: "resnet-34".into(), ..base })
+        .m0s(&[1])
+        .e0s(&[1.0])
+        .seeds(&SEEDS3)
+        .run()
+        .unwrap();
+    let results = [&m_sweep, &e_sweep, &heavy];
+    let mean_costs = |model: &str, m0: usize, e0: f64| -> [f64; 4] {
+        let c = results
+            .iter()
+            .find_map(|r| {
+                r.find_cell(|c| c.model == model && c.m0 == m0 && c.e0 == e0)
+            })
+            .unwrap();
+        [c.costs[0].mean, c.costs[1].mean, c.costs[2].mean, c.costs[3].mean]
+    };
 
-fn mean_costs(model: &str, m: usize, e: usize) -> [f64; 4] {
-    let mut acc = [vec![], vec![], vec![], vec![]];
-    for &s in &SEEDS3 {
-        let c = run(model, m, e, s);
-        for (a, v) in acc.iter_mut().zip(c.as_array()) {
-            a.push(v);
-        }
-    }
-    [
-        stats::mean(&acc[0]),
-        stats::mean(&acc[1]),
-        stats::mean(&acc[2]),
-        stats::mean(&acc[3]),
-    ]
-}
-
-/// Sign of "increasing the knob helps this overhead": '>' if the larger
-/// setting is cheaper, '<' if the smaller one is.
-fn sign(low: f64, high: f64) -> char {
-    if high < low {
-        '>'
-    } else {
-        '<'
-    }
-}
-
-fn main() {
     // M sweep at E = 1 (resnet-10, the paper's evaluation model).
-    let m_low = mean_costs("resnet-10", 2, 1);
-    let m_high = mean_costs("resnet-10", 40, 1);
+    let m_low = mean_costs("resnet-10", 2, 1.0);
+    let m_high = mean_costs("resnet-10", 40, 1.0);
     // E sweep at M = 20.
-    let e_low = mean_costs("resnet-10", 20, 1);
-    let e_high = mean_costs("resnet-10", 20, 8);
+    let e_low = mean_costs("resnet-10", 20, 1.0);
+    let e_high = mean_costs("resnet-10", 20, 8.0);
     // Complexity sweep at M = 1, E = 1 (same setup as Fig. 5).
-    let c_low = mean_costs("resnet-10", 1, 1);
-    let c_high = mean_costs("resnet-34", 1, 1);
+    let c_low = mean_costs("resnet-10", 1, 1.0);
+    let c_high = mean_costs("resnet-34", 1, 1.0);
+
+    // Sign of "increasing the knob helps this overhead": '>' if the larger
+    // setting is cheaper, '<' if the smaller one is.
+    let sign = |low: f64, high: f64| if high < low { '>' } else { '<' };
 
     let paper = [
         ('>', '<', '<'), // CompT

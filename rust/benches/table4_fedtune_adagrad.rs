@@ -6,98 +6,97 @@
 //! Shape claims asserted: pure-CompL (γ=1) is FedTune's best case and
 //! drives M→1; pure-CompT (α=1) grows M and shrinks E; the grid-mean
 //! improvement is solidly positive.
+//!
+//! All 15 × 3 (tuned + baseline) runs execute concurrently through
+//! `experiment::Grid`.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::aggregation::AggregatorKind;
-use fedtune::baselines::{self, Comparison};
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
 use fedtune::overhead::Preference;
 use harness::{pct_std, sci, Table, SEEDS3};
 
 fn main() {
-    let cfg = ExperimentConfig {
+    let base = ExperimentConfig {
         aggregator: AggregatorKind::fedadagrad_paper(),
         model: "resnet-10".into(),
         ..ExperimentConfig::default()
     };
+    let result = Grid::new(base)
+        .preferences(&Preference::paper_grid())
+        .seeds(&SEEDS3)
+        .compare_baseline(true)
+        .run()
+        .unwrap();
 
-    // Baseline row (fixed 20/20).
-    let mut base_costs = [0.0f64; 4];
-    for &seed in &SEEDS3 {
-        let mut bc = cfg.clone();
-        bc.preference = None;
-        let r = baselines::run_sim(&bc, seed).unwrap();
-        for (b, v) in base_costs.iter_mut().zip(r.costs.as_array()) {
-            *b += v / SEEDS3.len() as f64;
-        }
-    }
+    // Baseline row (fixed 20/20): the comparison baselines are identical
+    // across cells, so read the per-seed means off the first cell.
+    let base_costs = result.cells[0].baseline_costs.unwrap();
 
     let mut t = Table::new(&[
         "a/b/g/d", "CompT", "TransT", "CompL", "TransL", "final M", "final E", "overall",
     ]);
     t.row(vec![
         "baseline".into(),
-        sci(base_costs[0]),
-        sci(base_costs[1]),
-        sci(base_costs[2]),
-        sci(base_costs[3]),
+        sci(base_costs[0].mean),
+        sci(base_costs[1].mean),
+        sci(base_costs[2].mean),
+        sci(base_costs[3].mean),
         "20".into(),
         "20".into(),
         "-".into(),
     ]);
 
-    let mut rows: Vec<Comparison> = Vec::new();
-    for pref in Preference::paper_grid() {
-        let c = baselines::compare(&cfg, pref, &SEEDS3).unwrap();
+    for c in &result.cells {
+        let imp = c.improvement.unwrap();
         t.row(vec![
-            c.preference.label(),
-            sci(c.fedtune_costs[0]),
-            sci(c.fedtune_costs[1]),
-            sci(c.fedtune_costs[2]),
-            sci(c.fedtune_costs[3]),
-            format!("{:.1} ({:.1})", c.final_m_mean, c.final_m_std),
-            format!("{:.1} ({:.1})", c.final_e_mean, c.final_e_std),
-            pct_std(c.improvement_pct, c.improvement_std),
+            c.cell.preference.unwrap().label(),
+            sci(c.costs[0].mean),
+            sci(c.costs[1].mean),
+            sci(c.costs[2].mean),
+            sci(c.costs[3].mean),
+            format!("{:.1} ({:.1})", c.final_m.mean, c.final_m.std),
+            format!("{:.1} ({:.1})", c.final_e.mean, c.final_e.std),
+            pct_std(imp.mean, imp.std),
         ]);
-        rows.push(c);
     }
     t.print("Table 4 — FedTune, speech + FedAdagrad, 15 preferences (mean of 3 seeds)");
 
-    let mean: f64 =
-        rows.iter().map(|c| c.improvement_pct).sum::<f64>() / rows.len() as f64;
+    let mean = result.mean_improvement().mean;
     println!("\ngrid-mean improvement: {mean:+.2}% (paper: +26.75%)");
 
     // Shape assertions.
-    let comp_l_only = &rows[2]; // (0,0,1,0)
+    let comp_l_only = &result.cells[2]; // (0,0,1,0)
     assert!(
-        comp_l_only.improvement_pct > 20.0,
+        comp_l_only.improvement.unwrap().mean > 20.0,
         "γ=1 must be a big win (paper +70.5%), got {:+.2}%",
-        comp_l_only.improvement_pct
+        comp_l_only.improvement.unwrap().mean
     );
     assert!(
-        comp_l_only.final_m_mean < 6.0,
+        comp_l_only.final_m.mean < 6.0,
         "γ=1 must drive M toward 1, got {:.1}",
-        comp_l_only.final_m_mean
+        comp_l_only.final_m.mean
     );
-    let comp_t_only = &rows[0]; // (1,0,0,0)
+    let comp_t_only = &result.cells[0]; // (1,0,0,0)
     assert!(
-        comp_t_only.final_m_mean > 20.0,
+        comp_t_only.final_m.mean > 20.0,
         "α=1 must grow M (paper 57.3), got {:.1}",
-        comp_t_only.final_m_mean
+        comp_t_only.final_m.mean
     );
     assert!(
-        comp_t_only.final_e_mean < 10.0,
+        comp_t_only.final_e.mean < 10.0,
         "α=1 must shrink E toward 1 (paper 1.0), got {:.1}",
-        comp_t_only.final_e_mean
+        comp_t_only.final_e.mean
     );
-    let trans_l_only = &rows[3]; // (0,0,0,1)
+    let trans_l_only = &result.cells[3]; // (0,0,0,1)
     assert!(
-        trans_l_only.final_m_mean < 6.0 && trans_l_only.final_e_mean > 20.0,
+        trans_l_only.final_m.mean < 6.0 && trans_l_only.final_e.mean > 20.0,
         "δ=1 must shrink M and grow E (paper 1.0 / 46.7), got {:.1}/{:.1}",
-        trans_l_only.final_m_mean,
-        trans_l_only.final_e_mean
+        trans_l_only.final_m.mean,
+        trans_l_only.final_e.mean
     );
     assert!(mean > 5.0, "grid-mean improvement must be clearly positive, got {mean:+.2}%");
     println!("shape checks PASSED: per-preference behaviour matches Table 4");

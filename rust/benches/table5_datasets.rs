@@ -2,13 +2,17 @@
 //! grid-mean improvement per dataset. Paper: speech +22.48%, EMNIST
 //! +8.48%, CIFAR-100 +9.33%, with the gains largest where training needs
 //! the most rounds (speech) — we assert exactly that ordering property.
+//!
+//! One pooled `experiment::Grid` covers all 3 datasets × 15 preferences
+//! × 3 seeds (plus the per-seed baselines).
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::aggregation::AggregatorKind;
-use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
+use fedtune::overhead::Preference;
 use harness::{pct_std, Table, SEEDS3};
 
 fn main() {
@@ -21,24 +25,29 @@ fn main() {
     ];
     let paper = [22.48, 8.48, 9.33];
 
+    let base = ExperimentConfig {
+        aggregator: AggregatorKind::FedAvg,
+        ..ExperimentConfig::default()
+    };
+    let result = Grid::new(base)
+        .profiles(&cases)
+        .preferences(&Preference::paper_grid())
+        .seeds(&SEEDS3)
+        .compare_baseline(true)
+        .run()
+        .unwrap();
+
     let mut t = Table::new(&["dataset", "model", "ours", "paper"]);
     let mut ours = Vec::new();
     for ((ds, model), paper_pct) in cases.iter().zip(paper) {
-        let cfg = ExperimentConfig {
-            dataset: ds.to_string(),
-            model: model.to_string(),
-            aggregator: AggregatorKind::FedAvg,
-            ..ExperimentConfig::default()
-        };
-        let (mean, std, _rows) =
-            baselines::grid_mean_improvement(&cfg, &SEEDS3).unwrap();
+        let imp = result.mean_improvement_where(|c| c.dataset == *ds);
         t.row(vec![
             ds.to_string(),
             model.to_string(),
-            pct_std(mean, std),
+            pct_std(imp.mean, imp.std),
             format!("{paper_pct:+.2}%"),
         ]);
-        ours.push(mean);
+        ours.push(imp.mean);
     }
     t.print("Table 5 — FedTune grid-mean improvement per dataset (FedAvg)");
 

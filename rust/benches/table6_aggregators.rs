@@ -1,13 +1,17 @@
 //! Paper Table 6: FedTune across aggregation algorithms (speech,
 //! ResNet-10) — grid-mean improvement per aggregator.
 //! Paper: FedAvg +22.48%, FedNova +23.53%, FedAdagrad +26.75%.
+//!
+//! One pooled `experiment::Grid` covers all 3 aggregators × 15
+//! preferences × 3 seeds (plus the per-seed baselines).
 
 #[path = "harness/mod.rs"]
 mod harness;
 
 use fedtune::aggregation::AggregatorKind;
-use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
+use fedtune::overhead::Preference;
 use harness::{pct_std, Table, SEEDS3};
 
 fn main() {
@@ -16,23 +20,31 @@ fn main() {
         (AggregatorKind::FedNova, 23.53),
         (AggregatorKind::fedadagrad_paper(), 26.75),
     ];
+    let aggs: Vec<AggregatorKind> = cases.iter().map(|(a, _)| *a).collect();
+
+    let base = ExperimentConfig {
+        model: "resnet-10".into(),
+        ..ExperimentConfig::default()
+    };
+    let result = Grid::new(base)
+        .aggregators(&aggs)
+        .preferences(&Preference::paper_grid())
+        .seeds(&SEEDS3)
+        .compare_baseline(true)
+        .run()
+        .unwrap();
 
     let mut t = Table::new(&["aggregator", "ours", "paper"]);
     let mut ours = Vec::new();
-    for (agg, paper_pct) in cases {
-        let cfg = ExperimentConfig {
-            aggregator: agg,
-            model: "resnet-10".into(),
-            ..ExperimentConfig::default()
-        };
-        let (mean, std, _rows) =
-            baselines::grid_mean_improvement(&cfg, &SEEDS3).unwrap();
+    for (agg, paper_pct) in cases.iter() {
+        let imp =
+            result.mean_improvement_where(|c| c.aggregator.name() == agg.name());
         t.row(vec![
             agg.name().to_string(),
-            pct_std(mean, std),
+            pct_std(imp.mean, imp.std),
             format!("{paper_pct:+.2}%"),
         ]);
-        ours.push(mean);
+        ours.push(imp.mean);
     }
     t.print("Table 6 — FedTune grid-mean improvement per aggregator (speech, ResNet-10)");
 

@@ -66,6 +66,11 @@ impl<'e, E: FlEngine> Server<'e, E> {
     }
 
     /// Drive rounds until the target accuracy or the round cap.
+    ///
+    /// NOTE: `experiment::runner::run_fixed_fractional` mirrors this loop
+    /// (same selector RNG stream `seed ^ 0xc00d`, stop conditions and cost
+    /// accounting) for fractional-E fixed schedules — keep the two in sync
+    /// when changing round semantics here.
     pub fn run(mut self) -> Result<RunResult> {
         let mut trace = Trace::new();
         let mut cum = Costs::ZERO;
@@ -111,7 +116,7 @@ impl<'e, E: FlEngine> Server<'e, E> {
                 fedtune_activated: decision.is_some(),
             });
             if let Some(d) = decision {
-                log::debug!(
+                crate::log_debug!(
                     "round {round}: fedtune → M={} E={} (ΔM={:.3}, ΔE={:.3}, I={:.3})",
                     d.m, d.e, d.delta_m, d.delta_e, d.comparison
                 );

@@ -1,0 +1,356 @@
+//! Pooled multi-seed experiment grids — the shared sweep subsystem behind
+//! the paper benches (`benches/fig*`, `benches/table*`) and the
+//! `fedtune grid` subcommand.
+//!
+//! The paper's evaluation is a large grid of *independent* runs over
+//! (dataset profile × aggregator × M₀ × E₀ × preference × penalty × seed);
+//! FedPop-style population tuning assumes the same cheap parallel
+//! evaluation of many configurations. [`Grid`] enumerates those cells,
+//! executes every (cell, seed) run concurrently on the
+//! [`crate::util::pool::scope_map`] worker pool, aggregates per-cell
+//! mean/std over seeds with [`crate::util::stats`], and emits one stable
+//! JSON artifact.
+//!
+//! # Determinism
+//!
+//! Every run is seeded explicitly and shares no mutable state, and the
+//! pool returns results in input order, so a grid's [`GridResult`] — and
+//! its serialized JSON — is **byte-identical for any worker count**
+//! (`workers = 1` vs `workers = N`). The determinism test in
+//! `rust/tests/experiment_grid.rs` locks this in.
+//!
+//! # Workers
+//!
+//! The pool size defaults to [`crate::util::pool::default_workers`]
+//! (available cores, capped at 16). `Grid::workers(n)` overrides it;
+//! `n = 0` restores the default. The CLI exposes this as
+//! `fedtune grid --workers N`.
+//!
+//! # JSON artifact schema (`fedtune.experiment.grid/v1`)
+//!
+//! [`GridResult::to_json`] / [`GridResult::write_json`] emit:
+//!
+//! ```text
+//! {
+//!   "schema": "fedtune.experiment.grid/v1",
+//!   "seeds": [101, 202, 303],
+//!   "cells": [
+//!     {
+//!       "dataset": "speech", "model": "resnet-10",
+//!       "aggregator": "fedavg", "m0": 20, "e0": 20, "penalty": 10,
+//!       "preference": [0, 0, 1, 0],          // null for the fixed baseline
+//!       "runs": [                             // one entry per seed, in order
+//!         { "seed": 101, "rounds": 146, "final_accuracy": 0.801,
+//!           "comp_t": 1.1e12, "trans_t": 1.2e7,
+//!           "comp_l": 3.4e13, "trans_l": 2.3e8,
+//!           "final_m": 3, "final_e": 21,
+//!           "improvement_pct": 68.2,          // only under compare_baseline
+//!           "baseline": { "comp_t": ..., "trans_t": ...,
+//!                         "comp_l": ..., "trans_l": ... } }
+//!       ],
+//!       "mean": { "comp_t": ..., "trans_t": ..., "comp_l": ..., "trans_l": ...,
+//!                 "rounds": ..., "final_accuracy": ...,
+//!                 "final_m": ..., "final_e": ...,
+//!                 "improvement_pct": ... },    // same keys in "std"
+//!       "std":  { ... }
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Object keys serialize in sorted (BTreeMap) order; per-round traces are
+//! deliberately **not** part of the artifact (use [`Grid::keep_traces`]
+//! and read them from [`RunRecord::trace`] in-process instead).
+//!
+//! # Example shape
+//!
+//! ```text
+//! let result = Grid::new(ExperimentConfig::default())
+//!     .preferences(&Preference::paper_grid())
+//!     .seeds(&[101, 202, 303])
+//!     .compare_baseline(true)
+//!     .workers(8)
+//!     .run()?;            // 15 cells × 3 seeds × 2 runs, pooled
+//! result.write_json("grid.json")?;
+//! ```
+
+use anyhow::Result;
+
+use crate::aggregation::AggregatorKind;
+use crate::config::ExperimentConfig;
+use crate::overhead::{CostModel, Preference};
+use crate::util::pool;
+
+pub mod runner;
+
+pub use runner::{CellResult, GridResult, RunRecord, Stat};
+
+/// One grid cell: everything that identifies a configuration except the
+/// seed (runs of the same cell differ only by seed).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: String,
+    pub model: String,
+    pub aggregator: AggregatorKind,
+    pub m0: usize,
+    /// Initial local passes; fractional values (the paper's E = 0.5) are
+    /// supported for fixed-schedule cells only.
+    pub e0: f64,
+    /// `None` ⇒ the fixed-(M₀, E₀) baseline; `Some` ⇒ FedTune.
+    pub preference: Option<Preference>,
+    pub penalty: f64,
+    /// Per-profile target-accuracy override (Fig. 5 stops each ladder
+    /// model just under its own ceiling).
+    pub target: Option<f64>,
+}
+
+impl Cell {
+    /// Human-readable cell identifier for logs and error contexts.
+    pub fn label(&self) -> String {
+        let pref = match &self.preference {
+            Some(p) => p.label(),
+            None => "baseline".to_string(),
+        };
+        format!(
+            "{}/{}/{} M{} E{} D{} {}",
+            self.dataset,
+            self.model,
+            self.aggregator.name(),
+            self.m0,
+            self.e0,
+            self.penalty,
+            pref
+        )
+    }
+}
+
+/// Builder for a pooled experiment sweep. Axes default to the base
+/// config's single value; every setter replaces one axis. Cells are
+/// enumerated in fixed order — profiles → aggregators → M₀ → E₀ →
+/// preferences → penalties — with seeds innermost, so results line up
+/// with the builder's axis order regardless of worker count.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub(crate) profiles: Vec<(String, String, Option<f64>)>,
+    pub(crate) aggregators: Vec<AggregatorKind>,
+    pub(crate) m0s: Vec<usize>,
+    pub(crate) e0s: Vec<f64>,
+    pub(crate) preferences: Vec<Option<Preference>>,
+    pub(crate) penalties: Vec<f64>,
+    pub(crate) seeds: Vec<u64>,
+    pub(crate) workers: usize,
+    pub(crate) compare_baseline: bool,
+    pub(crate) keep_traces: bool,
+    pub(crate) max_rounds: Option<usize>,
+    pub(crate) target: Option<f64>,
+    pub(crate) cost_model: Option<CostModel>,
+    pub(crate) base: ExperimentConfig,
+}
+
+impl Grid {
+    pub fn new(base: ExperimentConfig) -> Grid {
+        Grid {
+            profiles: vec![(base.dataset.clone(), base.model.clone(), None)],
+            aggregators: vec![base.aggregator],
+            m0s: vec![base.m0],
+            e0s: vec![base.e0 as f64],
+            preferences: vec![base.preference],
+            penalties: vec![base.penalty],
+            seeds: vec![base.seed],
+            workers: pool::default_workers(),
+            compare_baseline: false,
+            keep_traces: false,
+            max_rounds: None,
+            target: None,
+            cost_model: None,
+            base,
+        }
+    }
+
+    /// (dataset, model) pairs — pairs, not a product, because datasets fix
+    /// their paper model (Table 5: speech→ResNet-10, EMNIST→MLP, ...).
+    pub fn profiles(mut self, profiles: &[(&str, &str)]) -> Grid {
+        self.profiles = profiles
+            .iter()
+            .map(|(d, m)| (d.to_string(), m.to_string(), None))
+            .collect();
+        self
+    }
+
+    /// (dataset, model, target accuracy) triples for per-profile stop
+    /// targets (Fig. 5 runs each ladder model to just under its ceiling).
+    pub fn profiles_with_targets(mut self, profiles: &[(&str, &str, f64)]) -> Grid {
+        self.profiles = profiles
+            .iter()
+            .map(|(d, m, t)| (d.to_string(), m.to_string(), Some(*t)))
+            .collect();
+        self
+    }
+
+    pub fn aggregators(mut self, v: &[AggregatorKind]) -> Grid {
+        self.aggregators = v.to_vec();
+        self
+    }
+
+    pub fn m0s(mut self, v: &[usize]) -> Grid {
+        self.m0s = v.to_vec();
+        self
+    }
+
+    /// E₀ axis; fractional values only combine with baseline (no
+    /// preference) cells — FedTune tunes integer E.
+    pub fn e0s(mut self, v: &[f64]) -> Grid {
+        self.e0s = v.to_vec();
+        self
+    }
+
+    /// FedTune preference axis (every cell tuned).
+    pub fn preferences(mut self, v: &[Preference]) -> Grid {
+        self.preferences = v.iter().map(|p| Some(*p)).collect();
+        self
+    }
+
+    /// Mixed axis: `None` cells run the fixed baseline, `Some` run FedTune.
+    pub fn preference_options(mut self, v: &[Option<Preference>]) -> Grid {
+        self.preferences = v.to_vec();
+        self
+    }
+
+    /// Penalty-factor axis (Fig. 8 sweeps D).
+    pub fn penalties(mut self, v: &[f64]) -> Grid {
+        self.penalties = v.to_vec();
+        self
+    }
+
+    pub fn seeds(mut self, v: &[u64]) -> Grid {
+        self.seeds = v.to_vec();
+        self
+    }
+
+    /// Worker-pool size; 0 restores [`pool::default_workers`].
+    pub fn workers(mut self, n: usize) -> Grid {
+        self.workers = if n == 0 { pool::default_workers() } else { n };
+        self
+    }
+
+    /// Also run the fixed-(M₀, E₀) baseline for every tuned (cell, seed)
+    /// and report Eq. (6) improvement (the paper's "Overall" column).
+    pub fn compare_baseline(mut self, on: bool) -> Grid {
+        self.compare_baseline = on;
+        self
+    }
+
+    /// Keep each run's per-round [`crate::trace::Trace`] in
+    /// [`RunRecord::trace`] (memory-heavy; off by default).
+    pub fn keep_traces(mut self, on: bool) -> Grid {
+        self.keep_traces = on;
+        self
+    }
+
+    /// Override the base config's round cap for every cell.
+    pub fn max_rounds(mut self, n: usize) -> Grid {
+        self.max_rounds = Some(n);
+        self
+    }
+
+    /// Override the target accuracy for every cell (per-profile targets
+    /// from [`Grid::profiles_with_targets`] take precedence).
+    pub fn target_accuracy(mut self, t: f64) -> Grid {
+        self.target = Some(t);
+        self
+    }
+
+    /// Override the cost constants C1..C4 for every cell (Fig. 3 uses
+    /// [`CostModel::UNIT`]); default derives them from each cell's model.
+    pub fn cost_model(mut self, cm: CostModel) -> Grid {
+        self.cost_model = Some(cm);
+        self
+    }
+
+    /// Enumerate the cells in their fixed order.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for (dataset, model, target) in &self.profiles {
+            for &aggregator in &self.aggregators {
+                for &m0 in &self.m0s {
+                    for &e0 in &self.e0s {
+                        for preference in &self.preferences {
+                            for &penalty in &self.penalties {
+                                out.push(Cell {
+                                    dataset: dataset.clone(),
+                                    model: model.clone(),
+                                    aggregator,
+                                    m0,
+                                    e0,
+                                    preference: *preference,
+                                    penalty,
+                                    target: *target,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.profiles.len()
+            * self.aggregators.len()
+            * self.m0s.len()
+            * self.e0s.len()
+            * self.preferences.len()
+            * self.penalties.len()
+    }
+
+    /// Total pooled work items (baseline comparison runs not counted).
+    pub fn num_runs(&self) -> usize {
+        self.num_cells() * self.seeds.len()
+    }
+
+    /// Execute the sweep on the worker pool.
+    pub fn run(&self) -> Result<GridResult> {
+        runner::execute(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_to_one_cell() {
+        let g = Grid::new(ExperimentConfig::default());
+        assert_eq!(g.num_cells(), 1);
+        assert_eq!(g.num_runs(), 1);
+        let cells = g.cells();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].dataset, "speech");
+        assert_eq!(cells[0].m0, 20);
+        assert!(cells[0].preference.is_none());
+    }
+
+    #[test]
+    fn cell_enumeration_order_is_axis_major() {
+        let g = Grid::new(ExperimentConfig::default())
+            .m0s(&[1, 10])
+            .e0s(&[1.0, 8.0])
+            .seeds(&[1, 2, 3]);
+        assert_eq!(g.num_cells(), 4);
+        assert_eq!(g.num_runs(), 12);
+        let cells = g.cells();
+        let key: Vec<(usize, f64)> = cells.iter().map(|c| (c.m0, c.e0)).collect();
+        assert_eq!(key, vec![(1, 1.0), (1, 8.0), (10, 1.0), (10, 8.0)]);
+    }
+
+    #[test]
+    fn labels_identify_cells() {
+        let mut base = ExperimentConfig::default();
+        base.preference = Some(Preference::new(0.0, 0.0, 1.0, 0.0).unwrap());
+        let g = Grid::new(base);
+        let label = g.cells()[0].label();
+        assert!(label.contains("speech"), "{label}");
+        assert!(label.contains("0/0/1/0"), "{label}");
+    }
+}

@@ -1,0 +1,533 @@
+//! Grid execution: pooled fan-out, per-cell aggregation, JSON artifact.
+//!
+//! Work items are (cell, seed) pairs, enumerated cell-major and mapped
+//! through [`pool::scope_map`], which returns results in input order —
+//! the merge is therefore independent of scheduling and worker count
+//! (see the module doc of [`crate::experiment`] for the determinism
+//! contract and the artifact schema).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::baselines;
+use crate::config::ExperimentConfig;
+use crate::engine::FlEngine;
+use crate::overhead::{CostModel, Costs, Preference};
+use crate::trace::{RoundRecord, Trace};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::{Cell, Grid};
+
+/// Artifact schema identifier (bump on breaking layout changes).
+pub const SCHEMA: &str = "fedtune.experiment.grid/v1";
+
+/// Mean/standard deviation of one aggregated quantity over seeds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Stat {
+    pub mean: f64,
+    pub std: f64,
+}
+
+fn stat(xs: &[f64]) -> Stat {
+    Stat { mean: stats::mean(xs), std: stats::std_dev(xs) }
+}
+
+/// One finished (cell, seed) run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub seed: u64,
+    pub rounds: usize,
+    pub final_accuracy: f64,
+    /// Cumulative overheads at stop (Eqs. 2–5).
+    pub costs: Costs,
+    pub final_m: usize,
+    pub final_e: f64,
+    /// Eq. (6) improvement vs the fixed baseline (positive = FedTune
+    /// reduced preference-weighted overhead); `Some` only when the grid
+    /// ran with `compare_baseline(true)` and the cell has a preference.
+    pub improvement_pct: Option<f64>,
+    /// The comparison baseline's final overheads (same seed).
+    pub baseline_costs: Option<Costs>,
+    /// Per-round history; `Some` only under `keep_traces(true)`.
+    pub trace: Option<Trace>,
+}
+
+/// One cell's runs plus the mean/std aggregates over seeds.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub runs: Vec<RunRecord>,
+    /// Per-overhead stats, indexed CompT/TransT/CompL/TransL.
+    pub costs: [Stat; 4],
+    pub baseline_costs: Option<[Stat; 4]>,
+    pub rounds: Stat,
+    pub final_accuracy: Stat,
+    pub final_m: Stat,
+    pub final_e: Stat,
+    pub improvement: Option<Stat>,
+}
+
+/// A finished sweep.
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    pub seeds: Vec<u64>,
+    pub cells: Vec<CellResult>,
+}
+
+impl GridResult {
+    /// Grid-mean improvement: mean/std over the cells' per-cell mean
+    /// improvements (the paper's grid summary statistic).
+    pub fn mean_improvement(&self) -> Stat {
+        self.mean_improvement_where(|_| true)
+    }
+
+    /// [`GridResult::mean_improvement`] restricted to cells matching the
+    /// predicate — the per-dataset / per-aggregator summaries of
+    /// Tables 5 and 6.
+    pub fn mean_improvement_where(&self, f: impl Fn(&Cell) -> bool) -> Stat {
+        let imps: Vec<f64> = self
+            .cells
+            .iter()
+            .filter(|c| f(&c.cell))
+            .filter_map(|c| c.improvement.map(|s| s.mean))
+            .collect();
+        stat(&imps)
+    }
+
+    /// First cell whose [`Cell`] matches the predicate — lets callers
+    /// look cells up by their axes instead of coupling to the
+    /// enumeration order.
+    pub fn find_cell(&self, f: impl Fn(&Cell) -> bool) -> Option<&CellResult> {
+        self.cells.iter().find(|c| f(&c.cell))
+    }
+
+    /// Serialize to the `fedtune.experiment.grid/v1` artifact (see the
+    /// module doc). Byte-identical for any worker count.
+    pub fn to_json(&self) -> Json {
+        let seeds: Vec<Json> = self.seeds.iter().map(|&s| Json::from(s)).collect();
+        let cells: Vec<Json> = self.cells.iter().map(cell_json).collect();
+        Json::from_pairs(vec![
+            ("schema", SCHEMA.into()),
+            ("seeds", Json::Arr(seeds)),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing grid artifact {path:?}"))
+    }
+}
+
+fn costs_json(c: &Costs) -> Json {
+    Json::from_pairs(vec![
+        ("comp_t", c.comp_t.into()),
+        ("trans_t", c.trans_t.into()),
+        ("comp_l", c.comp_l.into()),
+        ("trans_l", c.trans_l.into()),
+    ])
+}
+
+fn run_json(r: &RunRecord) -> Json {
+    let mut j = Json::from_pairs(vec![
+        ("seed", r.seed.into()),
+        ("rounds", r.rounds.into()),
+        ("final_accuracy", r.final_accuracy.into()),
+        ("comp_t", r.costs.comp_t.into()),
+        ("trans_t", r.costs.trans_t.into()),
+        ("comp_l", r.costs.comp_l.into()),
+        ("trans_l", r.costs.trans_l.into()),
+        ("final_m", r.final_m.into()),
+        ("final_e", r.final_e.into()),
+    ]);
+    if let Some(p) = r.improvement_pct {
+        j.set("improvement_pct", p.into());
+    }
+    if let Some(b) = &r.baseline_costs {
+        j.set("baseline", costs_json(b));
+    }
+    j
+}
+
+fn moments_json(c: &CellResult, pick: fn(Stat) -> f64) -> Json {
+    let mut j = Json::from_pairs(vec![
+        ("comp_t", pick(c.costs[0]).into()),
+        ("trans_t", pick(c.costs[1]).into()),
+        ("comp_l", pick(c.costs[2]).into()),
+        ("trans_l", pick(c.costs[3]).into()),
+        ("rounds", pick(c.rounds).into()),
+        ("final_accuracy", pick(c.final_accuracy).into()),
+        ("final_m", pick(c.final_m).into()),
+        ("final_e", pick(c.final_e).into()),
+    ]);
+    if let Some(imp) = c.improvement {
+        j.set("improvement_pct", pick(imp).into());
+    }
+    j
+}
+
+fn cell_json(c: &CellResult) -> Json {
+    let pref = match &c.cell.preference {
+        Some(p) => Json::Arr(vec![
+            p.alpha.into(),
+            p.beta.into(),
+            p.gamma.into(),
+            p.delta.into(),
+        ]),
+        None => Json::Null,
+    };
+    Json::from_pairs(vec![
+        ("dataset", c.cell.dataset.as_str().into()),
+        ("model", c.cell.model.as_str().into()),
+        ("aggregator", c.cell.aggregator.name().into()),
+        ("m0", c.cell.m0.into()),
+        ("e0", c.cell.e0.into()),
+        ("penalty", c.cell.penalty.into()),
+        ("preference", pref),
+        ("runs", Json::Arr(c.runs.iter().map(run_json).collect())),
+        ("mean", moments_json(c, |s| s.mean)),
+        ("std", moments_json(c, |s| s.std)),
+    ])
+}
+
+/// Run the whole grid on the pool and fold the results per cell.
+pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
+    let cells = grid.cells();
+    if cells.is_empty() || grid.seeds.is_empty() {
+        bail!("experiment grid is empty (no cells or no seeds)");
+    }
+    let n_seeds = grid.seeds.len();
+    let mut items = Vec::with_capacity(cells.len() * n_seeds);
+    for ci in 0..cells.len() {
+        for &seed in &grid.seeds {
+            items.push((ci, seed));
+        }
+    }
+
+    let outcomes =
+        pool::scope_map(items, grid.workers, |_, (ci, seed): (usize, u64)| {
+            run_one(grid, &cells[ci], seed)
+        });
+
+    let mut flat: Vec<RunRecord> = Vec::with_capacity(cells.len() * n_seeds);
+    for (idx, out) in outcomes.into_iter().enumerate() {
+        let label = cells[idx / n_seeds].label();
+        let seed = grid.seeds[idx % n_seeds];
+        let rec = out
+            .map_err(|panic| anyhow!("{panic}"))
+            .and_then(|r| r)
+            .with_context(|| format!("grid cell [{label}] seed {seed}"))?;
+        flat.push(rec);
+    }
+
+    let mut cell_results = Vec::with_capacity(cells.len());
+    for (ci, cell) in cells.into_iter().enumerate() {
+        let runs = flat[ci * n_seeds..(ci + 1) * n_seeds].to_vec();
+        cell_results.push(aggregate_cell(cell, runs));
+    }
+    Ok(GridResult { seeds: grid.seeds.clone(), cells: cell_results })
+}
+
+fn aggregate_cell(cell: Cell, runs: Vec<RunRecord>) -> CellResult {
+    let col = |f: &dyn Fn(&RunRecord) -> f64| -> Vec<f64> {
+        runs.iter().map(f).collect()
+    };
+    let costs = [
+        stat(&col(&|r: &RunRecord| r.costs.comp_t)),
+        stat(&col(&|r: &RunRecord| r.costs.trans_t)),
+        stat(&col(&|r: &RunRecord| r.costs.comp_l)),
+        stat(&col(&|r: &RunRecord| r.costs.trans_l)),
+    ];
+    let baseline_costs = if runs.iter().all(|r| r.baseline_costs.is_some()) {
+        let bcol = |f: &dyn Fn(&Costs) -> f64| -> Vec<f64> {
+            runs.iter().map(|r| f(r.baseline_costs.as_ref().unwrap())).collect()
+        };
+        Some([
+            stat(&bcol(&|c: &Costs| c.comp_t)),
+            stat(&bcol(&|c: &Costs| c.trans_t)),
+            stat(&bcol(&|c: &Costs| c.comp_l)),
+            stat(&bcol(&|c: &Costs| c.trans_l)),
+        ])
+    } else {
+        None
+    };
+    let improvement = if runs.iter().all(|r| r.improvement_pct.is_some()) {
+        let imps: Vec<f64> = runs.iter().map(|r| r.improvement_pct.unwrap()).collect();
+        Some(stat(&imps))
+    } else {
+        None
+    };
+    let rounds = stat(&col(&|r: &RunRecord| r.rounds as f64));
+    let final_accuracy = stat(&col(&|r: &RunRecord| r.final_accuracy));
+    let final_m = stat(&col(&|r: &RunRecord| r.final_m as f64));
+    let final_e = stat(&col(&|r: &RunRecord| r.final_e));
+    CellResult {
+        cell,
+        runs,
+        costs,
+        baseline_costs,
+        rounds,
+        final_accuracy,
+        final_m,
+        final_e,
+        improvement,
+    }
+}
+
+/// Result of one configured run, schedule-agnostic.
+struct SingleRun {
+    rounds: usize,
+    final_accuracy: f64,
+    costs: Costs,
+    final_m: usize,
+    final_e: f64,
+    trace: Trace,
+}
+
+fn run_one(grid: &Grid, cell: &Cell, seed: u64) -> Result<RunRecord> {
+    let cfg = cell_config(grid, cell, cell.preference, seed)?;
+    let cost_model = match grid.cost_model {
+        Some(cm) => cm,
+        None => cfg.cost_model()?,
+    };
+    let tuned = run_single(&cfg, cell.e0, cost_model, seed)?;
+
+    let (improvement_pct, baseline_costs) =
+        if grid.compare_baseline && cell.preference.is_some() {
+            let base_cfg = cell_config(grid, cell, None, seed)?;
+            let base = run_single(&base_cfg, cell.e0, cost_model, seed)?;
+            let pref = cell.preference.expect("checked above");
+            // Eq. (6): I(baseline, fedtune) < 0 ⇔ FedTune better; report
+            // with the paper's sign convention (positive = gain).
+            let i = base.costs.compare(&tuned.costs, &pref);
+            (Some(-i * 100.0), Some(base.costs))
+        } else {
+            (None, None)
+        };
+
+    Ok(RunRecord {
+        seed,
+        rounds: tuned.rounds,
+        final_accuracy: tuned.final_accuracy,
+        costs: tuned.costs,
+        final_m: tuned.final_m,
+        final_e: tuned.final_e,
+        improvement_pct,
+        baseline_costs,
+        trace: if grid.keep_traces { Some(tuned.trace) } else { None },
+    })
+}
+
+fn cell_config(
+    grid: &Grid,
+    cell: &Cell,
+    preference: Option<Preference>,
+    seed: u64,
+) -> Result<ExperimentConfig> {
+    let mut cfg = grid.base.clone();
+    cfg.dataset = cell.dataset.clone();
+    cfg.model = cell.model.clone();
+    cfg.aggregator = cell.aggregator;
+    cfg.m0 = cell.m0;
+    // Fractional E bypasses the integer schedule (run_fixed_fractional);
+    // the config still needs a valid integer for validation/round-trips.
+    cfg.e0 = if cell.e0.fract() == 0.0 {
+        cell.e0 as usize
+    } else {
+        (cell.e0.ceil() as usize).max(1)
+    };
+    cfg.preference = preference;
+    cfg.penalty = cell.penalty;
+    cfg.seed = seed;
+    if let Some(mr) = grid.max_rounds {
+        cfg.max_rounds = mr;
+    }
+    if let Some(t) = cell.target.or(grid.target) {
+        cfg.target_accuracy = t;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run_single(
+    cfg: &ExperimentConfig,
+    e: f64,
+    cost_model: CostModel,
+    seed: u64,
+) -> Result<SingleRun> {
+    if e.fract() == 0.0 {
+        let rr = baselines::run_sim_with_cost_model(cfg, seed, cost_model)?;
+        Ok(SingleRun {
+            rounds: rr.rounds,
+            final_accuracy: rr.final_accuracy,
+            costs: rr.costs,
+            final_m: rr.final_m,
+            final_e: rr.final_e as f64,
+            trace: rr.trace,
+        })
+    } else {
+        run_fixed_fractional(cfg, e, cost_model, seed)
+    }
+}
+
+/// Fixed-(M, E) run with fractional E (the paper's E = 0.5, §3.2): drives
+/// rounds directly because the integer FedTune schedule cannot represent
+/// half-passes. Mirrors [`crate::coordinator::Server::run`], including the
+/// selector RNG stream, so integral-E results agree between paths.
+fn run_fixed_fractional(
+    cfg: &ExperimentConfig,
+    e: f64,
+    cost_model: CostModel,
+    seed: u64,
+) -> Result<SingleRun> {
+    if cfg.preference.is_some() {
+        bail!("fractional E = {e} requires the fixed schedule (no preference)");
+    }
+    if e <= 0.0 {
+        bail!("non-positive pass count E = {e}");
+    }
+    let mut engine = baselines::sim_engine_for(cfg, seed)?;
+    let target = cfg.target()?;
+    let mut rng = Rng::new(seed ^ 0xc00d); // same stream as coordinator::Server
+    let mut trace = Trace::new();
+    let mut cum = Costs::ZERO;
+    let mut accuracy = 0.0;
+    let mut round = 0;
+    while accuracy < target && round < cfg.max_rounds {
+        round += 1;
+        let participants =
+            cfg.selector.select(engine.client_sizes(), cfg.m0, &mut rng);
+        let sizes: Vec<usize> =
+            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
+        let outcome = engine.run_round(&participants, e)?;
+        accuracy = outcome.accuracy;
+        cum.add(&cost_model.round_costs(&sizes, e));
+        trace.push(RoundRecord {
+            round,
+            m: cfg.m0,
+            e,
+            accuracy,
+            train_loss: outcome.train_loss,
+            costs: cum,
+            fedtune_activated: false,
+        });
+    }
+    Ok(SingleRun {
+        rounds: round,
+        final_accuracy: accuracy,
+        costs: cum,
+        final_m: cfg.m0,
+        final_e: e,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
+    }
+
+    #[test]
+    fn compare_is_deterministic_per_seedset() {
+        let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+        let g = Grid::new(base_cfg())
+            .preferences(&[pref])
+            .seeds(&[1, 2])
+            .compare_baseline(true)
+            .workers(2);
+        let a = g.run().unwrap();
+        let b = g.run().unwrap();
+        assert_eq!(a.cells[0].improvement, b.cells[0].improvement);
+        assert_eq!(a.cells[0].final_m, b.cells[0].final_m);
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+    }
+
+    #[test]
+    fn pure_comp_l_preference_improves_and_shrinks_m() {
+        // Paper Table 4: γ=1 is FedTune's best case (+70%), final M = 1.
+        let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+        let g = Grid::new(base_cfg())
+            .preferences(&[pref])
+            .seeds(&[1, 2, 3])
+            .compare_baseline(true);
+        let r = g.run().unwrap();
+        let c = &r.cells[0];
+        let imp = c.improvement.expect("compare_baseline yields improvement");
+        assert!(
+            imp.mean > 10.0,
+            "CompL-only should improve a lot, got {:+.1}%",
+            imp.mean
+        );
+        assert!(
+            c.final_m.mean < 10.0,
+            "CompL-only should shrink M toward 1, got {}",
+            c.final_m.mean
+        );
+    }
+
+    #[test]
+    fn fractional_e_runs_and_rejects_fedtune() {
+        let mut cfg = base_cfg();
+        cfg.max_rounds = 60_000;
+        let g = Grid::new(cfg.clone()).e0s(&[0.5]).seeds(&[7]);
+        let r = g.run().unwrap();
+        let run = &r.cells[0].runs[0];
+        assert!(run.final_accuracy >= 0.8, "got {}", run.final_accuracy);
+        assert_eq!(run.final_e, 0.5);
+        assert!(run.costs.all_nonneg() && run.costs.is_finite());
+
+        cfg.preference = Some(Preference::new(1.0, 0.0, 0.0, 0.0).unwrap());
+        let bad = Grid::new(cfg).e0s(&[0.5]).seeds(&[7]);
+        assert!(bad.run().is_err(), "fractional E + FedTune must be rejected");
+    }
+
+    #[test]
+    fn keep_traces_populates_runs() {
+        let g = Grid::new(base_cfg()).seeds(&[5]).keep_traces(true);
+        let r = g.run().unwrap();
+        let run = &r.cells[0].runs[0];
+        let trace = run.trace.as_ref().expect("trace kept");
+        assert_eq!(trace.len(), run.rounds);
+
+        let g2 = Grid::new(base_cfg()).seeds(&[5]);
+        let r2 = g2.run().unwrap();
+        assert!(r2.cells[0].runs[0].trace.is_none());
+        // Trace retention must not change the numbers.
+        assert_eq!(r2.cells[0].runs[0].costs, run.costs);
+    }
+
+    #[test]
+    fn json_artifact_has_schema_and_cells() {
+        let g = Grid::new(base_cfg()).seeds(&[1]);
+        let j = g.run().unwrap().to_json();
+        assert_eq!(
+            j.get("schema").unwrap().as_str(),
+            Some("fedtune.experiment.grid/v1")
+        );
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let runs = cells[0].get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert!(runs[0].get("comp_t").unwrap().as_f64().unwrap() > 0.0);
+        // Parse back: the artifact is valid JSON.
+        let round_trip = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(round_trip, j);
+    }
+
+    #[test]
+    fn bad_cell_errors_carry_the_label() {
+        let mut cfg = base_cfg();
+        cfg.model = "resnet-99".into(); // not in the ladder
+        let g = Grid::new(cfg).seeds(&[1]);
+        let err = format!("{:#}", g.run().unwrap_err());
+        assert!(err.contains("resnet-99"), "{err}");
+    }
+}

@@ -174,7 +174,8 @@ impl FedTune {
     }
 
     /// Feed one finished round. Returns a [`Decision`] when FedTune
-    /// activates (accuracy gain > ε) and changes (M, E).
+    /// activates (accuracy gain ≥ ε, Alg. 1 line 13: "improved by at
+    /// least ε") and changes (M, E).
     pub fn observe_round(
         &mut self,
         round: usize,
@@ -182,7 +183,7 @@ impl FedTune {
         cumulative: Costs,
     ) -> Option<Decision> {
         let gain = accuracy - self.a_prv;
-        if gain <= self.cfg.eps {
+        if gain < self.cfg.eps {
             return None; // line 13: not activated
         }
         self.activations += 1;
@@ -345,6 +346,27 @@ mod tests {
     }
 
     #[test]
+    fn activates_at_exactly_eps() {
+        // Alg. 1 line 13: "improved by at least ε" — the boundary counts.
+        // ε = 0.5 keeps the float arithmetic exact.
+        let c = FedTuneConfig { eps: 0.5, ..cfg() };
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 20).unwrap();
+        // Warm-up activation at gain == ε exactly.
+        assert!(ft.observe_round(1, 0.5, cum(1.0, 1.0, 1.0, 1.0)).is_none());
+        assert_eq!(ft.activations(), 1);
+        // Second activation at gain == ε exactly must produce a decision.
+        let d = ft.observe_round(2, 1.0, cum(3.0, 2.0, 2.0, 2.0));
+        assert!(d.is_some(), "gain == eps must activate");
+        assert_eq!(ft.activations(), 2);
+        // Just below ε must not activate.
+        let mut below = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 20).unwrap();
+        assert!(below
+            .observe_round(1, 0.499_999_9, cum(1.0, 1.0, 1.0, 1.0))
+            .is_none());
+        assert_eq!(below.activations(), 0);
+    }
+
+    #[test]
     fn first_activation_warms_up_without_moving() {
         let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20).unwrap();
         assert!(ft.observe_round(1, 0.05, cum(10.0, 1.0, 10.0, 20.0)).is_none());
@@ -424,7 +446,8 @@ mod tests {
 
     #[test]
     fn slopes_stay_bounded_under_penalty_streak() {
-        let mut ft = FedTune::new(pref(0.0, 0.0, 1.0, 0.0), cfg(), 20, 20).unwrap();
+        let c = cfg();
+        let mut ft = FedTune::new(pref(0.0, 0.0, 1.0, 0.0), c, 20, 20).unwrap();
         let mut cumc = Costs::ZERO;
         for r in 1..200 {
             // Erratic costs force many bad comparisons → many penalties.
@@ -432,8 +455,36 @@ mod tests {
             cumc.add(&cum(wob, wob, wob * 3.0, wob));
             ft.observe_round(r, 0.02 * r as f64, cumc);
         }
+        // η/ζ never escape the [1e-6, 1e12] clamp despite the streak.
         for v in ft.eta().iter().chain(ft.zeta().iter()) {
             assert!(v.is_finite() && *v <= 1e12 && *v >= 1e-6);
+        }
+        // The controller is not frozen: it keeps deciding to the end...
+        assert!(
+            ft.decisions().len() >= 190,
+            "only {} decisions in 199 rounds",
+            ft.decisions().len()
+        );
+        // ...with finite step signals (overflowed slopes would go NaN/inf)...
+        for d in ft.decisions() {
+            assert!(d.delta_m.is_finite() && d.delta_e.is_finite());
+        }
+        // ...and (M, E) still move: between consecutive decisions each
+        // hyper-parameter either changed or sits pinned at a bound.
+        for w in ft.decisions().windows(2) {
+            let (a, b) = (w[0], w[1]);
+            assert!(
+                b.m != a.m || b.m == c.m_min || b.m == c.m_max,
+                "M frozen mid-range at {} (round {})",
+                b.m,
+                b.round
+            );
+            assert!(
+                b.e != a.e || b.e == c.e_min || b.e == c.e_max,
+                "E frozen mid-range at {} (round {})",
+                b.e,
+                b.round
+            );
         }
     }
 }

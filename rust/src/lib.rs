@@ -3,19 +3,22 @@
 //! Rust + JAX + Pallas reproduction of *"Federated Learning Hyper-Parameter
 //! Tuning From A System Perspective"* (Zhang et al., 2022).
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see rust/DESIGN.md):
 //! * **L3 (this crate)** — FL coordinator: round scheduling, participant
 //!   selection, aggregation (FedAvg/FedNova/FedAdagrad), the four system
 //!   overheads (CompT/TransT/CompL/TransL, Eqs. 2–5), and the FedTune
 //!   controller (Alg. 1, Eqs. 6–11).
 //! * **L2/L1 (python/, build-time only)** — JAX models whose dense layers
 //!   run through a tiled Pallas matmul kernel, AOT-lowered to HLO text and
-//!   executed here via PJRT ([`runtime`]).
+//!   executed here via PJRT ([`runtime`], behind the `pjrt` feature).
 //!
 //! Quick tour: [`config::ExperimentConfig`] describes a run;
 //! [`engine::sim::SimEngine`] or [`engine::real::RealEngine`] execute
 //! rounds; [`coordinator::Server`] drives either engine to a target
-//! accuracy with or without [`fedtune::FedTune`] adjusting (M, E).
+//! accuracy with or without [`fedtune::FedTune`] adjusting (M, E);
+//! [`experiment::Grid`] fans whole (profile × aggregator × M₀ × E₀ ×
+//! preference × seed) sweeps out over a worker pool and emits one stable
+//! JSON artifact per sweep.
 
 pub mod util;
 
@@ -25,9 +28,14 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod experiment;
 pub mod fedtune;
 pub mod metrics;
 pub mod model;
 pub mod overhead;
+#[cfg(feature = "pjrt")]
+pub mod runtime;
+#[cfg(not(feature = "pjrt"))]
+#[path = "runtime/stub.rs"]
 pub mod runtime;
 pub mod trace;

@@ -17,6 +17,7 @@ use fedtune::coordinator::{Server, ServerConfig};
 use fedtune::data::FederatedDataset;
 use fedtune::engine::real::{RealEngine, RealEngineConfig};
 use fedtune::engine::FlEngine;
+use fedtune::experiment::Grid;
 use fedtune::fedtune::schedule::Schedule;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ladder, Manifest, ParamVec};
@@ -163,7 +164,7 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
         meta.dataset,
         profile.name
     );
-    log::info!(
+    fedtune::log_info!(
         "generating federated dataset {} ({} clients)...",
         profile.name,
         profile.train_clients
@@ -208,6 +209,8 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
 fn cmd_grid(args: Vec<String>) -> Result<()> {
     let cli = common_cli("fedtune grid", "15-preference FedTune vs fixed baseline")
         .opt("seeds", "1,2,3", "comma-separated seeds")
+        .opt("workers", "0", "worker threads for the sweep (0 = all cores, capped)")
+        .opt("json-out", "", "write the grid JSON artifact here")
         .parse(args)
         .map_err(anyhow::Error::msg)?;
     let cfg = parse_config(&cli)?;
@@ -220,25 +223,43 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
         .iter()
         .map(|s| s.parse::<u64>().context("parsing --seeds"))
         .collect::<Result<Vec<_>>>()?;
-    let (mean, std, rows) = baselines::grid_mean_improvement(&cfg, &seeds)?;
+    let workers: usize = cli.get("workers").map_err(anyhow::Error::msg)?;
+
+    // The paper's 15-preference sweep, fanned out over the worker pool;
+    // every (preference, seed) pair also runs the fixed baseline for the
+    // Eq. (6) "overall" column.
+    let result = Grid::new(cfg)
+        .preferences(&Preference::paper_grid())
+        .seeds(&seeds)
+        .workers(workers)
+        .compare_baseline(true)
+        .run()?;
+
     println!(
         "{:<22} {:>12} {:>12} {:>12} {:>14} {:>9} {:>9} {:>10}",
         "pref a/b/g/d", "CompT", "TransT", "CompL", "TransL", "final M", "final E", "overall"
     );
-    for c in &rows {
+    for c in &result.cells {
         println!(
             "{:<22} {:>12.3e} {:>12.3e} {:>12.3e} {:>14.3e} {:>9.1} {:>9.1} {:>+9.2}%",
-            c.preference.label(),
-            c.fedtune_costs[0],
-            c.fedtune_costs[1],
-            c.fedtune_costs[2],
-            c.fedtune_costs[3],
-            c.final_m_mean,
-            c.final_e_mean,
-            c.improvement_pct
+            c.cell.preference.map(|p| p.label()).unwrap_or_default(),
+            c.costs[0].mean,
+            c.costs[1].mean,
+            c.costs[2].mean,
+            c.costs[3].mean,
+            c.final_m.mean,
+            c.final_e.mean,
+            c.improvement.map(|s| s.mean).unwrap_or(0.0)
         );
     }
-    println!("\nmean improvement over grid: {mean:+.2}% (std {std:.2}%)");
+    let mi = result.mean_improvement();
+    println!("\nmean improvement over grid: {:+.2}% (std {:.2}%)", mi.mean, mi.std);
+
+    let json_out = cli.get_str("json-out");
+    if !json_out.is_empty() {
+        result.write_json(&json_out)?;
+        println!("grid artifact written to {json_out}");
+    }
     Ok(())
 }
 

@@ -173,7 +173,7 @@ impl Runtime {
         // creates device buffers from the input literals and leaks them
         // (xla_rs.cc `execute`: `buffer.release()` with no matching free).
         // With buffers we own, Drop releases them — RSS stays flat over
-        // millions of steps (see EXPERIMENTS.md §Perf).
+        // millions of steps (perf targets: DESIGN.md §8).
         let tm = Instant::now();
         let mut args: Vec<xla::PjRtBuffer> =
             Vec::with_capacity(meta.params.len() + 4);

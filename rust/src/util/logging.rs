@@ -1,68 +1,158 @@
-//! Minimal `log`-facade backend (no env_logger offline).
+//! Minimal logging substrate (no `log`/`env_logger` offline).
 //!
-//! `FEDTUNE_LOG=debug|info|warn|error|off` controls verbosity; default
-//! `info`. Timestamps are milliseconds since logger init (wall-clock dates
-//! are irrelevant for experiment logs and this keeps output diff-able).
+//! A tiny leveled logger behind the crate-root macros `log_error!`,
+//! `log_warn!`, `log_info!`, `log_debug!` and `log_trace!`.
+//! `FEDTUNE_LOG=trace|debug|info|warn|error|off` controls verbosity;
+//! default `info`. Timestamps are milliseconds since the first emission
+//! (wall-clock dates are irrelevant for experiment logs and this keeps
+//! output diff-able).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Metadata, Record};
-
-struct SimpleLogger {
-    start: Instant,
+/// Severity, most severe first (smaller = more severe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for SimpleLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let ms = self.start.elapsed().as_millis();
-        let lvl = match record.level() {
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{ms:>8}ms {lvl} {}] {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static INITIALIZED: AtomicBool = AtomicBool::new(false);
+/// Current max level as u8 (0 = off). Default `info`.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
 
-/// Install the logger (idempotent). Level from `FEDTUNE_LOG`.
+/// Install the logger level from `FEDTUNE_LOG` (idempotent; calling it is
+/// optional — emission works with the `info` default either way).
 pub fn init() {
-    if INITIALIZED.swap(true, Ordering::SeqCst) {
+    let level = match std::env::var("FEDTUNE_LOG").as_deref() {
+        Ok("trace") => Level::Trace as u8,
+        Ok("debug") => Level::Debug as u8,
+        Ok("warn") => Level::Warn as u8,
+        Ok("error") => Level::Error as u8,
+        Ok("off") => 0,
+        _ => Level::Info as u8,
+    };
+    MAX_LEVEL.store(level, Ordering::SeqCst);
+    let _ = START.get_or_init(Instant::now);
+}
+
+/// Would a record at `level` be emitted right now?
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emission backend for the `log_*!` macros — not called directly.
+pub fn emit(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
         return;
     }
-    let level = match std::env::var("FEDTUNE_LOG").as_deref() {
-        Ok("trace") => LevelFilter::Trace,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("error") => LevelFilter::Error,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
+    let ms = START.get_or_init(Instant::now).elapsed().as_millis();
+    eprintln!("[{ms:>8}ms {} {target}] {args}", level.label());
+}
+
+/// `log_error!("...")` — always-on diagnostics.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
-    let logger = Box::new(SimpleLogger { start: Instant::now() });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(level);
-    }
+}
+
+/// `log_warn!("...")`.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_info!("...")` — default-visible progress messages.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_debug!("...")` — per-round detail, enabled via `FEDTUNE_LOG=debug`.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_trace!("...")`.
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+        init();
+        init();
+        crate::log_info!("logging smoke test");
+    }
+
+    #[test]
+    fn severity_ordering() {
+        // Error is the most severe (lowest numeric level).
+        assert!((Level::Error as u8) < (Level::Warn as u8));
+        assert!((Level::Info as u8) < (Level::Trace as u8));
+    }
+
+    #[test]
+    fn emit_respects_disabled_levels() {
+        init();
+        // Trace is off by default — emit must be a cheap no-op.
+        if std::env::var("FEDTUNE_LOG").is_err() {
+            assert!(!enabled(Level::Trace));
+        }
+        crate::log_trace!("must not panic even when disabled");
     }
 }

@@ -1,0 +1,82 @@
+//! Integration: the pooled experiment grid — worker-count determinism
+//! (the acceptance contract: a ≥24-cell grid with `workers ≥ 4` produces
+//! byte-identical JSON to `workers = 1`), plus pool-vs-direct agreement.
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
+use fedtune::overhead::Preference;
+
+/// 24 cells: 2 aggregators × 2 M₀ × 2 E₀ × 3 schedules.
+fn grid_24(workers: usize) -> Grid {
+    let base = ExperimentConfig {
+        max_rounds: 300, // cap keeps the 24×2-seed sweep fast
+        ..ExperimentConfig::default()
+    };
+    let balanced = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+    let comp_l = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+    Grid::new(base)
+        .aggregators(&[AggregatorKind::FedAvg, AggregatorKind::fedadagrad_paper()])
+        .m0s(&[5, 20])
+        .e0s(&[1.0, 4.0])
+        .preference_options(&[None, Some(comp_l), Some(balanced)])
+        .seeds(&[1, 2])
+        .compare_baseline(true)
+        .workers(workers)
+}
+
+#[test]
+fn pooled_grid_json_is_byte_identical_across_worker_counts() {
+    let serial = grid_24(1);
+    assert_eq!(serial.num_cells(), 24);
+    assert_eq!(serial.num_runs(), 48);
+    let a = serial.run().unwrap().to_json().pretty();
+    let b = grid_24(4).run().unwrap().to_json().pretty();
+    assert_eq!(a, b, "workers=4 JSON must match workers=1 byte for byte");
+    let c = grid_24(7).run().unwrap().to_json().pretty();
+    assert_eq!(a, c, "odd worker counts must not change the artifact");
+}
+
+#[test]
+fn grid_cells_match_direct_runs() {
+    // A pooled cell must reproduce exactly what baselines::run_sim gives
+    // for the same config + seed (the pool adds no hidden state).
+    let base = ExperimentConfig {
+        max_rounds: 300,
+        ..ExperimentConfig::default()
+    };
+    let r = Grid::new(base.clone())
+        .m0s(&[5, 20])
+        .seeds(&[9])
+        .workers(4)
+        .run()
+        .unwrap();
+    for cell in &r.cells {
+        let mut cfg = base.clone();
+        cfg.m0 = cell.cell.m0;
+        cfg.seed = 9;
+        let direct = baselines::run_sim(&cfg, 9).unwrap();
+        let run = &cell.runs[0];
+        assert_eq!(run.rounds, direct.rounds);
+        assert_eq!(run.costs, direct.costs);
+        assert_eq!(run.final_m, direct.final_m);
+    }
+}
+
+#[test]
+fn improvement_reported_only_for_tuned_cells() {
+    let r = grid_24(4).run().unwrap();
+    for c in &r.cells {
+        match c.cell.preference {
+            None => {
+                assert!(c.improvement.is_none());
+                assert!(c.runs.iter().all(|x| x.improvement_pct.is_none()));
+            }
+            Some(_) => {
+                assert!(c.improvement.is_some(), "cell {}", c.cell.label());
+                assert!(c.baseline_costs.is_some());
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@ use fedtune::aggregation::AggregatorKind;
 use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
 use fedtune::coordinator::StopReason;
+use fedtune::experiment::Grid;
 use fedtune::overhead::Preference;
 
 fn cfg() -> ExperimentConfig {
@@ -54,18 +55,34 @@ fn costs_accumulate_monotonically_and_match_round_count() {
 #[test]
 fn fedtune_beats_baseline_for_pure_comp_l() {
     let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
-    let c = baselines::compare(&cfg(), pref, &[1, 2, 3]).unwrap();
-    assert!(c.improvement_pct > 20.0, "got {:+.2}%", c.improvement_pct);
-    assert!(c.final_m_mean <= 5.0);
+    let r = Grid::new(cfg())
+        .preferences(&[pref])
+        .seeds(&[1, 2, 3])
+        .compare_baseline(true)
+        .run()
+        .unwrap();
+    let c = &r.cells[0];
+    let imp = c.improvement.unwrap();
+    assert!(imp.mean > 20.0, "got {:+.2}%", imp.mean);
+    assert!(c.final_m.mean <= 5.0);
 }
 
 #[test]
 fn fedtune_tracks_pure_preferences_directionally() {
-    // α=1 grows M; δ=1 grows E and shrinks M (paper Table 4).
-    let a = baselines::compare(&cfg(), Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(), &[4]).unwrap();
-    assert!(a.final_m_mean > 20.0, "α=1 final M {}", a.final_m_mean);
-    let d = baselines::compare(&cfg(), Preference::new(0.0, 0.0, 0.0, 1.0).unwrap(), &[4]).unwrap();
-    assert!(d.final_m_mean < 20.0 && d.final_e_mean > 20.0);
+    // α=1 grows M; δ=1 grows E and shrinks M (paper Table 4); one pooled
+    // grid covers both pure preferences.
+    let r = Grid::new(cfg())
+        .preferences(&[
+            Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(),
+            Preference::new(0.0, 0.0, 0.0, 1.0).unwrap(),
+        ])
+        .seeds(&[4])
+        .run()
+        .unwrap();
+    let a = &r.cells[0];
+    assert!(a.final_m.mean > 20.0, "α=1 final M {}", a.final_m.mean);
+    let d = &r.cells[1];
+    assert!(d.final_m.mean < 20.0 && d.final_e.mean > 20.0);
 }
 
 #[test]

@@ -1,0 +1,83 @@
+//! Integration: the simulator reproduces paper Table 3's qualitative
+//! overhead trends — referenced by the `engine::sim` module docs as the
+//! calibration contract.
+//!
+//! Table 3 ('>' = the larger the better, '<' = the smaller the better):
+//!   CompT:  M '>', E '<'     CompL:  M '<', E '<'
+//!   TransT: M '>', E '>'     TransL: M '<', E '>'
+//!
+//! The sweep runs as one pooled `experiment::Grid` (3 M × 2 E × 3 seeds).
+
+use std::sync::OnceLock;
+
+use fedtune::config::ExperimentConfig;
+use fedtune::experiment::{Grid, GridResult};
+
+const SEEDS: [u64; 3] = [101, 202, 303];
+
+/// The sweep is deterministic, so both tests share one execution.
+fn sweep() -> &'static GridResult {
+    static SWEEP: OnceLock<GridResult> = OnceLock::new();
+    SWEEP.get_or_init(|| {
+        let base = ExperimentConfig {
+            model: "resnet-10".into(),
+            max_rounds: 60_000,
+            ..ExperimentConfig::default()
+        };
+        Grid::new(base)
+            .m0s(&[2, 20, 40])
+            .e0s(&[1.0, 8.0])
+            .seeds(&SEEDS)
+            .run()
+            .unwrap()
+    })
+}
+
+fn mean_costs(r: &GridResult, m0: usize, e0: f64) -> [f64; 4] {
+    let c = r
+        .cells
+        .iter()
+        .find(|c| c.cell.m0 == m0 && c.cell.e0 == e0)
+        .unwrap();
+    [c.costs[0].mean, c.costs[1].mean, c.costs[2].mean, c.costs[3].mean]
+}
+
+#[test]
+fn table3_trends_hold_under_growing_m_and_e() {
+    let r = sweep();
+
+    // M sweep at E = 1: indices CompT/TransT/CompL/TransL.
+    let m_low = mean_costs(r, 2, 1.0);
+    let m_high = mean_costs(r, 40, 1.0);
+    assert!(m_high[0] < m_low[0], "CompT prefers larger M (paper '>'): {m_high:?} vs {m_low:?}");
+    assert!(m_high[1] < m_low[1], "TransT prefers larger M (paper '>')");
+    assert!(m_high[2] > m_low[2], "CompL prefers smaller M (paper '<')");
+    assert!(m_high[3] > m_low[3], "TransL prefers smaller M (paper '<')");
+
+    // E sweep at M = 20.
+    let e_low = mean_costs(r, 20, 1.0);
+    let e_high = mean_costs(r, 20, 8.0);
+    assert!(e_high[0] > e_low[0], "CompT prefers smaller E (paper '<')");
+    assert!(e_high[1] < e_low[1], "TransT prefers larger E (paper '>')");
+    assert!(e_high[2] > e_low[2], "CompL prefers smaller E (paper '<')");
+    assert!(e_high[3] < e_low[3], "TransL prefers larger E (paper '>')");
+}
+
+#[test]
+fn every_sweep_cell_reached_the_target() {
+    // The trends above are only meaningful if runs end at the same
+    // accuracy; 60k rounds is ample headroom for every (M, E) cell.
+    let r = sweep();
+    assert_eq!(r.cells.len(), 6);
+    for c in &r.cells {
+        for run in &c.runs {
+            assert!(
+                run.final_accuracy >= 0.8,
+                "cell {} seed {} stopped at {:.3}",
+                c.cell.label(),
+                run.seed,
+                run.final_accuracy
+            );
+        }
+    }
+}
