@@ -23,10 +23,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("precision agriculture: energy-sensitive (γ=0.5, δ=0.5)\n");
+    // FEDTUNE_CACHE_DIR=... caches the runs (see `fedtune grid --help`).
     let result = Grid::new(cfg)
         .preferences(&[pref])
         .seeds(&[31, 32, 33])
         .compare_baseline(true)
+        .cache_from_env()
         .run()?;
     let c = &result.cells[0];
     let imp = c.improvement.expect("compare_baseline reports improvement");

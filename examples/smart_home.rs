@@ -23,10 +23,14 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("smart-home HVAC: computation-sensitive (α=0.5, γ=0.5)\n");
+    // `cache_from_env`: set FEDTUNE_CACHE_DIR=.fedtune-cache to reuse the
+    // runs across examples/benches (the store dedupes the shared baseline
+    // automatically; see `fedtune grid --help` for the CLI flags).
     let result = Grid::new(cfg)
         .preferences(&[pref])
         .seeds(&[7, 8, 9])
         .compare_baseline(true)
+        .cache_from_env()
         .run()?;
     let c = &result.cells[0];
     let imp = c.improvement.expect("compare_baseline reports improvement");

@@ -22,10 +22,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!("traffic monitoring: transmission-sensitive (β=0.5, δ=0.5)\n");
+    // FEDTUNE_CACHE_DIR=... caches the runs (see `fedtune grid --help`).
     let result = Grid::new(cfg)
         .preferences(&[pref])
         .seeds(&[21, 22, 23])
         .compare_baseline(true)
+        .cache_from_env()
         .run()?;
     let c = &result.cells[0];
     let imp = c.improvement.expect("compare_baseline reports improvement");

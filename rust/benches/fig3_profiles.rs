@@ -28,14 +28,16 @@ fn main() {
         max_rounds: 60_000,
         ..ExperimentConfig::default()
     };
-    let result = Grid::new(base)
-        .m0s(&MS)
-        .e0s(&[1.0])
-        .seeds(&[7])
-        .cost_model(CostModel::UNIT) // the paper's Fig. 3 setting
-        .keep_traces(true)
-        .run()
-        .unwrap();
+    let result = harness::cached(
+        Grid::new(base)
+            .m0s(&MS)
+            .e0s(&[1.0])
+            .seeds(&[7])
+            .cost_model(CostModel::UNIT) // the paper's Fig. 3 setting
+            .keep_traces(true),
+    )
+    .run()
+    .unwrap();
     let traces: Vec<(usize, &Trace)> = result
         .cells
         .iter()

@@ -23,10 +23,7 @@ fn main() {
         max_rounds: 60_000,
         ..ExperimentConfig::default()
     };
-    let result = Grid::new(base)
-        .m0s(&MS)
-        .e0s(&ES)
-        .seeds(&SEEDS3)
+    let result = harness::cached(Grid::new(base).m0s(&MS).e0s(&ES).seeds(&SEEDS3))
         .run()
         .unwrap();
     let cell = |mi: usize, ei: usize| {

@@ -33,12 +33,14 @@ fn main() {
         .iter()
         .map(|l| ("speech", l.name, (l.max_accuracy - 0.02).min(0.87)))
         .collect();
-    let result = Grid::new(base)
-        .profiles_with_targets(&profiles)
-        .seeds(&[11])
-        .keep_traces(true)
-        .run()
-        .unwrap();
+    let result = harness::cached(
+        Grid::new(base)
+            .profiles_with_targets(&profiles)
+            .seeds(&[11])
+            .keep_traces(true),
+    )
+    .run()
+    .unwrap();
     let traces: Vec<(&str, &Trace)> = result
         .cells
         .iter()

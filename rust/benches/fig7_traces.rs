@@ -22,12 +22,14 @@ fn main() {
         model: "resnet-10".into(),
         ..ExperimentConfig::default()
     };
-    let result = Grid::new(base)
-        .preferences(&Preference::paper_grid())
-        .seeds(&[17])
-        .keep_traces(true)
-        .run()
-        .unwrap();
+    let result = harness::cached(
+        Grid::new(base)
+            .preferences(&Preference::paper_grid())
+            .seeds(&[17])
+            .keep_traces(true),
+    )
+    .run()
+    .unwrap();
 
     let mut t = Table::new(&[
         "a/b/g/d", "round snapshots (round:M/E)", "final M/E",

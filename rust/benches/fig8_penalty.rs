@@ -34,13 +34,17 @@ fn main() {
         ..ExperimentConfig::default()
     };
     let prefs = degraded_cases();
-    let result = Grid::new(base)
-        .preferences(&prefs)
-        .penalties(&DS)
-        .seeds(&SEEDS3)
-        .compare_baseline(true)
-        .run()
-        .unwrap();
+    // One baseline run per (M₀, E₀, seed) serves all 15 (pref, D) cells —
+    // the store dedupes the rest (and --cache-dir shares it with fig9).
+    let result = harness::cached(
+        Grid::new(base)
+            .preferences(&prefs)
+            .penalties(&DS)
+            .seeds(&SEEDS3)
+            .compare_baseline(true),
+    )
+    .run()
+    .unwrap();
     let cell = |pref: &Preference, d: f64| {
         result
             .find_cell(|c| c.preference == Some(*pref) && c.penalty == d)

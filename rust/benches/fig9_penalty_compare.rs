@@ -23,13 +23,15 @@ fn main() {
         ..ExperimentConfig::default()
     };
     let prefs = Preference::paper_grid();
-    let result = Grid::new(base)
-        .preferences(&prefs)
-        .penalties(&[1.0, 10.0])
-        .seeds(&SEEDS3)
-        .compare_baseline(true)
-        .run()
-        .unwrap();
+    let result = harness::cached(
+        Grid::new(base)
+            .preferences(&prefs)
+            .penalties(&[1.0, 10.0])
+            .seeds(&SEEDS3)
+            .compare_baseline(true),
+    )
+    .run()
+    .unwrap();
     let cell = |pref: &Preference, d: f64| {
         result
             .find_cell(|c| c.preference == Some(*pref) && c.penalty == d)

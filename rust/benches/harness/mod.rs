@@ -14,6 +14,8 @@
 
 use std::time::Instant;
 
+use fedtune::experiment::Grid;
+
 /// Timing statistics of one benchmarked operation.
 #[derive(Debug, Clone, Copy)]
 pub struct Sample {
@@ -149,3 +151,43 @@ pub fn pct_std(mean: f64, std: f64) -> String {
 /// Standard seed set for 3-run averaging, matching the paper's "results
 /// are averaged over three runs".
 pub const SEEDS3: [u64; 3] = [101, 202, 303];
+
+// ---------------------------------------------------------------------------
+// Shared run cache (figures overlap heavily — see `fedtune::store`)
+// ---------------------------------------------------------------------------
+
+/// Apply the shared sweep-cache options to a paper-bench grid.
+///
+/// Every figure/table bench routes its [`Grid`] through this, so one
+/// cache directory makes the whole paper regeneration incremental (the
+/// Fig. 8/9 and Table 4 baselines are the same runs). Opt in with
+///
+/// ```text
+/// cargo bench --bench fig8_penalty -- --cache-dir .fedtune-cache
+/// FEDTUNE_CACHE_DIR=.fedtune-cache cargo bench
+/// ```
+///
+/// Args accepted (after `cargo bench -- ...`): `--cache-dir DIR`,
+/// `--no-cache`, `--resume`; environment fallbacks `FEDTUNE_CACHE_DIR`,
+/// `FEDTUNE_NO_CACHE`, `FEDTUNE_RESUME`. Unknown args are ignored so
+/// cargo's own flags pass through.
+pub fn cached(grid: Grid) -> Grid {
+    let mut g = grid.cache_from_env();
+    let args: Vec<String> = std::env::args().collect();
+    let mut i = 1;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--cache-dir" && i + 1 < args.len() {
+            g = g.cache_dir(args[i + 1].as_str());
+            i += 1;
+        } else if let Some(dir) = a.strip_prefix("--cache-dir=") {
+            g = g.cache_dir(dir);
+        } else if a == "--no-cache" {
+            g = g.no_cache(true);
+        } else if a == "--resume" {
+            g = g.resume(true);
+        }
+        i += 1;
+    }
+    g
+}

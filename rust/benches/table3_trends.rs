@@ -28,24 +28,23 @@ fn main() {
     };
     // Three small pooled sweeps cover exactly the six configurations the
     // sign table reads (a full axis product would discard 10 cells).
-    let m_sweep = Grid::new(base.clone())
-        .m0s(&[1, 2, 20, 40])
-        .e0s(&[1.0])
-        .seeds(&SEEDS3)
-        .run()
-        .unwrap();
-    let e_sweep = Grid::new(base.clone())
-        .m0s(&[20])
-        .e0s(&[8.0])
-        .seeds(&SEEDS3)
-        .run()
-        .unwrap();
-    let heavy = Grid::new(ExperimentConfig { model: "resnet-34".into(), ..base })
-        .m0s(&[1])
-        .e0s(&[1.0])
-        .seeds(&SEEDS3)
-        .run()
-        .unwrap();
+    let m_sweep = harness::cached(
+        Grid::new(base.clone()).m0s(&[1, 2, 20, 40]).e0s(&[1.0]).seeds(&SEEDS3),
+    )
+    .run()
+    .unwrap();
+    let e_sweep =
+        harness::cached(Grid::new(base.clone()).m0s(&[20]).e0s(&[8.0]).seeds(&SEEDS3))
+            .run()
+            .unwrap();
+    let heavy = harness::cached(
+        Grid::new(ExperimentConfig { model: "resnet-34".into(), ..base })
+            .m0s(&[1])
+            .e0s(&[1.0])
+            .seeds(&SEEDS3),
+    )
+    .run()
+    .unwrap();
     let results = [&m_sweep, &e_sweep, &heavy];
     let mean_costs = |model: &str, m0: usize, e0: f64| -> [f64; 4] {
         let c = results

@@ -29,13 +29,15 @@ fn main() {
         aggregator: AggregatorKind::FedAvg,
         ..ExperimentConfig::default()
     };
-    let result = Grid::new(base)
-        .profiles(&cases)
-        .preferences(&Preference::paper_grid())
-        .seeds(&SEEDS3)
-        .compare_baseline(true)
-        .run()
-        .unwrap();
+    let result = harness::cached(
+        Grid::new(base)
+            .profiles(&cases)
+            .preferences(&Preference::paper_grid())
+            .seeds(&SEEDS3)
+            .compare_baseline(true),
+    )
+    .run()
+    .unwrap();
 
     let mut t = Table::new(&["dataset", "model", "ours", "paper"]);
     let mut ours = Vec::new();

@@ -26,13 +26,15 @@ fn main() {
         model: "resnet-10".into(),
         ..ExperimentConfig::default()
     };
-    let result = Grid::new(base)
-        .aggregators(&aggs)
-        .preferences(&Preference::paper_grid())
-        .seeds(&SEEDS3)
-        .compare_baseline(true)
-        .run()
-        .unwrap();
+    let result = harness::cached(
+        Grid::new(base)
+            .aggregators(&aggs)
+            .preferences(&Preference::paper_grid())
+            .seeds(&SEEDS3)
+            .compare_baseline(true),
+    )
+    .run()
+    .unwrap();
 
     let mut t = Table::new(&["aggregator", "ours", "paper"]);
     let mut ours = Vec::new();

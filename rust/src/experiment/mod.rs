@@ -14,10 +14,24 @@
 //! # Determinism
 //!
 //! Every run is seeded explicitly and shares no mutable state, and the
-//! pool returns results in input order, so a grid's [`GridResult`] — and
-//! its serialized JSON — is **byte-identical for any worker count**
-//! (`workers = 1` vs `workers = N`). The determinism test in
-//! `rust/tests/experiment_grid.rs` locks this in.
+//! merge joins on (cell, seed) keys in artifact order, so a grid's
+//! [`GridResult`] — and its serialized JSON — is **byte-identical for
+//! any worker count** (`workers = 1` vs `workers = N`), with caching on
+//! or off, cold or warm, interrupted-and-resumed or not. The determinism
+//! tests in `rust/tests/experiment_grid.rs` and
+//! `rust/tests/store_cache.rs` lock this in.
+//!
+//! # Caching, dedup, resume (see [`crate::store`])
+//!
+//! Work items are content **fingerprints**, not (cell, seed) pairs:
+//! identical runs inside one sweep execute once and are shared — under
+//! [`Grid::compare_baseline`] the fixed-(M₀, E₀) baseline runs once per
+//! (profile, aggregator, M₀, E₀, seed), not once per tuned cell. With
+//! [`Grid::cache_dir`] finished runs persist as `fedtune.store.run/v1`
+//! records, repeated sweeps become pure cache hits
+//! ([`GridResult::executed_runs`] = 0), and a sweep journal of finished
+//! (cell, seed) records lets [`Grid::resume`] continue an interrupted
+//! sweep. [`Grid::no_cache`] bypasses the disk tier entirely.
 //!
 //! # Workers
 //!
@@ -73,6 +87,8 @@
 //!     .run()?;            // 15 cells × 3 seeds × 2 runs, pooled
 //! result.write_json("grid.json")?;
 //! ```
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 
@@ -144,6 +160,9 @@ pub struct Grid {
     pub(crate) max_rounds: Option<usize>,
     pub(crate) target: Option<f64>,
     pub(crate) cost_model: Option<CostModel>,
+    pub(crate) cache_dir: Option<PathBuf>,
+    pub(crate) no_cache: bool,
+    pub(crate) resume: bool,
     pub(crate) base: ExperimentConfig,
 }
 
@@ -163,6 +182,9 @@ impl Grid {
             max_rounds: None,
             target: None,
             cost_model: None,
+            cache_dir: None,
+            no_cache: false,
+            resume: false,
             base,
         }
     }
@@ -267,6 +289,63 @@ impl Grid {
         self
     }
 
+    /// Persist finished runs (and the sweep journal) under this
+    /// directory via the content-addressed [`crate::store::RunStore`]:
+    /// later sweeps sharing (config, seed) cells become cache hits, and
+    /// an interrupted sweep can [`Grid::resume`].
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Grid {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Ignore the cache directory entirely (no reads, writes, or
+    /// journal). In-sweep dedup of identical runs is unaffected — it is
+    /// semantics-preserving and always on.
+    pub fn no_cache(mut self, on: bool) -> Grid {
+        self.no_cache = on;
+        self
+    }
+
+    /// Replay this sweep's journal from [`Grid::cache_dir`] before
+    /// running: pairs finished by a previous (interrupted) invocation are
+    /// restored, only the missing runs execute, and the artifact is
+    /// byte-identical to an uninterrupted sweep. No-op without a cache
+    /// dir.
+    pub fn resume(mut self, on: bool) -> Grid {
+        self.resume = on;
+        self
+    }
+
+    /// Apply the `FEDTUNE_CACHE_DIR` / `FEDTUNE_NO_CACHE` /
+    /// `FEDTUNE_RESUME` environment variables — how the examples and
+    /// bench binaries opt into caching without new CLI plumbing.
+    pub fn cache_from_env(mut self) -> Grid {
+        if let Ok(d) = std::env::var("FEDTUNE_CACHE_DIR") {
+            if !d.is_empty() {
+                self.cache_dir = Some(PathBuf::from(d));
+            }
+        }
+        let truthy = |k: &str| {
+            std::env::var(k)
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false)
+        };
+        if truthy("FEDTUNE_NO_CACHE") {
+            self.no_cache = true;
+        }
+        if truthy("FEDTUNE_RESUME") {
+            self.resume = true;
+        }
+        self
+    }
+
+    /// Where this sweep's journal lives inside [`Grid::cache_dir`]
+    /// (`None` without one). The filename embeds the sweep fingerprint,
+    /// so different grids never share a journal.
+    pub fn journal_path(&self) -> Result<Option<PathBuf>> {
+        runner::journal_path(self)
+    }
+
     /// Enumerate the cells in their fixed order.
     pub fn cells(&self) -> Vec<Cell> {
         let mut out = Vec::new();
@@ -304,7 +383,9 @@ impl Grid {
             * self.penalties.len()
     }
 
-    /// Total pooled work items (baseline comparison runs not counted).
+    /// Total (cell, seed) slots of the artifact. The pooled work-item
+    /// count can be higher (baseline comparison legs) or lower (dedup,
+    /// cache hits) — see [`GridResult::executed_runs`].
     pub fn num_runs(&self) -> usize {
         self.num_cells() * self.seeds.len()
     }

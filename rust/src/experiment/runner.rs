@@ -1,10 +1,25 @@
-//! Grid execution: pooled fan-out, per-cell aggregation, JSON artifact.
+//! Grid execution: content-addressed fan-out, per-cell aggregation,
+//! JSON artifact.
 //!
-//! Work items are (cell, seed) pairs, enumerated cell-major and mapped
-//! through [`pool::scope_map`], which returns results in input order —
-//! the merge is therefore independent of scheduling and worker count
-//! (see the module doc of [`crate::experiment`] for the determinism
-//! contract and the artifact schema).
+//! A sweep is planned as a **deduped set of run fingerprints**
+//! ([`crate::store::fingerprint`]): every (cell, seed) pair — and, under
+//! `compare_baseline`, its fixed-(M₀, E₀) baseline leg — resolves to the
+//! content key of the engine run it needs, identical keys collapse to
+//! one work item, the unique items are mapped through
+//! [`pool::scope_map_each`], and cells join on their keys afterwards.
+//! Because the join is driven by the pair list (enumerated cell-major,
+//! seeds innermost), the merged result is independent of scheduling,
+//! worker count, cache state and journal replay (see the module doc of
+//! [`crate::experiment`] for the determinism contract and the artifact
+//! schema).
+//!
+//! With a cache directory configured, finished runs persist through
+//! [`crate::store::RunStore`] and finished pairs checkpoint into a
+//! [`crate::store::SweepJournal`] as they complete, so repeated sweeps
+//! are near-free and interrupted ones resume.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -12,6 +27,7 @@ use crate::baselines;
 use crate::config::ExperimentConfig;
 use crate::engine::FlEngine;
 use crate::overhead::{CostModel, Costs, Preference};
+use crate::store::{run_fingerprint, Fingerprint, RunStore, SweepJournal};
 use crate::trace::{RoundRecord, Trace};
 use crate::util::json::Json;
 use crate::util::pool;
@@ -74,6 +90,11 @@ pub struct CellResult {
 pub struct GridResult {
     pub seeds: Vec<u64>,
     pub cells: Vec<CellResult>,
+    /// Engine runs actually executed by this sweep — after in-sweep
+    /// dedup, cache hits and journal replay. Not part of the artifact.
+    pub executed_runs: usize,
+    /// Unique run keys served by the run store instead of executed.
+    pub cache_hits: usize,
 }
 
 impl GridResult {
@@ -154,6 +175,70 @@ fn run_json(r: &RunRecord) -> Json {
     j
 }
 
+/// Lossless [`RunRecord`] serialization: the artifact's per-run object
+/// plus the optional per-round trace. This is the wire format of the
+/// run store (`fedtune.store.run/v1`) and the sweep journal; because
+/// [`Json`] prints floats in shortest-round-trip form, a record survives
+/// disk round-trips bit-for-bit and a resumed sweep reproduces the
+/// uninterrupted artifact byte-for-byte.
+pub fn run_record_json(r: &RunRecord) -> Json {
+    let mut j = run_json(r);
+    if let Some(t) = &r.trace {
+        j.set("trace", t.to_json());
+    }
+    j
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("run record: missing/invalid {key:?}"))
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("run record: missing/invalid {key:?}"))
+}
+
+fn costs_from_json(j: &Json) -> Result<Costs> {
+    Ok(Costs {
+        comp_t: get_f64(j, "comp_t")?,
+        trans_t: get_f64(j, "trans_t")?,
+        comp_l: get_f64(j, "comp_l")?,
+        trans_l: get_f64(j, "trans_l")?,
+    })
+}
+
+/// Parse [`run_record_json`] back. Strict about present-but-malformed
+/// fields so cache readers degrade to a miss instead of fabricating
+/// values.
+pub fn run_record_from_json(j: &Json) -> Result<RunRecord> {
+    Ok(RunRecord {
+        seed: get_f64(j, "seed")? as u64,
+        rounds: get_usize(j, "rounds")?,
+        final_accuracy: get_f64(j, "final_accuracy")?,
+        costs: costs_from_json(j)?,
+        final_m: get_usize(j, "final_m")?,
+        final_e: get_f64(j, "final_e")?,
+        improvement_pct: match j.get("improvement_pct") {
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("run record: invalid \"improvement_pct\""))?,
+            ),
+            None => None,
+        },
+        baseline_costs: match j.get("baseline") {
+            Some(b) => Some(costs_from_json(b)?),
+            None => None,
+        },
+        trace: match j.get("trace") {
+            Some(t) => Some(Trace::from_json(t)?),
+            None => None,
+        },
+    })
+}
+
 fn moments_json(c: &CellResult, pick: fn(Stat) -> f64) -> Json {
     let mut j = Json::from_pairs(vec![
         ("comp_t", pick(c.costs[0]).into()),
@@ -195,42 +280,363 @@ fn cell_json(c: &CellResult) -> Json {
     ])
 }
 
-/// Run the whole grid on the pool and fold the results per cell.
-pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
+/// One unique engine run — the unit of pooled work after dedup.
+struct Job {
+    fp: Fingerprint,
+    cfg: ExperimentConfig,
+    /// True (possibly fractional) local pass count; `cfg.e0` holds its
+    /// ceiling for validation only.
+    e: f64,
+    cost_model: CostModel,
+    seed: u64,
+    label: String,
+}
+
+/// One (cell, seed) slot of the artifact, joined to its run keys.
+struct Pair {
+    ci: usize,
+    seed: u64,
+    tuned: Fingerprint,
+    /// The fixed-baseline leg under `compare_baseline` (tuned cells only).
+    base: Option<Fingerprint>,
+}
+
+struct Plan {
+    cells: Vec<Cell>,
+    /// Unique runs in first-appearance (cell-major) order.
+    jobs: Vec<Job>,
+    /// All (cell, seed) pairs in artifact order.
+    pairs: Vec<Pair>,
+    /// Identity of the whole sweep (keys the journal file).
+    sweep: Fingerprint,
+}
+
+/// Resolve every (cell, seed) pair to content fingerprints and collapse
+/// identical runs into one job. This is where shared baselines dedupe:
+/// the baseline identity omits FedTune-only knobs, so all P tuned cells
+/// of a `compare_baseline` sweep key their baseline leg to the same
+/// (profile, aggregator, M₀, E₀, seed) record.
+fn plan(grid: &Grid) -> Result<Plan> {
     let cells = grid.cells();
     if cells.is_empty() || grid.seeds.is_empty() {
         bail!("experiment grid is empty (no cells or no seeds)");
     }
-    let n_seeds = grid.seeds.len();
-    let mut items = Vec::with_capacity(cells.len() * n_seeds);
-    for ci in 0..cells.len() {
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut seen: HashSet<Fingerprint> = HashSet::new();
+    let mut pairs: Vec<Pair> = Vec::with_capacity(cells.len() * grid.seeds.len());
+    for (ci, cell) in cells.iter().enumerate() {
         for &seed in &grid.seeds {
-            items.push((ci, seed));
+            let cfg = cell_config(grid, cell, cell.preference, seed)?;
+            let cost_model = match grid.cost_model {
+                Some(cm) => cm,
+                None => cfg.cost_model()?,
+            };
+            let tuned = run_fingerprint(&cfg, cell.e0, seed, &cost_model);
+            if seen.insert(tuned) {
+                jobs.push(Job {
+                    fp: tuned,
+                    cfg,
+                    e: cell.e0,
+                    cost_model,
+                    seed,
+                    label: cell.label(),
+                });
+            }
+            let base = if grid.compare_baseline && cell.preference.is_some() {
+                let base_cfg = cell_config(grid, cell, None, seed)?;
+                let fp = run_fingerprint(&base_cfg, cell.e0, seed, &cost_model);
+                if seen.insert(fp) {
+                    jobs.push(Job {
+                        fp,
+                        cfg: base_cfg,
+                        e: cell.e0,
+                        cost_model,
+                        seed,
+                        label: format!("{} baseline", cell.label()),
+                    });
+                }
+                Some(fp)
+            } else {
+                None
+            };
+            pairs.push(Pair { ci, seed, tuned, base });
         }
     }
 
-    let outcomes =
-        pool::scope_map(items, grid.workers, |_, (ci, seed): (usize, u64)| {
-            run_one(grid, &cells[ci], seed)
-        });
+    // Sweep identity: the ordered pair keys plus everything that shapes
+    // the journaled records. Worker count is deliberately excluded — a
+    // sweep may resume with a different pool size.
+    let mut id = format!("fedtune.sweep/v1;keep_traces={};seeds=", grid.keep_traces);
+    for &s in &grid.seeds {
+        id.push_str(&format!("{s},"));
+    }
+    for p in &pairs {
+        id.push(';');
+        id.push_str(&p.tuned.hex());
+        if let Some(b) = &p.base {
+            id.push('+');
+            id.push_str(&b.hex());
+        }
+    }
+    let sweep = Fingerprint::of_bytes(id.as_bytes());
+    Ok(Plan { cells, jobs, pairs, sweep })
+}
 
-    let mut flat: Vec<RunRecord> = Vec::with_capacity(cells.len() * n_seeds);
-    for (idx, out) in outcomes.into_iter().enumerate() {
-        let label = cells[idx / n_seeds].label();
-        let seed = grid.seeds[idx % n_seeds];
-        let rec = out
-            .map_err(|panic| anyhow!("{panic}"))
-            .and_then(|r| r)
-            .with_context(|| format!("grid cell [{label}] seed {seed}"))?;
-        flat.push(rec);
+/// On-disk journal location for this grid's sweep (`None` without a
+/// cache dir). Exposed as [`Grid::journal_path`].
+pub(crate) fn journal_path(grid: &Grid) -> Result<Option<PathBuf>> {
+    let dir = match &grid.cache_dir {
+        Some(d) => d.clone(),
+        None => return Ok(None),
+    };
+    let p = plan(grid)?;
+    Ok(Some(SweepJournal::path_for(&dir, &p.sweep)))
+}
+
+/// Join one (cell, seed) pair from its engine-run records: clone the
+/// tuned leg and attach the Eq. (6) improvement vs the baseline leg.
+fn assemble(
+    p: &Pair,
+    cell: &Cell,
+    have: &HashMap<Fingerprint, RunRecord>,
+    keep_traces: bool,
+) -> Result<RunRecord> {
+    let tuned = have.get(&p.tuned).ok_or_else(|| {
+        anyhow!("internal: missing run record for cell [{}]", cell.label())
+    })?;
+    let mut rec = tuned.clone();
+    if !keep_traces {
+        // A cache hit may carry a trace persisted by a keep_traces sweep;
+        // the in-memory contract is trace = None unless requested.
+        rec.trace = None;
+    }
+    if let Some(base_fp) = p.base {
+        let base = have.get(&base_fp).ok_or_else(|| {
+            anyhow!("internal: missing baseline record for cell [{}]", cell.label())
+        })?;
+        let pref: Preference = cell.preference.expect("baseline leg implies a preference");
+        // Eq. (6): I(baseline, fedtune) < 0 ⇔ FedTune better; report with
+        // the paper's sign convention (positive = gain).
+        let i = base.costs.compare(&rec.costs, &pref);
+        rec.improvement_pct = Some(-i * 100.0);
+        rec.baseline_costs = Some(base.costs);
+    }
+    Ok(rec)
+}
+
+/// Run the whole grid — deduped fingerprints on the pool, cells joined
+/// on their keys — and fold the results per cell.
+pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
+    let Plan { cells, jobs, pairs, sweep } = plan(grid)?;
+    let n_seeds = grid.seeds.len();
+    let keep_traces = grid.keep_traces;
+
+    let caching = grid.cache_dir.is_some() && !grid.no_cache;
+    let mut store = match (&grid.cache_dir, caching) {
+        (Some(dir), true) => RunStore::open(dir)?,
+        _ => RunStore::in_memory(),
+    };
+
+    // Journal: replay finished pairs under `resume`, then keep appending.
+    let mut finished: HashMap<(usize, u64), RunRecord> = HashMap::new();
+    let mut journal: Option<SweepJournal> = None;
+    if caching {
+        let dir = grid.cache_dir.as_ref().expect("caching implies cache_dir");
+        let path = SweepJournal::path_for(dir, &sweep);
+        let (jn, prior) = SweepJournal::open(&path, &sweep, grid.resume)?;
+        let seed_set: HashSet<u64> = grid.seeds.iter().copied().collect();
+        for entry in prior {
+            if entry.cell < cells.len() && seed_set.contains(&entry.seed) {
+                finished.insert((entry.cell, entry.seed), entry.record);
+            }
+        }
+        if !finished.is_empty() {
+            crate::log_info!(
+                "sweep resume: {}/{} runs restored from {:?}",
+                finished.len(),
+                pairs.len(),
+                path
+            );
+        }
+        journal = Some(jn);
     }
 
+    // Store lookups for every key an unfinished pair still needs.
+    let mut needed: HashSet<Fingerprint> = HashSet::new();
+    for p in &pairs {
+        if finished.contains_key(&(p.ci, p.seed)) {
+            continue;
+        }
+        needed.insert(p.tuned);
+        if let Some(b) = p.base {
+            needed.insert(b);
+        }
+    }
+    let mut have: HashMap<Fingerprint, RunRecord> = HashMap::new();
+    let mut cache_hits = 0usize;
+    for job in &jobs {
+        if !needed.contains(&job.fp) {
+            continue;
+        }
+        if let Some(rec) = store.get(&job.fp, keep_traces) {
+            have.insert(job.fp, rec);
+            cache_hits += 1;
+        }
+    }
+
+    // Dependency bookkeeping: which unfinished pairs wait on which keys.
+    let mut waiting: HashMap<Fingerprint, Vec<usize>> = HashMap::new();
+    let mut remaining: Vec<usize> = vec![0; pairs.len()];
+    for (pi, p) in pairs.iter().enumerate() {
+        if finished.contains_key(&(p.ci, p.seed)) {
+            continue;
+        }
+        let mut deps = vec![p.tuned];
+        if let Some(b) = p.base {
+            deps.push(b);
+        }
+        for fp in deps {
+            if !have.contains_key(&fp) {
+                remaining[pi] += 1;
+                waiting.entry(fp).or_default().push(pi);
+            }
+        }
+    }
+
+    // Pairs fully served by cache hits finalize (and checkpoint) now.
+    // The journal is an optimization, so append failures degrade to a
+    // warning here exactly as they do on the executed path below.
+    for pi in 0..pairs.len() {
+        let p = &pairs[pi];
+        if remaining[pi] == 0 && !finished.contains_key(&(p.ci, p.seed)) {
+            let rec = assemble(p, &cells[p.ci], &have, keep_traces)?;
+            if let Some(jn) = journal.as_mut() {
+                if let Err(err) = jn.append(p.ci, p.seed, &rec) {
+                    crate::log_warn!("sweep journal append failed: {err:#}");
+                }
+            }
+            finished.insert((p.ci, p.seed), rec);
+        }
+    }
+
+    // The runs nobody could serve: execute them, persisting + journaling
+    // each as it completes so a killed sweep keeps all finished work.
+    let run_jobs: Vec<Job> =
+        jobs.into_iter().filter(|j| waiting.contains_key(&j.fp)).collect();
+    let executed_runs = run_jobs.len();
+    let meta: Vec<(Fingerprint, f64)> = run_jobs.iter().map(|j| (j.fp, j.e)).collect();
+    let contexts: Vec<String> = run_jobs
+        .iter()
+        .map(|j| format!("grid run [{}] seed {}", j.label, j.seed))
+        .collect();
+
+    let outcomes = pool::scope_map_each(
+        run_jobs,
+        grid.workers,
+        |_, job: Job| -> Result<RunRecord> {
+            let single = run_single(&job.cfg, job.e, job.cost_model, job.seed)?;
+            Ok(RunRecord {
+                seed: job.seed,
+                rounds: single.rounds,
+                final_accuracy: single.final_accuracy,
+                costs: single.costs,
+                final_m: single.final_m,
+                final_e: single.final_e,
+                improvement_pct: None,
+                baseline_costs: None,
+                trace: if keep_traces { Some(single.trace) } else { None },
+            })
+        },
+        |i, res| {
+            // Collector-thread hook, in completion order.
+            let rec = match res {
+                Ok(Ok(r)) => r,
+                _ => return, // errors surface after the join below
+            };
+            let (fp, e) = meta[i];
+            // Without a disk tier the store is never read after this
+            // point — skip the persist (and its trace clone) entirely.
+            if caching {
+                store.put(&fp, e, rec);
+            }
+            have.insert(fp, rec.clone());
+            if let Some(pis) = waiting.get(&fp) {
+                for &pi in pis {
+                    remaining[pi] -= 1;
+                    if remaining[pi] > 0 {
+                        continue;
+                    }
+                    let p = &pairs[pi];
+                    match assemble(p, &cells[p.ci], &have, keep_traces) {
+                        Ok(r) => {
+                            if let Some(jn) = journal.as_mut() {
+                                if let Err(err) = jn.append(p.ci, p.seed, &r) {
+                                    crate::log_warn!(
+                                        "sweep journal append failed: {err:#}"
+                                    );
+                                }
+                            }
+                            finished.insert((p.ci, p.seed), r);
+                        }
+                        // Surfaces again at the final join; log the root
+                        // cause since a callback cannot propagate it.
+                        Err(err) => crate::log_warn!(
+                            "joining cell [{}] seed {} failed: {err:#}",
+                            cells[p.ci].label(),
+                            p.seed
+                        ),
+                    }
+                }
+            }
+        },
+    );
+    for (i, out) in outcomes.into_iter().enumerate() {
+        out.map_err(|panic| anyhow!("{panic}"))
+            .and_then(|r| r.map(|_| ()))
+            .with_context(|| contexts[i].clone())?;
+    }
+
+    // Deterministic join: pairs in artifact order, independent of which
+    // tier produced each record.
+    let mut first_occurrence: HashMap<(usize, u64), usize> = HashMap::new();
+    for (pi, p) in pairs.iter().enumerate() {
+        first_occurrence.entry((p.ci, p.seed)).or_insert(pi);
+    }
+    let mut flat: Vec<RunRecord> = Vec::with_capacity(pairs.len());
+    for (pi, p) in pairs.iter().enumerate() {
+        let key = (p.ci, p.seed);
+        let rec = match finished.remove(&key) {
+            Some(r) => r,
+            // A repeated seed (e.g. --seeds 1,1) drains the shared map
+            // slot at its first slot; later twins copy that record.
+            None => {
+                let fi = first_occurrence
+                    .get(&key)
+                    .copied()
+                    .filter(|&fi| fi < pi)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "internal: grid cell [{}] seed {} never completed",
+                            cells[p.ci].label(),
+                            p.seed
+                        )
+                    })?;
+                flat[fi].clone()
+            }
+        };
+        flat.push(rec);
+    }
     let mut cell_results = Vec::with_capacity(cells.len());
     for (ci, cell) in cells.into_iter().enumerate() {
         let runs = flat[ci * n_seeds..(ci + 1) * n_seeds].to_vec();
         cell_results.push(aggregate_cell(cell, runs));
     }
-    Ok(GridResult { seeds: grid.seeds.clone(), cells: cell_results })
+    Ok(GridResult {
+        seeds: grid.seeds.clone(),
+        cells: cell_results,
+        executed_runs,
+        cache_hits,
+    })
 }
 
 fn aggregate_cell(cell: Cell, runs: Vec<RunRecord>) -> CellResult {
@@ -289,40 +695,6 @@ struct SingleRun {
     trace: Trace,
 }
 
-fn run_one(grid: &Grid, cell: &Cell, seed: u64) -> Result<RunRecord> {
-    let cfg = cell_config(grid, cell, cell.preference, seed)?;
-    let cost_model = match grid.cost_model {
-        Some(cm) => cm,
-        None => cfg.cost_model()?,
-    };
-    let tuned = run_single(&cfg, cell.e0, cost_model, seed)?;
-
-    let (improvement_pct, baseline_costs) =
-        if grid.compare_baseline && cell.preference.is_some() {
-            let base_cfg = cell_config(grid, cell, None, seed)?;
-            let base = run_single(&base_cfg, cell.e0, cost_model, seed)?;
-            let pref = cell.preference.expect("checked above");
-            // Eq. (6): I(baseline, fedtune) < 0 ⇔ FedTune better; report
-            // with the paper's sign convention (positive = gain).
-            let i = base.costs.compare(&tuned.costs, &pref);
-            (Some(-i * 100.0), Some(base.costs))
-        } else {
-            (None, None)
-        };
-
-    Ok(RunRecord {
-        seed,
-        rounds: tuned.rounds,
-        final_accuracy: tuned.final_accuracy,
-        costs: tuned.costs,
-        final_m: tuned.final_m,
-        final_e: tuned.final_e,
-        improvement_pct,
-        baseline_costs,
-        trace: if grid.keep_traces { Some(tuned.trace) } else { None },
-    })
-}
-
 fn cell_config(
     grid: &Grid,
     cell: &Cell,
@@ -336,6 +708,10 @@ fn cell_config(
     cfg.m0 = cell.m0;
     // Fractional E bypasses the integer schedule (run_fixed_fractional);
     // the config still needs a valid integer for validation/round-trips.
+    // NOTE: this ceiling is why cache keys must come from
+    // `store::fingerprint::run_fingerprint(cfg, e, ..)` with the TRUE
+    // fractional E — keying on this config alone would collide E = 0.5
+    // with E = 1.0 (regression-tested in store::fingerprint).
     cfg.e0 = if cell.e0.fract() == 0.0 {
         cell.e0 as usize
     } else {
@@ -487,6 +863,55 @@ mod tests {
         cfg.preference = Some(Preference::new(1.0, 0.0, 0.0, 0.0).unwrap());
         let bad = Grid::new(cfg).e0s(&[0.5]).seeds(&[7]);
         assert!(bad.run().is_err(), "fractional E + FedTune must be rejected");
+    }
+
+    #[test]
+    fn run_record_json_roundtrips_losslessly() {
+        let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+        let g = Grid::new(base_cfg())
+            .preferences(&[pref])
+            .seeds(&[1])
+            .compare_baseline(true)
+            .keep_traces(true);
+        let r = g.run().unwrap();
+        let rec = &r.cells[0].runs[0];
+        let j = run_record_json(rec);
+        let back = run_record_from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(run_record_json(&back).dump(), j.dump());
+        assert_eq!(back.seed, rec.seed);
+        assert_eq!(back.costs, rec.costs);
+        assert_eq!(back.improvement_pct, rec.improvement_pct);
+        assert_eq!(back.trace.as_ref().unwrap().len(), rec.rounds);
+    }
+
+    #[test]
+    fn dedup_executes_each_unique_run_once() {
+        // 2 preferences × 2 seeds, compare_baseline: the fixed baseline is
+        // shared across preferences, so the sweep executes 2·2 tuned runs
+        // plus ONE baseline per seed — 6 engine runs, not 8.
+        let prefs = [
+            Preference::new(0.0, 0.0, 1.0, 0.0).unwrap(),
+            Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(),
+        ];
+        let g = Grid::new(base_cfg())
+            .preferences(&prefs)
+            .seeds(&[1, 2])
+            .compare_baseline(true);
+        let r = g.run().unwrap();
+        assert_eq!(r.executed_runs, 2 * 2 + 2);
+        assert_eq!(r.cache_hits, 0);
+    }
+
+    #[test]
+    fn duplicate_seeds_are_tolerated() {
+        // --seeds 5,5 is degenerate but legal: the artifact keeps both
+        // slots, the engine runs the work once.
+        let g = Grid::new(base_cfg()).seeds(&[5, 5]);
+        let r = g.run().unwrap();
+        assert_eq!(r.seeds, vec![5, 5]);
+        assert_eq!(r.cells[0].runs.len(), 2);
+        assert_eq!(r.executed_runs, 1, "identical (cell, seed) runs dedupe");
+        assert_eq!(r.cells[0].runs[0].costs, r.cells[0].runs[1].costs);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //! accuracy with or without [`fedtune::FedTune`] adjusting (M, E);
 //! [`experiment::Grid`] fans whole (profile × aggregator × M₀ × E₀ ×
 //! preference × seed) sweeps out over a worker pool and emits one stable
-//! JSON artifact per sweep.
+//! JSON artifact per sweep; [`store`] content-addresses every run so
+//! sweeps dedupe shared work, cache across processes, and resume after
+//! interruption.
 
 pub mod util;
 
@@ -38,4 +40,5 @@ pub mod runtime;
 #[cfg(not(feature = "pjrt"))]
 #[path = "runtime/stub.rs"]
 pub mod runtime;
+pub mod store;
 pub mod trace;

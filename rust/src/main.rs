@@ -22,6 +22,7 @@ use fedtune::fedtune::schedule::Schedule;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ladder, Manifest, ParamVec};
 use fedtune::overhead::{CostModel, Preference};
+use fedtune::store::RunStore;
 use fedtune::util::cli::Cli;
 use fedtune::util::logging;
 use fedtune::util::rng::Rng;
@@ -56,9 +57,11 @@ fn print_help() {
          USAGE: fedtune <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
          run            execute one experiment (see `run --help`)\n  \
-         grid           FedTune vs baseline over the 15-preference grid\n  \
+         grid           FedTune vs baseline over the 15-preference grid\n                 \
+         (--cache-dir caches runs; --resume continues a killed sweep)\n  \
          check-runtime  smoke-test the AOT artifact → PJRT path\n  \
-         info           print models / datasets / artifact inventory\n"
+         info           print models / datasets / artifact inventory\n                 \
+         (--cache-dir adds run-cache statistics)\n"
     );
 }
 
@@ -211,6 +214,18 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
         .opt("seeds", "1,2,3", "comma-separated seeds")
         .opt("workers", "0", "worker threads for the sweep (0 = all cores, capped)")
         .opt("json-out", "", "write the grid JSON artifact here")
+        .opt(
+            "cache-dir",
+            "",
+            "content-addressed run cache: reuse finished runs across sweeps \
+             and journal progress for --resume",
+        )
+        .flag("no-cache", "ignore --cache-dir entirely (no reads, writes, journal)")
+        .flag(
+            "resume",
+            "continue an interrupted sweep from its journal in --cache-dir \
+             (artifact stays byte-identical to an uninterrupted run)",
+        )
         .parse(args)
         .map_err(anyhow::Error::msg)?;
     let cfg = parse_config(&cli)?;
@@ -224,16 +239,31 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
         .map(|s| s.parse::<u64>().context("parsing --seeds"))
         .collect::<Result<Vec<_>>>()?;
     let workers: usize = cli.get("workers").map_err(anyhow::Error::msg)?;
+    let cache_dir = cli.get_str("cache-dir");
+    anyhow::ensure!(
+        !(cli.get_flag("resume") && cache_dir.is_empty()),
+        "--resume needs --cache-dir (the journal lives there)"
+    );
+    anyhow::ensure!(
+        !(cli.get_flag("resume") && cli.get_flag("no-cache")),
+        "--resume and --no-cache contradict each other"
+    );
 
     // The paper's 15-preference sweep, fanned out over the worker pool;
     // every (preference, seed) pair also runs the fixed baseline for the
-    // Eq. (6) "overall" column.
-    let result = Grid::new(cfg)
+    // Eq. (6) "overall" column — executed once per seed, shared across
+    // preferences via the content-addressed run store.
+    let mut grid = Grid::new(cfg)
         .preferences(&Preference::paper_grid())
         .seeds(&seeds)
         .workers(workers)
         .compare_baseline(true)
-        .run()?;
+        .no_cache(cli.get_flag("no-cache"))
+        .resume(cli.get_flag("resume"));
+    if !cache_dir.is_empty() {
+        grid = grid.cache_dir(cache_dir.as_str());
+    }
+    let result = grid.run()?;
 
     println!(
         "{:<22} {:>12} {:>12} {:>12} {:>14} {:>9} {:>9} {:>10}",
@@ -254,6 +284,10 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
     }
     let mi = result.mean_improvement();
     println!("\nmean improvement over grid: {:+.2}% (std {:.2}%)", mi.mean, mi.std);
+    println!(
+        "runs: {} executed, {} served by cache",
+        result.executed_runs, result.cache_hits
+    );
 
     let json_out = cli.get_str("json-out");
     if !json_out.is_empty() {
@@ -328,6 +362,7 @@ fn cmd_check_runtime(args: Vec<String>) -> Result<()> {
 fn cmd_info(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("fedtune info", "inventory of models, datasets, artifacts")
         .opt("artifacts", "artifacts", "artifact directory")
+        .opt("cache-dir", "", "also print run-cache statistics for this directory")
         .parse(args)
         .map_err(anyhow::Error::msg)?;
     println!("== static ladder (paper Table 2) ==");
@@ -358,6 +393,20 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
             }
         }
         Err(_) => println!("\n(no artifacts at {dir}; run `make artifacts`)"),
+    }
+    let cache_dir = cli.get_str("cache-dir");
+    if !cache_dir.is_empty() {
+        match RunStore::stats(std::path::Path::new(&cache_dir)) {
+            Ok(s) => {
+                println!("\n== run cache ({cache_dir}) ==");
+                println!("  {:>6} run records   {:>12} bytes", s.run_entries, s.run_bytes);
+                println!(
+                    "  {:>6} sweep journals {:>12} bytes",
+                    s.journals, s.journal_bytes
+                );
+            }
+            Err(e) => println!("\n(run cache stats unavailable for {cache_dir}: {e:#})"),
+        }
     }
     Ok(())
 }

@@ -1,0 +1,237 @@
+//! Canonical run fingerprints — the content-addressing scheme of the
+//! run store.
+//!
+//! A run's identity is everything that determines its outcome: the
+//! canonical config JSON (with the **true** fractional E, not the
+//! integer `cfg.e0` the schedule validator sees), the seed, the resolved
+//! cost constants C1..C4, and a schema version. [`run_identity`] builds
+//! that JSON; [`run_fingerprint`] hashes its compact serialization with
+//! an in-repo FNV-1a 128-bit hasher (DESIGN.md §2: no new dependencies)
+//! into a stable 32-hex-digit [`Fingerprint`].
+//!
+//! Two canonicalization rules matter for deduplication:
+//!
+//! * **True E.** `experiment::runner::cell_config` writes `ceil(e)` into
+//!   `cfg.e0` so the integer validator passes; keying on that JSON would
+//!   collide the paper's E = 0.5 with E = 1.0. The fingerprint therefore
+//!   takes `e: f64` separately and ignores `cfg.e0`.
+//! * **FedTune-only knobs.** A fixed-(M, E) run never reads `eps`, the
+//!   penalty factor D, or a preference, so those fields are omitted when
+//!   `cfg.preference` is `None` — every baseline request inside a sweep
+//!   (one per tuned cell per seed under `compare_baseline`, one per
+//!   penalty on a Fig. 8-style D axis) keys to the same record.
+//!
+//! Invalidation is by schema bump: changing what a run means (engine
+//! semantics, record layout) must bump [`FINGERPRINT_VERSION`], which
+//! changes every key and orphans — never corrupts — old cache entries.
+
+use std::fmt;
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::overhead::CostModel;
+use crate::util::json::Json;
+
+/// Version of the fingerprint identity layout. Bump on any change to
+/// [`run_identity`] or to run semantics; old cache entries then simply
+/// never match again.
+pub const FINGERPRINT_VERSION: u64 = 1;
+
+/// A 128-bit content hash, printed as 32 lowercase hex digits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(u128);
+
+impl Fingerprint {
+    /// Hash arbitrary bytes (FNV-1a, 128-bit).
+    pub fn of_bytes(bytes: &[u8]) -> Fingerprint {
+        // FNV-1a 128-bit offset basis / prime.
+        const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+        const PRIME: u128 = 0x0000000001000000000000000000013b;
+        let mut h = OFFSET;
+        for &b in bytes {
+            h ^= b as u128;
+            h = h.wrapping_mul(PRIME);
+        }
+        Fingerprint(h)
+    }
+
+    /// 32 lowercase hex digits — the on-disk key.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    /// Parse the [`Fingerprint::hex`] form back.
+    pub fn from_hex(s: &str) -> Option<Fingerprint> {
+        if s.len() != 32 {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok().map(Fingerprint)
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// The canonical identity JSON of one engine run (see module docs for
+/// the canonicalization rules). Keys serialize sorted, so the compact
+/// dump is a stable byte string.
+pub fn run_identity(
+    cfg: &ExperimentConfig,
+    e: f64,
+    seed: u64,
+    cost_model: &CostModel,
+) -> Json {
+    let mut j = Json::from_pairs(vec![
+        ("v", FINGERPRINT_VERSION.into()),
+        (
+            "engine",
+            match cfg.engine {
+                EngineKind::Sim => "sim",
+                EngineKind::Real => "real",
+            }
+            .into(),
+        ),
+        ("dataset", cfg.dataset.as_str().into()),
+        ("model", cfg.model.as_str().into()),
+        // Debug form captures aggregator/selector parameters (FedAdagrad
+        // lr/β₁/τ, guided-selection knobs) that the short names elide.
+        ("aggregator", format!("{:?}", cfg.aggregator).into()),
+        ("selector", format!("{:?}", cfg.selector).into()),
+        ("m0", cfg.m0.into()),
+        ("e", e.into()),
+        ("seed", seed.into()),
+        ("scale", cfg.scale.into()),
+        ("target_accuracy", cfg.target_accuracy.into()),
+        ("max_rounds", cfg.max_rounds.into()),
+        ("lr", (cfg.lr as f64).into()),
+        (
+            "cost",
+            Json::Arr(vec![
+                cost_model.c1.into(),
+                cost_model.c2.into(),
+                cost_model.c3.into(),
+                cost_model.c4.into(),
+            ]),
+        ),
+    ]);
+    // FedTune-only knobs: omitted for fixed-(M, E) runs, which never read
+    // them — this is what dedupes shared baselines across a sweep.
+    if let Some(p) = &cfg.preference {
+        j.set(
+            "preference",
+            Json::Arr(vec![
+                p.alpha.into(),
+                p.beta.into(),
+                p.gamma.into(),
+                p.delta.into(),
+            ]),
+        );
+        j.set("eps", cfg.eps.into());
+        j.set("penalty", cfg.penalty.into());
+    }
+    j
+}
+
+/// Fingerprint of one engine run: FNV-1a 128 over the compact
+/// [`run_identity`] dump.
+pub fn run_fingerprint(
+    cfg: &ExperimentConfig,
+    e: f64,
+    seed: u64,
+    cost_model: &CostModel,
+) -> Fingerprint {
+    Fingerprint::of_bytes(run_identity(cfg, e, seed, cost_model).dump().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::Preference;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::default()
+    }
+
+    fn cm() -> CostModel {
+        CostModel::UNIT
+    }
+
+    #[test]
+    fn hex_roundtrip_and_width() {
+        let fp = Fingerprint::of_bytes(b"hello");
+        let hex = fp.hex();
+        assert_eq!(hex.len(), 32);
+        assert_eq!(Fingerprint::from_hex(&hex), Some(fp));
+        assert_eq!(Fingerprint::from_hex("xyz"), None);
+        assert_eq!(Fingerprint::from_hex(&hex[..16]), None);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_keys() {
+        let a = Fingerprint::of_bytes(b"a");
+        let b = Fingerprint::of_bytes(b"b");
+        assert_ne!(a, b);
+        assert_eq!(a, Fingerprint::of_bytes(b"a"));
+    }
+
+    #[test]
+    fn fractional_e_does_not_collide_with_its_ceiling() {
+        // Regression: cell_config writes ceil(e) into cfg.e0, so a cache
+        // keyed on the config JSON alone would collide E = 0.5 with
+        // E = 1.0. The fingerprint must carry the true fractional E.
+        let mut c = cfg();
+        c.e0 = 1; // what cell_config stores for both E = 0.5 and E = 1.0
+        let half = run_fingerprint(&c, 0.5, 7, &cm());
+        let whole = run_fingerprint(&c, 1.0, 7, &cm());
+        assert_ne!(half, whole, "E = 0.5 and E = 1.0 must key differently");
+    }
+
+    #[test]
+    fn baseline_ignores_fedtune_only_knobs() {
+        // A fixed-(M, E) run never reads eps/penalty/preference, so those
+        // must not split the key (this is the shared-baseline dedup rule).
+        let mut a = cfg();
+        let mut b = cfg();
+        a.penalty = 1.0;
+        b.penalty = 10.0;
+        b.eps = 0.05;
+        assert_eq!(
+            run_fingerprint(&a, 20.0, 1, &cm()),
+            run_fingerprint(&b, 20.0, 1, &cm())
+        );
+        // ...but with a preference set they are real FedTune inputs.
+        let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+        a.preference = Some(pref);
+        b.preference = Some(pref);
+        assert_ne!(
+            run_fingerprint(&a, 20.0, 1, &cm()),
+            run_fingerprint(&b, 20.0, 1, &cm())
+        );
+    }
+
+    #[test]
+    fn seed_and_cost_model_split_keys() {
+        let c = cfg();
+        assert_ne!(
+            run_fingerprint(&c, 20.0, 1, &cm()),
+            run_fingerprint(&c, 20.0, 2, &cm())
+        );
+        let paper = CostModel::from_flops_params(12_500_000, 79_700);
+        assert_ne!(
+            run_fingerprint(&c, 20.0, 1, &cm()),
+            run_fingerprint(&c, 20.0, 1, &paper)
+        );
+    }
+
+    #[test]
+    fn identity_is_stable_json() {
+        let c = cfg();
+        let d1 = run_identity(&c, 0.5, 3, &cm()).dump();
+        let d2 = run_identity(&c, 0.5, 3, &cm()).dump();
+        assert_eq!(d1, d2);
+        assert!(d1.contains("\"v\":1"));
+        assert!(d1.contains("\"e\":0.5"));
+    }
+}

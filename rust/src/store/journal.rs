@@ -1,0 +1,233 @@
+//! Sweep journal — incremental `(cell, seed)` checkpoints for grid
+//! resume.
+//!
+//! While a sweep runs, every finished `(cell, seed)` pair is appended to
+//! `<cache-dir>/journal-<sweep-fingerprint>.jsonl` as one compact JSON
+//! line. If the process dies, re-running the same grid with `--resume`
+//! replays the journal, skips the finished pairs, executes only the
+//! missing runs, and — because [`RunRecord`] JSON round-trips losslessly
+//! — still emits a `fedtune.experiment.grid/v1` artifact byte-identical
+//! to an uninterrupted sweep.
+//!
+//! # File format (`fedtune.store.journal/v1`)
+//!
+//! ```text
+//! {"schema":"fedtune.store.journal/v1","sweep":"<32 hex>"}   // header
+//! {"cell":0,"seed":101,"record":{...}}                       // one per pair
+//! {"cell":0,"seed":202,"record":{...}}
+//! ...
+//! ```
+//!
+//! The filename embeds the **sweep fingerprint** (a hash over the
+//! ordered per-pair run fingerprints, the seed list and the sweep
+//! options), so journals of different grids can never be confused; the
+//! header repeats it as a defense against renamed files. A truncated
+//! final line (the usual kill artifact) or any other unparseable line is
+//! skipped — those pairs simply re-run.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::experiment::runner::{run_record_from_json, run_record_json};
+use crate::experiment::RunRecord;
+use crate::util::json::Json;
+
+use super::fingerprint::Fingerprint;
+
+/// Schema identifier in the journal header line.
+pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v1";
+
+/// One replayed journal line: a finished `(cell, seed)` run record.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    pub cell: usize,
+    pub seed: u64,
+    pub record: RunRecord,
+}
+
+/// Append-only journal of finished `(cell, seed)` pairs for one sweep.
+#[derive(Debug)]
+pub struct SweepJournal {
+    file: fs::File,
+    path: PathBuf,
+}
+
+impl SweepJournal {
+    /// Canonical journal path for a sweep inside a cache directory.
+    pub fn path_for(cache_dir: &Path, sweep: &Fingerprint) -> PathBuf {
+        cache_dir.join(format!("journal-{}.jsonl", sweep.hex()))
+    }
+
+    /// Open the journal for `sweep` at `path`. With `resume`, any
+    /// finished pairs recorded by a previous (interrupted) run of the
+    /// same sweep are returned; the file is rewritten compactly from
+    /// them (dropping a torn tail, so later appends can never fuse with
+    /// a half-written line). Without `resume` the journal starts fresh.
+    pub fn open(
+        path: &Path,
+        sweep: &Fingerprint,
+        resume: bool,
+    ) -> Result<(SweepJournal, Vec<JournalEntry>)> {
+        let entries = if resume { load(path, sweep) } else { Vec::new() };
+        let mut f = fs::File::create(path)
+            .with_context(|| format!("creating sweep journal {path:?}"))?;
+        let header = Json::from_pairs(vec![
+            ("schema", JOURNAL_SCHEMA.into()),
+            ("sweep", sweep.hex().into()),
+        ]);
+        writeln!(f, "{}", header.dump())
+            .with_context(|| format!("writing journal header {path:?}"))?;
+        for e in &entries {
+            writeln!(f, "{}", entry_line(e.cell, e.seed, &e.record))
+                .with_context(|| format!("rewriting sweep journal {path:?}"))?;
+        }
+        f.flush()
+            .with_context(|| format!("flushing sweep journal {path:?}"))?;
+        Ok((SweepJournal { file: f, path: path.to_path_buf() }, entries))
+    }
+
+    /// Append one finished pair. Flushed line-by-line so a kill loses at
+    /// most the line being written.
+    pub fn append(&mut self, cell: usize, seed: u64, record: &RunRecord) -> Result<()> {
+        writeln!(self.file, "{}", entry_line(cell, seed, record))
+            .and_then(|_| self.file.flush())
+            .with_context(|| format!("appending to sweep journal {:?}", self.path))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// One compact journal line for a finished pair.
+fn entry_line(cell: usize, seed: u64, record: &RunRecord) -> String {
+    Json::from_pairs(vec![
+        ("cell", cell.into()),
+        ("seed", seed.into()),
+        ("record", run_record_json(record)),
+    ])
+    .dump()
+}
+
+/// Replay a journal; a missing file, foreign header, or unparseable
+/// line yields fewer entries, never an error.
+fn load(path: &Path, sweep: &Fingerprint) -> Vec<JournalEntry> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return Vec::new(),
+    };
+    let mut lines = text.lines();
+    let header_ok = lines
+        .next()
+        .and_then(|l| Json::parse(l).ok())
+        .map(|h| {
+            h.get("schema").and_then(Json::as_str) == Some(JOURNAL_SCHEMA)
+                && h.get("sweep").and_then(Json::as_str) == Some(sweep.hex().as_str())
+        })
+        .unwrap_or(false);
+    if !header_ok {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for line in lines {
+        let parsed = Json::parse(line).ok().and_then(|j| {
+            let cell = j.get("cell")?.as_usize()?;
+            let seed = j.get("seed")?.as_f64()? as u64;
+            let record = run_record_from_json(j.get("record")?).ok()?;
+            Some(JournalEntry { cell, seed, record })
+        });
+        match parsed {
+            Some(e) => out.push(e),
+            // Truncated tail from a kill (or a corrupt line): skip — the
+            // pair re-runs.
+            None => continue,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::Costs;
+
+    fn record(seed: u64) -> RunRecord {
+        RunRecord {
+            seed,
+            rounds: 10,
+            final_accuracy: 0.81,
+            costs: Costs { comp_t: 1.0, trans_t: 2.0, comp_l: 3.0, trans_l: 4.0 },
+            final_m: 20,
+            final_e: 20.0,
+            improvement_pct: None,
+            baseline_costs: None,
+            trace: None,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("fedtune_journal_{name}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn append_then_resume_replays_entries() {
+        let path = tmp("replay");
+        let sweep = Fingerprint::of_bytes(b"sweep-a");
+        {
+            let (mut j, prior) = SweepJournal::open(&path, &sweep, false).unwrap();
+            assert!(prior.is_empty());
+            j.append(0, 101, &record(101)).unwrap();
+            j.append(1, 202, &record(202)).unwrap();
+        }
+        let (_j, prior) = SweepJournal::open(&path, &sweep, true).unwrap();
+        assert_eq!(prior.len(), 2);
+        assert_eq!(prior[0].cell, 0);
+        assert_eq!(prior[0].seed, 101);
+        assert_eq!(prior[1].record.seed, 202);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_tail_and_foreign_sweep_are_tolerated() {
+        let path = tmp("truncated");
+        let sweep = Fingerprint::of_bytes(b"sweep-b");
+        {
+            let (mut j, _) = SweepJournal::open(&path, &sweep, false).unwrap();
+            j.append(0, 1, &record(1)).unwrap();
+            j.append(0, 2, &record(2)).unwrap();
+        }
+        // Simulate a kill mid-append: chop the last line in half.
+        let text = fs::read_to_string(&path).unwrap();
+        let keep = text.len() - 20;
+        fs::write(&path, &text[..keep]).unwrap();
+        let (_j, prior) = SweepJournal::open(&path, &sweep, true).unwrap();
+        assert_eq!(prior.len(), 1, "the torn line must be skipped");
+
+        // A different sweep fingerprint must ignore the file entirely
+        // (and start it fresh).
+        let other = Fingerprint::of_bytes(b"sweep-c");
+        let (_j, prior) = SweepJournal::open(&path, &other, true).unwrap();
+        assert!(prior.is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn without_resume_the_journal_restarts() {
+        let path = tmp("restart");
+        let sweep = Fingerprint::of_bytes(b"sweep-d");
+        {
+            let (mut j, _) = SweepJournal::open(&path, &sweep, false).unwrap();
+            j.append(0, 1, &record(1)).unwrap();
+        }
+        let (_j, prior) = SweepJournal::open(&path, &sweep, false).unwrap();
+        assert!(prior.is_empty(), "resume=false must not replay");
+        // ...and the old entries are gone from disk too.
+        let (_j2, prior) = SweepJournal::open(&path, &sweep, true).unwrap();
+        assert!(prior.is_empty());
+        let _ = fs::remove_file(&path);
+    }
+}

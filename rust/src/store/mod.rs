@@ -1,0 +1,36 @@
+//! Content-addressed run store — cached, deduplicated, resumable sweeps.
+//!
+//! The paper's evaluation is a large grid of *independent* (config, seed)
+//! runs whose figures share huge overlapping subsets: Fig. 8/9 and
+//! Table 4 re-run the same fixed-(M₀, E₀) baselines, and every
+//! `compare_baseline` sweep re-runs one identical baseline per tuned
+//! cell per seed. This module makes all of that repetition free:
+//!
+//! * [`fingerprint`] — hashes a run's full identity (canonical config
+//!   JSON with the **true** fractional E, seed, cost constants, schema
+//!   version) into a stable hex [`Fingerprint`] with an in-repo FNV-1a
+//!   128-bit hasher. Identical runs — across cells, penalties, figures,
+//!   or whole processes — share one key.
+//! * [`run_store`] — a two-tier (memory + disk) [`RunStore`] persisting
+//!   one `fedtune.store.run/v1` JSON record per key under a cache
+//!   directory, with lossless [`crate::experiment::RunRecord`]
+//!   round-trips and miss-on-corruption semantics.
+//! * [`journal`] — a per-sweep append-only [`SweepJournal`] of finished
+//!   (cell, seed) records, so an interrupted `fedtune grid` resumes where
+//!   it died and still emits a byte-identical
+//!   `fedtune.experiment.grid/v1` artifact.
+//!
+//! [`crate::experiment::Grid`] drives all three: work items are a
+//! *deduped* set of fingerprints fanned out over the worker pool, and
+//! cells join on their keys (`Grid::cache_dir` / `no_cache` / `resume`;
+//! CLI: `fedtune grid --cache-dir DIR [--no-cache] [--resume]`).
+//! Invalidation is by schema bump ([`fingerprint::FINGERPRINT_VERSION`]):
+//! semantic changes orphan old entries instead of corrupting them.
+
+pub mod fingerprint;
+pub mod journal;
+pub mod run_store;
+
+pub use fingerprint::{run_fingerprint, run_identity, Fingerprint};
+pub use journal::{JournalEntry, SweepJournal, JOURNAL_SCHEMA};
+pub use run_store::{CacheStats, RunStore, RUN_SCHEMA};

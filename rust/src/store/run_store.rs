@@ -1,0 +1,307 @@
+//! Two-tier content-addressed run store.
+//!
+//! The memory tier is a plain map that serves repeated lookups inside one
+//! process; the optional disk tier persists one `fedtune.store.run/v1`
+//! JSON record per [`Fingerprint`] under `<cache-dir>/runs/<hex>.json`,
+//! so later sweeps (a figure regeneration, a resumed grid) reuse finished
+//! runs across processes.
+//!
+//! # Record schema (`fedtune.store.run/v1`)
+//!
+//! ```text
+//! {
+//!   "schema": "fedtune.store.run/v1",
+//!   "fingerprint": "<32 hex digits>",     // must match the filename key
+//!   "e": 0.5,                             // configured (true fractional) E
+//!   "record": { ...RunRecord...,          // experiment::runner layout
+//!               "trace": {"rounds": [...]} }   // only when kept
+//! }
+//! ```
+//!
+//! # Failure semantics
+//!
+//! The cache is advisory: a missing, truncated, corrupted or
+//! wrong-schema file is a **miss**, never an error — the runner falls
+//! back to executing the run and overwrites the bad entry. Writes go
+//! through a temp file + rename so a killed sweep can leave at most one
+//! torn temp file, never a torn record.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::experiment::runner::{run_record_from_json, run_record_json};
+use crate::experiment::RunRecord;
+use crate::util::json::Json;
+
+use super::fingerprint::Fingerprint;
+
+/// Schema identifier of one persisted run record.
+pub const RUN_SCHEMA: &str = "fedtune.store.run/v1";
+
+/// Name of the per-run subdirectory inside a cache dir.
+const RUNS_SUBDIR: &str = "runs";
+
+/// Aggregate statistics of a cache directory (`fedtune info --cache-dir`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Number of `runs/*.json` records.
+    pub run_entries: usize,
+    /// Total bytes of those records.
+    pub run_bytes: u64,
+    /// Number of `journal-*.jsonl` sweep journals.
+    pub journals: usize,
+    /// Total bytes of those journals.
+    pub journal_bytes: u64,
+}
+
+/// In-memory + on-disk run cache keyed by [`Fingerprint`].
+#[derive(Debug)]
+pub struct RunStore {
+    /// `<cache-dir>/runs`; `None` = memory-only store.
+    dir: Option<PathBuf>,
+    mem: HashMap<Fingerprint, RunRecord>,
+    /// Lookups answered from either tier.
+    pub hits: usize,
+    /// Lookups that fell through to "execute the run".
+    pub misses: usize,
+}
+
+impl RunStore {
+    /// Memory-only store (no `--cache-dir`): still dedupes within a
+    /// process, persists nothing.
+    pub fn in_memory() -> RunStore {
+        RunStore { dir: None, mem: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Open (creating if needed) the disk tier under `cache_dir`.
+    pub fn open(cache_dir: &Path) -> Result<RunStore> {
+        let dir = cache_dir.join(RUNS_SUBDIR);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating run cache dir {dir:?}"))?;
+        Ok(RunStore { dir: Some(dir), mem: HashMap::new(), hits: 0, misses: 0 })
+    }
+
+    fn file(&self, fp: &Fingerprint) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{}.json", fp.hex())))
+    }
+
+    /// Number of records in the memory tier.
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+
+    /// Look `fp` up in both tiers. `need_trace` demands a record that
+    /// kept its per-round trace — a trace-less record is then a miss so
+    /// the runner re-executes (and upgrades) it.
+    pub fn get(&mut self, fp: &Fingerprint, need_trace: bool) -> Option<RunRecord> {
+        if let Some(rec) = self.mem.get(fp) {
+            if !need_trace || rec.trace.is_some() {
+                self.hits += 1;
+                return Some(rec.clone());
+            }
+        }
+        if let Some(path) = self.file(fp) {
+            if let Some(rec) = read_record(&path, fp) {
+                if !need_trace || rec.trace.is_some() {
+                    self.hits += 1;
+                    self.mem.insert(*fp, rec.clone());
+                    return Some(rec);
+                }
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Persist a finished run. Disk-backed stores write through (later
+    /// [`RunStore::get`]s re-read via the disk tier) and only fall back
+    /// to the memory tier if the write fails — keeping traces from being
+    /// cloned twice on `keep_traces` sweeps; memory-only stores insert
+    /// directly. `e` is the configured true-fractional pass count,
+    /// stored alongside the record for auditability.
+    pub fn put(&mut self, fp: &Fingerprint, e: f64, record: &RunRecord) {
+        let path = match self.file(fp) {
+            Some(p) => p,
+            None => {
+                self.mem.insert(*fp, record.clone());
+                return;
+            }
+        };
+        let doc = Json::from_pairs(vec![
+            ("schema", RUN_SCHEMA.into()),
+            ("fingerprint", fp.hex().into()),
+            ("e", e.into()),
+            ("record", run_record_json(record)),
+        ]);
+        // Compact dump: records are machine-parsed only, and pretty-
+        // printing a kept 10k-row trace would inflate the file severalfold.
+        let mut text = doc.dump();
+        text.push('\n');
+        // Temp + rename: a killed process never leaves a torn record.
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        let ok = fs::write(&tmp, text.as_bytes())
+            .and_then(|_| fs::rename(&tmp, &path));
+        if let Err(err) = ok {
+            let _ = fs::remove_file(&tmp);
+            crate::log_warn!("run cache write failed for {path:?}: {err}");
+            self.mem.insert(*fp, record.clone());
+        }
+    }
+
+    /// Disk statistics of a cache directory (both runs and journals).
+    pub fn stats(cache_dir: &Path) -> Result<CacheStats> {
+        let mut s = CacheStats::default();
+        let runs = cache_dir.join(RUNS_SUBDIR);
+        if let Ok(iter) = fs::read_dir(&runs) {
+            for entry in iter.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.ends_with(".json") {
+                    s.run_entries += 1;
+                    s.run_bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+                }
+            }
+        }
+        let top = fs::read_dir(cache_dir)
+            .with_context(|| format!("reading cache dir {cache_dir:?}"))?;
+        for entry in top.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("journal-") && name.ends_with(".jsonl") {
+                s.journals += 1;
+                s.journal_bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// Parse one on-disk record; any defect (bad JSON, wrong schema, wrong
+/// key, missing fields) is a miss, not an error.
+fn read_record(path: &Path, fp: &Fingerprint) -> Option<RunRecord> {
+    let text = fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("schema")?.as_str()? != RUN_SCHEMA {
+        return None;
+    }
+    if j.get("fingerprint")?.as_str()? != fp.hex() {
+        return None;
+    }
+    run_record_from_json(j.get("record")?).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::Costs;
+    use crate::trace::{RoundRecord, Trace};
+
+    fn record(seed: u64, with_trace: bool) -> RunRecord {
+        let costs = Costs { comp_t: 1.5e12, trans_t: 146.0, comp_l: 3.25e13, trans_l: 2.0e8 };
+        let mut trace = Trace::new();
+        trace.push(RoundRecord {
+            round: 1,
+            m: 20,
+            e: 0.5,
+            accuracy: 0.41,
+            train_loss: 1.2,
+            costs,
+            fedtune_activated: false,
+        });
+        RunRecord {
+            seed,
+            rounds: 146,
+            final_accuracy: 0.8012345678901234,
+            costs,
+            final_m: 3,
+            final_e: 21.0,
+            improvement_pct: Some(68.25),
+            baseline_costs: Some(costs.scaled(1.5)),
+            trace: if with_trace { Some(trace) } else { None },
+        }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fedtune_store_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn memory_tier_hit_and_trace_demand() {
+        let mut s = RunStore::in_memory();
+        let fp = Fingerprint::of_bytes(b"k1");
+        assert!(s.get(&fp, false).is_none());
+        s.put(&fp, 0.5, &record(7, false));
+        let back = s.get(&fp, false).expect("hit");
+        assert_eq!(back.seed, 7);
+        // A trace-demanding lookup must treat the trace-less record as a
+        // miss so the caller re-runs.
+        assert!(s.get(&fp, true).is_none());
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn disk_tier_roundtrips_losslessly() {
+        let dir = tmp_dir("roundtrip");
+        let fp = Fingerprint::of_bytes(b"k2");
+        let rec = record(42, true);
+        {
+            let mut s = RunStore::open(&dir).unwrap();
+            s.put(&fp, 0.5, &rec);
+        }
+        // Fresh store: memory tier empty, must come off disk.
+        let mut s2 = RunStore::open(&dir).unwrap();
+        let back = s2.get(&fp, true).expect("disk hit");
+        assert_eq!(
+            run_record_json(&back).dump(),
+            run_record_json(&rec).dump(),
+            "store round-trip must be lossless"
+        );
+        let stats = RunStore::stats(&dir).unwrap();
+        assert_eq!(stats.run_entries, 1);
+        assert!(stats.run_bytes > 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_and_mismatched_files_are_misses() {
+        let dir = tmp_dir("corrupt");
+        let fp = Fingerprint::of_bytes(b"k3");
+        let mut s = RunStore::open(&dir).unwrap();
+        s.put(&fp, 1.0, &record(1, false));
+        let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
+
+        // Truncated mid-JSON.
+        let full = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert!(fresh.get(&fp, false).is_none(), "truncated file must miss");
+
+        // Garbage bytes.
+        fs::write(&path, "not json at all {{{").unwrap();
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert!(fresh.get(&fp, false).is_none(), "garbage file must miss");
+
+        // Valid JSON, wrong schema tag.
+        fs::write(&path, "{\"schema\": \"something/else\"}").unwrap();
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert!(fresh.get(&fp, false).is_none(), "wrong schema must miss");
+
+        // Valid record filed under the wrong key.
+        let other = Fingerprint::of_bytes(b"other-key");
+        fs::write(&path, full.replace(&fp.hex(), &other.hex())).unwrap();
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert!(fresh.get(&fp, false).is_none(), "key mismatch must miss");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -93,6 +93,47 @@ impl Trace {
         Json::from_pairs(vec![("rounds", Json::Arr(rows))])
     }
 
+    /// Parse a [`Trace::to_json`] document back (the run store and sweep
+    /// journal persist kept traces this way). Strict: a malformed row is
+    /// an error, so cache readers treat the whole record as a miss.
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let rows = j
+            .get("rounds")
+            .and_then(Json::as_arr)
+            .context("trace: missing \"rounds\" array")?;
+        let mut t = Trace::new();
+        for (i, row) in rows.iter().enumerate() {
+            let fu = |k: &str| {
+                row.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("trace row {i}: bad {k:?}"))
+            };
+            let ff = |k: &str| {
+                row.get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("trace row {i}: bad {k:?}"))
+            };
+            t.push(RoundRecord {
+                round: fu("round")?,
+                m: fu("m")?,
+                e: ff("e")?,
+                accuracy: ff("accuracy")?,
+                train_loss: ff("train_loss")?,
+                costs: Costs {
+                    comp_t: ff("comp_t")?,
+                    trans_t: ff("trans_t")?,
+                    comp_l: ff("comp_l")?,
+                    trans_l: ff("trans_l")?,
+                },
+                fedtune_activated: row
+                    .get("fedtune_activated")
+                    .and_then(Json::as_bool)
+                    .with_context(|| format!("trace row {i}: bad \"fedtune_activated\""))?,
+            });
+        }
+        Ok(t)
+    }
+
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "round,m,e,accuracy,train_loss,comp_t,trans_t,comp_l,trans_l,fedtune_activated\n",
@@ -187,6 +228,27 @@ mod tests {
         let rows = parsed.get("rounds").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 10);
         assert_eq!(rows[4].get("round").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn from_json_inverts_to_json() {
+        let t = toy();
+        let back = Trace::from_json(&Json::parse(&t.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in back.records().iter().zip(t.records()) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.m, b.m);
+            assert_eq!(a.e, b.e);
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.costs, b.costs);
+            assert_eq!(a.fedtune_activated, b.fedtune_activated);
+        }
+        // Malformed rows are hard errors (cache readers turn them into
+        // misses).
+        let bad = Json::parse(r#"{"rounds": [{"round": 1}]}"#).unwrap();
+        assert!(Trace::from_json(&bad).is_err());
+        assert!(Trace::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

@@ -25,6 +25,26 @@ where
     R: Send,
     F: Fn(usize, T) -> R + Sync,
 {
+    scope_map_each(items, workers, f, |_, _| {})
+}
+
+/// [`scope_map`] plus a completion hook: `on_done(i, &result)` runs on
+/// the **calling thread** as each item finishes (in completion order,
+/// not input order), before the pool joins. The experiment runner uses
+/// this to persist cache records and append sweep-journal checkpoints
+/// incrementally, so an interrupted sweep keeps every finished run.
+pub fn scope_map_each<T, R, F, C>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+    mut on_done: C,
+) -> Vec<Result<R, String>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, &Result<R, String>),
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
@@ -37,8 +57,12 @@ where
             .into_iter()
             .enumerate()
             .map(|(i, item)| {
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item)))
-                    .map_err(|e| panic_msg(&e))
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(i, item)
+                }))
+                .map_err(|e| panic_msg(&e));
+                on_done(i, &r);
+                r
             })
             .collect();
     }
@@ -71,6 +95,7 @@ where
         drop(tx);
         let mut out: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
         for (i, r) in rx {
+            on_done(i, &r);
             out[i] = Some(r);
         }
         out.into_iter()
@@ -131,5 +156,44 @@ mod tests {
         let out = scope_map(vec![5], 16, |_, x: i32| x);
         assert_eq!(out.len(), 1);
         assert_eq!(*out[0].as_ref().unwrap(), 5);
+    }
+
+    #[test]
+    fn on_done_sees_every_item_once() {
+        for workers in [1, 4] {
+            let mut seen: Vec<(usize, i32)> = Vec::new();
+            let out = scope_map_each(
+                (0..20).collect(),
+                workers,
+                |_, x: i32| x * 3,
+                |i, r| seen.push((i, *r.as_ref().unwrap())),
+            );
+            assert_eq!(out.len(), 20);
+            seen.sort();
+            let expect: Vec<(usize, i32)> =
+                (0..20usize).map(|i| (i, i as i32 * 3)).collect();
+            assert_eq!(seen, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn on_done_sees_panics_as_errors() {
+        let mut errs = 0;
+        let _ = scope_map_each(
+            vec![1, 2, 3],
+            2,
+            |_, x: i32| {
+                if x == 2 {
+                    panic!("boom");
+                }
+                x
+            },
+            |_, r| {
+                if r.is_err() {
+                    errs += 1;
+                }
+            },
+        );
+        assert_eq!(errs, 1);
     }
 }

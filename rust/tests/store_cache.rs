@@ -1,0 +1,274 @@
+//! Integration: the content-addressed run store (`fedtune::store`) —
+//! in-sweep baseline dedup, warm-cache sweeps with zero engine runs,
+//! corruption fallback, trace-demand upgrades, and interrupted-sweep
+//! resume — all with byte-identical `fedtune.experiment.grid/v1`
+//! artifacts (the acceptance contract of the store subsystem).
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
+use fedtune::overhead::Preference;
+
+fn base() -> ExperimentConfig {
+    // The cap keeps every sweep here fast; the speech baseline converges
+    // well under it, FedTune cells just stop at the cap.
+    ExperimentConfig { max_rounds: 300, ..ExperimentConfig::default() }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fedtune_cache_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// Acceptance: a `compare_baseline` sweep over the paper's 15-preference
+/// grid executes exactly one baseline run per (profile, aggregator, M₀,
+/// E₀, seed) — not one per preference — and the dedup changes no number.
+#[test]
+fn paper_grid_executes_one_baseline_per_seed() {
+    let r = Grid::new(base())
+        .preferences(&Preference::paper_grid())
+        .seeds(&[1, 2])
+        .compare_baseline(true)
+        .workers(4)
+        .run()
+        .unwrap();
+    assert_eq!(
+        r.executed_runs,
+        15 * 2 + 2,
+        "15 tuned runs per seed plus ONE shared baseline per seed"
+    );
+    assert_eq!(r.cache_hits, 0);
+
+    // The shared baseline must be exactly what an undeduped direct run
+    // produces, and every cell's Eq. (6) improvement must match it.
+    let pref = Preference::paper_grid()[0];
+    let mut cfg = base();
+    cfg.seed = 1;
+    let direct_base = baselines::run_sim(&cfg, 1).unwrap();
+    cfg.preference = Some(pref);
+    let direct_tuned = baselines::run_sim(&cfg, 1).unwrap();
+    let run = &r.cells[0].runs[0];
+    assert_eq!(run.costs, direct_tuned.costs);
+    assert_eq!(run.baseline_costs.unwrap(), direct_base.costs);
+    let i = direct_base.costs.compare(&direct_tuned.costs, &pref);
+    assert_eq!(run.improvement_pct.unwrap(), -i * 100.0);
+    // Every tuned cell reports against the same per-seed baseline.
+    for c in &r.cells {
+        assert_eq!(c.runs[0].baseline_costs.unwrap(), direct_base.costs);
+    }
+}
+
+/// Acceptance: re-running a sweep against a warm `--cache-dir` performs
+/// zero engine runs and emits the identical artifact.
+#[test]
+fn second_sweep_with_cache_dir_executes_nothing() {
+    let dir = tmp_dir("warm");
+    let make = || {
+        Grid::new(base())
+            .preferences(&Preference::paper_grid()[..3])
+            .seeds(&[1, 2])
+            .compare_baseline(true)
+            .workers(2)
+            .cache_dir(dir.clone())
+    };
+    let cold = make().run().unwrap();
+    assert_eq!(cold.executed_runs, 3 * 2 + 2);
+    assert_eq!(cold.cache_hits, 0);
+
+    let warm = make().run().unwrap();
+    assert_eq!(warm.executed_runs, 0, "warm cache must serve every run");
+    assert_eq!(warm.cache_hits, 3 * 2 + 2);
+    assert_eq!(cold.to_json().pretty(), warm.to_json().pretty());
+
+    // --no-cache bypasses the store completely (and still agrees).
+    let bypass = make().no_cache(true).run().unwrap();
+    assert_eq!(bypass.executed_runs, 3 * 2 + 2);
+    assert_eq!(bypass.cache_hits, 0);
+    assert_eq!(bypass.to_json().pretty(), cold.to_json().pretty());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Worker count × cache state × dedup must never change artifact bytes.
+#[test]
+fn cache_and_workers_do_not_change_artifact_bytes() {
+    let comp_l = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+    let d1 = tmp_dir("bytes_w1");
+    let d4 = tmp_dir("bytes_w4");
+    let make = |workers: usize, dir: Option<&PathBuf>| {
+        let g = Grid::new(base())
+            .m0s(&[5, 20])
+            .preference_options(&[None, Some(comp_l)])
+            .seeds(&[1, 2])
+            .compare_baseline(true)
+            .workers(workers);
+        match dir {
+            Some(d) => g.cache_dir(d.clone()),
+            None => g,
+        }
+    };
+    let serial = make(1, Some(&d1)).run().unwrap().to_json().pretty();
+    let pooled = make(4, Some(&d4)).run().unwrap().to_json().pretty();
+    assert_eq!(serial, pooled, "cold: workers must not change bytes");
+    let warm = make(4, Some(&d1)).run().unwrap();
+    assert_eq!(warm.executed_runs, 0);
+    assert_eq!(warm.to_json().pretty(), serial, "warm: hits must not change bytes");
+    let plain = make(4, None).run().unwrap().to_json().pretty();
+    assert_eq!(plain, serial, "uncached grid must agree too");
+    let _ = fs::remove_dir_all(&d1);
+    let _ = fs::remove_dir_all(&d4);
+}
+
+/// A corrupted or truncated cache record is a miss (re-run + heal), never
+/// an error.
+#[test]
+fn corrupted_cache_records_fall_back_to_rerun() {
+    let dir = tmp_dir("corrupt");
+    let make = || Grid::new(base()).m0s(&[5, 20]).seeds(&[3]).cache_dir(dir.clone());
+    let cold = make().run().unwrap();
+    assert_eq!(cold.executed_runs, 2);
+
+    let runs_dir = dir.join("runs");
+    let mut files: Vec<PathBuf> = fs::read_dir(&runs_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    files.sort();
+    assert_eq!(files.len(), 2);
+    fs::write(&files[0], "not json at all {{{").unwrap();
+    let full = fs::read_to_string(&files[1]).unwrap();
+    fs::write(&files[1], &full[..full.len() / 3]).unwrap();
+
+    let again = make().run().unwrap();
+    assert_eq!(again.executed_runs, 2, "both defective records must re-run");
+    assert_eq!(again.to_json().pretty(), cold.to_json().pretty());
+
+    // The re-run rewrote the records: the cache is healed.
+    let healed = make().run().unwrap();
+    assert_eq!(healed.executed_runs, 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: kill-mid-sweep → `--resume` re-executes only the missing
+/// pairs and reproduces the uninterrupted artifact byte-for-byte.
+#[test]
+fn interrupted_sweep_resumes_byte_identical() {
+    let dir = tmp_dir("resume");
+    let make = || {
+        Grid::new(base())
+            .preferences(&Preference::paper_grid()[..4])
+            .seeds(&[1, 2])
+            .compare_baseline(true)
+            .workers(3)
+            .cache_dir(dir.clone())
+    };
+
+    // Reference: the same sweep with no cache machinery at all.
+    let reference = Grid::new(base())
+        .preferences(&Preference::paper_grid()[..4])
+        .seeds(&[1, 2])
+        .compare_baseline(true)
+        .workers(3)
+        .run()
+        .unwrap()
+        .to_json()
+        .pretty();
+
+    // Cached run: produces the full journal (and must agree already).
+    let full = make().run().unwrap();
+    assert_eq!(full.to_json().pretty(), reference);
+    let journal = make().journal_path().unwrap().expect("cache dir is set");
+    assert!(journal.exists(), "journal missing at {journal:?}");
+
+    // Simulate the kill: keep the header + 3 finished pairs + a torn
+    // final line, and delete every cached run record so the remaining
+    // pairs genuinely re-execute.
+    let text = fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + 8, "header + 4 prefs × 2 seeds");
+    let mut partial = lines[..4].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[4][..lines[4].len() / 2]);
+    fs::write(&journal, partial).unwrap();
+    fs::remove_dir_all(dir.join("runs")).unwrap();
+
+    let resumed = make().resume(true).run().unwrap();
+    assert_eq!(
+        resumed.to_json().pretty(),
+        reference,
+        "resumed artifact must be byte-identical to the uninterrupted one"
+    );
+    assert!(resumed.executed_runs > 0, "missing pairs must re-run");
+    assert!(
+        resumed.executed_runs < full.executed_runs,
+        "journaled pairs must not re-run ({} vs {})",
+        resumed.executed_runs,
+        full.executed_runs
+    );
+
+    // A second resume finds the now-complete journal: nothing to do.
+    let done = make().resume(true).run().unwrap();
+    assert_eq!(done.executed_runs, 0);
+    assert_eq!(done.to_json().pretty(), reference);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A trace-demanding sweep must not accept trace-less cache records, and
+/// a trace-carrying record serves trace-less sweeps with the trace
+/// stripped.
+#[test]
+fn trace_demand_upgrades_cache_entries() {
+    let dir = tmp_dir("traces");
+    let make = |keep: bool| {
+        Grid::new(base()).seeds(&[5]).cache_dir(dir.clone()).keep_traces(keep)
+    };
+    let bare = make(false).run().unwrap();
+    assert_eq!(bare.executed_runs, 1);
+
+    // Cached record has no trace → keep_traces sweep re-runs (upgrade)...
+    let traced = make(true).run().unwrap();
+    assert_eq!(traced.executed_runs, 1);
+    assert_eq!(traced.cache_hits, 0);
+    let tr = traced.cells[0].runs[0].trace.as_ref().expect("trace kept");
+    assert_eq!(tr.len(), traced.cells[0].runs[0].rounds);
+
+    // ...after which both flavors are pure hits.
+    assert_eq!(make(true).run().unwrap().executed_runs, 0);
+    let served = make(false).run().unwrap();
+    assert_eq!(served.executed_runs, 0);
+    assert!(
+        served.cells[0].runs[0].trace.is_none(),
+        "hits must strip the trace when not requested"
+    );
+    assert_eq!(served.to_json().pretty(), bare.to_json().pretty());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Regression (fractional-E collision): E = 0.5 and E = 1.0 cells must
+/// never share a cache record even though their configs carry the same
+/// integer `e0 = ceil(E) = 1`.
+#[test]
+fn fractional_e_cells_never_share_cache_records() {
+    let dir = tmp_dir("frac_e");
+    let make = |e: f64| {
+        Grid::new(base()).e0s(&[e]).seeds(&[7]).cache_dir(dir.clone())
+    };
+    let half = make(0.5).run().unwrap();
+    assert_eq!(half.executed_runs, 1);
+    let whole = make(1.0).run().unwrap();
+    assert_eq!(whole.executed_runs, 1, "E=1.0 must not hit E=0.5's record");
+    assert_ne!(
+        half.cells[0].runs[0].costs.comp_t,
+        whole.cells[0].runs[0].costs.comp_t,
+        "distinct records, distinct physics"
+    );
+    assert_eq!(half.cells[0].runs[0].final_e, 0.5);
+    // Each keys its own record: both are warm now.
+    assert_eq!(make(0.5).run().unwrap().executed_runs, 0);
+    assert_eq!(make(1.0).run().unwrap().executed_runs, 0);
+    let _ = fs::remove_dir_all(&dir);
+}
