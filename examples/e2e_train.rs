@@ -31,7 +31,7 @@ const MODEL: &str = "mlp-m";
 const TARGET: f64 = 0.90;
 const SCALE: f64 = 0.1; // 211 of the 2112 speech clients
 const M0: usize = 10;
-const E0: usize = 2;
+const E0: f64 = 2.0;
 // Deliberately conservative LR so the run spans a few hundred rounds —
 // enough optimization horizon for FedTune to act repeatedly.
 const LR: f32 = 0.03;

@@ -24,7 +24,7 @@ const TARGETS: [f64; 5] = [0.60, 0.70, 0.75, 0.80, 0.85];
 fn main() {
     let base = ExperimentConfig {
         m0: 1,
-        e0: 1,
+        e0: 1.0,
         max_rounds: 120_000,
         ..ExperimentConfig::default()
     };

@@ -62,7 +62,7 @@ fn main() {
     // --- FedTune controller step -----------------------------------------
     let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
     let mut ft =
-        FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20).unwrap();
+        FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20.0).unwrap();
     let mut round = 0usize;
     let mut acc = 0.0f64;
     let mut cum = Costs::ZERO;
@@ -71,7 +71,7 @@ fn main() {
         acc += 0.02;
         if acc > 0.85 {
             acc = 0.0; // reset so activations keep firing
-            ft = FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20).unwrap();
+            ft = FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20.0).unwrap();
             cum = Costs::ZERO;
         }
         cum.add(&Costs { comp_t: 3.0, trans_t: 1.0, comp_l: 9.0, trans_l: 20.0 });

@@ -57,6 +57,7 @@ pub fn run_sim_with_cost_model(
             let ft_cfg = FedTuneConfig {
                 eps: cfg.eps,
                 penalty: cfg.penalty,
+                e_min: cfg.e_floor,
                 ..FedTuneConfig::paper_defaults(num_clients)
             };
             Schedule::Tuned(Box::new(
@@ -98,7 +99,36 @@ mod tests {
         cfg.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
         let r = run_sim(&cfg, 3).unwrap();
         assert!(r.final_accuracy > 0.0 && r.costs.is_finite());
-        assert!(r.final_m >= 1 && r.final_e >= 1);
+        assert!(r.final_m >= 1 && r.final_e >= cfg.e_floor);
         assert_eq!(r.trace.len(), r.rounds);
+    }
+
+    #[test]
+    fn fractional_e0_runs_fixed_and_tuned() {
+        // E = 0.5 (paper §3.2) is a plain config now — the coordinator
+        // drives it for both schedules; no mirror loop, no rejection.
+        let mut cfg = base_cfg();
+        cfg.e0 = 0.5;
+        cfg.max_rounds = 60_000;
+        let fixed = run_sim(&cfg, 7).unwrap();
+        assert!(fixed.final_accuracy >= 0.8, "got {}", fixed.final_accuracy);
+        assert_eq!(fixed.final_e, 0.5);
+
+        cfg.preference = Some(Preference::new(0.0, 0.0, 0.0, 1.0).unwrap());
+        let tuned = run_sim(&cfg, 7).unwrap();
+        assert!(tuned.costs.is_finite());
+        assert!(tuned.final_e >= cfg.e_floor, "E broke the floor: {}", tuned.final_e);
+        assert!(tuned.trace.records().iter().all(|r| r.e >= cfg.e_floor));
+    }
+
+    #[test]
+    fn e_floor_below_e0_is_enforced_at_construction() {
+        let mut cfg = base_cfg();
+        cfg.e0 = 0.5;
+        cfg.e_floor = 1.0; // floor above E0 — FedTune must refuse
+        cfg.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
+        assert!(run_sim(&cfg, 1).is_err());
+        cfg.preference = None; // fixed schedules ignore the floor
+        assert!(run_sim(&cfg, 1).is_ok());
     }
 }

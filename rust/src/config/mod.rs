@@ -30,14 +30,18 @@ pub struct ExperimentConfig {
     pub model: String,
     pub aggregator: AggregatorKind,
     pub engine: EngineKind,
-    /// Initial hyper-parameters (paper: both 20).
+    /// Initial hyper-parameters (paper: both 20). E is fractional
+    /// end-to-end — the paper's E = 0.5 (§3.2) is a first-class config.
     pub m0: usize,
-    pub e0: usize,
+    pub e0: f64,
     /// None ⇒ fixed-(M,E) baseline; Some ⇒ FedTune with this preference.
     pub preference: Option<Preference>,
     /// FedTune constants (paper defaults: 0.01 / 10).
     pub eps: f64,
     pub penalty: f64,
+    /// FedTune's E floor: tuned runs never descend E below this
+    /// (default 0.5; 1.0 restores the classical integer floor).
+    pub e_floor: f64,
     /// Stop conditions. `target_accuracy = 0` ⇒ dataset default.
     pub target_accuracy: f64,
     pub max_rounds: usize,
@@ -57,10 +61,11 @@ impl Default for ExperimentConfig {
             aggregator: AggregatorKind::FedAvg,
             engine: EngineKind::Sim,
             m0: 20,
-            e0: 20,
+            e0: 20.0,
             preference: None,
             eps: 0.01,
             penalty: 10.0,
+            e_floor: 0.5,
             target_accuracy: 0.0,
             max_rounds: 20_000,
             lr: 0.05,
@@ -102,8 +107,14 @@ impl ExperimentConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        if self.m0 == 0 || self.e0 == 0 {
-            bail!("m0/e0 must be >= 1");
+        if self.m0 == 0 {
+            bail!("m0 must be >= 1");
+        }
+        if !self.e0.is_finite() || self.e0 <= 0.0 {
+            bail!("e0 must be a positive finite pass count (fractions allowed)");
+        }
+        if !self.e_floor.is_finite() || self.e_floor <= 0.0 {
+            bail!("e_floor must be a positive finite pass count");
         }
         if !(0.0..=1.0).contains(&self.target_accuracy) {
             bail!("target_accuracy must be in [0, 1]");
@@ -140,6 +151,7 @@ impl ExperimentConfig {
             ("e0", self.e0.into()),
             ("eps", self.eps.into()),
             ("penalty", self.penalty.into()),
+            ("e_floor", self.e_floor.into()),
             ("target_accuracy", self.target_accuracy.into()),
             ("max_rounds", self.max_rounds.into()),
             ("lr", (self.lr as f64).into()),
@@ -198,7 +210,7 @@ impl ExperimentConfig {
         if let Some(v) = gu("m0") {
             cfg.m0 = v;
         }
-        if let Some(v) = gu("e0") {
+        if let Some(v) = gf("e0") {
             cfg.e0 = v;
         }
         if let Some(v) = gf("eps") {
@@ -206,6 +218,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = gf("penalty") {
             cfg.penalty = v;
+        }
+        if let Some(v) = gf("e_floor") {
+            cfg.e_floor = v;
         }
         if let Some(v) = gf("target_accuracy") {
             cfg.target_accuracy = v;
@@ -274,6 +289,8 @@ mod tests {
         c.aggregator = AggregatorKind::fedadagrad_paper();
         c.preference = Some(Preference::new(0.5, 0.0, 0.5, 0.0).unwrap());
         c.m0 = 7;
+        c.e0 = 0.5;
+        c.e_floor = 0.25;
         c.seed = 99;
         c.scale = 0.5;
         let j = c.to_json();
@@ -281,11 +298,34 @@ mod tests {
         assert_eq!(c2.dataset, "emnist");
         assert_eq!(c2.aggregator.name(), "fedadagrad");
         assert_eq!(c2.m0, 7);
+        assert_eq!(c2.e0, 0.5);
+        assert_eq!(c2.e_floor, 0.25);
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.scale, 0.5);
         let p = c2.preference.unwrap();
         assert_eq!(p.alpha, 0.5);
         assert_eq!(p.gamma, 0.5);
+    }
+
+    #[test]
+    fn e0_and_floor_validation() {
+        let mut c = ExperimentConfig::default();
+        c.e0 = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.e0 = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.e0 = 0.5; // the paper's fractional pass count is valid as-is
+        assert!(c.validate().is_ok());
+        let mut c = ExperimentConfig::default();
+        c.e_floor = 0.0;
+        assert!(c.validate().is_err());
+        // Configs written before the e_floor knob existed still load.
+        let j = Json::parse(r#"{"e0": 0.5}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.e0, 0.5);
+        assert_eq!(c.e_floor, 0.5);
     }
 
     #[test]

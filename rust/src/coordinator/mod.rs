@@ -35,9 +35,10 @@ pub struct RunResult {
     pub final_accuracy: f64,
     /// Cumulative overheads at stop (Eqs. 2–5).
     pub costs: Costs,
-    /// (M, E) at stop — Table 4's "Final M / Final E" columns.
+    /// (M, E) at stop — Table 4's "Final M / Final E" columns. E is
+    /// fractional end-to-end (the paper's E = 0.5).
     pub final_m: usize,
-    pub final_e: usize,
+    pub final_e: f64,
     pub trace: Trace,
 }
 
@@ -67,10 +68,9 @@ impl<'e, E: FlEngine> Server<'e, E> {
 
     /// Drive rounds until the target accuracy or the round cap.
     ///
-    /// NOTE: `experiment::runner::run_fixed_fractional` mirrors this loop
-    /// (same selector RNG stream `seed ^ 0xc00d`, stop conditions and cost
-    /// accounting) for fractional-E fixed schedules — keep the two in sync
-    /// when changing round semantics here.
+    /// This loop is the *only* round driver: every run — fixed or tuned,
+    /// integral or fractional E, sim or real engine — goes through here,
+    /// so round semantics have exactly one definition.
     pub fn run(mut self) -> Result<RunResult> {
         let mut trace = Trace::new();
         let mut cum = Costs::ZERO;
@@ -97,11 +97,11 @@ impl<'e, E: FlEngine> Server<'e, E> {
                 .map(|&k| self.engine.client_sizes()[k])
                 .collect();
 
-            let outcome = self.engine.run_round(&participants, e as f64)?;
+            let outcome = self.engine.run_round(&participants, e)?;
             accuracy = outcome.accuracy;
 
             // Eqs. 2–5 — overheads accounted centrally, not per-engine.
-            let delta = self.cfg.cost_model.round_costs(&sizes, e as f64);
+            let delta = self.cfg.cost_model.round_costs(&sizes, e);
             cum.add(&delta);
 
             let decision = self.schedule.observe_round(round, accuracy, cum);
@@ -109,7 +109,7 @@ impl<'e, E: FlEngine> Server<'e, E> {
             trace.push(RoundRecord {
                 round,
                 m,
-                e: e as f64,
+                e,
                 accuracy,
                 train_loss: outcome.train_loss,
                 costs: cum,
@@ -158,11 +158,11 @@ mod tests {
     fn fixed_run_reaches_target() {
         let profile = DatasetProfile::speech();
         let mut eng = SimEngine::new(&profile, SimParams::default(), 1);
-        let server = Server::new(&mut eng, cfg(0.8, 5000), Schedule::Fixed { m: 20, e: 20 });
+        let server = Server::new(&mut eng, cfg(0.8, 5000), Schedule::Fixed { m: 20, e: 20.0 });
         let r = server.run().unwrap();
         assert_eq!(r.stop, StopReason::TargetReached);
         assert!(r.final_accuracy >= 0.8);
-        assert_eq!((r.final_m, r.final_e), (20, 20));
+        assert_eq!((r.final_m, r.final_e), (20, 20.0));
         assert_eq!(r.trace.len(), r.rounds);
         // Costs are monotone across the trace.
         for w in r.trace.records().windows(2) {
@@ -175,10 +175,27 @@ mod tests {
     fn round_cap_stops_runaways() {
         let profile = DatasetProfile::speech();
         let mut eng = SimEngine::new(&profile, SimParams::default(), 2);
-        let server = Server::new(&mut eng, cfg(0.99, 50), Schedule::Fixed { m: 5, e: 1 });
+        let server = Server::new(&mut eng, cfg(0.99, 50), Schedule::Fixed { m: 5, e: 1.0 });
         let r = server.run().unwrap();
         assert_eq!(r.stop, StopReason::MaxRounds);
         assert_eq!(r.rounds, 50);
+    }
+
+    #[test]
+    fn fixed_fractional_e_runs_natively() {
+        // The paper's E = 0.5 (§3.2) drives the same loop as integers:
+        // no mirror path, no special casing.
+        let profile = DatasetProfile::speech();
+        let mut eng = SimEngine::new(&profile, SimParams::default(), 7);
+        let server =
+            Server::new(&mut eng, cfg(0.8, 60_000), Schedule::Fixed { m: 20, e: 0.5 });
+        let r = server.run().unwrap();
+        assert_eq!(r.stop, StopReason::TargetReached);
+        assert_eq!(r.final_e, 0.5);
+        assert!(r.trace.records().iter().all(|rec| rec.e == 0.5));
+        // Eq. 2: CompT scales with E, so half-passes cost half per round.
+        let per_round_comp_t = r.costs.comp_t / r.rounds as f64;
+        assert!(per_round_comp_t > 0.0 && per_round_comp_t.is_finite());
     }
 
     #[test]
@@ -190,7 +207,7 @@ mod tests {
             pref,
             FedTuneConfig::paper_defaults(eng.num_clients()),
             20,
-            20,
+            20.0,
         )
         .unwrap();
         // Pure-CompL runs drive M → 1, whose per-round progress is ~30x
@@ -214,7 +231,7 @@ mod tests {
         let server = Server::new(
             &mut eng,
             ServerConfig { cost_model: cm, ..cfg(0.5, 1000) },
-            Schedule::Fixed { m: 10, e: 1 },
+            Schedule::Fixed { m: 10, e: 1.0 },
         );
         let r = server.run().unwrap();
         assert_eq!(r.costs.trans_t, r.rounds as f64); // Eq. 3 with C2 = 1

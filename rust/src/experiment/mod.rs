@@ -76,17 +76,35 @@
 //! deliberately **not** part of the artifact (use [`Grid::keep_traces`]
 //! and read them from [`RunRecord::trace`] in-process instead).
 //!
-//! # Example shape
+//! # Example
 //!
-//! ```text
-//! let result = Grid::new(ExperimentConfig::default())
-//!     .preferences(&Preference::paper_grid())
-//!     .seeds(&[101, 202, 303])
-//!     .compare_baseline(true)
-//!     .workers(8)
-//!     .run()?;            // 15 cells × 3 seeds × 2 runs, pooled
-//! result.write_json("grid.json")?;
+//! A miniature FedTune-vs-baseline sweep with the paper's fractional
+//! E₀ = 0.5 (§3.2) — one cell, two seeds, pooled, with the Eq. (6)
+//! improvement column (run `cargo test --doc` to execute it):
+//!
 //! ```
+//! use fedtune::config::ExperimentConfig;
+//! use fedtune::experiment::Grid;
+//! use fedtune::overhead::Preference;
+//!
+//! let comp_l = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+//! let result = Grid::new(ExperimentConfig::default())
+//!     .preferences(&[comp_l])
+//!     .e0s(&[0.5])               // fractional E is first-class
+//!     .seeds(&[101, 202])
+//!     .max_rounds(400)           // keep the doctest fast
+//!     .compare_baseline(true)
+//!     .workers(2)
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(result.cells.len(), 1);
+//! assert_eq!(result.cells[0].runs.len(), 2);
+//! assert!(result.cells[0].improvement.is_some());
+//! ```
+//!
+//! The full paper sweep is the same shape scaled up:
+//! `.preferences(&Preference::paper_grid()).seeds(&[101, 202, 303])`,
+//! then `result.write_json("grid.json")`.
 
 use std::path::PathBuf;
 
@@ -110,7 +128,7 @@ pub struct Cell {
     pub aggregator: AggregatorKind,
     pub m0: usize,
     /// Initial local passes; fractional values (the paper's E = 0.5) are
-    /// supported for fixed-schedule cells only.
+    /// first-class for both fixed and FedTune-tuned cells.
     pub e0: f64,
     /// `None` ⇒ the fixed-(M₀, E₀) baseline; `Some` ⇒ FedTune.
     pub preference: Option<Preference>,
@@ -172,7 +190,7 @@ impl Grid {
             profiles: vec![(base.dataset.clone(), base.model.clone(), None)],
             aggregators: vec![base.aggregator],
             m0s: vec![base.m0],
-            e0s: vec![base.e0 as f64],
+            e0s: vec![base.e0],
             preferences: vec![base.preference],
             penalties: vec![base.penalty],
             seeds: vec![base.seed],
@@ -219,8 +237,9 @@ impl Grid {
         self
     }
 
-    /// E₀ axis; fractional values only combine with baseline (no
-    /// preference) cells — FedTune tunes integer E.
+    /// E₀ axis; fractional values (the paper's E = 0.5) combine with any
+    /// schedule — FedTune tunes E on the same fractional scale, floored
+    /// at the base config's `e_floor`.
     pub fn e0s(mut self, v: &[f64]) -> Grid {
         self.e0s = v.to_vec();
         self

@@ -25,13 +25,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::baselines;
 use crate::config::ExperimentConfig;
-use crate::engine::FlEngine;
 use crate::overhead::{CostModel, Costs, Preference};
 use crate::store::{run_fingerprint, Fingerprint, RunStore, SweepJournal};
-use crate::trace::{RoundRecord, Trace};
+use crate::trace::Trace;
 use crate::util::json::Json;
 use crate::util::pool;
-use crate::util::rng::Rng;
 use crate::util::stats;
 
 use super::{Cell, Grid};
@@ -284,9 +282,6 @@ fn cell_json(c: &CellResult) -> Json {
 struct Job {
     fp: Fingerprint,
     cfg: ExperimentConfig,
-    /// True (possibly fractional) local pass count; `cfg.e0` holds its
-    /// ceiling for validation only.
-    e: f64,
     cost_model: CostModel,
     seed: u64,
     label: String,
@@ -331,12 +326,11 @@ fn plan(grid: &Grid) -> Result<Plan> {
                 Some(cm) => cm,
                 None => cfg.cost_model()?,
             };
-            let tuned = run_fingerprint(&cfg, cell.e0, seed, &cost_model);
+            let tuned = run_fingerprint(&cfg, seed, &cost_model);
             if seen.insert(tuned) {
                 jobs.push(Job {
                     fp: tuned,
                     cfg,
-                    e: cell.e0,
                     cost_model,
                     seed,
                     label: cell.label(),
@@ -344,12 +338,11 @@ fn plan(grid: &Grid) -> Result<Plan> {
             }
             let base = if grid.compare_baseline && cell.preference.is_some() {
                 let base_cfg = cell_config(grid, cell, None, seed)?;
-                let fp = run_fingerprint(&base_cfg, cell.e0, seed, &cost_model);
+                let fp = run_fingerprint(&base_cfg, seed, &cost_model);
                 if seen.insert(fp) {
                     jobs.push(Job {
                         fp,
                         cfg: base_cfg,
-                        e: cell.e0,
                         cost_model,
                         seed,
                         label: format!("{} baseline", cell.label()),
@@ -366,7 +359,7 @@ fn plan(grid: &Grid) -> Result<Plan> {
     // Sweep identity: the ordered pair keys plus everything that shapes
     // the journaled records. Worker count is deliberately excluded — a
     // sweep may resume with a different pool size.
-    let mut id = format!("fedtune.sweep/v1;keep_traces={};seeds=", grid.keep_traces);
+    let mut id = format!("fedtune.sweep/v2;keep_traces={};seeds=", grid.keep_traces);
     for &s in &grid.seeds {
         id.push_str(&format!("{s},"));
     }
@@ -524,7 +517,7 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
     let run_jobs: Vec<Job> =
         jobs.into_iter().filter(|j| waiting.contains_key(&j.fp)).collect();
     let executed_runs = run_jobs.len();
-    let meta: Vec<(Fingerprint, f64)> = run_jobs.iter().map(|j| (j.fp, j.e)).collect();
+    let keys: Vec<Fingerprint> = run_jobs.iter().map(|j| j.fp).collect();
     let contexts: Vec<String> = run_jobs
         .iter()
         .map(|j| format!("grid run [{}] seed {}", j.label, j.seed))
@@ -534,7 +527,10 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
         run_jobs,
         grid.workers,
         |_, job: Job| -> Result<RunRecord> {
-            let single = run_single(&job.cfg, job.e, job.cost_model, job.seed)?;
+            // Every run — fixed or tuned, integral or fractional E — goes
+            // through the one coordinator loop (`Server::run`).
+            let single =
+                baselines::run_sim_with_cost_model(&job.cfg, job.seed, job.cost_model)?;
             Ok(RunRecord {
                 seed: job.seed,
                 rounds: single.rounds,
@@ -553,11 +549,11 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
                 Ok(Ok(r)) => r,
                 _ => return, // errors surface after the join below
             };
-            let (fp, e) = meta[i];
+            let fp = keys[i];
             // Without a disk tier the store is never read after this
             // point — skip the persist (and its trace clone) entirely.
             if caching {
-                store.put(&fp, e, rec);
+                store.put(&fp, rec);
             }
             have.insert(fp, rec.clone());
             if let Some(pis) = waiting.get(&fp) {
@@ -685,16 +681,6 @@ fn aggregate_cell(cell: Cell, runs: Vec<RunRecord>) -> CellResult {
     }
 }
 
-/// Result of one configured run, schedule-agnostic.
-struct SingleRun {
-    rounds: usize,
-    final_accuracy: f64,
-    costs: Costs,
-    final_m: usize,
-    final_e: f64,
-    trace: Trace,
-}
-
 fn cell_config(
     grid: &Grid,
     cell: &Cell,
@@ -706,17 +692,9 @@ fn cell_config(
     cfg.model = cell.model.clone();
     cfg.aggregator = cell.aggregator;
     cfg.m0 = cell.m0;
-    // Fractional E bypasses the integer schedule (run_fixed_fractional);
-    // the config still needs a valid integer for validation/round-trips.
-    // NOTE: this ceiling is why cache keys must come from
-    // `store::fingerprint::run_fingerprint(cfg, e, ..)` with the TRUE
-    // fractional E — keying on this config alone would collide E = 0.5
-    // with E = 1.0 (regression-tested in store::fingerprint).
-    cfg.e0 = if cell.e0.fract() == 0.0 {
-        cell.e0 as usize
-    } else {
-        (cell.e0.ceil() as usize).max(1)
-    };
+    // E is fractional end-to-end: the config carries the true pass count
+    // and the cache key derives from it directly (no ceil side-channel).
+    cfg.e0 = cell.e0;
     cfg.preference = preference;
     cfg.penalty = cell.penalty;
     cfg.seed = seed;
@@ -728,79 +706,6 @@ fn cell_config(
     }
     cfg.validate()?;
     Ok(cfg)
-}
-
-fn run_single(
-    cfg: &ExperimentConfig,
-    e: f64,
-    cost_model: CostModel,
-    seed: u64,
-) -> Result<SingleRun> {
-    if e.fract() == 0.0 {
-        let rr = baselines::run_sim_with_cost_model(cfg, seed, cost_model)?;
-        Ok(SingleRun {
-            rounds: rr.rounds,
-            final_accuracy: rr.final_accuracy,
-            costs: rr.costs,
-            final_m: rr.final_m,
-            final_e: rr.final_e as f64,
-            trace: rr.trace,
-        })
-    } else {
-        run_fixed_fractional(cfg, e, cost_model, seed)
-    }
-}
-
-/// Fixed-(M, E) run with fractional E (the paper's E = 0.5, §3.2): drives
-/// rounds directly because the integer FedTune schedule cannot represent
-/// half-passes. Mirrors [`crate::coordinator::Server::run`], including the
-/// selector RNG stream, so integral-E results agree between paths.
-fn run_fixed_fractional(
-    cfg: &ExperimentConfig,
-    e: f64,
-    cost_model: CostModel,
-    seed: u64,
-) -> Result<SingleRun> {
-    if cfg.preference.is_some() {
-        bail!("fractional E = {e} requires the fixed schedule (no preference)");
-    }
-    if e <= 0.0 {
-        bail!("non-positive pass count E = {e}");
-    }
-    let mut engine = baselines::sim_engine_for(cfg, seed)?;
-    let target = cfg.target()?;
-    let mut rng = Rng::new(seed ^ 0xc00d); // same stream as coordinator::Server
-    let mut trace = Trace::new();
-    let mut cum = Costs::ZERO;
-    let mut accuracy = 0.0;
-    let mut round = 0;
-    while accuracy < target && round < cfg.max_rounds {
-        round += 1;
-        let participants =
-            cfg.selector.select(engine.client_sizes(), cfg.m0, &mut rng);
-        let sizes: Vec<usize> =
-            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
-        let outcome = engine.run_round(&participants, e)?;
-        accuracy = outcome.accuracy;
-        cum.add(&cost_model.round_costs(&sizes, e));
-        trace.push(RoundRecord {
-            round,
-            m: cfg.m0,
-            e,
-            accuracy,
-            train_loss: outcome.train_loss,
-            costs: cum,
-            fedtune_activated: false,
-        });
-    }
-    Ok(SingleRun {
-        rounds: round,
-        final_accuracy: accuracy,
-        costs: cum,
-        final_m: cfg.m0,
-        final_e: e,
-        trace,
-    })
 }
 
 #[cfg(test)]
@@ -850,7 +755,7 @@ mod tests {
     }
 
     #[test]
-    fn fractional_e_runs_and_rejects_fedtune() {
+    fn fractional_e_runs_fixed_and_tuned_cells() {
         let mut cfg = base_cfg();
         cfg.max_rounds = 60_000;
         let g = Grid::new(cfg.clone()).e0s(&[0.5]).seeds(&[7]);
@@ -860,9 +765,14 @@ mod tests {
         assert_eq!(run.final_e, 0.5);
         assert!(run.costs.all_nonneg() && run.costs.is_finite());
 
+        // FedTune from a fractional E₀ is first-class now: the grid runs
+        // it through the coordinator and the floor holds.
         cfg.preference = Some(Preference::new(1.0, 0.0, 0.0, 0.0).unwrap());
-        let bad = Grid::new(cfg).e0s(&[0.5]).seeds(&[7]);
-        assert!(bad.run().is_err(), "fractional E + FedTune must be rejected");
+        cfg.max_rounds = 2000;
+        let tuned = Grid::new(cfg.clone()).e0s(&[0.5]).seeds(&[7]).run().unwrap();
+        let trun = &tuned.cells[0].runs[0];
+        assert!(trun.final_e >= cfg.e_floor, "E broke the floor: {}", trun.final_e);
+        assert!(trun.costs.is_finite());
     }
 
     #[test]

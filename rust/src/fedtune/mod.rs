@@ -21,6 +21,15 @@
 //! 6. **Decision** (Eqs. 10–11, lines 26–36): ΔM and ΔE combine the four
 //!    weighted slope terms with the Table 3 signs; M and E move ±1.
 //!
+//! E is carried as an `f64` throughout: the paper's sub-integer training
+//! passes (E = 0.5, §3.2) are first-class, so a run may *start from* a
+//! fractional E₀ or *descend to* one. The descent is floored at
+//! [`FedTuneConfig::e_min`] (default 0.5). Setting the floor to 1.0
+//! reproduces the classical integer behavior bit-for-bit — ±1.0 moves on
+//! whole numbers stay whole and the clamp can only land on 1; under the
+//! default 0.5 floor, a descent that reaches E = 1 continues to 0.5, so
+//! default-config tuned runs may leave the integer grid by design.
+//!
 //! The controller is engine-agnostic: it sees only (accuracy, cumulative
 //! Costs) and emits (M, E) — identical over the simulator and the real
 //! PJRT engine. Its own compute cost is a few dozen multiply-adds per
@@ -45,8 +54,12 @@ pub struct FedTuneConfig {
     pub penalty: f64,
     pub m_min: usize,
     pub m_max: usize,
-    pub e_min: usize,
-    pub e_max: usize,
+    /// E floor: the controller never moves E below this. Fractional
+    /// values are first-class (the paper's E = 0.5, §3.2); the default
+    /// 0.5 lets a descent reach half-passes, while 1.0 reproduces the
+    /// classical integer floor.
+    pub e_min: f64,
+    pub e_max: f64,
 }
 
 impl FedTuneConfig {
@@ -56,9 +69,9 @@ impl FedTuneConfig {
             penalty: 10.0,
             m_min: 1,
             m_max: num_clients,
-            e_min: 1,
+            e_min: 0.5,
             // The paper lets E grow freely (traces reach ~49); cap safely.
-            e_max: 256,
+            e_max: 256.0,
         }
     }
 
@@ -72,7 +85,10 @@ impl FedTuneConfig {
         if self.m_min < 1 || self.m_min > self.m_max {
             return Err(format!("bad M bounds [{}, {}]", self.m_min, self.m_max));
         }
-        if self.e_min < 1 || self.e_min > self.e_max {
+        if !self.e_min.is_finite() || !self.e_max.is_finite() {
+            return Err("E bounds must be finite".into());
+        }
+        if self.e_min <= 0.0 || self.e_min > self.e_max {
             return Err(format!("bad E bounds [{}, {}]", self.e_min, self.e_max));
         }
         Ok(())
@@ -84,7 +100,9 @@ impl FedTuneConfig {
 pub struct Decision {
     pub round: usize,
     pub m: usize,
-    pub e: usize,
+    /// Local pass count after the move — fractional once a descent
+    /// crosses below 1 (floored at [`FedTuneConfig::e_min`]).
+    pub e: f64,
     pub delta_m: f64,
     pub delta_e: f64,
     /// Eq. 6 comparison of (prv, cur) — positive means the last move was bad.
@@ -99,9 +117,9 @@ pub struct FedTune {
     cfg: FedTuneConfig,
 
     m_cur: usize,
-    e_cur: usize,
+    e_cur: f64,
     m_prv: usize,
-    e_prv: usize,
+    e_prv: f64,
 
     /// Accuracy at the last activation.
     a_prv: f64,
@@ -123,12 +141,17 @@ pub struct FedTune {
 }
 
 impl FedTune {
-    pub fn new(pref: Preference, cfg: FedTuneConfig, m0: usize, e0: usize) -> Result<FedTune, String> {
+    pub fn new(
+        pref: Preference,
+        cfg: FedTuneConfig,
+        m0: usize,
+        e0: f64,
+    ) -> Result<FedTune, String> {
         cfg.validate()?;
         if !(cfg.m_min..=cfg.m_max).contains(&m0) {
             return Err(format!("M0 = {m0} outside [{}, {}]", cfg.m_min, cfg.m_max));
         }
-        if !(cfg.e_min..=cfg.e_max).contains(&e0) {
+        if !e0.is_finite() || !(cfg.e_min..=cfg.e_max).contains(&e0) {
             return Err(format!("E0 = {e0} outside [{}, {}]", cfg.e_min, cfg.e_max));
         }
         Ok(FedTune {
@@ -153,7 +176,7 @@ impl FedTune {
         self.m_cur
     }
 
-    pub fn e(&self) -> usize {
+    pub fn e(&self) -> f64 {
         self.e_cur
     }
 
@@ -287,7 +310,9 @@ impl FedTune {
             delta_e += SIGN_E[i] * w[i] * self.zeta[i] * diff_cur[i] / denom;
         }
 
-        // Lines 28–36: move each hyper-parameter by one, clamped.
+        // Lines 28–36: move each hyper-parameter by one, clamped. E is
+        // fractional: a descent from 1 lands on the configured floor
+        // (default 0.5) instead of freezing at the integer 1.
         self.m_prv = self.m_cur;
         self.e_prv = self.e_cur;
         self.m_cur = if delta_m > 0.0 {
@@ -296,9 +321,9 @@ impl FedTune {
             self.m_cur.saturating_sub(1).max(self.cfg.m_min)
         };
         self.e_cur = if delta_e > 0.0 {
-            (self.e_cur + 1).min(self.cfg.e_max)
+            (self.e_cur + 1.0).min(self.cfg.e_max)
         } else {
-            self.e_cur.saturating_sub(1).max(self.cfg.e_min)
+            (self.e_cur - 1.0).max(self.cfg.e_min)
         };
 
         // Line 39: rotate history.
@@ -329,8 +354,10 @@ mod tests {
         Preference::new(a, b, g, d).unwrap()
     }
 
+    /// Integer floor (e_min = 1.0) so the legacy integral trajectories
+    /// below stay exact; the fractional floor has its own tests.
     fn cfg() -> FedTuneConfig {
-        FedTuneConfig { eps: 0.01, penalty: 10.0, m_min: 1, m_max: 100, e_min: 1, e_max: 256 }
+        FedTuneConfig { eps: 0.01, penalty: 10.0, m_min: 1, m_max: 100, e_min: 1.0, e_max: 256.0 }
     }
 
     fn cum(t: f64, q: f64, z: f64, v: f64) -> Costs {
@@ -339,10 +366,10 @@ mod tests {
 
     #[test]
     fn no_activation_below_eps() {
-        let mut ft = FedTune::new(pref(0.25, 0.25, 0.25, 0.25), cfg(), 20, 20).unwrap();
+        let mut ft = FedTune::new(pref(0.25, 0.25, 0.25, 0.25), cfg(), 20, 20.0).unwrap();
         assert!(ft.observe_round(1, 0.005, cum(1.0, 1.0, 1.0, 1.0)).is_none());
         assert_eq!(ft.activations(), 0);
-        assert_eq!((ft.m(), ft.e()), (20, 20));
+        assert_eq!((ft.m(), ft.e()), (20, 20.0));
     }
 
     #[test]
@@ -350,7 +377,7 @@ mod tests {
         // Alg. 1 line 13: "improved by at least ε" — the boundary counts.
         // ε = 0.5 keeps the float arithmetic exact.
         let c = FedTuneConfig { eps: 0.5, ..cfg() };
-        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 20).unwrap();
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 20.0).unwrap();
         // Warm-up activation at gain == ε exactly.
         assert!(ft.observe_round(1, 0.5, cum(1.0, 1.0, 1.0, 1.0)).is_none());
         assert_eq!(ft.activations(), 1);
@@ -359,7 +386,7 @@ mod tests {
         assert!(d.is_some(), "gain == eps must activate");
         assert_eq!(ft.activations(), 2);
         // Just below ε must not activate.
-        let mut below = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 20).unwrap();
+        let mut below = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 20.0).unwrap();
         assert!(below
             .observe_round(1, 0.499_999_9, cum(1.0, 1.0, 1.0, 1.0))
             .is_none());
@@ -368,15 +395,15 @@ mod tests {
 
     #[test]
     fn first_activation_warms_up_without_moving() {
-        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20).unwrap();
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20.0).unwrap();
         assert!(ft.observe_round(1, 0.05, cum(10.0, 1.0, 10.0, 20.0)).is_none());
         assert_eq!(ft.activations(), 1);
-        assert_eq!((ft.m(), ft.e()), (20, 20));
+        assert_eq!((ft.m(), ft.e()), (20, 20.0));
     }
 
     #[test]
     fn second_activation_moves_by_one() {
-        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20).unwrap();
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 20.0).unwrap();
         ft.observe_round(1, 0.05, cum(10.0, 1.0, 10.0, 20.0));
         let d = ft
             .observe_round(2, 0.10, cum(30.0, 2.0, 20.0, 40.0))
@@ -386,19 +413,19 @@ mod tests {
             "M must move by exactly 1, got {}",
             d.m
         );
-        assert!((d.e as i64 - 20).abs() == 1);
+        assert!((d.e - 20.0).abs() == 1.0);
     }
 
     #[test]
     fn bounds_are_respected() {
-        let c = FedTuneConfig { m_min: 1, m_max: 2, e_min: 1, e_max: 2, ..cfg() };
-        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 1, 1).unwrap();
+        let c = FedTuneConfig { m_min: 1, m_max: 2, e_min: 1.0, e_max: 2.0, ..cfg() };
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 1, 1.0).unwrap();
         let mut cumc = Costs::ZERO;
         for r in 1..50 {
             cumc.add(&cum(5.0, 1.0, 5.0, 1.0));
             ft.observe_round(r, 0.02 * r as f64, cumc);
             assert!((1..=2).contains(&ft.m()), "M escaped bounds: {}", ft.m());
-            assert!((1..=2).contains(&ft.e()), "E escaped bounds: {}", ft.e());
+            assert!((1.0..=2.0).contains(&ft.e()), "E escaped bounds: {}", ft.e());
         }
     }
 
@@ -407,8 +434,53 @@ mod tests {
         assert!(FedTuneConfig { eps: 0.0, ..cfg() }.validate().is_err());
         assert!(FedTuneConfig { penalty: 0.5, ..cfg() }.validate().is_err());
         assert!(FedTuneConfig { m_min: 5, m_max: 2, ..cfg() }.validate().is_err());
+        assert!(FedTuneConfig { e_min: 0.0, ..cfg() }.validate().is_err());
+        assert!(FedTuneConfig { e_min: f64::NAN, ..cfg() }.validate().is_err());
+        assert!(FedTuneConfig { e_min: 5.0, e_max: 2.0, ..cfg() }.validate().is_err());
         assert!(cfg().validate().is_ok());
-        assert!(FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 500, 20).is_err());
+        assert!(FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 500, 20.0).is_err());
+        // E0 below the configured floor is rejected up front.
+        assert!(FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, 0.5).is_err());
+        assert!(FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 20, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn fractional_floor_allows_descent_below_one() {
+        // Default paper floor (0.5): a sustained E-descent crosses the
+        // old integer floor and pins at the half-pass, never below.
+        let c = FedTuneConfig { e_min: 0.5, ..cfg() };
+        // Pure CompT dislikes large E (Table 3: SIGN_E[0] = −1).
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), c, 20, 2.0).unwrap();
+        let mut cumc = Costs::ZERO;
+        let mut seen_half = false;
+        for r in 1..60 {
+            // Normalized CompT keeps worsening → E keeps descending.
+            cumc.add(&cum(10.0 * r as f64, 1.0, 1.0, 1.0));
+            ft.observe_round(r, 0.02 * r as f64, cumc);
+            assert!(ft.e() >= 0.5, "E fell below the floor: {}", ft.e());
+            if ft.e() == 0.5 {
+                seen_half = true;
+            }
+        }
+        assert!(seen_half, "descent never reached the fractional floor");
+    }
+
+    #[test]
+    fn fractional_e0_is_accepted_and_tuned() {
+        // Starting from the paper's E₀ = 0.5 the controller runs and
+        // moves E in ±1.0 steps on the half-grid (0.5, 1.5, 2.5, ...).
+        let c = FedTuneConfig { e_min: 0.5, ..cfg() };
+        let mut ft = FedTune::new(pref(0.0, 0.0, 0.0, 1.0), c, 20, 0.5).unwrap();
+        let mut cumc = Costs::ZERO;
+        for r in 1..40 {
+            cumc.add(&cum(1.0, 1.0, 1.0, 1.0 + r as f64));
+            ft.observe_round(r, 0.03 * r as f64, cumc);
+        }
+        assert!(ft.activations() > 1, "fractional E0 must not block activation");
+        assert!((ft.e() - 0.5).fract().abs() < 1e-12, "E left the half-grid: {}", ft.e());
+        for d in ft.decisions() {
+            assert!(d.e >= 0.5 && d.e <= 256.0);
+        }
     }
 
     #[test]
@@ -416,7 +488,7 @@ mod tests {
         // Construct a stream where growing M visibly reduces normalized
         // CompT; the controller should keep pushing M up (Table 3: CompT
         // prefers larger M).
-        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 10, 10).unwrap();
+        let mut ft = FedTune::new(pref(1.0, 0.0, 0.0, 0.0), cfg(), 10, 10.0).unwrap();
         let mut cumc = Costs::ZERO;
         let mut acc = 0.0;
         for r in 1..60 {
@@ -431,7 +503,7 @@ mod tests {
 
     #[test]
     fn decisions_are_recorded() {
-        let mut ft = FedTune::new(pref(0.25, 0.25, 0.25, 0.25), cfg(), 20, 20).unwrap();
+        let mut ft = FedTune::new(pref(0.25, 0.25, 0.25, 0.25), cfg(), 20, 20.0).unwrap();
         let mut cumc = Costs::ZERO;
         for r in 1..10 {
             cumc.add(&cum(1.0 + r as f64, 1.0, 1.0, 1.0));
@@ -439,7 +511,7 @@ mod tests {
         }
         assert_eq!(ft.decisions().len(), ft.activations() - 1);
         for d in ft.decisions() {
-            assert!(d.m >= 1 && d.e >= 1);
+            assert!(d.m >= 1 && d.e >= 1.0);
             assert!(d.comparison.is_finite());
         }
     }
@@ -447,7 +519,7 @@ mod tests {
     #[test]
     fn slopes_stay_bounded_under_penalty_streak() {
         let c = cfg();
-        let mut ft = FedTune::new(pref(0.0, 0.0, 1.0, 0.0), c, 20, 20).unwrap();
+        let mut ft = FedTune::new(pref(0.0, 0.0, 1.0, 0.0), c, 20, 20.0).unwrap();
         let mut cumc = Costs::ZERO;
         for r in 1..200 {
             // Erratic costs force many bad comparisons → many penalties.

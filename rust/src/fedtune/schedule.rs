@@ -2,7 +2,29 @@
 //!
 //! The coordinator is agnostic to which one drives a run — the paper's
 //! baseline ("the practice of using fixed M and E", §5.1) is just the
-//! `Fixed` variant.
+//! `Fixed` variant. E is an `f64` end-to-end, so the paper's fractional
+//! pass counts (E = 0.5, §3.2) flow through [`crate::coordinator::Server`]
+//! exactly like integer ones:
+//!
+//! ```
+//! use fedtune::fedtune::schedule::Schedule;
+//! use fedtune::overhead::Costs;
+//!
+//! let mut half_pass = Schedule::Fixed { m: 20, e: 0.5 };
+//! assert_eq!(half_pass.current(), (20, 0.5));
+//! // Fixed schedules never react to round feedback...
+//! assert!(half_pass.observe_round(1, 0.42, Costs::ZERO).is_none());
+//! assert!(!half_pass.is_tuned());
+//!
+//! // ...while a tuned schedule wraps the FedTune controller.
+//! use fedtune::fedtune::{FedTune, FedTuneConfig};
+//! use fedtune::overhead::Preference;
+//! let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+//! let ft = FedTune::new(pref, FedTuneConfig::paper_defaults(100), 20, 20.0).unwrap();
+//! let tuned = Schedule::Tuned(Box::new(ft));
+//! assert!(tuned.is_tuned());
+//! assert_eq!(tuned.current(), (20, 20.0));
+//! ```
 
 use crate::overhead::Costs;
 
@@ -11,14 +33,15 @@ use super::{Decision, FedTune};
 /// What sets (M, E) each round.
 #[derive(Debug, Clone)]
 pub enum Schedule {
-    /// The paper's baseline: constants for the whole run.
-    Fixed { m: usize, e: usize },
+    /// The paper's baseline: constants for the whole run. `e` may be
+    /// fractional (the paper's E = 0.5).
+    Fixed { m: usize, e: f64 },
     /// FedTune (Algorithm 1).
     Tuned(Box<FedTune>),
 }
 
 impl Schedule {
-    pub fn current(&self) -> (usize, usize) {
+    pub fn current(&self) -> (usize, f64) {
         match self {
             Schedule::Fixed { m, e } => (*m, *e),
             Schedule::Tuned(ft) => (ft.m(), ft.e()),
@@ -58,7 +81,7 @@ mod tests {
 
     #[test]
     fn fixed_never_moves() {
-        let mut s = Schedule::Fixed { m: 20, e: 20 };
+        let mut s = Schedule::Fixed { m: 20, e: 20.0 };
         for r in 0..10 {
             let d = s.observe_round(
                 r,
@@ -66,18 +89,26 @@ mod tests {
                 Costs { comp_t: r as f64, trans_t: 1.0, comp_l: 1.0, trans_l: 1.0 },
             );
             assert!(d.is_none());
-            assert_eq!(s.current(), (20, 20));
+            assert_eq!(s.current(), (20, 20.0));
         }
         assert!(!s.is_tuned());
+    }
+
+    #[test]
+    fn fixed_carries_fractional_e() {
+        let mut s = Schedule::Fixed { m: 10, e: 0.5 };
+        assert_eq!(s.current(), (10, 0.5));
+        assert!(s.observe_round(1, 0.5, Costs::ZERO).is_none());
+        assert_eq!(s.current(), (10, 0.5));
     }
 
     #[test]
     fn tuned_delegates() {
         let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
         let ft =
-            FedTune::new(pref, FedTuneConfig::paper_defaults(100), 20, 20).unwrap();
+            FedTune::new(pref, FedTuneConfig::paper_defaults(100), 20, 20.0).unwrap();
         let mut s = Schedule::Tuned(Box::new(ft));
-        assert_eq!(s.current(), (20, 20));
+        assert_eq!(s.current(), (20, 20.0));
         assert!(s.is_tuned());
         let mut cum = Costs::ZERO;
         for r in 1..20 {

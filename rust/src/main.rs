@@ -73,10 +73,11 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("aggregator", "fedavg", "fedavg|fednova|fedadagrad")
         .opt("engine", "sim", "sim|real")
         .opt("m0", "20", "initial participants per round")
-        .opt("e0", "20", "initial local passes")
+        .opt("e0", "20", "initial local passes (fractional allowed, e.g. 0.5)")
         .opt("preference", "", "alpha,beta,gamma,delta (empty = fixed baseline)")
         .opt("eps", "0.01", "FedTune activation threshold")
         .opt("penalty", "10", "FedTune penalty factor D")
+        .opt("e-floor", "0.5", "minimum E FedTune may descend to (1 = classical integer floor)")
         .opt("target", "0", "target accuracy (0 = dataset default)")
         .opt("max-rounds", "20000", "round cap")
         .opt("lr", "0.05", "client learning rate (real engine)")
@@ -108,6 +109,7 @@ fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
     cfg.e0 = cli.get("e0").map_err(anyhow::Error::msg)?;
     cfg.eps = cli.get("eps").map_err(anyhow::Error::msg)?;
     cfg.penalty = cli.get("penalty").map_err(anyhow::Error::msg)?;
+    cfg.e_floor = cli.get("e-floor").map_err(anyhow::Error::msg)?;
     cfg.target_accuracy = cli.get("target").map_err(anyhow::Error::msg)?;
     cfg.max_rounds = cli.get("max-rounds").map_err(anyhow::Error::msg)?;
     cfg.lr = cli.get("lr").map_err(anyhow::Error::msg)?;
@@ -199,6 +201,7 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
             let ft_cfg = FedTuneConfig {
                 eps: cfg.eps,
                 penalty: cfg.penalty,
+                e_min: cfg.e_floor,
                 ..FedTuneConfig::paper_defaults(num_clients)
             };
             Schedule::Tuned(Box::new(
@@ -399,11 +402,25 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
         match RunStore::stats(std::path::Path::new(&cache_dir)) {
             Ok(s) => {
                 println!("\n== run cache ({cache_dir}) ==");
+                println!(
+                    "  schema: {} / {}",
+                    fedtune::store::RUN_SCHEMA,
+                    fedtune::store::JOURNAL_SCHEMA
+                );
                 println!("  {:>6} run records   {:>12} bytes", s.run_entries, s.run_bytes);
                 println!(
                     "  {:>6} sweep journals {:>12} bytes",
                     s.journals, s.journal_bytes
                 );
+                if s.stale_runs > 0 || s.stale_journals > 0 {
+                    println!(
+                        "  {:>6} stale-schema records, {} stale journals — these \
+                         always miss and will re-run + heal on the next sweep",
+                        s.stale_runs, s.stale_journals
+                    );
+                } else {
+                    println!("  all records carry the current schema");
+                }
             }
             Err(e) => println!("\n(run cache stats unavailable for {cache_dir}: {e:#})"),
         }

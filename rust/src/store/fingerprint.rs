@@ -2,28 +2,28 @@
 //! run store.
 //!
 //! A run's identity is everything that determines its outcome: the
-//! canonical config JSON (with the **true** fractional E, not the
-//! integer `cfg.e0` the schedule validator sees), the seed, the resolved
-//! cost constants C1..C4, and a schema version. [`run_identity`] builds
-//! that JSON; [`run_fingerprint`] hashes its compact serialization with
-//! an in-repo FNV-1a 128-bit hasher (DESIGN.md §2: no new dependencies)
-//! into a stable 32-hex-digit [`Fingerprint`].
+//! canonical config JSON (`cfg.e0` is the true, possibly fractional pass
+//! count — the paper's E = 0.5 is an ordinary config value), the seed,
+//! the resolved cost constants C1..C4, and a schema version.
+//! [`run_identity`] builds that JSON; [`run_fingerprint`] hashes its
+//! compact serialization with an in-repo FNV-1a 128-bit hasher
+//! (DESIGN.md §2: no new dependencies) into a stable 32-hex-digit
+//! [`Fingerprint`].
 //!
-//! Two canonicalization rules matter for deduplication:
-//!
-//! * **True E.** `experiment::runner::cell_config` writes `ceil(e)` into
-//!   `cfg.e0` so the integer validator passes; keying on that JSON would
-//!   collide the paper's E = 0.5 with E = 1.0. The fingerprint therefore
-//!   takes `e: f64` separately and ignores `cfg.e0`.
-//! * **FedTune-only knobs.** A fixed-(M, E) run never reads `eps`, the
-//!   penalty factor D, or a preference, so those fields are omitted when
-//!   `cfg.preference` is `None` — every baseline request inside a sweep
-//!   (one per tuned cell per seed under `compare_baseline`, one per
-//!   penalty on a Fig. 8-style D axis) keys to the same record.
+//! One canonicalization rule matters for deduplication:
+//! **FedTune-only knobs.** A fixed-(M, E) run never reads `eps`, the
+//! penalty factor D, the E floor, or a preference, so those fields are
+//! omitted when `cfg.preference` is `None` — every baseline request
+//! inside a sweep (one per tuned cell per seed under `compare_baseline`,
+//! one per penalty on a Fig. 8-style D axis) keys to the same record.
 //!
 //! Invalidation is by schema bump: changing what a run means (engine
 //! semantics, record layout) must bump [`FINGERPRINT_VERSION`], which
 //! changes every key and orphans — never corrupts — old cache entries.
+//! Version 2 unified fractional E: identity keys on `cfg.e0` directly
+//! (v1 carried a side-channel "true E" argument) and tuned runs may
+//! start from or descend to fractional E, so every v1 record is a clean
+//! miss that re-runs and heals.
 
 use std::fmt;
 
@@ -33,8 +33,9 @@ use crate::util::json::Json;
 
 /// Version of the fingerprint identity layout. Bump on any change to
 /// [`run_identity`] or to run semantics; old cache entries then simply
-/// never match again.
-pub const FINGERPRINT_VERSION: u64 = 1;
+/// never match again. v2 = unified fractional E (`e` comes from
+/// `cfg.e0`; tuned runs carry an `e_floor`).
+pub const FINGERPRINT_VERSION: u64 = 2;
 
 /// A 128-bit content hash, printed as 32 lowercase hex digits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -76,13 +77,9 @@ impl fmt::Display for Fingerprint {
 
 /// The canonical identity JSON of one engine run (see module docs for
 /// the canonicalization rules). Keys serialize sorted, so the compact
-/// dump is a stable byte string.
-pub fn run_identity(
-    cfg: &ExperimentConfig,
-    e: f64,
-    seed: u64,
-    cost_model: &CostModel,
-) -> Json {
+/// dump is a stable byte string. `seed` is explicit because a sweep
+/// fans one config out over many seeds.
+pub fn run_identity(cfg: &ExperimentConfig, seed: u64, cost_model: &CostModel) -> Json {
     let mut j = Json::from_pairs(vec![
         ("v", FINGERPRINT_VERSION.into()),
         (
@@ -100,7 +97,7 @@ pub fn run_identity(
         ("aggregator", format!("{:?}", cfg.aggregator).into()),
         ("selector", format!("{:?}", cfg.selector).into()),
         ("m0", cfg.m0.into()),
-        ("e", e.into()),
+        ("e", cfg.e0.into()),
         ("seed", seed.into()),
         ("scale", cfg.scale.into()),
         ("target_accuracy", cfg.target_accuracy.into()),
@@ -130,6 +127,7 @@ pub fn run_identity(
         );
         j.set("eps", cfg.eps.into());
         j.set("penalty", cfg.penalty.into());
+        j.set("e_floor", cfg.e_floor.into());
     }
     j
 }
@@ -138,11 +136,10 @@ pub fn run_identity(
 /// [`run_identity`] dump.
 pub fn run_fingerprint(
     cfg: &ExperimentConfig,
-    e: f64,
     seed: u64,
     cost_model: &CostModel,
 ) -> Fingerprint {
-    Fingerprint::of_bytes(run_identity(cfg, e, seed, cost_model).dump().as_bytes())
+    Fingerprint::of_bytes(run_identity(cfg, seed, cost_model).dump().as_bytes())
 }
 
 #[cfg(test)]
@@ -177,61 +174,58 @@ mod tests {
     }
 
     #[test]
-    fn fractional_e_does_not_collide_with_its_ceiling() {
-        // Regression: cell_config writes ceil(e) into cfg.e0, so a cache
-        // keyed on the config JSON alone would collide E = 0.5 with
-        // E = 1.0. The fingerprint must carry the true fractional E.
-        let mut c = cfg();
-        c.e0 = 1; // what cell_config stores for both E = 0.5 and E = 1.0
-        let half = run_fingerprint(&c, 0.5, 7, &cm());
-        let whole = run_fingerprint(&c, 1.0, 7, &cm());
-        assert_ne!(half, whole, "E = 0.5 and E = 1.0 must key differently");
+    fn fractional_e_keys_differently_from_whole_e() {
+        // E = 0.5 and E = 1.0 are different physics and must never share
+        // a cache record. v2 keys directly on cfg.e0 — no side-channel.
+        let mut half = cfg();
+        half.e0 = 0.5;
+        let mut whole = cfg();
+        whole.e0 = 1.0;
+        assert_ne!(
+            run_fingerprint(&half, 7, &cm()),
+            run_fingerprint(&whole, 7, &cm()),
+            "E = 0.5 and E = 1.0 must key differently"
+        );
     }
 
     #[test]
     fn baseline_ignores_fedtune_only_knobs() {
-        // A fixed-(M, E) run never reads eps/penalty/preference, so those
-        // must not split the key (this is the shared-baseline dedup rule).
+        // A fixed-(M, E) run never reads eps/penalty/e_floor/preference,
+        // so those must not split the key (shared-baseline dedup rule).
         let mut a = cfg();
         let mut b = cfg();
         a.penalty = 1.0;
         b.penalty = 10.0;
         b.eps = 0.05;
-        assert_eq!(
-            run_fingerprint(&a, 20.0, 1, &cm()),
-            run_fingerprint(&b, 20.0, 1, &cm())
-        );
+        b.e_floor = 1.0;
+        assert_eq!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&b, 1, &cm()));
         // ...but with a preference set they are real FedTune inputs.
         let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
         a.preference = Some(pref);
         b.preference = Some(pref);
-        assert_ne!(
-            run_fingerprint(&a, 20.0, 1, &cm()),
-            run_fingerprint(&b, 20.0, 1, &cm())
-        );
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&b, 1, &cm()));
+        // The E floor alone splits tuned keys too (it changes descents).
+        let mut c = a.clone();
+        c.e_floor = 1.0;
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&c, 1, &cm()));
     }
 
     #[test]
     fn seed_and_cost_model_split_keys() {
         let c = cfg();
-        assert_ne!(
-            run_fingerprint(&c, 20.0, 1, &cm()),
-            run_fingerprint(&c, 20.0, 2, &cm())
-        );
+        assert_ne!(run_fingerprint(&c, 1, &cm()), run_fingerprint(&c, 2, &cm()));
         let paper = CostModel::from_flops_params(12_500_000, 79_700);
-        assert_ne!(
-            run_fingerprint(&c, 20.0, 1, &cm()),
-            run_fingerprint(&c, 20.0, 1, &paper)
-        );
+        assert_ne!(run_fingerprint(&c, 1, &cm()), run_fingerprint(&c, 1, &paper));
     }
 
     #[test]
     fn identity_is_stable_json() {
-        let c = cfg();
-        let d1 = run_identity(&c, 0.5, 3, &cm()).dump();
-        let d2 = run_identity(&c, 0.5, 3, &cm()).dump();
+        let mut c = cfg();
+        c.e0 = 0.5;
+        let d1 = run_identity(&c, 3, &cm()).dump();
+        let d2 = run_identity(&c, 3, &cm()).dump();
         assert_eq!(d1, d2);
-        assert!(d1.contains("\"v\":1"));
+        assert!(d1.contains("\"v\":2"));
         assert!(d1.contains("\"e\":0.5"));
     }
 }

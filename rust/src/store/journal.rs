@@ -9,14 +9,19 @@
 //! — still emits a `fedtune.experiment.grid/v1` artifact byte-identical
 //! to an uninterrupted sweep.
 //!
-//! # File format (`fedtune.store.journal/v1`)
+//! # File format (`fedtune.store.journal/v2`)
 //!
 //! ```text
-//! {"schema":"fedtune.store.journal/v1","sweep":"<32 hex>"}   // header
+//! {"schema":"fedtune.store.journal/v2","sweep":"<32 hex>"}   // header
 //! {"cell":0,"seed":101,"record":{...}}                       // one per pair
 //! {"cell":0,"seed":202,"record":{...}}
 //! ...
 //! ```
+//!
+//! v2 accompanies the fractional-E unification (run identities changed,
+//! so every v1 journal describes runs that no longer exist): a v1 header
+//! fails the schema check below and the journal replays as empty — the
+//! sweep simply re-runs.
 //!
 //! The filename embeds the **sweep fingerprint** (a hash over the
 //! ordered per-pair run fingerprints, the seed list and the sweep
@@ -38,7 +43,7 @@ use crate::util::json::Json;
 use super::fingerprint::Fingerprint;
 
 /// Schema identifier in the journal header line.
-pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v1";
+pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v2";
 
 /// One replayed journal line: a finished `(cell, seed)` run record.
 #[derive(Debug, Clone)]
@@ -212,6 +217,25 @@ mod tests {
         let other = Fingerprint::of_bytes(b"sweep-c");
         let (_j, prior) = SweepJournal::open(&path, &other, true).unwrap();
         assert!(prior.is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_schema_journals_replay_empty() {
+        // A journal written before the fractional-E unification carries
+        // the v1 header; its runs no longer exist under v2 identities,
+        // so resume must start from scratch instead of replaying them.
+        let path = tmp("v1_stale");
+        let sweep = Fingerprint::of_bytes(b"sweep-v1");
+        {
+            let (mut j, _) = SweepJournal::open(&path, &sweep, false).unwrap();
+            j.append(0, 1, &record(1)).unwrap();
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace(JOURNAL_SCHEMA, "fedtune.store.journal/v1"))
+            .unwrap();
+        let (_j, prior) = SweepJournal::open(&path, &sweep, true).unwrap();
+        assert!(prior.is_empty(), "v1 journal must not replay under v2");
         let _ = fs::remove_file(&path);
     }
 

@@ -7,12 +7,12 @@
 //! cell per seed. This module makes all of that repetition free:
 //!
 //! * [`fingerprint`] — hashes a run's full identity (canonical config
-//!   JSON with the **true** fractional E, seed, cost constants, schema
-//!   version) into a stable hex [`Fingerprint`] with an in-repo FNV-1a
-//!   128-bit hasher. Identical runs — across cells, penalties, figures,
-//!   or whole processes — share one key.
+//!   JSON — `e0` is fractional and first-class — plus seed, cost
+//!   constants, schema version) into a stable hex [`Fingerprint`] with
+//!   an in-repo FNV-1a 128-bit hasher. Identical runs — across cells,
+//!   penalties, figures, or whole processes — share one key.
 //! * [`run_store`] — a two-tier (memory + disk) [`RunStore`] persisting
-//!   one `fedtune.store.run/v1` JSON record per key under a cache
+//!   one `fedtune.store.run/v2` JSON record per key under a cache
 //!   directory, with lossless [`crate::experiment::RunRecord`]
 //!   round-trips and miss-on-corruption semantics.
 //! * [`journal`] — a per-sweep append-only [`SweepJournal`] of finished

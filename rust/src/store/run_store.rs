@@ -1,22 +1,28 @@
 //! Two-tier content-addressed run store.
 //!
 //! The memory tier is a plain map that serves repeated lookups inside one
-//! process; the optional disk tier persists one `fedtune.store.run/v1`
+//! process; the optional disk tier persists one `fedtune.store.run/v2`
 //! JSON record per [`Fingerprint`] under `<cache-dir>/runs/<hex>.json`,
 //! so later sweeps (a figure regeneration, a resumed grid) reuse finished
 //! runs across processes.
 //!
-//! # Record schema (`fedtune.store.run/v1`)
+//! # Record schema (`fedtune.store.run/v2`)
 //!
 //! ```text
 //! {
-//!   "schema": "fedtune.store.run/v1",
+//!   "schema": "fedtune.store.run/v2",
 //!   "fingerprint": "<32 hex digits>",     // must match the filename key
-//!   "e": 0.5,                             // configured (true fractional) E
 //!   "record": { ...RunRecord...,          // experiment::runner layout
 //!               "trace": {"rounds": [...]} }   // only when kept
 //! }
 //! ```
+//!
+//! v2 accompanies the fractional-E unification: the run's pass count
+//! lives in the fingerprinted config (`e0: f64`), so the v1 side-channel
+//! `"e"` field is gone. v1 records are treated as stale-schema misses —
+//! they re-run and heal; `fedtune info --cache-dir` counts them
+//! ([`CacheStats::stale_runs`]) so operators can see why a warm cache
+//! re-executes.
 //!
 //! # Failure semantics
 //!
@@ -28,6 +34,7 @@
 
 use std::collections::HashMap;
 use std::fs;
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -39,7 +46,7 @@ use crate::util::json::Json;
 use super::fingerprint::Fingerprint;
 
 /// Schema identifier of one persisted run record.
-pub const RUN_SCHEMA: &str = "fedtune.store.run/v1";
+pub const RUN_SCHEMA: &str = "fedtune.store.run/v2";
 
 /// Name of the per-run subdirectory inside a cache dir.
 const RUNS_SUBDIR: &str = "runs";
@@ -51,10 +58,17 @@ pub struct CacheStats {
     pub run_entries: usize,
     /// Total bytes of those records.
     pub run_bytes: u64,
+    /// Run records whose schema tag is not the current [`RUN_SCHEMA`]
+    /// (older/newer version, or unparseable) — every one of these is a
+    /// guaranteed miss that will re-run and heal.
+    pub stale_runs: usize,
     /// Number of `journal-*.jsonl` sweep journals.
     pub journals: usize,
     /// Total bytes of those journals.
     pub journal_bytes: u64,
+    /// Journals whose header schema is not the current
+    /// [`super::JOURNAL_SCHEMA`] — their sweeps cannot resume from them.
+    pub stale_journals: usize,
 }
 
 /// In-memory + on-disk run cache keyed by [`Fingerprint`].
@@ -124,9 +138,9 @@ impl RunStore {
     /// [`RunStore::get`]s re-read via the disk tier) and only fall back
     /// to the memory tier if the write fails — keeping traces from being
     /// cloned twice on `keep_traces` sweeps; memory-only stores insert
-    /// directly. `e` is the configured true-fractional pass count,
-    /// stored alongside the record for auditability.
-    pub fn put(&mut self, fp: &Fingerprint, e: f64, record: &RunRecord) {
+    /// directly. The pass count needs no side-channel: it is part of the
+    /// fingerprinted config (`e0: f64`).
+    pub fn put(&mut self, fp: &Fingerprint, record: &RunRecord) {
         let path = match self.file(fp) {
             Some(p) => p,
             None => {
@@ -137,7 +151,6 @@ impl RunStore {
         let doc = Json::from_pairs(vec![
             ("schema", RUN_SCHEMA.into()),
             ("fingerprint", fp.hex().into()),
-            ("e", e.into()),
             ("record", run_record_json(record)),
         ]);
         // Compact dump: records are machine-parsed only, and pretty-
@@ -155,9 +168,18 @@ impl RunStore {
         }
     }
 
-    /// Disk statistics of a cache directory (both runs and journals).
+    /// Disk statistics of a cache directory (both runs and journals),
+    /// including how many entries carry a stale schema tag and therefore
+    /// can only ever miss under the current binary.
+    ///
+    /// Schema detection reads only a bounded slice of each file, never
+    /// the whole record: compact dumps sort their keys, so `"schema"` is
+    /// the *last* field of a run record (a `keep_traces` record can be
+    /// megabytes of trace before it) and the *first line* of a journal.
     pub fn stats(cache_dir: &Path) -> Result<CacheStats> {
         let mut s = CacheStats::default();
+        let run_tag = format!("\"schema\":{}", Json::from(RUN_SCHEMA).dump());
+        let journal_tag = format!("\"schema\":{}", Json::from(super::JOURNAL_SCHEMA).dump());
         let runs = cache_dir.join(RUNS_SUBDIR);
         if let Ok(iter) = fs::read_dir(&runs) {
             for entry in iter.flatten() {
@@ -166,6 +188,11 @@ impl RunStore {
                 if name.ends_with(".json") {
                     s.run_entries += 1;
                     s.run_bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+                    let current = read_tail(&entry.path(), 256)
+                        .is_some_and(|tail| tail.contains(&run_tag));
+                    if !current {
+                        s.stale_runs += 1;
+                    }
                 }
             }
         }
@@ -177,10 +204,37 @@ impl RunStore {
             if name.starts_with("journal-") && name.ends_with(".jsonl") {
                 s.journals += 1;
                 s.journal_bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+                let current = read_head(&entry.path(), 512)
+                    .is_some_and(|head| {
+                        head.lines().next().is_some_and(|l| l.contains(&journal_tag))
+                    });
+                if !current {
+                    s.stale_journals += 1;
+                }
             }
         }
         Ok(s)
     }
+}
+
+/// Read at most the last `n` bytes of a file (lossily decoded — the
+/// schema tags being matched are ASCII, so a split UTF-8 boundary at the
+/// slice start cannot corrupt them).
+fn read_tail(path: &Path, n: u64) -> Option<String> {
+    let mut f = fs::File::open(path).ok()?;
+    let len = f.metadata().ok()?.len();
+    f.seek(SeekFrom::Start(len.saturating_sub(n))).ok()?;
+    let mut buf = Vec::with_capacity(n as usize);
+    f.read_to_end(&mut buf).ok()?;
+    Some(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// Read at most the first `n` bytes of a file (lossily decoded).
+fn read_head(path: &Path, n: u64) -> Option<String> {
+    let f = fs::File::open(path).ok()?;
+    let mut buf = Vec::with_capacity(n as usize);
+    f.take(n).read_to_end(&mut buf).ok()?;
+    Some(String::from_utf8_lossy(&buf).into_owned())
 }
 
 /// Parse one on-disk record; any defect (bad JSON, wrong schema, wrong
@@ -240,7 +294,7 @@ mod tests {
         let mut s = RunStore::in_memory();
         let fp = Fingerprint::of_bytes(b"k1");
         assert!(s.get(&fp, false).is_none());
-        s.put(&fp, 0.5, &record(7, false));
+        s.put(&fp, &record(7, false));
         let back = s.get(&fp, false).expect("hit");
         assert_eq!(back.seed, 7);
         // A trace-demanding lookup must treat the trace-less record as a
@@ -257,7 +311,7 @@ mod tests {
         let rec = record(42, true);
         {
             let mut s = RunStore::open(&dir).unwrap();
-            s.put(&fp, 0.5, &rec);
+            s.put(&fp, &rec);
         }
         // Fresh store: memory tier empty, must come off disk.
         let mut s2 = RunStore::open(&dir).unwrap();
@@ -269,6 +323,7 @@ mod tests {
         );
         let stats = RunStore::stats(&dir).unwrap();
         assert_eq!(stats.run_entries, 1);
+        assert_eq!(stats.stale_runs, 0);
         assert!(stats.run_bytes > 0);
         let _ = fs::remove_dir_all(&dir);
     }
@@ -278,7 +333,7 @@ mod tests {
         let dir = tmp_dir("corrupt");
         let fp = Fingerprint::of_bytes(b"k3");
         let mut s = RunStore::open(&dir).unwrap();
-        s.put(&fp, 1.0, &record(1, false));
+        s.put(&fp, &record(1, false));
         let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
 
         // Truncated mid-JSON.
@@ -302,6 +357,32 @@ mod tests {
         fs::write(&path, full.replace(&fp.hex(), &other.hex())).unwrap();
         let mut fresh = RunStore::open(&dir).unwrap();
         assert!(fresh.get(&fp, false).is_none(), "key mismatch must miss");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_schema_records_are_stale_misses() {
+        // A record written by the pre-fractional-E store (v1 schema tag)
+        // must be a clean miss, and `stats` must count it as stale so
+        // `fedtune info` can explain why a "warm" cache re-runs.
+        let dir = tmp_dir("v1_stale");
+        let fp = Fingerprint::of_bytes(b"k4");
+        let mut s = RunStore::open(&dir).unwrap();
+        s.put(&fp, &record(5, false));
+        let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace(RUN_SCHEMA, "fedtune.store.run/v1")).unwrap();
+
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert!(fresh.get(&fp, false).is_none(), "v1 record must miss under v2");
+        let stats = RunStore::stats(&dir).unwrap();
+        assert_eq!(stats.run_entries, 1);
+        assert_eq!(stats.stale_runs, 1);
+
+        // Healing: a fresh put overwrites with the current schema.
+        fresh.put(&fp, &record(5, false));
+        let stats = RunStore::stats(&dir).unwrap();
+        assert_eq!(stats.stale_runs, 0);
         let _ = fs::remove_dir_all(&dir);
     }
 }

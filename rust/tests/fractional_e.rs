@@ -1,0 +1,208 @@
+//! Acceptance: the fractional-E unification (ISSUE 3).
+//!
+//! `coordinator::Server::run` is now the only round driver — the
+//! experiment runner's hand-kept fixed-fractional mirror of that loop
+//! is deleted. These tests pin the two equivalence contracts the
+//! deletion rests on, against a **verbatim copy of the deleted mirror**
+//! kept here as the reference implementation:
+//!
+//! 1. integral-E grids are unperturbed by the usize→f64 change — every
+//!    run record (and hence the `fedtune.experiment.grid/v1` artifact)
+//!    is byte-identical to what the old mirror computed;
+//! 2. E = 0.5 through the coordinator reproduces the old mirror's trace
+//!    bit-for-bit on the same seed.
+//!
+//! Plus the two new capabilities: FedTune from a fractional E₀ with a
+//! respected floor, and v1 store records degrading to clean misses.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::engine::FlEngine;
+use fedtune::experiment::runner::run_record_json;
+use fedtune::experiment::{Grid, RunRecord};
+use fedtune::overhead::{CostModel, Costs, Preference};
+use fedtune::trace::{RoundRecord, Trace};
+use fedtune::util::rng::Rng;
+
+/// The experiment runner's old fixed-fractional loop, verbatim: the
+/// hand-kept mirror of `coordinator::Server::run` for fixed schedules
+/// (same selector RNG stream `seed ^ 0xc00d`, stop conditions and cost
+/// accounting). It survives only here, as the reference the unified
+/// coordinator path is checked against.
+fn legacy_fixed_mirror(
+    cfg: &ExperimentConfig,
+    e: f64,
+    cost_model: CostModel,
+    seed: u64,
+) -> (usize, f64, Costs, Trace) {
+    let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
+    let target = cfg.target().unwrap();
+    let mut rng = Rng::new(seed ^ 0xc00d); // same stream as coordinator::Server
+    let mut trace = Trace::new();
+    let mut cum = Costs::ZERO;
+    let mut accuracy = 0.0;
+    let mut round = 0;
+    while accuracy < target && round < cfg.max_rounds {
+        round += 1;
+        let participants = cfg.selector.select(engine.client_sizes(), cfg.m0, &mut rng);
+        let sizes: Vec<usize> =
+            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
+        let outcome = engine.run_round(&participants, e).unwrap();
+        accuracy = outcome.accuracy;
+        cum.add(&cost_model.round_costs(&sizes, e));
+        trace.push(RoundRecord {
+            round,
+            m: cfg.m0,
+            e,
+            accuracy,
+            train_loss: outcome.train_loss,
+            costs: cum,
+            fedtune_activated: false,
+        });
+    }
+    (round, accuracy, cum, trace)
+}
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
+}
+
+/// Contract 1: the usize→f64 unification must not perturb integral-E
+/// results. Every fixed-schedule (cell, seed) run of an integral-E grid
+/// matches the legacy mirror bit-for-bit, so the emitted
+/// `fedtune.experiment.grid/v1` JSON is byte-identical to what the
+/// pre-refactor pipeline produced.
+#[test]
+fn integral_e_grid_records_match_legacy_mirror_bitwise() {
+    let grid = Grid::new(base())
+        .m0s(&[5, 20])
+        .e0s(&[1.0, 4.0])
+        .seeds(&[1, 2])
+        .keep_traces(true);
+    let result = grid.run().unwrap();
+    assert_eq!(result.cells.len(), 4);
+
+    for cell in &result.cells {
+        for run in &cell.runs {
+            let mut cfg = base();
+            cfg.m0 = cell.cell.m0;
+            cfg.e0 = cell.cell.e0;
+            cfg.seed = run.seed;
+            let cm = cfg.cost_model().unwrap();
+            let (rounds, final_accuracy, costs, trace) =
+                legacy_fixed_mirror(&cfg, cell.cell.e0, cm, run.seed);
+            let expected = RunRecord {
+                seed: run.seed,
+                rounds,
+                final_accuracy,
+                costs,
+                final_m: cfg.m0,
+                final_e: cell.cell.e0,
+                improvement_pct: None,
+                baseline_costs: None,
+                trace: Some(trace),
+            };
+            assert_eq!(
+                run_record_json(run).dump(),
+                run_record_json(&expected).dump(),
+                "cell [{}] seed {} drifted from the legacy mirror",
+                cell.cell.label(),
+                run.seed
+            );
+        }
+    }
+}
+
+/// Contract 2: the paper's E = 0.5 through `coordinator::Server::run`
+/// reproduces the old mirror's trace bit-for-bit on the same seed.
+#[test]
+fn coordinator_half_pass_trace_matches_legacy_mirror_bitwise() {
+    let mut cfg = base();
+    cfg.e0 = 0.5;
+    cfg.max_rounds = 60_000;
+    let cm = cfg.cost_model().unwrap();
+
+    let unified = baselines::run_sim(&cfg, 7).unwrap();
+    let (rounds, final_accuracy, costs, trace) = legacy_fixed_mirror(&cfg, 0.5, cm, 7);
+
+    assert_eq!(unified.rounds, rounds);
+    assert_eq!(unified.final_accuracy, final_accuracy);
+    assert_eq!(unified.costs, costs);
+    assert_eq!(unified.final_e, 0.5);
+    assert_eq!(
+        unified.trace.to_json().dump(),
+        trace.to_json().dump(),
+        "coordinator E = 0.5 trace must equal the old mirror's, bit for bit"
+    );
+}
+
+/// New capability: FedTune starting from the paper's fractional E₀
+/// activates and respects the configured E floor.
+#[test]
+fn fedtune_with_fractional_e0_activates_and_respects_floor() {
+    let mut cfg = base();
+    cfg.e0 = 0.5;
+    cfg.e_floor = 0.5;
+    cfg.max_rounds = 3000;
+    cfg.preference = Some(Preference::new(1.0, 0.0, 0.0, 0.0).unwrap());
+    let r = baselines::run_sim(&cfg, 11).unwrap();
+    let activated = r.trace.records().iter().filter(|rec| rec.fedtune_activated).count();
+    assert!(activated > 0, "fractional E0 must not block FedTune activation");
+    for rec in r.trace.records() {
+        assert!(rec.e >= cfg.e_floor, "round {}: E {} below floor", rec.round, rec.e);
+        assert!(
+            (rec.e - 0.5).fract().abs() < 1e-12,
+            "±1 moves from E0 = 0.5 stay on the half-grid, got {}",
+            rec.e
+        );
+    }
+
+    // The floor is a knob: 1.0 restores the classical integer floor, and
+    // an E0 below it is rejected up front.
+    cfg.e_floor = 1.0;
+    assert!(baselines::run_sim(&cfg, 11).is_err());
+    cfg.e0 = 2.0;
+    let integral = baselines::run_sim(&cfg, 11).unwrap();
+    for rec in integral.trace.records() {
+        assert!(rec.e >= 1.0 && rec.e.fract() == 0.0, "integer floor broken: {}", rec.e);
+    }
+}
+
+/// Schema bump: v1 cache records are clean misses under the v2 store —
+/// a "warm" v1 cache re-runs everything, heals, and changes no bytes.
+#[test]
+fn v1_cache_records_are_misses_under_v2() {
+    let dir = std::env::temp_dir()
+        .join(format!("fedtune_frac_v1miss_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    let make = || Grid::new(base()).m0s(&[5, 20]).seeds(&[3]).cache_dir(dir.clone());
+
+    let cold = make().run().unwrap();
+    assert_eq!(cold.executed_runs, 2);
+
+    // Downgrade every record to the v1 schema tag, as if written by the
+    // pre-unification binary.
+    let runs_dir = dir.join("runs");
+    let files: Vec<PathBuf> =
+        fs::read_dir(&runs_dir).unwrap().map(|e| e.unwrap().path()).collect();
+    assert_eq!(files.len(), 2);
+    for f in &files {
+        let text = fs::read_to_string(f).unwrap();
+        fs::write(f, text.replace("fedtune.store.run/v2", "fedtune.store.run/v1"))
+            .unwrap();
+    }
+
+    let rerun = make().run().unwrap();
+    assert_eq!(rerun.executed_runs, 2, "v1 records must all miss");
+    assert_eq!(rerun.cache_hits, 0);
+    assert_eq!(rerun.to_json().pretty(), cold.to_json().pretty());
+
+    // The re-run healed the cache back to v2: now everything hits.
+    let healed = make().run().unwrap();
+    assert_eq!(healed.executed_runs, 0);
+    assert_eq!(healed.cache_hits, 2);
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -156,7 +156,7 @@ fn full_real_training_reaches_target_with_all_aggregators() {
                 selector: Selector::UniformRandom,
                 seed: 11,
             },
-            Schedule::Fixed { m: 10, e: 2 },
+            Schedule::Fixed { m: 10, e: 2.0 },
         );
         let r = server.run().unwrap();
         assert_eq!(

@@ -111,7 +111,8 @@ fn fedtune_never_leaves_bounds_across_grid() {
         let r = baselines::run_sim(&c, 100 + i as u64).unwrap();
         for rec in r.trace.records() {
             assert!(rec.m >= 1 && rec.m <= 2112, "M {} out of bounds", rec.m);
-            assert!(rec.e >= 1.0 && rec.e <= 256.0);
+            // E may descend to the fractional floor (default 0.5).
+            assert!(rec.e >= c.e_floor && rec.e <= 256.0);
         }
     }
 }

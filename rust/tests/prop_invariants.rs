@@ -125,8 +125,9 @@ fn prop_fedtune_stays_in_bounds_and_moves_by_one() {
         },
         |(pref_idx, seed, rounds)| {
             let pref = Preference::paper_grid()[*pref_idx];
-            let cfg = FedTuneConfig { m_max: 50, e_max: 64, ..FedTuneConfig::paper_defaults(50) };
-            let mut ft = FedTune::new(pref, cfg, 20, 20).map_err(|e| e.to_string())?;
+            let cfg =
+                FedTuneConfig { m_max: 50, e_max: 64.0, ..FedTuneConfig::paper_defaults(50) };
+            let mut ft = FedTune::new(pref, cfg, 20, 20.0).map_err(|e| e.to_string())?;
             let mut rng = Rng::new(*seed);
             let mut cum = Costs::ZERO;
             let mut acc: f64 = 0.0;
@@ -141,10 +142,11 @@ fn prop_fedtune_stays_in_bounds_and_moves_by_one() {
                 });
                 ft.observe_round(r, acc, cum);
                 let (m, e) = (ft.m(), ft.e());
-                if !(1..=50).contains(&m) || !(1..=64).contains(&e) {
+                // E is fractional: bounded by the paper-default floor 0.5.
+                if !(1..=50).contains(&m) || !(0.5..=64.0).contains(&e) {
                     return Err(format!("out of bounds: M={m} E={e}"));
                 }
-                if m.abs_diff(last_m) > 1 || e.abs_diff(last_e) > 1 {
+                if m.abs_diff(last_m) > 1 || (e - last_e).abs() > 1.0 {
                     return Err(format!(
                         "moved more than one: {last_m}->{m}, {last_e}->{e}"
                     ));

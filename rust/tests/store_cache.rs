@@ -249,8 +249,8 @@ fn trace_demand_upgrades_cache_entries() {
 }
 
 /// Regression (fractional-E collision): E = 0.5 and E = 1.0 cells must
-/// never share a cache record even though their configs carry the same
-/// integer `e0 = ceil(E) = 1`.
+/// never share a cache record. Since the fractional-E unification the
+/// config itself carries `e0: f64`, so the identities differ directly.
 #[test]
 fn fractional_e_cells_never_share_cache_records() {
     let dir = tmp_dir("frac_e");
