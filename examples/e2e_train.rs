@@ -26,6 +26,7 @@ use fedtune::fedtune::schedule::Schedule;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::overhead::{CostModel, Preference};
 use fedtune::runtime::Runtime;
+use fedtune::system::SystemSpec;
 
 const MODEL: &str = "mlp-m";
 const TARGET: f64 = 0.90;
@@ -55,6 +56,7 @@ fn build_engine(seed: u64) -> anyhow::Result<RealEngine> {
             aggregator: AggregatorKind::FedAvg,
             eval_subsample: 1024,
             seed,
+            system: SystemSpec::Homogeneous,
         },
     )
 }

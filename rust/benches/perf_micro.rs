@@ -84,9 +84,11 @@ fn main() {
     let profile = DatasetProfile::speech();
     let mut srng = Rng::new(2);
     let sizes = fedtune::data::ClientSizes::generate(&profile, &mut srng).sizes;
+    let systems =
+        vec![fedtune::system::ClientSystemProfile::BASELINE; sizes.len()];
     let mut sel_rng = Rng::new(3);
     let s = bench("selection_uniform_20_of_2112", 200, || {
-        Selector::UniformRandom.select(&sizes, 20, &mut sel_rng)
+        Selector::UniformRandom.select(&sizes, &systems, 20, &mut sel_rng)
     });
     println!("  → selection: {:.2} µs", s.mean_us());
 
@@ -100,8 +102,10 @@ fn main() {
 
     // --- overhead accounting ----------------------------------------------
     let cm = CostModel::from_flops_params(12_500_000, 79_700);
-    let psizes: Vec<usize> = (0..20).map(|i| 1 + i * 7 % 300).collect();
-    let s = bench("cost_model_round", 100, || cm.round_costs(&psizes, 2.0));
+    let rows: Vec<(usize, fedtune::system::ClientSystemProfile)> = (0..20)
+        .map(|i| (1 + i * 7 % 300, fedtune::system::ClientSystemProfile::BASELINE))
+        .collect();
+    let s = bench("cost_model_round", 100, || cm.round_costs(&rows, 2.0));
     println!("  → cost accounting: {:.4} µs", s.mean_us());
 
     // --- JSON substrate -----------------------------------------------------

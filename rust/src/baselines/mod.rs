@@ -16,7 +16,8 @@ use crate::fedtune::{FedTune, FedTuneConfig};
 use crate::model::ladder;
 use crate::overhead::CostModel;
 
-/// Build the sim engine for a config (ladder model → ceiling + costs).
+/// Build the sim engine for a config (ladder model → ceiling + costs,
+/// system spec → per-client profiles).
 pub fn sim_engine_for(cfg: &ExperimentConfig, seed: u64) -> Result<SimEngine> {
     let profile = cfg.profile()?;
     let l = ladder::by_name(&cfg.model).ok_or_else(|| {
@@ -25,7 +26,7 @@ pub fn sim_engine_for(cfg: &ExperimentConfig, seed: u64) -> Result<SimEngine> {
     let params = SimParams::default()
         .with_aggregator(cfg.aggregator.name())
         .with_a_max(l.max_accuracy.min(profile.sim_ceiling));
-    Ok(SimEngine::new(&profile, params, seed))
+    Ok(SimEngine::new_with_system(&profile, params, seed, &cfg.system))
 }
 
 /// Execute one full run (sim engine) per the config + seed, with the

@@ -11,6 +11,7 @@ use crate::coordinator::selection::Selector;
 use crate::data::DatasetProfile;
 use crate::model::ladder;
 use crate::overhead::{CostModel, Preference};
+use crate::system::SystemSpec;
 use crate::util::json::Json;
 
 /// Which engine executes the rounds.
@@ -48,6 +49,10 @@ pub struct ExperimentConfig {
     /// Client learning rate (real engine).
     pub lr: f32,
     pub selector: Selector,
+    /// Per-client system heterogeneity population (`homogeneous` |
+    /// `lognormal:<sigma>` | `classes:...`); profiles derive
+    /// deterministically from (spec, seed). See [`crate::system`].
+    pub system: SystemSpec,
     pub seed: u64,
     /// Shrink factor for client population (real engine practicality).
     pub scale: f64,
@@ -70,6 +75,7 @@ impl Default for ExperimentConfig {
             max_rounds: 20_000,
             lr: 0.05,
             selector: Selector::UniformRandom,
+            system: SystemSpec::Homogeneous,
             seed: 1,
             scale: 1.0,
         }
@@ -128,6 +134,8 @@ impl ExperimentConfig {
         if self.eps <= 0.0 || self.penalty < 1.0 {
             bail!("eps must be > 0 and penalty >= 1");
         }
+        self.selector.validate().map_err(anyhow::Error::msg)?;
+        self.system.validate().map_err(anyhow::Error::msg)?;
         self.profile()?;
         Ok(())
     }
@@ -157,15 +165,11 @@ impl ExperimentConfig {
             ("lr", (self.lr as f64).into()),
             ("seed", self.seed.into()),
             ("scale", self.scale.into()),
-            (
-                "selector",
-                match self.selector {
-                    Selector::UniformRandom => "random",
-                    Selector::Guided { .. } => "guided",
-                    Selector::Deadline { .. } => "deadline",
-                }
-                .into(),
-            ),
+            // Parameter-carrying spec strings: `guided:2.5` and
+            // `deadline:150` round-trip losslessly (a name-only field
+            // would alias differently-parameterized selectors).
+            ("selector", self.selector.spec().as_str().into()),
+            ("system", self.system.spec_string().as_str().into()),
         ]);
         if let Some(p) = &self.preference {
             j.set(
@@ -204,8 +208,15 @@ impl ExperimentConfig {
             };
         }
         if let Some(v) = gs("selector") {
-            cfg.selector = Selector::by_name(&v)
-                .with_context(|| format!("unknown selector {v:?}"))?;
+            cfg.selector = Selector::by_name(&v).with_context(|| {
+                format!(
+                    "bad selector spec {v:?} (expected random | guided[:exploit >= 0] \
+                     | deadline[:max-cost > 0])"
+                )
+            })?;
+        }
+        if let Some(v) = gs("system") {
+            cfg.system = SystemSpec::parse(&v).map_err(anyhow::Error::msg)?;
         }
         if let Some(v) = gu("m0") {
             cfg.m0 = v;
@@ -293,6 +304,8 @@ mod tests {
         c.e_floor = 0.25;
         c.seed = 99;
         c.scale = 0.5;
+        c.selector = Selector::Deadline { max_cost: 150.0 };
+        c.system = SystemSpec::LogNormal { sigma: 0.5 };
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.dataset, "emnist");
@@ -302,9 +315,38 @@ mod tests {
         assert_eq!(c2.e_floor, 0.25);
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.scale, 0.5);
+        // Parameter-carrying specs survive the round trip intact.
+        assert_eq!(c2.selector, Selector::Deadline { max_cost: 150.0 });
+        assert_eq!(c2.system, SystemSpec::LogNormal { sigma: 0.5 });
         let p = c2.preference.unwrap();
         assert_eq!(p.alpha, 0.5);
         assert_eq!(p.gamma, 0.5);
+    }
+
+    #[test]
+    fn system_and_selector_json_defaults_and_validation() {
+        // Configs written before the system/selector specs existed load
+        // at the homogeneous/random defaults.
+        let j = Json::parse(r#"{"e0": 2.0}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.system, SystemSpec::Homogeneous);
+        assert_eq!(c.selector, Selector::UniformRandom);
+        // Malformed specs are rejected, not silently defaulted.
+        let j = Json::parse(r#"{"system": "lognormal:-1"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"selector": "deadline:0"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        // validate() re-checks programmatic constructions too — for both
+        // specs, so a config that validates always round-trips its JSON.
+        let mut c = ExperimentConfig::default();
+        c.system = SystemSpec::LogNormal { sigma: -0.5 };
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.selector = Selector::Deadline { max_cost: 0.0 };
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.selector = Selector::Guided { exploit: -1.0 };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::engine::FlEngine;
 use crate::fedtune::schedule::Schedule;
 use crate::overhead::{CostModel, Costs};
+use crate::system::ClientSystemProfile;
 use crate::trace::{RoundRecord, Trace};
 use crate::util::rng::Rng;
 
@@ -89,19 +90,23 @@ impl<'e, E: FlEngine> Server<'e, E> {
             let (m, e) = self.schedule.current();
             let participants = self.cfg.selector.select(
                 self.engine.client_sizes(),
+                self.engine.client_systems(),
                 m,
                 &mut self.rng,
             );
-            let sizes: Vec<usize> = participants
+            let rows: Vec<(usize, ClientSystemProfile)> = participants
                 .iter()
-                .map(|&k| self.engine.client_sizes()[k])
+                .map(|&k| {
+                    (self.engine.client_sizes()[k], self.engine.client_systems()[k])
+                })
                 .collect();
 
             let outcome = self.engine.run_round(&participants, e)?;
             accuracy = outcome.accuracy;
 
-            // Eqs. 2–5 — overheads accounted centrally, not per-engine.
-            let delta = self.cfg.cost_model.round_costs(&sizes, e);
+            // Eqs. 2–5 — overheads accounted centrally, not per-engine,
+            // over the participants' (n_k, system-profile_k) rows.
+            let delta = self.cfg.cost_model.round_costs(&rows, e);
             cum.add(&delta);
 
             let decision = self.schedule.observe_round(round, accuracy, cum);
@@ -143,6 +148,7 @@ mod tests {
     use crate::engine::sim::{SimEngine, SimParams};
     use crate::fedtune::{FedTune, FedTuneConfig};
     use crate::overhead::Preference;
+    use crate::system::SystemSpec;
 
     fn cfg(target: f64, max_rounds: usize) -> ServerConfig {
         ServerConfig {
@@ -220,6 +226,34 @@ mod tests {
             r.final_m < 20,
             "CompL preference should shrink M, got {}",
             r.final_m
+        );
+    }
+
+    #[test]
+    fn heterogeneous_systems_raise_time_not_load() {
+        // Same seed, same convergence, same selection — a straggler
+        // population only inflates the time overheads (Eqs. 2–3); the
+        // load overheads (Eqs. 4–5) are bitwise identical.
+        let profile = DatasetProfile::speech();
+        let mut homog = SimEngine::new(&profile, SimParams::default(), 5);
+        let mut hetero = SimEngine::new_with_system(
+            &profile,
+            SimParams::default(),
+            5,
+            &SystemSpec::LogNormal { sigma: 0.5 },
+        );
+        let sched = Schedule::Fixed { m: 20, e: 20.0 };
+        let a = Server::new(&mut homog, cfg(0.8, 5000), sched.clone()).run().unwrap();
+        let b = Server::new(&mut hetero, cfg(0.8, 5000), sched).run().unwrap();
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        assert_eq!(a.costs.comp_l, b.costs.comp_l);
+        assert_eq!(a.costs.trans_l, b.costs.trans_l);
+        assert!(
+            b.costs.comp_t > a.costs.comp_t,
+            "stragglers must inflate CompT: {} !> {}",
+            b.costs.comp_t,
+            a.costs.comp_t
         );
     }
 

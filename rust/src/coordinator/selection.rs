@@ -5,8 +5,29 @@
 //! selection (Oort) and deadline/first-M variants as extensions (§6).
 //! All three are implemented; the evaluation benches use
 //! [`Selector::UniformRandom`] to match the paper.
+//!
+//! Selection sees the clients' system profiles
+//! ([`crate::system::ClientSystemProfile`]): the deadline selector keys
+//! on each client's *modeled round time* `n_k · compute_k`, not its raw
+//! dataset size — on heterogeneous populations a small-but-slow device
+//! misses deadlines that a large-but-fast one makes.
+//!
+//! Spec strings ([`Selector::by_name`] / [`Selector::spec`]) carry the
+//! parameters — `random`, `guided:<exploit>`, `deadline:<max-cost>` — so
+//! configs, the CLI and the run-store fingerprint all distinguish, say,
+//! `deadline:100` from `deadline:200`.
 
+use crate::system::ClientSystemProfile;
 use crate::util::rng::Rng;
+
+/// Deadline assumed when `deadline` is given with no explicit budget:
+/// the modeled round time of the heaviest baseline *speech* client
+/// (n = 316, Fig. 2a). On other datasets — or under heterogeneous
+/// system profiles — this calibration excludes clients whose modeled
+/// time exceeds it (that exclusion is what deadline selection *is*);
+/// pass an explicit `deadline:<max-cost>` to set the budget for your
+/// population.
+pub const DEFAULT_DEADLINE_COST: f64 = 316.0;
 
 /// How the server picks the M participants of a round.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -17,23 +38,92 @@ pub enum Selector {
     /// (probability ∝ n_k^exploit), trading fairness for statistical
     /// utility per round.
     Guided { exploit: f64 },
-    /// Deadline variant (§6): uniformly sample, then keep only clients
-    /// whose n_k ≤ deadline-equivalent size (slow clients never finish).
-    Deadline { max_size: usize },
+    /// Deadline variant (§6): uniformly sample among clients whose
+    /// modeled round time `n_k · compute_k` is within the budget (slow
+    /// clients never finish).
+    Deadline { max_cost: f64 },
 }
 
 impl Selector {
-    pub fn by_name(name: &str) -> Option<Selector> {
-        match name {
-            "random" => Some(Selector::UniformRandom),
-            "guided" => Some(Selector::Guided { exploit: 1.0 }),
+    /// Parse a selector spec: `random`, `guided` / `guided:<exploit>`,
+    /// `deadline` / `deadline:<max-cost>`. Bare `guided` defaults to
+    /// exploit = 1.0; bare `deadline` to [`DEFAULT_DEADLINE_COST`].
+    /// Malformed or unknown specs return `None`.
+    pub fn by_name(spec: &str) -> Option<Selector> {
+        let spec = spec.trim();
+        let (head, arg) = match spec.split_once(':') {
+            Some((h, a)) => (h, Some(a.trim())),
+            None => (spec, None),
+        };
+        match head {
+            "random" => match arg {
+                None => Some(Selector::UniformRandom),
+                Some(_) => None,
+            },
+            "guided" => {
+                let exploit = match arg {
+                    None => 1.0,
+                    Some(a) => a.parse::<f64>().ok().filter(|x| x.is_finite() && *x >= 0.0)?,
+                };
+                Some(Selector::Guided { exploit })
+            }
+            "deadline" => {
+                let max_cost = match arg {
+                    None => DEFAULT_DEADLINE_COST,
+                    Some(a) => a.parse::<f64>().ok().filter(|x| x.is_finite() && *x > 0.0)?,
+                };
+                Some(Selector::Deadline { max_cost })
+            }
             _ => None,
         }
     }
 
-    /// Select min(m, available) distinct client indices.
-    pub fn select(&self, sizes: &[usize], m: usize, rng: &mut Rng) -> Vec<usize> {
+    /// Check parameter invariants. [`Selector::by_name`] enforces these
+    /// at parse time; programmatic constructions are re-checked through
+    /// `ExperimentConfig::validate`, so a config that validates always
+    /// produces a spec string [`Selector::by_name`] accepts back.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            Selector::UniformRandom => Ok(()),
+            Selector::Guided { exploit } => {
+                if !exploit.is_finite() || exploit < 0.0 {
+                    return Err(format!(
+                        "guided exploit must be finite and >= 0, got {exploit}"
+                    ));
+                }
+                Ok(())
+            }
+            Selector::Deadline { max_cost } => {
+                if !max_cost.is_finite() || max_cost <= 0.0 {
+                    return Err(format!(
+                        "deadline max-cost must be finite and > 0, got {max_cost}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Canonical spec string; [`Selector::by_name`] parses it back.
+    pub fn spec(&self) -> String {
+        match *self {
+            Selector::UniformRandom => "random".to_string(),
+            Selector::Guided { exploit } => format!("guided:{exploit}"),
+            Selector::Deadline { max_cost } => format!("deadline:{max_cost}"),
+        }
+    }
+
+    /// Select min(m, available) distinct client indices. `systems` must
+    /// be parallel to `sizes` (the engine's per-client profiles).
+    pub fn select(
+        &self,
+        sizes: &[usize],
+        systems: &[ClientSystemProfile],
+        m: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
         let k = sizes.len();
+        debug_assert_eq!(k, systems.len(), "sizes/systems must be parallel");
         if k == 0 || m == 0 {
             return Vec::new();
         }
@@ -53,15 +143,23 @@ impl Selector {
                 }
                 picked
             }
-            Selector::Deadline { max_size } => {
-                let eligible: Vec<usize> = (0..k)
-                    .filter(|&i| sizes[i] <= max_size)
-                    .collect();
+            Selector::Deadline { max_cost } => {
+                let cost = |i: usize| systems[i].round_time(sizes[i]);
+                let eligible: Vec<usize> = (0..k).filter(|&i| cost(i) <= max_cost).collect();
                 if eligible.is_empty() {
-                    // Nobody can meet the deadline: fall back to the
-                    // single fastest client rather than stalling training.
-                    let fastest = (0..k).min_by_key(|&i| sizes[i]).unwrap();
-                    return vec![fastest];
+                    // Nobody can meet the deadline: degrade to the
+                    // min(m, k) fastest clients by modeled round time
+                    // rather than stalling training — and rather than
+                    // silently collapsing the round's M to 1.
+                    let mut by_speed: Vec<usize> = (0..k).collect();
+                    by_speed.sort_by(|&a, &b| {
+                        cost(a)
+                            .partial_cmp(&cost(b))
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.cmp(&b))
+                    });
+                    by_speed.truncate(m);
+                    return by_speed;
                 }
                 let mm = m.min(eligible.len());
                 rng.sample_indices(eligible.len(), mm)
@@ -81,12 +179,17 @@ mod tests {
         vec![1, 5, 10, 50, 100, 2, 8, 300, 40, 3]
     }
 
+    fn baseline_systems(k: usize) -> Vec<ClientSystemProfile> {
+        vec![ClientSystemProfile::BASELINE; k]
+    }
+
     #[test]
     fn uniform_selects_exactly_m_distinct() {
         let s = sizes();
+        let sys = baseline_systems(s.len());
         let mut rng = Rng::new(1);
         for m in 1..=s.len() {
-            let picked = Selector::UniformRandom.select(&s, m, &mut rng);
+            let picked = Selector::UniformRandom.select(&s, &sys, m, &mut rng);
             assert_eq!(picked.len(), m);
             let mut p = picked.clone();
             p.sort_unstable();
@@ -98,25 +201,29 @@ mod tests {
     #[test]
     fn m_larger_than_population_is_clamped() {
         let s = sizes();
+        let sys = baseline_systems(s.len());
         let mut rng = Rng::new(2);
-        let picked = Selector::UniformRandom.select(&s, 100, &mut rng);
+        let picked = Selector::UniformRandom.select(&s, &sys, 100, &mut rng);
         assert_eq!(picked.len(), s.len());
     }
 
     #[test]
     fn empty_population() {
         let mut rng = Rng::new(3);
-        assert!(Selector::UniformRandom.select(&[], 5, &mut rng).is_empty());
-        assert!(Selector::UniformRandom.select(&sizes(), 0, &mut rng).is_empty());
+        assert!(Selector::UniformRandom.select(&[], &[], 5, &mut rng).is_empty());
+        let s = sizes();
+        let sys = baseline_systems(s.len());
+        assert!(Selector::UniformRandom.select(&s, &sys, 0, &mut rng).is_empty());
     }
 
     #[test]
     fn uniform_is_unbiased_ish() {
         let s = vec![1usize; 20];
+        let sys = baseline_systems(20);
         let mut rng = Rng::new(4);
         let mut counts = vec![0usize; 20];
         for _ in 0..5000 {
-            for i in Selector::UniformRandom.select(&s, 5, &mut rng) {
+            for i in Selector::UniformRandom.select(&s, &sys, 5, &mut rng) {
                 counts[i] += 1;
             }
         }
@@ -129,11 +236,12 @@ mod tests {
     #[test]
     fn guided_prefers_data_rich_clients() {
         let s = sizes(); // client 7 has 300 points
+        let sys = baseline_systems(s.len());
         let mut rng = Rng::new(5);
         let mut hits = 0;
         for _ in 0..1000 {
             if (Selector::Guided { exploit: 1.0 })
-                .select(&s, 3, &mut rng)
+                .select(&s, &sys, 3, &mut rng)
                 .contains(&7)
             {
                 hits += 1;
@@ -146,9 +254,10 @@ mod tests {
     #[test]
     fn guided_returns_distinct() {
         let s = sizes();
+        let sys = baseline_systems(s.len());
         let mut rng = Rng::new(6);
         for _ in 0..100 {
-            let p = Selector::Guided { exploit: 2.0 }.select(&s, 6, &mut rng);
+            let p = Selector::Guided { exploit: 2.0 }.select(&s, &sys, 6, &mut rng);
             let mut q = p.clone();
             q.sort_unstable();
             q.dedup();
@@ -159,25 +268,96 @@ mod tests {
     #[test]
     fn deadline_excludes_slow_clients() {
         let s = sizes();
+        let sys = baseline_systems(s.len());
         let mut rng = Rng::new(7);
         for _ in 0..100 {
-            let p = Selector::Deadline { max_size: 10 }.select(&s, 5, &mut rng);
+            let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 5, &mut rng);
             assert!(!p.is_empty());
             assert!(p.iter().all(|&i| s[i] <= 10), "{p:?}");
         }
     }
 
     #[test]
-    fn deadline_fallback_when_nobody_qualifies() {
-        let s = vec![50usize, 80, 60];
-        let mut rng = Rng::new(8);
-        let p = Selector::Deadline { max_size: 10 }.select(&s, 2, &mut rng);
-        assert_eq!(p, vec![0]); // fastest client
+    fn deadline_keys_on_modeled_time_not_raw_size() {
+        // Client 0: 100 points on a 4× straggler (modeled time 400);
+        // client 1: 300 points on a 0.1× accelerator (modeled time 30).
+        // Under a budget of 50 only the big-but-fast client qualifies.
+        let s = vec![100usize, 300];
+        let sys = vec![
+            ClientSystemProfile { compute_factor: 4.0, link_factor: 1.0 },
+            ClientSystemProfile { compute_factor: 0.1, link_factor: 1.0 },
+        ];
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let p = Selector::Deadline { max_cost: 50.0 }.select(&s, &sys, 2, &mut rng);
+            assert_eq!(p, vec![1], "only the fast device meets the deadline");
+        }
     }
 
     #[test]
-    fn name_lookup() {
+    fn deadline_fallback_returns_min_m_k_fastest() {
+        // Nobody qualifies: the round must keep its M (min(m, k)), not
+        // collapse to a single client.
+        let s = vec![50usize, 80, 60];
+        let sys = baseline_systems(3);
+        let mut rng = Rng::new(8);
+        let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 2, &mut rng);
+        assert_eq!(p, vec![0, 2], "the two fastest clients, in speed order");
+        // m >= k falls back to everyone.
+        let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 5, &mut rng);
+        assert_eq!(p, vec![0, 2, 1]);
+        // The fallback respects modeled time: a straggler profile can
+        // demote the smallest client.
+        let sys = vec![
+            ClientSystemProfile { compute_factor: 10.0, link_factor: 1.0 },
+            ClientSystemProfile::BASELINE,
+            ClientSystemProfile::BASELINE,
+        ];
+        let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 2, &mut rng);
+        assert_eq!(p, vec![2, 1], "client 0 is slowest once its 10x factor counts");
+    }
+
+    #[test]
+    fn name_lookup_parses_full_specs() {
         assert_eq!(Selector::by_name("random"), Some(Selector::UniformRandom));
+        assert_eq!(Selector::by_name("guided"), Some(Selector::Guided { exploit: 1.0 }));
+        assert_eq!(
+            Selector::by_name("guided:2.5"),
+            Some(Selector::Guided { exploit: 2.5 })
+        );
+        assert_eq!(
+            Selector::by_name("deadline"),
+            Some(Selector::Deadline { max_cost: DEFAULT_DEADLINE_COST })
+        );
+        assert_eq!(
+            Selector::by_name("deadline:150"),
+            Some(Selector::Deadline { max_cost: 150.0 })
+        );
         assert!(Selector::by_name("oort").is_none());
+        assert!(Selector::by_name("guided:abc").is_none());
+        assert!(Selector::by_name("guided:-1").is_none());
+        assert!(Selector::by_name("deadline:0").is_none());
+        assert!(Selector::by_name("random:2").is_none());
+    }
+
+    #[test]
+    fn validate_matches_parse_rules() {
+        assert!(Selector::UniformRandom.validate().is_ok());
+        assert!(Selector::Guided { exploit: 1.0 }.validate().is_ok());
+        assert!(Selector::Deadline { max_cost: 150.0 }.validate().is_ok());
+        assert!(Selector::Guided { exploit: -1.0 }.validate().is_err());
+        assert!(Selector::Deadline { max_cost: 0.0 }.validate().is_err());
+        assert!(Selector::Deadline { max_cost: f64::NAN }.validate().is_err());
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for sel in [
+            Selector::UniformRandom,
+            Selector::Guided { exploit: 2.5 },
+            Selector::Deadline { max_cost: 150.0 },
+        ] {
+            assert_eq!(Selector::by_name(&sel.spec()), Some(sel), "spec {}", sel.spec());
+        }
     }
 }

@@ -16,6 +16,8 @@
 pub mod real;
 pub mod sim;
 
+use crate::system::ClientSystemProfile;
+
 /// What a round reports back to the coordinator.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundOutcome {
@@ -35,6 +37,12 @@ pub trait FlEngine {
 
     /// Per-client dataset sizes n_k (len == num_clients).
     fn client_sizes(&self) -> &[usize];
+
+    /// Per-client system profiles (len == num_clients): device/link rate
+    /// multipliers the coordinator's cost accounting and
+    /// heterogeneity-aware selectors read. Homogeneous engines return
+    /// all-[`ClientSystemProfile::BASELINE`] rows.
+    fn client_systems(&self) -> &[ClientSystemProfile];
 
     /// Execute one training round with the given participants and local
     /// pass count `e` (fractional passes allowed, §3.2's E = 0.5).

@@ -16,6 +16,7 @@ use crate::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use crate::data::FederatedDataset;
 use crate::model::ParamVec;
 use crate::runtime::Runtime;
+use crate::system::{ClientSystemProfile, SystemSpec};
 use crate::util::rng::Rng;
 
 use super::{FlEngine, RoundOutcome};
@@ -29,6 +30,9 @@ pub struct RealEngineConfig {
     /// Cap on eval pool size per round (0 = use everything).
     pub eval_subsample: usize,
     pub seed: u64,
+    /// Per-client system heterogeneity population; profiles derive
+    /// deterministically from (spec, seed).
+    pub system: SystemSpec,
 }
 
 /// The PJRT-backed engine.
@@ -38,6 +42,7 @@ pub struct RealEngine {
     cfg: RealEngineConfig,
     global: ParamVec,
     aggregator: Aggregator,
+    systems: Vec<ClientSystemProfile>,
     rng: Rng,
     rounds_run: usize,
     /// Cumulative local SGD steps executed (τ total) — perf accounting.
@@ -69,12 +74,14 @@ impl RealEngine {
         let mut rng = Rng::new(cfg.seed ^ 0x5eed);
         let global = ParamVec::init_he(&meta.params, &mut rng);
         let aggregator = Aggregator::new(cfg.aggregator);
+        let systems = cfg.system.profiles(dataset.clients.len(), cfg.seed);
         Ok(RealEngine {
             runtime,
             dataset,
             cfg,
             global,
             aggregator,
+            systems,
             rng,
             rounds_run: 0,
             total_steps: 0,
@@ -292,6 +299,10 @@ impl FlEngine for RealEngine {
 
     fn client_sizes(&self) -> &[usize] {
         &self.dataset.sizes
+    }
+
+    fn client_systems(&self) -> &[ClientSystemProfile] {
+        &self.systems
     }
 
     fn run_round(&mut self, participants: &[usize], e: f64) -> Result<RoundOutcome> {

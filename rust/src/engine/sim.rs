@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use crate::data::{ClientSizes, DatasetProfile};
+use crate::system::{ClientSystemProfile, SystemSpec};
 use crate::util::rng::Rng;
 
 use super::{FlEngine, RoundOutcome};
@@ -102,19 +103,37 @@ pub struct SimEngine {
     profile: DatasetProfile,
     params: SimParams,
     sizes: Vec<usize>,
+    systems: Vec<ClientSystemProfile>,
     accuracy: f64,
     rng: Rng,
     rounds_run: usize,
 }
 
 impl SimEngine {
+    /// Homogeneous population (the paper's assumption): every client at
+    /// the baseline system profile.
     pub fn new(profile: &DatasetProfile, params: SimParams, seed: u64) -> SimEngine {
+        SimEngine::new_with_system(profile, params, seed, &SystemSpec::Homogeneous)
+    }
+
+    /// Population with per-client system heterogeneity: profiles are
+    /// derived deterministically from (spec, seed) on a stream disjoint
+    /// from the convergence RNG, so the accuracy trajectory of a run is
+    /// identical across system specs — only its costs differ.
+    pub fn new_with_system(
+        profile: &DatasetProfile,
+        params: SimParams,
+        seed: u64,
+        system: &SystemSpec,
+    ) -> SimEngine {
         let mut rng = Rng::new(seed);
         let sizes = ClientSizes::generate(profile, &mut rng).sizes;
+        let systems = system.profiles(sizes.len(), seed);
         SimEngine {
             profile: profile.clone(),
             params,
             sizes,
+            systems,
             accuracy: 0.0,
             rng,
             rounds_run: 0,
@@ -149,6 +168,10 @@ impl FlEngine for SimEngine {
 
     fn client_sizes(&self) -> &[usize] {
         &self.sizes
+    }
+
+    fn client_systems(&self) -> &[ClientSystemProfile] {
+        &self.systems
     }
 
     fn run_round(&mut self, participants: &[usize], e: f64) -> Result<RoundOutcome> {
@@ -241,6 +264,35 @@ mod tests {
         let ada = SimParams::default().with_aggregator("fedadagrad");
         assert!(avg.rate(20, 1.0) < nova.rate(20, 1.0));
         assert!(nova.rate(20, 1.0) < ada.rate(20, 1.0));
+    }
+
+    #[test]
+    fn system_spec_never_perturbs_convergence() {
+        // The profile stream is disjoint from the convergence stream:
+        // heterogeneity changes costs, never the accuracy trajectory.
+        let profile = DatasetProfile::speech();
+        let mut homog = speech_engine(9);
+        let mut hetero = SimEngine::new_with_system(
+            &profile,
+            SimParams::default(),
+            9,
+            &SystemSpec::LogNormal { sigma: 0.8 },
+        );
+        assert_eq!(homog.client_sizes(), hetero.client_sizes());
+        assert!(hetero
+            .client_systems()
+            .iter()
+            .any(|c| *c != ClientSystemProfile::BASELINE));
+        assert!(homog
+            .client_systems()
+            .iter()
+            .all(|c| *c == ClientSystemProfile::BASELINE));
+        let parts: Vec<usize> = (0..10).collect();
+        for _ in 0..50 {
+            let a = homog.run_round(&parts, 2.0).unwrap().accuracy;
+            let b = hetero.run_round(&parts, 2.0).unwrap().accuracy;
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! `fedtune grid` subcommand.
 //!
 //! The paper's evaluation is a large grid of *independent* runs over
-//! (dataset profile × aggregator × M₀ × E₀ × preference × penalty × seed);
+//! (dataset profile × system spec × aggregator × M₀ × E₀ × preference ×
+//! penalty × seed);
 //! FedPop-style population tuning assumes the same cheap parallel
 //! evaluation of many configurations. [`Grid`] enumerates those cells,
 //! executes every (cell, seed) run concurrently on the
@@ -26,8 +27,9 @@
 //! Work items are content **fingerprints**, not (cell, seed) pairs:
 //! identical runs inside one sweep execute once and are shared — under
 //! [`Grid::compare_baseline`] the fixed-(M₀, E₀) baseline runs once per
-//! (profile, aggregator, M₀, E₀, seed), not once per tuned cell. With
-//! [`Grid::cache_dir`] finished runs persist as `fedtune.store.run/v1`
+//! (profile, system, aggregator, M₀, E₀, seed), not once per tuned
+//! cell. With
+//! [`Grid::cache_dir`] finished runs persist as `fedtune.store.run/v3`
 //! records, repeated sweeps become pure cache hits
 //! ([`GridResult::executed_runs`] = 0), and a sweep journal of finished
 //! (cell, seed) records lets [`Grid::resume`] continue an interrupted
@@ -40,17 +42,18 @@
 //! `n = 0` restores the default. The CLI exposes this as
 //! `fedtune grid --workers N`.
 //!
-//! # JSON artifact schema (`fedtune.experiment.grid/v1`)
+//! # JSON artifact schema (`fedtune.experiment.grid/v2`)
 //!
 //! [`GridResult::to_json`] / [`GridResult::write_json`] emit:
 //!
 //! ```text
 //! {
-//!   "schema": "fedtune.experiment.grid/v1",
+//!   "schema": "fedtune.experiment.grid/v2",
 //!   "seeds": [101, 202, 303],
 //!   "cells": [
 //!     {
 //!       "dataset": "speech", "model": "resnet-10",
+//!       "system": "homogeneous",              // client heterogeneity spec
 //!       "aggregator": "fedavg", "m0": 20, "e0": 20, "penalty": 10,
 //!       "preference": [0, 0, 1, 0],          // null for the fixed baseline
 //!       "runs": [                             // one entry per seed, in order
@@ -113,6 +116,7 @@ use anyhow::Result;
 use crate::aggregation::AggregatorKind;
 use crate::config::ExperimentConfig;
 use crate::overhead::{CostModel, Preference};
+use crate::system::SystemSpec;
 use crate::util::pool;
 
 pub mod runner;
@@ -125,6 +129,9 @@ pub use runner::{CellResult, GridResult, RunRecord, Stat};
 pub struct Cell {
     pub dataset: String,
     pub model: String,
+    /// Client system-heterogeneity population of this cell (the
+    /// `fig_heterogeneity` bench sweeps sigma on this axis).
+    pub system: SystemSpec,
     pub aggregator: AggregatorKind,
     pub m0: usize,
     /// Initial local passes; fractional values (the paper's E = 0.5) are
@@ -145,27 +152,34 @@ impl Cell {
             Some(p) => p.label(),
             None => "baseline".to_string(),
         };
+        let sys = if self.system.is_homogeneous() {
+            String::new()
+        } else {
+            format!(" sys:{}", self.system.spec_string())
+        };
         format!(
-            "{}/{}/{} M{} E{} D{} {}",
+            "{}/{}/{} M{} E{} D{} {}{}",
             self.dataset,
             self.model,
             self.aggregator.name(),
             self.m0,
             self.e0,
             self.penalty,
-            pref
+            pref,
+            sys
         )
     }
 }
 
 /// Builder for a pooled experiment sweep. Axes default to the base
 /// config's single value; every setter replaces one axis. Cells are
-/// enumerated in fixed order — profiles → aggregators → M₀ → E₀ →
-/// preferences → penalties — with seeds innermost, so results line up
-/// with the builder's axis order regardless of worker count.
+/// enumerated in fixed order — profiles → systems → aggregators → M₀ →
+/// E₀ → preferences → penalties — with seeds innermost, so results line
+/// up with the builder's axis order regardless of worker count.
 #[derive(Debug, Clone)]
 pub struct Grid {
     pub(crate) profiles: Vec<(String, String, Option<f64>)>,
+    pub(crate) systems: Vec<SystemSpec>,
     pub(crate) aggregators: Vec<AggregatorKind>,
     pub(crate) m0s: Vec<usize>,
     pub(crate) e0s: Vec<f64>,
@@ -188,6 +202,7 @@ impl Grid {
     pub fn new(base: ExperimentConfig) -> Grid {
         Grid {
             profiles: vec![(base.dataset.clone(), base.model.clone(), None)],
+            systems: vec![base.system.clone()],
             aggregators: vec![base.aggregator],
             m0s: vec![base.m0],
             e0s: vec![base.e0],
@@ -224,6 +239,14 @@ impl Grid {
             .iter()
             .map(|(d, m, t)| (d.to_string(), m.to_string(), Some(*t)))
             .collect();
+        self
+    }
+
+    /// System-heterogeneity axis: one cell set per population spec
+    /// (e.g. homogeneous vs increasing lognormal sigma — the
+    /// `fig_heterogeneity` straggler sweep).
+    pub fn systems(mut self, v: &[SystemSpec]) -> Grid {
+        self.systems = v.to_vec();
         self
     }
 
@@ -369,21 +392,24 @@ impl Grid {
     pub fn cells(&self) -> Vec<Cell> {
         let mut out = Vec::new();
         for (dataset, model, target) in &self.profiles {
-            for &aggregator in &self.aggregators {
-                for &m0 in &self.m0s {
-                    for &e0 in &self.e0s {
-                        for preference in &self.preferences {
-                            for &penalty in &self.penalties {
-                                out.push(Cell {
-                                    dataset: dataset.clone(),
-                                    model: model.clone(),
-                                    aggregator,
-                                    m0,
-                                    e0,
-                                    preference: *preference,
-                                    penalty,
-                                    target: *target,
-                                });
+            for system in &self.systems {
+                for &aggregator in &self.aggregators {
+                    for &m0 in &self.m0s {
+                        for &e0 in &self.e0s {
+                            for preference in &self.preferences {
+                                for &penalty in &self.penalties {
+                                    out.push(Cell {
+                                        dataset: dataset.clone(),
+                                        model: model.clone(),
+                                        system: system.clone(),
+                                        aggregator,
+                                        m0,
+                                        e0,
+                                        preference: *preference,
+                                        penalty,
+                                        target: *target,
+                                    });
+                                }
                             }
                         }
                     }
@@ -395,6 +421,7 @@ impl Grid {
 
     pub fn num_cells(&self) -> usize {
         self.profiles.len()
+            * self.systems.len()
             * self.aggregators.len()
             * self.m0s.len()
             * self.e0s.len()
@@ -442,6 +469,22 @@ mod tests {
         let cells = g.cells();
         let key: Vec<(usize, f64)> = cells.iter().map(|c| (c.m0, c.e0)).collect();
         assert_eq!(key, vec![(1, 1.0), (1, 8.0), (10, 1.0), (10, 8.0)]);
+    }
+
+    #[test]
+    fn systems_axis_multiplies_cells() {
+        let g = Grid::new(ExperimentConfig::default())
+            .systems(&[SystemSpec::Homogeneous, SystemSpec::LogNormal { sigma: 0.5 }])
+            .m0s(&[1, 10]);
+        assert_eq!(g.num_cells(), 4);
+        let cells = g.cells();
+        assert_eq!(cells.len(), 4);
+        // Systems vary slower than M₀ (axis order: systems before m0s).
+        assert_eq!(cells[0].system, SystemSpec::Homogeneous);
+        assert_eq!(cells[1].system, SystemSpec::Homogeneous);
+        assert_eq!(cells[2].system, SystemSpec::LogNormal { sigma: 0.5 });
+        assert!(cells[3].label().contains("sys:lognormal:0.5"), "{}", cells[3].label());
+        assert!(!cells[0].label().contains("sys:"), "{}", cells[0].label());
     }
 
     #[test]

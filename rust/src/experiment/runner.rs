@@ -35,7 +35,8 @@ use crate::util::stats;
 use super::{Cell, Grid};
 
 /// Artifact schema identifier (bump on breaking layout changes).
-pub const SCHEMA: &str = "fedtune.experiment.grid/v1";
+/// v2 = every cell object carries a `"system"` heterogeneity spec.
+pub const SCHEMA: &str = "fedtune.experiment.grid/v2";
 
 /// Mean/standard deviation of one aggregated quantity over seeds.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -122,7 +123,7 @@ impl GridResult {
         self.cells.iter().find(|c| f(&c.cell))
     }
 
-    /// Serialize to the `fedtune.experiment.grid/v1` artifact (see the
+    /// Serialize to the `fedtune.experiment.grid/v2` artifact (see the
     /// module doc). Byte-identical for any worker count.
     pub fn to_json(&self) -> Json {
         let seeds: Vec<Json> = self.seeds.iter().map(|&s| Json::from(s)).collect();
@@ -267,6 +268,7 @@ fn cell_json(c: &CellResult) -> Json {
     Json::from_pairs(vec![
         ("dataset", c.cell.dataset.as_str().into()),
         ("model", c.cell.model.as_str().into()),
+        ("system", c.cell.system.spec_string().as_str().into()),
         ("aggregator", c.cell.aggregator.name().into()),
         ("m0", c.cell.m0.into()),
         ("e0", c.cell.e0.into()),
@@ -359,7 +361,7 @@ fn plan(grid: &Grid) -> Result<Plan> {
     // Sweep identity: the ordered pair keys plus everything that shapes
     // the journaled records. Worker count is deliberately excluded — a
     // sweep may resume with a different pool size.
-    let mut id = format!("fedtune.sweep/v2;keep_traces={};seeds=", grid.keep_traces);
+    let mut id = format!("fedtune.sweep/v3;keep_traces={};seeds=", grid.keep_traces);
     for &s in &grid.seeds {
         id.push_str(&format!("{s},"));
     }
@@ -690,6 +692,7 @@ fn cell_config(
     let mut cfg = grid.base.clone();
     cfg.dataset = cell.dataset.clone();
     cfg.model = cell.model.clone();
+    cfg.system = cell.system.clone();
     cfg.aggregator = cell.aggregator;
     cfg.m0 = cell.m0;
     // E is fractional end-to-end: the config carries the true pass count
@@ -845,7 +848,7 @@ mod tests {
         let j = g.run().unwrap().to_json();
         assert_eq!(
             j.get("schema").unwrap().as_str(),
-            Some("fedtune.experiment.grid/v1")
+            Some("fedtune.experiment.grid/v2")
         );
         let cells = j.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 1);

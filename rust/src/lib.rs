@@ -12,9 +12,11 @@
 //!   run through a tiled Pallas matmul kernel, AOT-lowered to HLO text and
 //!   executed here via PJRT ([`runtime`], behind the `pjrt` feature).
 //!
-//! Quick tour: [`config::ExperimentConfig`] describes a run;
-//! [`engine::sim::SimEngine`] or [`engine::real::RealEngine`] execute
-//! rounds; [`coordinator::Server`] drives either engine to a target
+//! Quick tour: [`config::ExperimentConfig`] describes a run (including
+//! its [`system::SystemSpec`] — the per-client device/link heterogeneity
+//! population); [`engine::sim::SimEngine`] or
+//! [`engine::real::RealEngine`] execute rounds; [`coordinator::Server`]
+//! drives either engine to a target
 //! accuracy with or without [`fedtune::FedTune`] adjusting (M, E);
 //! [`experiment::Grid`] fans whole (profile × aggregator × M₀ × E₀ ×
 //! preference × seed) sweeps out over a worker pool and emits one stable
@@ -41,4 +43,5 @@ pub mod runtime;
 #[path = "runtime/stub.rs"]
 pub mod runtime;
 pub mod store;
+pub mod system;
 pub mod trace;

@@ -22,7 +22,9 @@ use fedtune::fedtune::schedule::Schedule;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ladder, Manifest, ParamVec};
 use fedtune::overhead::{CostModel, Preference};
+use fedtune::coordinator::selection::Selector;
 use fedtune::store::RunStore;
+use fedtune::system::SystemSpec;
 use fedtune::util::cli::Cli;
 use fedtune::util::logging;
 use fedtune::util::rng::Rng;
@@ -81,6 +83,17 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("target", "0", "target accuracy (0 = dataset default)")
         .opt("max-rounds", "20000", "round cap")
         .opt("lr", "0.05", "client learning rate (real engine)")
+        .opt(
+            "selector",
+            "random",
+            "participant selector: random | guided[:exploit] | deadline[:max-cost]",
+        )
+        .opt(
+            "system",
+            "homogeneous",
+            "client system heterogeneity: homogeneous | lognormal:<sigma> | \
+             classes:<name>:<factor>@<fraction>,...",
+        )
         .opt("seed", "1", "random seed")
         .opt("scale", "1.0", "client-population scale factor (real engine)")
         .opt("artifacts", "artifacts", "artifact directory (real engine)")
@@ -113,6 +126,14 @@ fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
     cfg.target_accuracy = cli.get("target").map_err(anyhow::Error::msg)?;
     cfg.max_rounds = cli.get("max-rounds").map_err(anyhow::Error::msg)?;
     cfg.lr = cli.get("lr").map_err(anyhow::Error::msg)?;
+    cfg.selector = Selector::by_name(&cli.get_str("selector")).with_context(|| {
+        format!(
+            "bad selector spec {:?} (expected random | guided[:exploit >= 0] \
+             | deadline[:max-cost > 0])",
+            cli.get_str("selector")
+        )
+    })?;
+    cfg.system = SystemSpec::parse(&cli.get_str("system")).map_err(anyhow::Error::msg)?;
     cfg.seed = cli.get("seed").map_err(anyhow::Error::msg)?;
     cfg.scale = cli.get("scale").map_err(anyhow::Error::msg)?;
     let pref = cli.get_str("preference");
@@ -185,6 +206,7 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
             aggregator: cfg.aggregator,
             eval_subsample: 1024,
             seed: cfg.seed,
+            system: cfg.system.clone(),
         },
     )?;
     let num_clients = engine.num_clients();

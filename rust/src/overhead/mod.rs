@@ -1,21 +1,34 @@
-//! System-overhead accounting — the paper's §3.1 system model.
+//! System-overhead accounting — the paper's §3.1 system model,
+//! generalized to heterogeneous clients.
 //!
 //! Four overheads accumulate over training (Eqs. 2–5), with per-round
-//! increments:
+//! increments over the participants' (n_k, system-profile_k) rows:
 //!
-//! * CompT  += C1 · E · max_{k ∈ participants} n_k      (slowest client)
-//! * TransT += C2                                        (one round trip)
-//! * CompL  += C3 · E · Σ_{k ∈ participants} n_k         (total FLOPs)
+//! * CompT  += C1 · E · max_k (n_k · compute_k)          (slowest client)
+//! * TransT += C2 · max_k link_k                         (slowest link)
+//! * CompL  += C3 · E · Σ_k n_k                          (total FLOPs)
 //! * TransL += C4 · M                                    (M up+downloads)
 //!
-//! Clients are homogeneous (paper assumption), so C1..C4 are global: the
-//! paper assigns the model's per-input FLOPs to C1 and C3 and its
-//! parameter count to C2 and C4 — [`CostModel::from_flops_params`] does
-//! exactly that.
+//! C1..C4 stay global — the paper assigns the model's per-input FLOPs to
+//! C1 and C3 and its parameter count to C2 and C4
+//! ([`CostModel::from_flops_params`]) — while the per-client
+//! [`crate::system::ClientSystemProfile`] multipliers carry the device
+//! and link heterogeneity. With every profile at
+//! [`crate::system::ClientSystemProfile::BASELINE`] (the paper's
+//! homogeneous assumption) the factors are exactly 1.0 and every
+//! increment reproduces the original equations bit-for-bit — pinned
+//! against a verbatim copy of the pre-refactor `round_costs` in
+//! `rust/tests/prop_invariants.rs`.
+//!
+//! The load overheads CompL/TransL are deliberately untouched by the
+//! profiles: heterogeneity changes *when* work finishes (time), not *how
+//! much* work exists (FLOPs, parameters).
 //!
 //! [`Preference`] carries the application's (α, β, γ, δ) weights and
 //! [`Costs::compare`] implements the paper's comparison function Eq. (6):
 //! I(S1, S2) < 0 ⇔ S2 is the better hyper-parameter set.
+
+use crate::system::ClientSystemProfile;
 
 /// Cumulative (or incremental) values of the four overheads.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -84,7 +97,8 @@ impl Costs {
     }
 }
 
-/// The homogeneous-client cost constants C1..C4 of §3.1.
+/// The global cost constants C1..C4 of §3.1 (per-client heterogeneity
+/// rides on [`ClientSystemProfile`] multipliers, not on these).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CostModel {
     pub c1: f64,
@@ -108,18 +122,40 @@ impl CostModel {
         }
     }
 
-    /// Per-round increment, Eqs. (2)–(5). `sizes` are the participants'
-    /// n_k; `e` is the number of local passes (0.5 allowed, §3.2).
-    pub fn round_costs(&self, sizes: &[usize], e: f64) -> Costs {
-        let m = sizes.len() as f64;
-        let max_n = sizes.iter().copied().max().unwrap_or(0) as f64;
-        let sum_n: usize = sizes.iter().sum();
+    /// Per-round increment, Eqs. (2)–(5) generalized to heterogeneous
+    /// clients. `participants` are per-participant (n_k, profile_k)
+    /// rows; `e` is the number of local passes (0.5 allowed, §3.2).
+    ///
+    /// Round time is straggler-bound: CompT takes the max of the modeled
+    /// per-client compute times `n_k · compute_k`, TransT the max link
+    /// factor. The loads CompL/TransL count work, not time, and ignore
+    /// the profiles. All-baseline rows reproduce the homogeneous
+    /// equations bit-for-bit (`× 1.0` is exact in IEEE 754).
+    pub fn round_costs(&self, participants: &[(usize, ClientSystemProfile)], e: f64) -> Costs {
+        let m = participants.len() as f64;
+        let mut max_comp = 0.0_f64;
+        // An empty round still performs one server round trip at the
+        // baseline link rate (the homogeneous TransT += C2 semantics).
+        let mut max_link = if participants.is_empty() { 1.0 } else { 0.0 };
+        for &(n, p) in participants {
+            max_comp = max_comp.max(n as f64 * p.compute_factor);
+            max_link = max_link.max(p.link_factor);
+        }
+        let sum_n: usize = participants.iter().map(|&(n, _)| n).sum();
         Costs {
-            comp_t: self.c1 * e * max_n,
-            trans_t: self.c2,
+            comp_t: self.c1 * e * max_comp,
+            trans_t: self.c2 * max_link,
             comp_l: self.c3 * e * sum_n as f64,
             trans_l: self.c4 * m,
         }
+    }
+
+    /// [`CostModel::round_costs`] with every participant at the
+    /// homogeneous baseline profile — the paper's original Eqs. (2)–(5).
+    pub fn round_costs_uniform(&self, sizes: &[usize], e: f64) -> Costs {
+        let rows: Vec<(usize, ClientSystemProfile)> =
+            sizes.iter().map(|&n| (n, ClientSystemProfile::BASELINE)).collect();
+        self.round_costs(&rows, e)
     }
 }
 
@@ -197,8 +233,8 @@ mod tests {
     #[test]
     fn round_costs_match_equations() {
         let cm = CostModel::from_flops_params(100, 10);
-        // Participants with 3, 7, 5 data points, E = 2.
-        let c = cm.round_costs(&[3, 7, 5], 2.0);
+        // Homogeneous participants with 3, 7, 5 data points, E = 2.
+        let c = cm.round_costs_uniform(&[3, 7, 5], 2.0);
         assert_eq!(c.comp_t, 100.0 * 2.0 * 7.0); // slowest client
         assert_eq!(c.trans_t, 10.0); // one round
         assert_eq!(c.comp_l, 100.0 * 2.0 * 15.0); // sum
@@ -206,9 +242,25 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_round_costs_are_straggler_bound() {
+        let cm = CostModel::from_flops_params(100, 10);
+        let slow = ClientSystemProfile { compute_factor: 4.0, link_factor: 3.0 };
+        let fast = ClientSystemProfile { compute_factor: 0.5, link_factor: 0.5 };
+        // The 3-point client on a 4× device (12.0) outweighs the 7-point
+        // client on a half-speed one (3.5).
+        let rows = [(3, slow), (7, fast), (5, ClientSystemProfile::BASELINE)];
+        let c = cm.round_costs(&rows, 2.0);
+        assert_eq!(c.comp_t, 100.0 * 2.0 * 12.0); // modeled straggler
+        assert_eq!(c.trans_t, 10.0 * 3.0); // slowest link
+        // Loads are heterogeneity-blind: work is work.
+        assert_eq!(c.comp_l, 100.0 * 2.0 * 15.0);
+        assert_eq!(c.trans_l, 10.0 * 3.0);
+    }
+
+    #[test]
     fn half_pass_supported() {
         let cm = CostModel::UNIT;
-        let c = cm.round_costs(&[10], 0.5);
+        let c = cm.round_costs_uniform(&[10], 0.5);
         assert_eq!(c.comp_t, 5.0);
         assert_eq!(c.comp_l, 5.0);
     }

@@ -23,7 +23,10 @@
 //! Version 2 unified fractional E: identity keys on `cfg.e0` directly
 //! (v1 carried a side-channel "true E" argument) and tuned runs may
 //! start from or descend to fractional E, so every v1 record is a clean
-//! miss that re-runs and heals.
+//! miss that re-runs and heals. Version 3 added per-client system
+//! heterogeneity: the canonical [`crate::system::SystemSpec`] string
+//! joined the identity (and the selector spec became
+//! parameter-carrying), so every v1/v2 record is likewise a clean miss.
 
 use std::fmt;
 
@@ -34,8 +37,10 @@ use crate::util::json::Json;
 /// Version of the fingerprint identity layout. Bump on any change to
 /// [`run_identity`] or to run semantics; old cache entries then simply
 /// never match again. v2 = unified fractional E (`e` comes from
-/// `cfg.e0`; tuned runs carry an `e_floor`).
-pub const FINGERPRINT_VERSION: u64 = 2;
+/// `cfg.e0`; tuned runs carry an `e_floor`). v3 = per-client system
+/// heterogeneity (`system` spec string in the identity; selector spec
+/// carries its parameters).
+pub const FINGERPRINT_VERSION: u64 = 3;
 
 /// A 128-bit content hash, printed as 32 lowercase hex digits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -92,10 +97,14 @@ pub fn run_identity(cfg: &ExperimentConfig, seed: u64, cost_model: &CostModel) -
         ),
         ("dataset", cfg.dataset.as_str().into()),
         ("model", cfg.model.as_str().into()),
-        // Debug form captures aggregator/selector parameters (FedAdagrad
-        // lr/β₁/τ, guided-selection knobs) that the short names elide.
+        // Debug form captures aggregator parameters (FedAdagrad
+        // lr/β₁/τ) that the short name elides; the selector's canonical
+        // spec string carries its knobs (`guided:2.5`, `deadline:150`).
         ("aggregator", format!("{:?}", cfg.aggregator).into()),
-        ("selector", format!("{:?}", cfg.selector).into()),
+        ("selector", cfg.selector.spec().as_str().into()),
+        // The system population is real physics: two runs under
+        // different heterogeneity specs must never share a record.
+        ("system", cfg.system.spec_string().as_str().into()),
         ("m0", cfg.m0.into()),
         ("e", cfg.e0.into()),
         ("seed", seed.into()),
@@ -225,7 +234,41 @@ mod tests {
         let d1 = run_identity(&c, 3, &cm()).dump();
         let d2 = run_identity(&c, 3, &cm()).dump();
         assert_eq!(d1, d2);
-        assert!(d1.contains("\"v\":2"));
+        assert!(d1.contains("\"v\":3"));
         assert!(d1.contains("\"e\":0.5"));
+        assert!(d1.contains("\"system\":\"homogeneous\""));
+        assert!(d1.contains("\"selector\":\"random\""));
+    }
+
+    #[test]
+    fn system_spec_splits_keys() {
+        use crate::system::SystemSpec;
+        let homog = cfg();
+        let mut hetero = cfg();
+        hetero.system = SystemSpec::LogNormal { sigma: 0.5 };
+        assert_ne!(
+            run_fingerprint(&homog, 1, &cm()),
+            run_fingerprint(&hetero, 1, &cm()),
+            "different system populations are different physics"
+        );
+        let mut other = cfg();
+        other.system = SystemSpec::LogNormal { sigma: 1.0 };
+        assert_ne!(run_fingerprint(&hetero, 1, &cm()), run_fingerprint(&other, 1, &cm()));
+    }
+
+    #[test]
+    fn selector_parameters_split_keys() {
+        use crate::coordinator::selection::Selector;
+        let mut a = cfg();
+        let mut b = cfg();
+        a.selector = Selector::Deadline { max_cost: 100.0 };
+        b.selector = Selector::Deadline { max_cost: 200.0 };
+        assert_ne!(
+            run_fingerprint(&a, 1, &cm()),
+            run_fingerprint(&b, 1, &cm()),
+            "deadline budgets select differently and must not alias"
+        );
+        b.selector = Selector::Guided { exploit: 1.0 };
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&b, 1, &cm()));
     }
 }

@@ -6,22 +6,23 @@
 //! line. If the process dies, re-running the same grid with `--resume`
 //! replays the journal, skips the finished pairs, executes only the
 //! missing runs, and — because [`RunRecord`] JSON round-trips losslessly
-//! — still emits a `fedtune.experiment.grid/v1` artifact byte-identical
+//! — still emits a `fedtune.experiment.grid/v2` artifact byte-identical
 //! to an uninterrupted sweep.
 //!
-//! # File format (`fedtune.store.journal/v2`)
+//! # File format (`fedtune.store.journal/v3`)
 //!
 //! ```text
-//! {"schema":"fedtune.store.journal/v2","sweep":"<32 hex>"}   // header
+//! {"schema":"fedtune.store.journal/v3","sweep":"<32 hex>"}   // header
 //! {"cell":0,"seed":101,"record":{...}}                       // one per pair
 //! {"cell":0,"seed":202,"record":{...}}
 //! ...
 //! ```
 //!
-//! v2 accompanies the fractional-E unification (run identities changed,
-//! so every v1 journal describes runs that no longer exist): a v1 header
-//! fails the schema check below and the journal replays as empty — the
-//! sweep simply re-runs.
+//! v2 accompanied the fractional-E unification, v3 the per-client
+//! system-heterogeneity layer; each bump changed run identities, so
+//! every pre-v3 journal describes runs that no longer exist: a stale
+//! header fails the schema check below and the journal replays as
+//! empty — the sweep simply re-runs.
 //!
 //! The filename embeds the **sweep fingerprint** (a hash over the
 //! ordered per-pair run fingerprints, the seed list and the sweep
@@ -43,7 +44,7 @@ use crate::util::json::Json;
 use super::fingerprint::Fingerprint;
 
 /// Schema identifier in the journal header line.
-pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v2";
+pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v3";
 
 /// One replayed journal line: a finished `(cell, seed)` run record.
 #[derive(Debug, Clone)]

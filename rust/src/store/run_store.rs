@@ -1,26 +1,29 @@
 //! Two-tier content-addressed run store.
 //!
 //! The memory tier is a plain map that serves repeated lookups inside one
-//! process; the optional disk tier persists one `fedtune.store.run/v2`
+//! process; the optional disk tier persists one `fedtune.store.run/v3`
 //! JSON record per [`Fingerprint`] under `<cache-dir>/runs/<hex>.json`,
 //! so later sweeps (a figure regeneration, a resumed grid) reuse finished
 //! runs across processes.
 //!
-//! # Record schema (`fedtune.store.run/v2`)
+//! # Record schema (`fedtune.store.run/v3`)
 //!
 //! ```text
 //! {
-//!   "schema": "fedtune.store.run/v2",
+//!   "schema": "fedtune.store.run/v3",
 //!   "fingerprint": "<32 hex digits>",     // must match the filename key
 //!   "record": { ...RunRecord...,          // experiment::runner layout
 //!               "trace": {"rounds": [...]} }   // only when kept
 //! }
 //! ```
 //!
-//! v2 accompanies the fractional-E unification: the run's pass count
+//! v2 accompanied the fractional-E unification: the run's pass count
 //! lives in the fingerprinted config (`e0: f64`), so the v1 side-channel
-//! `"e"` field is gone. v1 records are treated as stale-schema misses —
-//! they re-run and heal; `fedtune info --cache-dir` counts them
+//! `"e"` field is gone. v3 accompanies per-client system heterogeneity:
+//! run identities grew a `system` spec (and a parameter-carrying
+//! selector spec), so pre-v3 records describe runs that no longer
+//! exist. Stale records (v1 or v2) are schema misses — they re-run and
+//! heal; `fedtune info --cache-dir` counts them
 //! ([`CacheStats::stale_runs`]) so operators can see why a warm cache
 //! re-executes.
 //!
@@ -46,7 +49,7 @@ use crate::util::json::Json;
 use super::fingerprint::Fingerprint;
 
 /// Schema identifier of one persisted run record.
-pub const RUN_SCHEMA: &str = "fedtune.store.run/v2";
+pub const RUN_SCHEMA: &str = "fedtune.store.run/v3";
 
 /// Name of the per-run subdirectory inside a cache dir.
 const RUNS_SUBDIR: &str = "runs";

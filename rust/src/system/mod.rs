@@ -1,0 +1,358 @@
+//! Per-client system profiles — device/link heterogeneity for the §3.1
+//! cost model.
+//!
+//! The paper assumes homogeneous clients: C1..C4 are global constants
+//! and every client computes and transmits at the same rate. Eq. 2's
+//! `max_k` CompT term only becomes interesting when clients *differ* —
+//! stragglers dominate round time — and the paper's own extension list
+//! (§6: guided and deadline selection) presupposes that difference. This
+//! module supplies it without touching the global constants:
+//!
+//! * [`ClientSystemProfile`] — per-client multipliers on the homogeneous
+//!   rates: `compute_factor` scales per-data-point compute time (Eq. 2),
+//!   `link_factor` scales link round-trip time (Eq. 3). The baseline
+//!   profile (both 1.0) reproduces the paper's client exactly.
+//! * [`SystemSpec`] — a named, seed-deterministic population
+//!   distribution over profiles: `homogeneous`, `lognormal:<sigma>`, or
+//!   a tiered `classes:` spec. One spec + one seed ⇒ one profile vector,
+//!   always ([`SystemSpec::profiles`] derives its own RNG stream and
+//!   never perturbs the engine or selector streams).
+//!
+//! The spec's canonical string form ([`SystemSpec::spec_string`]) is
+//! part of a run's content identity (DESIGN.md §10/§12): two runs under
+//! different system populations are different physics and key
+//! differently in the run store.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! homogeneous                      every client at the baseline rates
+//! lognormal:<sigma>                compute and link factors drawn
+//!                                  independently from LogNormal(0, sigma)
+//!                                  (median 1; sigma = 0 == homogeneous)
+//! classes:<name>:<factor>@<fraction>[,...]
+//!                                  tiered devices: each class claims
+//!                                  <fraction> of the population at
+//!                                  <factor>× the baseline cost; leftover
+//!                                  mass stays at the baseline
+//! ```
+//!
+//! Example: `classes:fast:0.5@0.3,slow:4.0@0.2` — 30% of clients run at
+//! half cost, 20% at 4× (stragglers), the remaining 50% at the baseline.
+
+use crate::util::rng::Rng;
+
+/// Stream tag for profile derivation: profiles come from
+/// `Rng::new(seed ^ SYSTEM_STREAM_TAG)`, a stream disjoint from the
+/// engine (`seed`) and coordinator (`seed ^ 0xc00d`) streams, so adding
+/// heterogeneity never perturbs convergence or selection randomness.
+const SYSTEM_STREAM_TAG: u64 = 0x5e57e;
+
+/// One client's system rates relative to the paper's homogeneous client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientSystemProfile {
+    /// Multiplier on per-data-point compute time: this client's share of
+    /// Eq. 2 is `n_k · compute_factor` (1.0 = paper baseline).
+    pub compute_factor: f64,
+    /// Multiplier on link round-trip time: Eq. 3's round time is
+    /// `C2 · max_k link_factor` over the participants (1.0 = baseline).
+    pub link_factor: f64,
+}
+
+impl ClientSystemProfile {
+    /// The paper's homogeneous client: unit rates.
+    pub const BASELINE: ClientSystemProfile =
+        ClientSystemProfile { compute_factor: 1.0, link_factor: 1.0 };
+
+    /// Modeled compute time of one local pass over `n` data points
+    /// (in C1 units) — what deadline selection keys on.
+    pub fn round_time(&self, n: usize) -> f64 {
+        n as f64 * self.compute_factor
+    }
+}
+
+/// One tier of a `classes:` spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemClass {
+    /// Label (for spec strings and logs), e.g. "fast", "slow".
+    pub name: String,
+    /// Cost multiplier applied to both compute and link rates.
+    pub factor: f64,
+    /// Fraction of the population in this class, in [0, 1].
+    pub fraction: f64,
+}
+
+/// A deterministic, seed-derived population of client system profiles.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum SystemSpec {
+    /// Every client at [`ClientSystemProfile::BASELINE`] — reproduces
+    /// the paper's homogeneous numbers bit-for-bit.
+    #[default]
+    Homogeneous,
+    /// Compute and link factors drawn independently per client from
+    /// LogNormal(0, sigma): median 1, heavier straggler tail as sigma
+    /// grows (the FedScale/Oort-style device distribution shape).
+    LogNormal { sigma: f64 },
+    /// Tiered device classes; leftover population mass stays at the
+    /// baseline profile.
+    Classes(Vec<SystemClass>),
+}
+
+impl SystemSpec {
+    /// Parse the spec grammar (see the module doc). Returns a
+    /// human-readable error for malformed specs.
+    pub fn parse(spec: &str) -> Result<SystemSpec, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "homogeneous" {
+            return Ok(SystemSpec::Homogeneous);
+        }
+        if let Some(arg) = spec.strip_prefix("lognormal:") {
+            let sigma: f64 = arg
+                .trim()
+                .parse()
+                .map_err(|_| format!("lognormal sigma {arg:?} is not a number"))?;
+            let s = SystemSpec::LogNormal { sigma };
+            s.validate()?;
+            return Ok(s);
+        }
+        if let Some(body) = spec.strip_prefix("classes:") {
+            let mut classes = Vec::new();
+            for part in body.split(',') {
+                let part = part.trim();
+                let (name, rest) = part
+                    .split_once(':')
+                    .ok_or_else(|| format!("class {part:?}: expected <name>:<factor>@<fraction>"))?;
+                let (factor, fraction) = rest
+                    .split_once('@')
+                    .ok_or_else(|| format!("class {part:?}: expected <factor>@<fraction>"))?;
+                let factor: f64 = factor
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("class {name:?}: factor {factor:?} is not a number"))?;
+                let fraction: f64 = fraction
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("class {name:?}: fraction {fraction:?} is not a number"))?;
+                classes.push(SystemClass { name: name.trim().to_string(), factor, fraction });
+            }
+            let s = SystemSpec::Classes(classes);
+            s.validate()?;
+            return Ok(s);
+        }
+        Err(format!(
+            "unknown system spec {spec:?} (expected homogeneous | lognormal:<sigma> | \
+             classes:<name>:<factor>@<fraction>,...)"
+        ))
+    }
+
+    /// Canonical string form; `parse(spec_string())` round-trips. This
+    /// string joins the run's content identity (DESIGN.md §12), so it
+    /// must be stable: floats print in Rust's shortest round-trip form.
+    pub fn spec_string(&self) -> String {
+        match self {
+            SystemSpec::Homogeneous => "homogeneous".to_string(),
+            SystemSpec::LogNormal { sigma } => format!("lognormal:{sigma}"),
+            SystemSpec::Classes(classes) => {
+                let parts: Vec<String> = classes
+                    .iter()
+                    .map(|c| format!("{}:{}@{}", c.name, c.factor, c.fraction))
+                    .collect();
+                format!("classes:{}", parts.join(","))
+            }
+        }
+    }
+
+    /// Check the spec's invariants (parsing calls this; programmatic
+    /// construction should too, via `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            SystemSpec::Homogeneous => Ok(()),
+            SystemSpec::LogNormal { sigma } => {
+                if !sigma.is_finite() || *sigma < 0.0 {
+                    return Err(format!("lognormal sigma must be finite and >= 0, got {sigma}"));
+                }
+                Ok(())
+            }
+            SystemSpec::Classes(classes) => {
+                if classes.is_empty() {
+                    return Err("classes spec needs at least one class".to_string());
+                }
+                let mut total = 0.0;
+                for c in classes {
+                    if c.name.is_empty() || c.name.contains([':', '@', ',']) {
+                        return Err(format!("bad class name {:?}", c.name));
+                    }
+                    if !c.factor.is_finite() || c.factor <= 0.0 {
+                        return Err(format!(
+                            "class {:?}: factor must be finite and > 0, got {}",
+                            c.name, c.factor
+                        ));
+                    }
+                    if !c.fraction.is_finite() || !(0.0..=1.0).contains(&c.fraction) {
+                        return Err(format!(
+                            "class {:?}: fraction must be in [0, 1], got {}",
+                            c.name, c.fraction
+                        ));
+                    }
+                    total += c.fraction;
+                }
+                if total > 1.0 + 1e-9 {
+                    return Err(format!("class fractions sum to {total}, must be <= 1"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Derive the population's profiles: `k` clients, deterministic in
+    /// (spec, seed). Uses its own RNG stream (`seed ^ SYSTEM_STREAM_TAG`)
+    /// so existing engine/selector streams are bit-for-bit unperturbed
+    /// by the system layer.
+    pub fn profiles(&self, k: usize, seed: u64) -> Vec<ClientSystemProfile> {
+        match self {
+            SystemSpec::Homogeneous => vec![ClientSystemProfile::BASELINE; k],
+            SystemSpec::LogNormal { sigma } => {
+                let mut rng = Rng::new(seed ^ SYSTEM_STREAM_TAG);
+                (0..k)
+                    .map(|_| ClientSystemProfile {
+                        compute_factor: (sigma * rng.gauss()).exp(),
+                        link_factor: (sigma * rng.gauss()).exp(),
+                    })
+                    .collect()
+            }
+            SystemSpec::Classes(classes) => {
+                let mut rng = Rng::new(seed ^ SYSTEM_STREAM_TAG);
+                (0..k)
+                    .map(|_| {
+                        let u = rng.f64();
+                        let mut acc = 0.0;
+                        for c in classes {
+                            acc += c.fraction;
+                            if u < acc {
+                                return ClientSystemProfile {
+                                    compute_factor: c.factor,
+                                    link_factor: c.factor,
+                                };
+                            }
+                        }
+                        ClientSystemProfile::BASELINE
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        matches!(self, SystemSpec::Homogeneous)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_homogeneous_and_empty() {
+        assert_eq!(SystemSpec::parse("homogeneous").unwrap(), SystemSpec::Homogeneous);
+        assert_eq!(SystemSpec::parse("").unwrap(), SystemSpec::Homogeneous);
+        assert_eq!(SystemSpec::parse(" homogeneous ").unwrap(), SystemSpec::Homogeneous);
+    }
+
+    #[test]
+    fn parse_lognormal() {
+        assert_eq!(
+            SystemSpec::parse("lognormal:0.5").unwrap(),
+            SystemSpec::LogNormal { sigma: 0.5 }
+        );
+        assert!(SystemSpec::parse("lognormal:-1").is_err());
+        assert!(SystemSpec::parse("lognormal:abc").is_err());
+        assert!(SystemSpec::parse("lognormal:").is_err());
+    }
+
+    #[test]
+    fn parse_classes() {
+        let s = SystemSpec::parse("classes:fast:0.5@0.3,slow:4.0@0.2").unwrap();
+        match &s {
+            SystemSpec::Classes(cs) => {
+                assert_eq!(cs.len(), 2);
+                assert_eq!(cs[0].name, "fast");
+                assert_eq!(cs[0].factor, 0.5);
+                assert_eq!(cs[0].fraction, 0.3);
+                assert_eq!(cs[1].name, "slow");
+                assert_eq!(cs[1].factor, 4.0);
+                assert_eq!(cs[1].fraction, 0.2);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        assert!(SystemSpec::parse("classes:").is_err());
+        assert!(SystemSpec::parse("classes:slow:4.0").is_err()); // missing @fraction
+        assert!(SystemSpec::parse("classes:slow:0@0.5").is_err()); // factor <= 0
+        assert!(SystemSpec::parse("classes:a:1@0.6,b:2@0.6").is_err()); // > 1 total
+        assert!(SystemSpec::parse("tiered:x").is_err());
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for spec in [
+            "homogeneous",
+            "lognormal:0.5",
+            "lognormal:0",
+            "classes:fast:0.5@0.3,slow:4@0.2",
+        ] {
+            let s = SystemSpec::parse(spec).unwrap();
+            assert_eq!(
+                SystemSpec::parse(&s.spec_string()).unwrap(),
+                s,
+                "round trip broke for {spec:?} → {}",
+                s.spec_string()
+            );
+        }
+        assert_eq!(SystemSpec::Homogeneous.spec_string(), "homogeneous");
+    }
+
+    #[test]
+    fn homogeneous_profiles_are_all_baseline() {
+        let p = SystemSpec::Homogeneous.profiles(10, 123);
+        assert_eq!(p.len(), 10);
+        assert!(p.iter().all(|c| *c == ClientSystemProfile::BASELINE));
+    }
+
+    #[test]
+    fn profiles_deterministic_per_seed() {
+        let spec = SystemSpec::LogNormal { sigma: 0.5 };
+        assert_eq!(spec.profiles(50, 7), spec.profiles(50, 7));
+        assert_ne!(spec.profiles(50, 7), spec.profiles(50, 8));
+        // Zero sigma degenerates to the baseline exactly (exp(0) == 1).
+        let z = SystemSpec::LogNormal { sigma: 0.0 }.profiles(20, 7);
+        assert!(z.iter().all(|c| *c == ClientSystemProfile::BASELINE));
+    }
+
+    #[test]
+    fn lognormal_factors_are_positive_and_spread() {
+        let p = SystemSpec::LogNormal { sigma: 1.0 }.profiles(2000, 3);
+        assert!(p.iter().all(|c| c.compute_factor > 0.0 && c.link_factor > 0.0));
+        let slow = p.iter().filter(|c| c.compute_factor > 1.0).count();
+        // Median 1: roughly half the clients are slower than baseline.
+        assert!((600..1400).contains(&slow), "slow count {slow}");
+    }
+
+    #[test]
+    fn classes_fractions_fill_and_leftover_is_baseline() {
+        let spec = SystemSpec::parse("classes:fast:0.5@0.3,slow:4.0@0.2").unwrap();
+        let p = spec.profiles(10_000, 11);
+        let fast = p.iter().filter(|c| c.compute_factor == 0.5).count();
+        let slow = p.iter().filter(|c| c.compute_factor == 4.0).count();
+        let base = p.iter().filter(|c| **c == ClientSystemProfile::BASELINE).count();
+        assert_eq!(fast + slow + base, 10_000);
+        assert!((2500..3500).contains(&fast), "fast {fast}");
+        assert!((1500..2500).contains(&slow), "slow {slow}");
+        assert!((4500..5500).contains(&base), "baseline {base}");
+    }
+
+    #[test]
+    fn round_time_scales_with_factor() {
+        let slow = ClientSystemProfile { compute_factor: 4.0, link_factor: 1.0 };
+        assert_eq!(slow.round_time(10), 40.0);
+        assert_eq!(ClientSystemProfile::BASELINE.round_time(10), 10.0);
+    }
+}

@@ -7,7 +7,7 @@
 //! kept here as the reference implementation:
 //!
 //! 1. integral-E grids are unperturbed by the usize→f64 change — every
-//!    run record (and hence the `fedtune.experiment.grid/v1` artifact)
+//!    run record (and hence the `fedtune.experiment.grid/v2` artifact)
 //!    is byte-identical to what the old mirror computed;
 //! 2. E = 0.5 through the coordinator reproduces the old mirror's trace
 //!    bit-for-bit on the same seed.
@@ -24,14 +24,36 @@ use fedtune::engine::FlEngine;
 use fedtune::experiment::runner::run_record_json;
 use fedtune::experiment::{Grid, RunRecord};
 use fedtune::overhead::{CostModel, Costs, Preference};
+use fedtune::store::RUN_SCHEMA;
+use fedtune::system::ClientSystemProfile;
 use fedtune::trace::{RoundRecord, Trace};
 use fedtune::util::rng::Rng;
+
+/// The pre-heterogeneity `CostModel::round_costs`, verbatim (homogeneous
+/// Eqs. 2–5): the mirror must stay pinned to the *old* cost equations so
+/// this suite keeps witnessing that the refactored pipeline did not
+/// drift (the per-client system layer must be exactly identity here).
+fn legacy_round_costs(cm: &CostModel, sizes: &[usize], e: f64) -> Costs {
+    let m = sizes.len() as f64;
+    let max_n = sizes.iter().copied().max().unwrap_or(0) as f64;
+    let sum_n: usize = sizes.iter().sum();
+    Costs {
+        comp_t: cm.c1 * e * max_n,
+        trans_t: cm.c2,
+        comp_l: cm.c3 * e * sum_n as f64,
+        trans_l: cm.c4 * m,
+    }
+}
 
 /// The experiment runner's old fixed-fractional loop, verbatim: the
 /// hand-kept mirror of `coordinator::Server::run` for fixed schedules
 /// (same selector RNG stream `seed ^ 0xc00d`, stop conditions and cost
-/// accounting). It survives only here, as the reference the unified
-/// coordinator path is checked against.
+/// accounting — via the pinned [`legacy_round_costs`]). It survives only
+/// in pins like this one, as the reference the unified coordinator path
+/// is checked against. (`tests/system_heterogeneity.rs` and
+/// `tests/prop_invariants.rs` carry their own deliberate verbatim
+/// copies: each suite's pin stands alone, so no shared helper can drift
+/// all of them at once.)
 fn legacy_fixed_mirror(
     cfg: &ExperimentConfig,
     e: f64,
@@ -41,18 +63,20 @@ fn legacy_fixed_mirror(
     let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
     let target = cfg.target().unwrap();
     let mut rng = Rng::new(seed ^ 0xc00d); // same stream as coordinator::Server
+    let systems = vec![ClientSystemProfile::BASELINE; engine.client_sizes().len()];
     let mut trace = Trace::new();
     let mut cum = Costs::ZERO;
     let mut accuracy = 0.0;
     let mut round = 0;
     while accuracy < target && round < cfg.max_rounds {
         round += 1;
-        let participants = cfg.selector.select(engine.client_sizes(), cfg.m0, &mut rng);
+        let participants =
+            cfg.selector.select(engine.client_sizes(), &systems, cfg.m0, &mut rng);
         let sizes: Vec<usize> =
             participants.iter().map(|&k| engine.client_sizes()[k]).collect();
         let outcome = engine.run_round(&participants, e).unwrap();
         accuracy = outcome.accuracy;
-        cum.add(&cost_model.round_costs(&sizes, e));
+        cum.add(&legacy_round_costs(&cost_model, &sizes, e));
         trace.push(RoundRecord {
             round,
             m: cfg.m0,
@@ -73,7 +97,7 @@ fn base() -> ExperimentConfig {
 /// Contract 1: the usize→f64 unification must not perturb integral-E
 /// results. Every fixed-schedule (cell, seed) run of an integral-E grid
 /// matches the legacy mirror bit-for-bit, so the emitted
-/// `fedtune.experiment.grid/v1` JSON is byte-identical to what the
+/// `fedtune.experiment.grid/v2` JSON is byte-identical to what the
 /// pre-refactor pipeline produced.
 #[test]
 fn integral_e_grid_records_match_legacy_mirror_bitwise() {
@@ -171,8 +195,9 @@ fn fedtune_with_fractional_e0_activates_and_respects_floor() {
     }
 }
 
-/// Schema bump: v1 cache records are clean misses under the v2 store —
-/// a "warm" v1 cache re-runs everything, heals, and changes no bytes.
+/// Schema bump: v1 cache records are clean misses under the current
+/// store — a "warm" v1 cache re-runs everything, heals, and changes no
+/// bytes.
 #[test]
 fn v1_cache_records_are_misses_under_v2() {
     let dir = std::env::temp_dir()
@@ -191,8 +216,7 @@ fn v1_cache_records_are_misses_under_v2() {
     assert_eq!(files.len(), 2);
     for f in &files {
         let text = fs::read_to_string(f).unwrap();
-        fs::write(f, text.replace("fedtune.store.run/v2", "fedtune.store.run/v1"))
-            .unwrap();
+        fs::write(f, text.replace(RUN_SCHEMA, "fedtune.store.run/v1")).unwrap();
     }
 
     let rerun = make().run().unwrap();

@@ -14,6 +14,7 @@ use fedtune::fedtune::schedule::Schedule;
 use fedtune::model::ParamVec;
 use fedtune::overhead::CostModel;
 use fedtune::runtime::Runtime;
+use fedtune::system::SystemSpec;
 use fedtune::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
@@ -40,6 +41,7 @@ fn engine(model: &str, dataset: &str, scale: f64, agg: AggregatorKind, seed: u64
                 aggregator: agg,
                 eval_subsample: 512,
                 seed,
+                system: SystemSpec::Homogeneous,
             },
         )
         .unwrap(),
@@ -197,6 +199,7 @@ fn model_dataset_mismatch_rejected() {
             aggregator: AggregatorKind::FedAvg,
             eval_subsample: 64,
             seed: 1,
+            system: SystemSpec::Homogeneous,
         },
     );
     assert!(err.is_err());

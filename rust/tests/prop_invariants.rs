@@ -6,9 +6,48 @@ use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ParamSpec, ParamVec};
 use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use fedtune::overhead::{CostModel, Costs, Preference};
+use fedtune::system::ClientSystemProfile;
 use fedtune::util::json::Json;
 use fedtune::util::proptest::{check, Gen};
 use fedtune::util::rng::Rng;
+
+/// The pre-heterogeneity `CostModel::round_costs`, verbatim — the
+/// homogeneous Eqs. (2)–(5) the refactored per-participant accounting
+/// must reproduce bit-for-bit under all-baseline profiles.
+fn legacy_round_costs(cm: &CostModel, sizes: &[usize], e: f64) -> Costs {
+    let m = sizes.len() as f64;
+    let max_n = sizes.iter().copied().max().unwrap_or(0) as f64;
+    let sum_n: usize = sizes.iter().sum();
+    Costs {
+        comp_t: cm.c1 * e * max_n,
+        trans_t: cm.c2,
+        comp_l: cm.c3 * e * sum_n as f64,
+        trans_l: cm.c4 * m,
+    }
+}
+
+fn gen_cost_model(g: &mut Gen) -> CostModel {
+    CostModel {
+        c1: g.f64(1.0, 1e8),
+        c2: g.f64(1.0, 1e6),
+        c3: g.f64(1.0, 1e8),
+        c4: g.f64(1.0, 1e6),
+    }
+}
+
+fn gen_rows(g: &mut Gen, max_len: usize) -> Vec<(usize, ClientSystemProfile)> {
+    (0..g.usize(1, max_len))
+        .map(|_| {
+            (
+                g.usize(1, 316),
+                ClientSystemProfile {
+                    compute_factor: g.f64(0.05, 20.0),
+                    link_factor: g.f64(0.05, 20.0),
+                },
+            )
+        })
+        .collect()
+}
 
 #[test]
 fn prop_selection_returns_distinct_valid_clients() {
@@ -24,7 +63,8 @@ fn prop_selection_returns_distinct_valid_clients() {
         },
         |(sizes, m, seed)| {
             let mut rng = Rng::new(*seed);
-            let picked = Selector::UniformRandom.select(sizes, *m, &mut rng);
+            let systems = vec![ClientSystemProfile::BASELINE; sizes.len()];
+            let picked = Selector::UniformRandom.select(sizes, &systems, *m, &mut rng);
             if picked.len() != (*m).min(sizes.len()) {
                 return Err(format!("picked {} of {}", picked.len(), m));
             }
@@ -48,27 +88,140 @@ fn prop_round_costs_match_equations_exactly() {
         "eqs-2-to-5",
         300,
         |g: &mut Gen| {
-            let sizes: Vec<usize> = (0..g.usize(1, 60)).map(|_| g.usize(1, 316)).collect();
+            let rows = gen_rows(g, 60);
             let e = g.f64(0.25, 16.0);
             let c1 = g.f64(1.0, 1e8);
             let c2 = g.f64(1.0, 1e6);
-            (sizes, e, c1, c2)
+            (rows, e, c1, c2)
         },
-        |(sizes, e, c1, c2)| {
+        |(rows, e, c1, c2)| {
             let cm = CostModel { c1: *c1, c2: *c2, c3: *c1, c4: *c2 };
-            let c = cm.round_costs(sizes, *e);
-            let max = *sizes.iter().max().unwrap() as f64;
-            let sum: usize = sizes.iter().sum();
+            let c = cm.round_costs(rows, *e);
+            let max_comp = rows
+                .iter()
+                .map(|&(n, p)| n as f64 * p.compute_factor)
+                .fold(0.0_f64, f64::max);
+            let max_link =
+                rows.iter().map(|&(_, p)| p.link_factor).fold(0.0_f64, f64::max);
+            let sum: usize = rows.iter().map(|&(n, _)| n).sum();
             let checks = [
-                (c.comp_t, c1 * e * max),
-                (c.trans_t, *c2),
+                (c.comp_t, c1 * e * max_comp),
+                (c.trans_t, c2 * max_link),
                 (c.comp_l, c1 * e * sum as f64),
-                (c.trans_l, c2 * sizes.len() as f64),
+                (c.trans_l, c2 * rows.len() as f64),
             ];
             for (got, want) in checks {
                 if (got - want).abs() > want.abs() * 1e-12 {
                     return Err(format!("{got} != {want}"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_homogeneous_rows_reproduce_legacy_round_costs_bitwise() {
+    // Acceptance pin: all-baseline profiles must make the heterogeneous
+    // accounting *identical* — not merely close — to the pre-refactor
+    // homogeneous equations, so `SystemSpec::Homogeneous` runs replay
+    // pre-refactor traces bit-for-bit.
+    check(
+        "hetero-vs-legacy-homogeneous",
+        300,
+        |g: &mut Gen| {
+            let sizes: Vec<usize> =
+                (0..g.usize(0, 60)).map(|_| g.usize(1, 316)).collect();
+            let e = g.f64(0.25, 16.0);
+            let cm = gen_cost_model(g);
+            (sizes, e, cm)
+        },
+        |(sizes, e, cm)| {
+            let legacy = legacy_round_costs(cm, sizes, *e);
+            let rows: Vec<(usize, ClientSystemProfile)> =
+                sizes.iter().map(|&n| (n, ClientSystemProfile::BASELINE)).collect();
+            let hetero = cm.round_costs(&rows, *e);
+            let uniform = cm.round_costs_uniform(sizes, *e);
+            if hetero != legacy {
+                return Err(format!("baseline rows drifted: {hetero:?} != {legacy:?}"));
+            }
+            if uniform != legacy {
+                return Err(format!("uniform helper drifted: {uniform:?} != {legacy:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_slowing_a_participant_never_decreases_comp_t() {
+    check(
+        "comp-t-monotone-in-compute-factor",
+        300,
+        |g: &mut Gen| {
+            let rows = gen_rows(g, 40);
+            let idx = g.usize(0, rows.len() - 1);
+            let slowdown = g.f64(1.0, 10.0);
+            let e = g.f64(0.25, 16.0);
+            let cm = gen_cost_model(g);
+            (rows, idx, slowdown, e, cm)
+        },
+        |(rows, idx, slowdown, e, cm)| {
+            let before = cm.round_costs(rows, *e);
+            let mut slowed = rows.clone();
+            slowed[*idx].1.compute_factor *= slowdown;
+            let after = cm.round_costs(&slowed, *e);
+            if after.comp_t < before.comp_t {
+                return Err(format!(
+                    "slowing participant {idx} by {slowdown}x dropped CompT: {} -> {}",
+                    before.comp_t, after.comp_t
+                ));
+            }
+            // The untouched overheads must not move at all.
+            if after.trans_t != before.trans_t
+                || after.comp_l != before.comp_l
+                || after.trans_l != before.trans_l
+            {
+                return Err("compute slowdown leaked into other overheads".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adding_a_participant_never_decreases_any_overhead() {
+    check(
+        "costs-monotone-in-participants",
+        300,
+        |g: &mut Gen| {
+            let rows = gen_rows(g, 40);
+            let extra = (
+                g.usize(1, 316),
+                ClientSystemProfile {
+                    compute_factor: g.f64(0.05, 20.0),
+                    link_factor: g.f64(0.05, 20.0),
+                },
+            );
+            let e = g.f64(0.25, 16.0);
+            let cm = gen_cost_model(g);
+            (rows, extra, e, cm)
+        },
+        |(rows, extra, e, cm)| {
+            let before = cm.round_costs(rows, *e);
+            let mut grown = rows.clone();
+            grown.push(*extra);
+            let after = cm.round_costs(&grown, *e);
+            // CompL/TransL grow strictly (the new client's work is real);
+            // the max-based CompT/TransT can only stay or rise.
+            if after.comp_l <= before.comp_l {
+                return Err(format!("CompL fell: {} -> {}", before.comp_l, after.comp_l));
+            }
+            if after.trans_l <= before.trans_l {
+                return Err(format!("TransL fell: {} -> {}", before.trans_l, after.trans_l));
+            }
+            if after.comp_t < before.comp_t || after.trans_t < before.trans_t {
+                return Err("max-based overhead decreased on a superset".into());
             }
             Ok(())
         },

@@ -1,0 +1,282 @@
+//! Acceptance: the per-client system layer (ISSUE 4).
+//!
+//! The cost accounting was refactored from homogeneous global constants
+//! to per-participant (n_k, system-profile_k) rows. These tests pin the
+//! contract the refactor rests on:
+//!
+//! 1. `SystemSpec::Homogeneous` runs are bit-for-bit identical to
+//!    pre-refactor runs — witnessed end-to-end against a verbatim
+//!    mirror of the old loop + old `round_costs` (PR-3 style);
+//! 2. a `lognormal` spec with sigma > 0 produces strictly larger CompT
+//!    than homogeneous on the same seed/config, while leaving the load
+//!    overheads (CompL/TransL) and the accuracy trajectory untouched;
+//! 3. the system spec joins the run identity: heterogeneous cells key
+//!    their own store records, and pre-v3 records are clean misses that
+//!    re-run and heal (`fedtune info` counts them as stale).
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::coordinator::selection::Selector;
+use fedtune::engine::FlEngine;
+use fedtune::experiment::Grid;
+use fedtune::overhead::{CostModel, Costs};
+use fedtune::store::{run_fingerprint, RunStore, RUN_SCHEMA};
+use fedtune::system::{ClientSystemProfile, SystemSpec};
+use fedtune::trace::{RoundRecord, Trace};
+use fedtune::util::rng::Rng;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fedtune_hetero_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// The pre-heterogeneity `CostModel::round_costs`, verbatim.
+fn legacy_round_costs(cm: &CostModel, sizes: &[usize], e: f64) -> Costs {
+    let m = sizes.len() as f64;
+    let max_n = sizes.iter().copied().max().unwrap_or(0) as f64;
+    let sum_n: usize = sizes.iter().sum();
+    Costs {
+        comp_t: cm.c1 * e * max_n,
+        trans_t: cm.c2,
+        comp_l: cm.c3 * e * sum_n as f64,
+        trans_l: cm.c4 * m,
+    }
+}
+
+/// The pre-refactor fixed-schedule round loop, verbatim (selector RNG
+/// stream `seed ^ 0xc00d`, stop conditions, homogeneous cost
+/// accounting): what every `SystemSpec::Homogeneous` run must still
+/// reproduce bit-for-bit through the refactored pipeline.
+fn prerefactor_fixed_mirror(
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> (usize, f64, Costs, Trace) {
+    let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
+    let cost_model = cfg.cost_model().unwrap();
+    let target = cfg.target().unwrap();
+    let mut rng = Rng::new(seed ^ 0xc00d);
+    let systems = vec![ClientSystemProfile::BASELINE; engine.client_sizes().len()];
+    let mut trace = Trace::new();
+    let mut cum = Costs::ZERO;
+    let mut accuracy = 0.0;
+    let mut round = 0;
+    while accuracy < target && round < cfg.max_rounds {
+        round += 1;
+        let participants =
+            cfg.selector.select(engine.client_sizes(), &systems, cfg.m0, &mut rng);
+        let sizes: Vec<usize> =
+            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
+        let outcome = engine.run_round(&participants, cfg.e0).unwrap();
+        accuracy = outcome.accuracy;
+        cum.add(&legacy_round_costs(&cost_model, &sizes, cfg.e0));
+        trace.push(RoundRecord {
+            round,
+            m: cfg.m0,
+            e: cfg.e0,
+            accuracy,
+            train_loss: outcome.train_loss,
+            costs: cum,
+            fedtune_activated: false,
+        });
+    }
+    (round, accuracy, cum, trace)
+}
+
+/// Acceptance 1: homogeneous runs replay the pre-refactor numbers bit
+/// for bit — rounds, accuracy, all four overheads, and the whole trace.
+#[test]
+fn homogeneous_runs_match_prerefactor_mirror_bitwise() {
+    let mut cfg = base();
+    cfg.e0 = 4.0;
+    assert!(cfg.system.is_homogeneous(), "default config must stay homogeneous");
+    let unified = baselines::run_sim(&cfg, 5).unwrap();
+    let (rounds, accuracy, costs, trace) = prerefactor_fixed_mirror(&cfg, 5);
+    assert_eq!(unified.rounds, rounds);
+    assert_eq!(unified.final_accuracy, accuracy);
+    assert_eq!(unified.costs, costs);
+    assert_eq!(
+        unified.trace.to_json().dump(),
+        trace.to_json().dump(),
+        "homogeneous trace must equal the pre-refactor mirror's, bit for bit"
+    );
+}
+
+/// Acceptance 2: stragglers (lognormal sigma > 0) strictly inflate
+/// CompT on the same seed/config while the accuracy trajectory and the
+/// load overheads stay bitwise identical — heterogeneity changes when
+/// work finishes, not how much work exists.
+#[test]
+fn lognormal_sigma_strictly_inflates_comp_t() {
+    let homog_cfg = base();
+    let mut hetero_cfg = base();
+    hetero_cfg.system = SystemSpec::LogNormal { sigma: 0.5 };
+    let homog = baselines::run_sim(&homog_cfg, 7).unwrap();
+    let hetero = baselines::run_sim(&hetero_cfg, 7).unwrap();
+    assert_eq!(homog.rounds, hetero.rounds, "system layer must not touch convergence");
+    assert_eq!(homog.final_accuracy, hetero.final_accuracy);
+    assert_eq!(homog.costs.comp_l, hetero.costs.comp_l);
+    assert_eq!(homog.costs.trans_l, hetero.costs.trans_l);
+    assert!(
+        hetero.costs.comp_t > homog.costs.comp_t,
+        "sigma = 0.5 must strictly inflate CompT: {} !> {}",
+        hetero.costs.comp_t,
+        homog.costs.comp_t
+    );
+
+    // More heterogeneity, worse stragglers: sigma = 1.0 dominates 0.5 on
+    // this seed (the per-round max of heavier-tailed factors).
+    let mut extreme_cfg = base();
+    extreme_cfg.system = SystemSpec::LogNormal { sigma: 1.0 };
+    let extreme = baselines::run_sim(&extreme_cfg, 7).unwrap();
+    assert!(extreme.costs.comp_t > hetero.costs.comp_t);
+}
+
+/// A tiered `classes:` population with a straggler class inflates CompT
+/// too, and a pure fast-class population deflates it.
+#[test]
+fn class_specs_shift_comp_t_in_the_expected_direction() {
+    let homog = baselines::run_sim(&base(), 3).unwrap();
+
+    let mut slow_cfg = base();
+    slow_cfg.system = SystemSpec::parse("classes:slow:4.0@0.3").unwrap();
+    let slow = baselines::run_sim(&slow_cfg, 3).unwrap();
+    assert!(slow.costs.comp_t > homog.costs.comp_t);
+
+    let mut fast_cfg = base();
+    fast_cfg.system = SystemSpec::parse("classes:fast:0.25@1.0").unwrap();
+    let fast = baselines::run_sim(&fast_cfg, 3).unwrap();
+    assert!(fast.costs.comp_t < homog.costs.comp_t);
+    // Loads never move.
+    assert_eq!(slow.costs.comp_l, homog.costs.comp_l);
+    assert_eq!(fast.costs.comp_l, homog.costs.comp_l);
+}
+
+/// The heterogeneity-aware deadline selector interacts with the system
+/// layer end-to-end: under an all-slow population whose modeled times
+/// bust the deadline, rounds still run at min(m, k) participants.
+#[test]
+fn deadline_selection_on_stragglers_keeps_round_width() {
+    let mut cfg = base();
+    cfg.max_rounds = 50;
+    cfg.target_accuracy = 0.99; // run to the cap
+    cfg.system = SystemSpec::parse("classes:slow:1000.0@1.0").unwrap();
+    cfg.selector = Selector::Deadline { max_cost: 10.0 };
+    let r = baselines::run_sim(&cfg, 1).unwrap();
+    assert_eq!(r.rounds, 50);
+    // Every round billed M = m0 participants (TransL = C4 · M · rounds),
+    // not the pre-fix collapsed M = 1.
+    let cm = cfg.cost_model().unwrap();
+    assert_eq!(r.costs.trans_l, cm.c4 * (cfg.m0 * r.rounds) as f64);
+}
+
+/// The system spec joins the canonical run identity: grid cells on the
+/// systems axis never share store records, and a warm cache serves each
+/// spec its own runs.
+#[test]
+fn systems_axis_keys_distinct_cache_records() {
+    let dir = tmp_dir("axis");
+    let specs =
+        [SystemSpec::Homogeneous, SystemSpec::LogNormal { sigma: 0.5 }];
+    let make = || {
+        let mut cfg = base();
+        cfg.max_rounds = 300;
+        Grid::new(cfg).systems(&specs).seeds(&[7]).cache_dir(dir.clone())
+    };
+    let cold = make().run().unwrap();
+    assert_eq!(cold.cells.len(), 2);
+    assert_eq!(cold.executed_runs, 2, "each spec is its own engine run");
+    assert_ne!(
+        cold.cells[0].runs[0].costs.comp_t,
+        cold.cells[1].runs[0].costs.comp_t
+    );
+    let warm = make().run().unwrap();
+    assert_eq!(warm.executed_runs, 0, "both specs must hit their own records");
+    assert_eq!(warm.cache_hits, 2);
+    assert_eq!(warm.to_json().pretty(), cold.to_json().pretty());
+    // The artifact names each cell's spec.
+    let dump = cold.to_json().dump();
+    assert!(dump.contains("\"system\":\"homogeneous\""), "{dump}");
+    assert!(dump.contains("\"system\":\"lognormal:0.5\""), "{dump}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Schema bump: v2 cache records (pre-heterogeneity identities) are
+/// clean misses under the v3 store — they re-run, heal, and change no
+/// bytes; `fedtune info`'s stats count them as stale meanwhile.
+#[test]
+fn v2_cache_records_are_misses_under_v3() {
+    let dir = tmp_dir("v2miss");
+    let make = || {
+        let mut cfg = base();
+        cfg.max_rounds = 300;
+        Grid::new(cfg).m0s(&[5, 20]).seeds(&[3]).cache_dir(dir.clone())
+    };
+    let cold = make().run().unwrap();
+    assert_eq!(cold.executed_runs, 2);
+
+    // Downgrade every record to the v2 schema tag, as if written by the
+    // pre-heterogeneity binary.
+    let runs_dir = dir.join("runs");
+    let files: Vec<PathBuf> =
+        fs::read_dir(&runs_dir).unwrap().map(|e| e.unwrap().path()).collect();
+    assert_eq!(files.len(), 2);
+    for f in &files {
+        let text = fs::read_to_string(f).unwrap();
+        fs::write(f, text.replace(RUN_SCHEMA, "fedtune.store.run/v2")).unwrap();
+    }
+    let stats = RunStore::stats(&dir).unwrap();
+    assert_eq!(stats.stale_runs, 2, "v2 records must report as stale");
+
+    let rerun = make().run().unwrap();
+    assert_eq!(rerun.executed_runs, 2, "v2 records must all miss");
+    assert_eq!(rerun.cache_hits, 0);
+    assert_eq!(rerun.to_json().pretty(), cold.to_json().pretty());
+
+    // The re-run healed the cache back to v3: now everything hits.
+    let healed = make().run().unwrap();
+    assert_eq!(healed.executed_runs, 0);
+    assert_eq!(RunStore::stats(&dir).unwrap().stale_runs, 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Selector parameters are part of the run identity too (the satellite
+/// fix: a name-only selector field would alias `deadline:100` with
+/// `deadline:200` in the cache).
+#[test]
+fn selector_parameters_do_not_alias_cache_entries() {
+    let cm = CostModel::UNIT;
+    let mut a = base();
+    let mut b = base();
+    a.selector = Selector::by_name("deadline:100").unwrap();
+    b.selector = Selector::by_name("deadline:200").unwrap();
+    assert_ne!(run_fingerprint(&a, 1, &cm), run_fingerprint(&b, 1, &cm));
+    // And the full config JSON round-trip preserves them.
+    let back = ExperimentConfig::from_json(&a.to_json()).unwrap();
+    assert_eq!(back.selector, a.selector);
+}
+
+/// Profiles are a pure function of (spec, seed): the engines agree with
+/// the spec, and two engines on the same seed expose identical systems.
+#[test]
+fn engine_systems_are_seed_deterministic() {
+    let mut cfg = base();
+    cfg.system = SystemSpec::parse("lognormal:0.75").unwrap();
+    let e1 = baselines::sim_engine_for(&cfg, 9).unwrap();
+    let e2 = baselines::sim_engine_for(&cfg, 9).unwrap();
+    assert_eq!(e1.client_systems(), e2.client_systems());
+    assert_eq!(
+        e1.client_systems(),
+        cfg.system.profiles(e1.num_clients(), 9).as_slice()
+    );
+    let e3 = baselines::sim_engine_for(&cfg, 10).unwrap();
+    assert_ne!(e1.client_systems(), e3.client_systems());
+}
