@@ -22,7 +22,7 @@ use fedtune::coordinator::selection::Selector;
 use fedtune::coordinator::{RunResult, Server, ServerConfig};
 use fedtune::data::FederatedDataset;
 use fedtune::engine::real::{RealEngine, RealEngineConfig};
-use fedtune::fedtune::schedule::Schedule;
+use fedtune::fedtune::tuner::{FixedTuner, Tuner};
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::overhead::{CostModel, Preference};
 use fedtune::runtime::Runtime;
@@ -61,7 +61,7 @@ fn build_engine(seed: u64) -> anyhow::Result<RealEngine> {
     )
 }
 
-fn run(schedule: Schedule, seed: u64) -> anyhow::Result<(RunResult, f64, u64)> {
+fn run(tuner: Box<dyn Tuner>, seed: u64) -> anyhow::Result<(RunResult, f64, u64)> {
     let mut engine = build_engine(seed)?;
     let meta = engine.runtime().manifest().model(MODEL)?.clone();
     let cost_model =
@@ -76,7 +76,7 @@ fn run(schedule: Schedule, seed: u64) -> anyhow::Result<(RunResult, f64, u64)> {
             selector: Selector::UniformRandom,
             seed,
         },
-        schedule,
+        tuner,
     )
     .run()?;
     let wall = t0.elapsed().as_secs_f64();
@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- fixed baseline ----------------------------------------------------
     println!("[1/2] fixed baseline (M={M0}, E={E0})");
-    let (base, _, _) = run(Schedule::Fixed { m: M0, e: E0 }, SEED)?;
+    let (base, _, _) = run(Box::new(FixedTuner::new(M0, E0)), SEED)?;
     println!(
         "  stop={:?} rounds={} acc={:.3}  CompT={:.3e} TransT={:.3e} CompL={:.3e} TransL={:.3e}",
         base.stop, base.rounds, base.final_accuracy,
@@ -116,7 +116,7 @@ fn main() -> anyhow::Result<()> {
     let clients = (2112.0 * SCALE).round() as usize;
     let ft = FedTune::new(pref, FedTuneConfig::paper_defaults(clients), M0, E0)
         .map_err(anyhow::Error::msg)?;
-    let (tuned, _, _) = run(Schedule::Tuned(Box::new(ft)), SEED)?;
+    let (tuned, _, _) = run(Box::new(ft), SEED)?;
     println!(
         "  stop={:?} rounds={} acc={:.3}  CompT={:.3e} TransT={:.3e} CompL={:.3e} TransL={:.3e}  final M={} E={}",
         tuned.stop, tuned.rounds, tuned.final_accuracy,

@@ -1,13 +1,16 @@
-//! Quickstart: the FedTune public API in ~40 lines.
+//! Quickstart: the FedTune public API in ~50 lines.
 //!
 //! Runs the paper's headline comparison once on the simulator: a fixed
-//! (M, E) = (20, 20) baseline vs FedTune with a balanced preference, on
-//! the speech-to-command profile with ResNet-10 cost constants.
+//! (M, E) = (20, 20) baseline vs two tuner policies — FedTune with a
+//! balanced preference, and step-wise adaptive decay — on the
+//! speech-to-command profile with ResNet-10 cost constants. Policies
+//! are picked by spec string, exactly like `fedtune run --tuner ...`.
 //!
 //!     cargo run --release --example quickstart
 
 use fedtune::baselines;
 use fedtune::config::ExperimentConfig;
+use fedtune::fedtune::tuner::TunerSpec;
 use fedtune::overhead::Preference;
 
 fn main() -> anyhow::Result<()> {
@@ -15,36 +18,44 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default(); // speech + resnet-10 + fedavg
     cfg.seed = 42;
 
-    // 2. Baseline: fixed hyper-parameters for the whole run.
+    let report = |name: &str, r: &fedtune::coordinator::RunResult| {
+        println!(
+            "{name:<10}: {} rounds to {:.2} accuracy  CompT {:.3e}  TransT {:.3e}  \
+             CompL {:.3e}  TransL {:.3e}  (final M={}, E={}, {} tuner decisions)",
+            r.rounds,
+            r.final_accuracy,
+            r.costs.comp_t,
+            r.costs.trans_t,
+            r.costs.comp_l,
+            r.costs.trans_l,
+            r.final_m,
+            r.final_e,
+            r.decisions.len(),
+        );
+    };
+
+    // 2. Baseline: the `fixed` policy holds (M₀, E₀) for the whole run.
+    cfg.tuner = TunerSpec::parse("fixed").map_err(anyhow::Error::msg)?;
     let baseline = baselines::run_sim(&cfg, cfg.seed)?;
-    println!(
-        "baseline  : {} rounds to {:.2} accuracy  CompT {:.3e}  TransT {:.3e}  CompL {:.3e}  TransL {:.3e}",
-        baseline.rounds,
-        baseline.final_accuracy,
-        baseline.costs.comp_t,
-        baseline.costs.trans_t,
-        baseline.costs.comp_l,
-        baseline.costs.trans_l,
-    );
+    report("baseline", &baseline);
 
     // 3. FedTune: equal care about all four overheads (α=β=γ=δ=0.25).
+    cfg.tuner = TunerSpec::parse("fedtune").map_err(anyhow::Error::msg)?;
     cfg.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).map_err(anyhow::Error::msg)?);
     let tuned = baselines::run_sim(&cfg, cfg.seed)?;
-    println!(
-        "fedtune   : {} rounds to {:.2} accuracy  CompT {:.3e}  TransT {:.3e}  CompL {:.3e}  TransL {:.3e}  (final M={}, E={})",
-        tuned.rounds,
-        tuned.final_accuracy,
-        tuned.costs.comp_t,
-        tuned.costs.trans_t,
-        tuned.costs.comp_l,
-        tuned.costs.trans_l,
-        tuned.final_m,
-        tuned.final_e,
-    );
+    report("fedtune", &tuned);
 
-    // 4. The paper's Eq. (6): negative I(baseline, fedtune) = FedTune wins.
+    // 4. Step-wise adaptive decay: preference-free — on a 12-round
+    //    plateau, E decays ×0.7 and M re-expands.
+    cfg.tuner = TunerSpec::parse("stepwise:0.7:12").map_err(anyhow::Error::msg)?;
+    let stepwise = baselines::run_sim(&cfg, cfg.seed)?;
+    report("stepwise", &stepwise);
+
+    // 5. The paper's Eq. (6): negative I(baseline, policy) = policy wins.
     let pref = cfg.preference.unwrap();
-    let i = baseline.costs.compare(&tuned.costs, &pref);
-    println!("improvement (−I, Eq. 6): {:+.2}%", -i * 100.0);
+    for (name, r) in [("fedtune", &tuned), ("stepwise", &stepwise)] {
+        let i = baseline.costs.compare(&r.costs, &pref);
+        println!("improvement of {name} over fixed (−I, Eq. 6): {:+.2}%", -i * 100.0);
+    }
     Ok(())
 }

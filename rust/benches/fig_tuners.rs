@@ -1,0 +1,136 @@
+//! Tuner-policy figure (beyond the paper): the four policies of the
+//! pluggable tuner layer — fixed baseline, FedTune (Alg. 1), step-wise
+//! adaptive decay (Saadati & Amini 2024) and FedPop-style population
+//! tuning (Chen et al. 2023) — compared head-to-head across the paper's
+//! four pure preference profiles (Table 4 rows 1–4: α=1, β=1, γ=1, δ=1).
+//!
+//! The fixed policy is the shared `compare_baseline` leg, so every row
+//! reports the Eq. (6) preference-weighted improvement over it. All
+//! (policy, preference, seed) runs execute concurrently through
+//! `experiment::Grid`; the stepwise runs are preference-blind and dedupe
+//! to one run per seed across the whole preference axis. `--cache-dir`
+//! makes reruns incremental like every other figure, and the grid
+//! artifact lands in `fig_tuners.json`.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use fedtune::aggregation::AggregatorKind;
+use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
+use fedtune::fedtune::tuner::TunerSpec;
+use fedtune::overhead::Preference;
+use harness::{pct_std, sci, Table, SEEDS3};
+
+/// The paper's four pure preference profiles (Table 4 rows 1–4).
+fn pure_preferences() -> Vec<Preference> {
+    vec![
+        Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(), // CompT
+        Preference::new(0.0, 1.0, 0.0, 0.0).unwrap(), // TransT
+        Preference::new(0.0, 0.0, 1.0, 0.0).unwrap(), // CompL
+        Preference::new(0.0, 0.0, 0.0, 1.0).unwrap(), // TransL
+    ]
+}
+
+fn tuners() -> Vec<TunerSpec> {
+    vec![
+        TunerSpec::parse("fedtune").unwrap(),
+        TunerSpec::parse("stepwise:0.7:12").unwrap(),
+        TunerSpec::parse("population:4:10").unwrap(),
+    ]
+}
+
+fn main() {
+    let base = ExperimentConfig {
+        aggregator: AggregatorKind::FedAvg,
+        model: "resnet-10".into(),
+        max_rounds: 30_000, // CompL-ish policies shrink M and slow rounds
+        ..ExperimentConfig::default()
+    };
+    let prefs = pure_preferences();
+    let specs = tuners();
+    let result = harness::cached(
+        Grid::new(base)
+            .preferences(&prefs)
+            .tuners(&specs)
+            .seeds(&SEEDS3)
+            .compare_baseline(true),
+    )
+    .run()
+    .unwrap();
+
+    // Baseline row (fixed 20/20): the comparison baselines are identical
+    // across cells, so read the per-seed means off the first cell.
+    let base_costs = result.cells[0].baseline_costs.unwrap();
+    let mut t = Table::new(&[
+        "a/b/g/d", "policy", "CompT", "TransT", "CompL", "TransL", "final M", "final E",
+        "overall",
+    ]);
+    t.row(vec![
+        "any".into(),
+        "fixed".into(),
+        sci(base_costs[0].mean),
+        sci(base_costs[1].mean),
+        sci(base_costs[2].mean),
+        sci(base_costs[3].mean),
+        "20".into(),
+        "20".into(),
+        "-".into(),
+    ]);
+    for pref in &prefs {
+        for spec in &specs {
+            let c = result
+                .find_cell(|cell| cell.preference == Some(*pref) && cell.tuner == *spec)
+                .expect("every (preference, policy) pair has a cell");
+            let imp = c.improvement.unwrap();
+            t.row(vec![
+                pref.label(),
+                spec.spec_string(),
+                sci(c.costs[0].mean),
+                sci(c.costs[1].mean),
+                sci(c.costs[2].mean),
+                sci(c.costs[3].mean),
+                format!("{:.1}", c.final_m.mean),
+                format!("{:.1}", c.final_e.mean),
+                pct_std(imp.mean, imp.std),
+            ]);
+        }
+    }
+    t.print("Tuner policies — Eq. (6) improvement over fixed (20, 20), speech, 3 seeds");
+
+    // Per-policy grid means: which policy wins on average over the four
+    // pure profiles?
+    let mut t = Table::new(&["policy", "mean overall", "std"]);
+    for spec in &specs {
+        let s = result.mean_improvement_where(|c| c.tuner == *spec);
+        t.row(vec![
+            spec.spec_string(),
+            format!("{:+.2}%", s.mean),
+            format!("{:.2}%", s.std),
+        ]);
+    }
+    t.print("Tuner policies — grid-mean improvement per policy");
+
+    result.write_json("fig_tuners.json").unwrap();
+
+    // Shape checks: every cell compared against the baseline with finite
+    // numbers, and FedTune keeps the paper's best case (γ=1 shrinks M).
+    for c in &result.cells {
+        let imp = c.improvement.expect("all cells compare against the baseline");
+        assert!(imp.mean.is_finite(), "non-finite improvement in [{}]", c.cell.label());
+    }
+    let comp_l = prefs[2];
+    let ft = result
+        .find_cell(|c| c.preference == Some(comp_l) && c.tuner == TunerSpec::FedTune)
+        .unwrap();
+    assert!(
+        ft.final_m.mean < 10.0,
+        "FedTune under γ=1 must shrink M toward 1, got {:.1}",
+        ft.final_m.mean
+    );
+    println!(
+        "\nshape checks PASSED; artifact written to fig_tuners.json \
+         ({} executed runs, {} cache hits)",
+        result.executed_runs, result.cache_hits
+    );
+}

@@ -1,5 +1,6 @@
-//! Single-run drivers over the simulator engine: the fixed-(M, E)
-//! baseline and FedTune runs that every sweep is built from.
+//! Single-run drivers over the simulator engine: one configured tuner
+//! policy (fixed baseline, FedTune, stepwise, population, ...) driving
+//! one run — the unit every sweep is built from.
 //!
 //! Multi-seed comparison and grid orchestration (the machinery behind
 //! Tables 4/5/6 and Figs. 8/9) live in [`crate::experiment`] — this
@@ -11,8 +12,7 @@ use anyhow::Result;
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::coordinator::{RunResult, Server, ServerConfig};
 use crate::engine::sim::{SimEngine, SimParams};
-use crate::fedtune::schedule::Schedule;
-use crate::fedtune::{FedTune, FedTuneConfig};
+use crate::fedtune::tuner::{Tuner, TunerInit};
 use crate::model::ladder;
 use crate::overhead::CostModel;
 
@@ -35,6 +35,28 @@ pub fn run_sim(cfg: &ExperimentConfig, seed: u64) -> Result<RunResult> {
     run_sim_with_cost_model(cfg, seed, cfg.cost_model()?)
 }
 
+/// Instantiate the config's effective tuner policy for one run — the
+/// single construction path both engines share (`run_sim` here, the
+/// real-engine driver in `main`).
+pub fn tuner_for(
+    cfg: &ExperimentConfig,
+    num_clients: usize,
+    seed: u64,
+) -> Result<Box<dyn Tuner>> {
+    cfg.effective_tuner()
+        .build(&TunerInit {
+            m0: cfg.m0,
+            e0: cfg.e0,
+            preference: cfg.preference,
+            eps: cfg.eps,
+            penalty: cfg.penalty,
+            e_floor: cfg.e_floor,
+            num_clients,
+            seed,
+        })
+        .map_err(anyhow::Error::msg)
+}
+
 /// Execute one full run with explicit cost constants — Fig. 3 reproduces
 /// the paper's illustration with C1..C4 = 1 ([`CostModel::UNIT`]).
 pub fn run_sim_with_cost_model(
@@ -52,21 +74,8 @@ pub fn run_sim_with_cost_model(
         selector: cfg.selector,
         seed,
     };
-    let schedule = match &cfg.preference {
-        None => Schedule::Fixed { m: cfg.m0, e: cfg.e0 },
-        Some(pref) => {
-            let ft_cfg = FedTuneConfig {
-                eps: cfg.eps,
-                penalty: cfg.penalty,
-                e_min: cfg.e_floor,
-                ..FedTuneConfig::paper_defaults(num_clients)
-            };
-            Schedule::Tuned(Box::new(
-                FedTune::new(*pref, ft_cfg, cfg.m0, cfg.e0).map_err(anyhow::Error::msg)?,
-            ))
-        }
-    };
-    Server::new(&mut engine, server_cfg, schedule).run()
+    let tuner = tuner_for(cfg, num_clients, seed)?;
+    Server::new(&mut engine, server_cfg, tuner).run()
 }
 
 #[cfg(test)]
@@ -120,6 +129,29 @@ mod tests {
         assert!(tuned.costs.is_finite());
         assert!(tuned.final_e >= cfg.e_floor, "E broke the floor: {}", tuned.final_e);
         assert!(tuned.trace.records().iter().all(|r| r.e >= cfg.e_floor));
+    }
+
+    #[test]
+    fn stepwise_and_population_run_end_to_end() {
+        use crate::fedtune::tuner::TunerSpec;
+        let mut cfg = base_cfg();
+        cfg.max_rounds = 4000;
+        cfg.tuner = TunerSpec::parse("stepwise:0.5:25").unwrap();
+        let sw = run_sim(&cfg, 5).unwrap();
+        assert!(sw.costs.is_finite() && sw.costs.all_nonneg());
+        assert!(sw.final_e >= cfg.e_floor && sw.final_m >= 1);
+        assert_eq!(sw.trace.len(), sw.rounds);
+
+        cfg.tuner = TunerSpec::parse("population:4:10").unwrap();
+        cfg.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
+        let pop = run_sim(&cfg, 5).unwrap();
+        assert!(pop.costs.is_finite() && pop.costs.all_nonneg());
+        assert!(pop.final_e >= cfg.e_floor && pop.final_m >= 1);
+        // Slot boundaries were scored all the way to the stop round.
+        assert!(pop.activations >= pop.rounds / 10, "{}", pop.activations);
+        // Population without a preference is rejected up front.
+        cfg.preference = None;
+        assert!(run_sim(&cfg, 5).is_err());
     }
 
     #[test]

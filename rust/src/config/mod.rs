@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::aggregation::AggregatorKind;
 use crate::coordinator::selection::Selector;
 use crate::data::DatasetProfile;
+use crate::fedtune::tuner::TunerSpec;
 use crate::model::ladder;
 use crate::overhead::{CostModel, Preference};
 use crate::system::SystemSpec;
@@ -35,9 +36,17 @@ pub struct ExperimentConfig {
     /// end-to-end — the paper's E = 0.5 (§3.2) is a first-class config.
     pub m0: usize,
     pub e0: f64,
-    /// None ⇒ fixed-(M,E) baseline; Some ⇒ FedTune with this preference.
+    /// Tuner policy spec (`fixed` | `fedtune` | `stepwise:...` |
+    /// `population:...`). The default `fedtune` keeps the historical
+    /// semantics: it degrades to the fixed baseline when `preference`
+    /// is `None` (see [`ExperimentConfig::effective_tuner`]).
+    pub tuner: TunerSpec,
+    /// Application preference (α, β, γ, δ). Consumed by the `fedtune`
+    /// and `population` policies; `None` with the default tuner spec ⇒
+    /// the fixed-(M₀, E₀) baseline.
     pub preference: Option<Preference>,
-    /// FedTune constants (paper defaults: 0.01 / 10).
+    /// FedTune constants (paper defaults: 0.01 / 10). `eps` doubles as
+    /// the stepwise policy's plateau threshold.
     pub eps: f64,
     pub penalty: f64,
     /// FedTune's E floor: tuned runs never descend E below this
@@ -67,6 +76,7 @@ impl Default for ExperimentConfig {
             engine: EngineKind::Sim,
             m0: 20,
             e0: 20.0,
+            tuner: TunerSpec::FedTune,
             preference: None,
             eps: 0.01,
             penalty: 10.0,
@@ -88,6 +98,15 @@ impl ExperimentConfig {
         let p = DatasetProfile::by_name(&self.dataset)
             .with_context(|| format!("unknown dataset {:?}", self.dataset))?;
         Ok(if self.scale < 1.0 { p.scaled(self.scale) } else { p })
+    }
+
+    /// The tuner policy actually driving this run: the default
+    /// `fedtune` spec degrades to [`TunerSpec::Fixed`] when no
+    /// preference is configured (the historical "no preference =
+    /// baseline" semantics every pre-tuner config relies on); explicit
+    /// policies pass through unchanged.
+    pub fn effective_tuner(&self) -> TunerSpec {
+        self.tuner.effective(self.preference.is_some())
     }
 
     /// Effective target accuracy (dataset default when unset).
@@ -134,6 +153,13 @@ impl ExperimentConfig {
         if self.eps <= 0.0 || self.penalty < 1.0 {
             bail!("eps must be > 0 and penalty >= 1");
         }
+        // Note: population-without-preference is NOT a config error —
+        // a grid may supply the preference per cell (cmd_grid installs
+        // the 15-preference axis after parsing the base config). The
+        // run drivers reject it where a run is actually built
+        // (`TunerSpec::build`), and the sweep planner pre-checks each
+        // cell with its label.
+        self.tuner.validate().map_err(anyhow::Error::msg)?;
         self.selector.validate().map_err(anyhow::Error::msg)?;
         self.system.validate().map_err(anyhow::Error::msg)?;
         self.profile()?;
@@ -165,11 +191,12 @@ impl ExperimentConfig {
             ("lr", (self.lr as f64).into()),
             ("seed", self.seed.into()),
             ("scale", self.scale.into()),
-            // Parameter-carrying spec strings: `guided:2.5` and
-            // `deadline:150` round-trip losslessly (a name-only field
-            // would alias differently-parameterized selectors).
+            // Parameter-carrying spec strings: `guided:2.5`,
+            // `deadline:150` and `population:4:10` round-trip losslessly
+            // (name-only fields would alias different parameterizations).
             ("selector", self.selector.spec().as_str().into()),
             ("system", self.system.spec_string().as_str().into()),
+            ("tuner", self.tuner.spec_string().as_str().into()),
         ]);
         if let Some(p) = &self.preference {
             j.set(
@@ -209,14 +236,14 @@ impl ExperimentConfig {
         }
         if let Some(v) = gs("selector") {
             cfg.selector = Selector::by_name(&v).with_context(|| {
-                format!(
-                    "bad selector spec {v:?} (expected random | guided[:exploit >= 0] \
-                     | deadline[:max-cost > 0])"
-                )
+                format!("bad selector spec {v:?} (expected {})", Selector::SPEC_HELP)
             })?;
         }
         if let Some(v) = gs("system") {
             cfg.system = SystemSpec::parse(&v).map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = gs("tuner") {
+            cfg.tuner = TunerSpec::parse(&v).map_err(anyhow::Error::msg)?;
         }
         if let Some(v) = gu("m0") {
             cfg.m0 = v;
@@ -306,6 +333,7 @@ mod tests {
         c.scale = 0.5;
         c.selector = Selector::Deadline { max_cost: 150.0 };
         c.system = SystemSpec::LogNormal { sigma: 0.5 };
+        c.tuner = TunerSpec::Stepwise { decay: 0.7, patience: 4 };
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.dataset, "emnist");
@@ -318,6 +346,7 @@ mod tests {
         // Parameter-carrying specs survive the round trip intact.
         assert_eq!(c2.selector, Selector::Deadline { max_cost: 150.0 });
         assert_eq!(c2.system, SystemSpec::LogNormal { sigma: 0.5 });
+        assert_eq!(c2.tuner, TunerSpec::Stepwise { decay: 0.7, patience: 4 });
         let p = c2.preference.unwrap();
         assert_eq!(p.alpha, 0.5);
         assert_eq!(p.gamma, 0.5);
@@ -325,12 +354,14 @@ mod tests {
 
     #[test]
     fn system_and_selector_json_defaults_and_validation() {
-        // Configs written before the system/selector specs existed load
-        // at the homogeneous/random defaults.
+        // Configs written before the system/selector/tuner specs existed
+        // load at the homogeneous/random/fedtune defaults.
         let j = Json::parse(r#"{"e0": 2.0}"#).unwrap();
         let c = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c.system, SystemSpec::Homogeneous);
         assert_eq!(c.selector, Selector::UniformRandom);
+        assert_eq!(c.tuner, TunerSpec::FedTune);
+        assert_eq!(c.effective_tuner(), TunerSpec::Fixed, "no preference = baseline");
         // Malformed specs are rejected, not silently defaulted.
         let j = Json::parse(r#"{"system": "lognormal:-1"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
@@ -347,6 +378,39 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.selector = Selector::Guided { exploit: -1.0 };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tuner_spec_defaults_validation_and_effective_policy() {
+        // Malformed tuner specs are rejected, not silently defaulted.
+        let j = Json::parse(r#"{"tuner": "stepwise:2.0:5"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tuner": "oort"}"#).unwrap();
+        let err = format!("{:#}", ExperimentConfig::from_json(&j).unwrap_err());
+        assert!(err.contains("stepwise"), "grammar must be echoed: {err}");
+        // validate() re-checks programmatic constructions.
+        let mut c = ExperimentConfig::default();
+        c.tuner = TunerSpec::Stepwise { decay: 1.5, patience: 3 };
+        assert!(c.validate().is_err());
+        // Population without a preference is a valid *config* — a grid
+        // may supply preferences per cell (`fedtune grid --tuner
+        // population:4:10` installs the 15-preference axis after the
+        // base config parses); the run drivers reject it at tuner
+        // construction instead.
+        let mut c = ExperimentConfig::default();
+        c.tuner = TunerSpec::Population { k: 4, interval: 10 };
+        assert!(c.validate().is_ok());
+        c.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
+        assert!(c.validate().is_ok());
+        assert_eq!(c.effective_tuner(), TunerSpec::Population { k: 4, interval: 10 });
+        let mut c = ExperimentConfig::default();
+        c.tuner = TunerSpec::Stepwise { decay: 0.5, patience: 5 };
+        assert!(c.validate().is_ok());
+        assert_eq!(
+            c.effective_tuner(),
+            TunerSpec::Stepwise { decay: 0.5, patience: 5 },
+            "explicit policies never degrade to the baseline"
+        );
     }
 
     #[test]

@@ -1,19 +1,22 @@
 //! The FL server / leader loop.
 //!
 //! [`Server`] owns the round loop: select participants, run the round on
-//! the engine, account the four overheads (Eqs. 2–5), feed the schedule
-//! (fixed baseline or FedTune) and record the trace. It is generic over
-//! [`FlEngine`] — the table/figure benches drive it with the simulator,
-//! the end-to-end example with the real PJRT engine. This module is the
-//! "shared code" half of DESIGN.md's engine duality: everything the paper
-//! contributes runs here, identically, for both engines.
+//! the engine, account the four overheads (Eqs. 2–5), feed the tuner
+//! policy (fixed baseline, FedTune, or any other
+//! [`crate::fedtune::tuner::Tuner`]) and record the trace. It is generic
+//! over [`FlEngine`] — the table/figure benches drive it with the
+//! simulator, the end-to-end example with the real PJRT engine. This
+//! module is the "shared code" half of DESIGN.md's engine duality:
+//! everything the paper contributes runs here, identically, for both
+//! engines.
 
 pub mod selection;
 
 use anyhow::Result;
 
 use crate::engine::FlEngine;
-use crate::fedtune::schedule::Schedule;
+use crate::fedtune::tuner::Tuner;
+use crate::fedtune::Decision;
 use crate::overhead::{CostModel, Costs};
 use crate::system::ClientSystemProfile;
 use crate::trace::{RoundRecord, Trace};
@@ -40,6 +43,11 @@ pub struct RunResult {
     /// fractional end-to-end (the paper's E = 0.5).
     pub final_m: usize,
     pub final_e: f64,
+    /// How many times the tuner activated (0 for the fixed baseline) —
+    /// generic [`Tuner`] introspection, no downcasting.
+    pub activations: usize,
+    /// Every (M, E) decision the tuner took, in round order.
+    pub decisions: Vec<Decision>,
     pub trace: Trace,
 }
 
@@ -57,14 +65,14 @@ pub struct ServerConfig {
 pub struct Server<'e, E: FlEngine> {
     engine: &'e mut E,
     cfg: ServerConfig,
-    schedule: Schedule,
+    tuner: Box<dyn Tuner>,
     rng: Rng,
 }
 
 impl<'e, E: FlEngine> Server<'e, E> {
-    pub fn new(engine: &'e mut E, cfg: ServerConfig, schedule: Schedule) -> Server<'e, E> {
+    pub fn new(engine: &'e mut E, cfg: ServerConfig, tuner: Box<dyn Tuner>) -> Server<'e, E> {
         let rng = Rng::new(cfg.seed ^ 0xc00d);
-        Server { engine, cfg, schedule, rng }
+        Server { engine, cfg, tuner, rng }
     }
 
     /// Drive rounds until the target accuracy or the round cap.
@@ -87,7 +95,7 @@ impl<'e, E: FlEngine> Server<'e, E> {
             }
             round += 1;
 
-            let (m, e) = self.schedule.current();
+            let (m, e) = self.tuner.current();
             let participants = self.cfg.selector.select(
                 self.engine.client_sizes(),
                 self.engine.client_systems(),
@@ -109,7 +117,7 @@ impl<'e, E: FlEngine> Server<'e, E> {
             let delta = self.cfg.cost_model.round_costs(&rows, e);
             cum.add(&delta);
 
-            let decision = self.schedule.observe_round(round, accuracy, cum);
+            let decision = self.tuner.observe_round(round, accuracy, cum);
 
             trace.push(RoundRecord {
                 round,
@@ -122,13 +130,13 @@ impl<'e, E: FlEngine> Server<'e, E> {
             });
             if let Some(d) = decision {
                 crate::log_debug!(
-                    "round {round}: fedtune → M={} E={} (ΔM={:.3}, ΔE={:.3}, I={:.3})",
+                    "round {round}: tuner → M={} E={} (ΔM={:.3}, ΔE={:.3}, I={:.3})",
                     d.m, d.e, d.delta_m, d.delta_e, d.comparison
                 );
             }
         };
 
-        let (final_m, final_e) = self.schedule.current();
+        let (final_m, final_e) = self.tuner.current();
         Ok(RunResult {
             stop,
             rounds: round,
@@ -136,6 +144,8 @@ impl<'e, E: FlEngine> Server<'e, E> {
             costs: cum,
             final_m,
             final_e,
+            activations: self.tuner.activations(),
+            decisions: self.tuner.decisions().to_vec(),
             trace,
         })
     }
@@ -146,9 +156,14 @@ mod tests {
     use super::*;
     use crate::data::DatasetProfile;
     use crate::engine::sim::{SimEngine, SimParams};
+    use crate::fedtune::tuner::FixedTuner;
     use crate::fedtune::{FedTune, FedTuneConfig};
     use crate::overhead::Preference;
     use crate::system::SystemSpec;
+
+    fn fixed(m: usize, e: f64) -> Box<dyn Tuner> {
+        Box::new(FixedTuner::new(m, e))
+    }
 
     fn cfg(target: f64, max_rounds: usize) -> ServerConfig {
         ServerConfig {
@@ -164,12 +179,15 @@ mod tests {
     fn fixed_run_reaches_target() {
         let profile = DatasetProfile::speech();
         let mut eng = SimEngine::new(&profile, SimParams::default(), 1);
-        let server = Server::new(&mut eng, cfg(0.8, 5000), Schedule::Fixed { m: 20, e: 20.0 });
+        let server = Server::new(&mut eng, cfg(0.8, 5000), fixed(20, 20.0));
         let r = server.run().unwrap();
         assert_eq!(r.stop, StopReason::TargetReached);
         assert!(r.final_accuracy >= 0.8);
         assert_eq!((r.final_m, r.final_e), (20, 20.0));
         assert_eq!(r.trace.len(), r.rounds);
+        // The fixed baseline reports zero tuner activity generically.
+        assert_eq!(r.activations, 0);
+        assert!(r.decisions.is_empty());
         // Costs are monotone across the trace.
         for w in r.trace.records().windows(2) {
             assert!(w[1].costs.comp_t >= w[0].costs.comp_t);
@@ -181,7 +199,7 @@ mod tests {
     fn round_cap_stops_runaways() {
         let profile = DatasetProfile::speech();
         let mut eng = SimEngine::new(&profile, SimParams::default(), 2);
-        let server = Server::new(&mut eng, cfg(0.99, 50), Schedule::Fixed { m: 5, e: 1.0 });
+        let server = Server::new(&mut eng, cfg(0.99, 50), fixed(5, 1.0));
         let r = server.run().unwrap();
         assert_eq!(r.stop, StopReason::MaxRounds);
         assert_eq!(r.rounds, 50);
@@ -193,8 +211,7 @@ mod tests {
         // no mirror path, no special casing.
         let profile = DatasetProfile::speech();
         let mut eng = SimEngine::new(&profile, SimParams::default(), 7);
-        let server =
-            Server::new(&mut eng, cfg(0.8, 60_000), Schedule::Fixed { m: 20, e: 0.5 });
+        let server = Server::new(&mut eng, cfg(0.8, 60_000), fixed(20, 0.5));
         let r = server.run().unwrap();
         assert_eq!(r.stop, StopReason::TargetReached);
         assert_eq!(r.final_e, 0.5);
@@ -218,7 +235,7 @@ mod tests {
         .unwrap();
         // Pure-CompL runs drive M → 1, whose per-round progress is ~30x
         // slower; give the round cap the paper-scale headroom.
-        let server = Server::new(&mut eng, cfg(0.8, 30_000), Schedule::Tuned(Box::new(ft)));
+        let server = Server::new(&mut eng, cfg(0.8, 30_000), Box::new(ft));
         let r = server.run().unwrap();
         assert_eq!(r.stop, StopReason::TargetReached);
         // Pure-CompL preference must pull M down hard (paper Table 4: →1).
@@ -227,6 +244,10 @@ mod tests {
             "CompL preference should shrink M, got {}",
             r.final_m
         );
+        // Generic introspection reports the controller's activity.
+        assert!(r.activations > 0);
+        assert_eq!(r.decisions.len(), r.activations - 1);
+        assert_eq!(r.decisions.last().map(|d| (d.m, d.e)), Some((r.final_m, r.final_e)));
     }
 
     #[test]
@@ -242,9 +263,8 @@ mod tests {
             5,
             &SystemSpec::LogNormal { sigma: 0.5 },
         );
-        let sched = Schedule::Fixed { m: 20, e: 20.0 };
-        let a = Server::new(&mut homog, cfg(0.8, 5000), sched.clone()).run().unwrap();
-        let b = Server::new(&mut hetero, cfg(0.8, 5000), sched).run().unwrap();
+        let a = Server::new(&mut homog, cfg(0.8, 5000), fixed(20, 20.0)).run().unwrap();
+        let b = Server::new(&mut hetero, cfg(0.8, 5000), fixed(20, 20.0)).run().unwrap();
         assert_eq!(a.rounds, b.rounds);
         assert_eq!(a.final_accuracy, b.final_accuracy);
         assert_eq!(a.costs.comp_l, b.costs.comp_l);
@@ -265,7 +285,7 @@ mod tests {
         let server = Server::new(
             &mut eng,
             ServerConfig { cost_model: cm, ..cfg(0.5, 1000) },
-            Schedule::Fixed { m: 10, e: 1.0 },
+            fixed(10, 1.0),
         );
         let r = server.run().unwrap();
         assert_eq!(r.costs.trans_t, r.rounds as f64); // Eq. 3 with C2 = 1

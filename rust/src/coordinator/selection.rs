@@ -45,10 +45,16 @@ pub enum Selector {
 }
 
 impl Selector {
+    /// The accepted grammar, printed by `--help` and echoed by every
+    /// unknown-spec error (one source of truth, next to the parser).
+    pub const SPEC_HELP: &str =
+        "random | guided[:exploit >= 0] | deadline[:max-cost > 0]";
+
     /// Parse a selector spec: `random`, `guided` / `guided:<exploit>`,
     /// `deadline` / `deadline:<max-cost>`. Bare `guided` defaults to
     /// exploit = 1.0; bare `deadline` to [`DEFAULT_DEADLINE_COST`].
-    /// Malformed or unknown specs return `None`.
+    /// Malformed or unknown specs return `None`; callers attach
+    /// [`Selector::SPEC_HELP`] to the error they raise.
     pub fn by_name(spec: &str) -> Option<Selector> {
         let spec = spec.trim();
         let (head, arg) = match spec.split_once(':') {

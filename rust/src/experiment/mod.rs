@@ -4,7 +4,7 @@
 //!
 //! The paper's evaluation is a large grid of *independent* runs over
 //! (dataset profile × system spec × aggregator × M₀ × E₀ × preference ×
-//! penalty × seed);
+//! tuner policy × penalty × seed);
 //! FedPop-style population tuning assumes the same cheap parallel
 //! evaluation of many configurations. [`Grid`] enumerates those cells,
 //! executes every (cell, seed) run concurrently on the
@@ -28,8 +28,9 @@
 //! identical runs inside one sweep execute once and are shared — under
 //! [`Grid::compare_baseline`] the fixed-(M₀, E₀) baseline runs once per
 //! (profile, system, aggregator, M₀, E₀, seed), not once per tuned
-//! cell. With
-//! [`Grid::cache_dir`] finished runs persist as `fedtune.store.run/v3`
+//! cell — and preference-blind policies (`stepwise:`) share one run
+//! across the whole preference axis. With
+//! [`Grid::cache_dir`] finished runs persist as `fedtune.store.run/v4`
 //! records, repeated sweeps become pure cache hits
 //! ([`GridResult::executed_runs`] = 0), and a sweep journal of finished
 //! (cell, seed) records lets [`Grid::resume`] continue an interrupted
@@ -42,18 +43,19 @@
 //! `n = 0` restores the default. The CLI exposes this as
 //! `fedtune grid --workers N`.
 //!
-//! # JSON artifact schema (`fedtune.experiment.grid/v2`)
+//! # JSON artifact schema (`fedtune.experiment.grid/v3`)
 //!
 //! [`GridResult::to_json`] / [`GridResult::write_json`] emit:
 //!
 //! ```text
 //! {
-//!   "schema": "fedtune.experiment.grid/v2",
+//!   "schema": "fedtune.experiment.grid/v3",
 //!   "seeds": [101, 202, 303],
 //!   "cells": [
 //!     {
 //!       "dataset": "speech", "model": "resnet-10",
 //!       "system": "homogeneous",              // client heterogeneity spec
+//!       "tuner": "fedtune",                   // tuner policy spec
 //!       "aggregator": "fedavg", "m0": 20, "e0": 20, "penalty": 10,
 //!       "preference": [0, 0, 1, 0],          // null for the fixed baseline
 //!       "runs": [                             // one entry per seed, in order
@@ -115,6 +117,7 @@ use anyhow::Result;
 
 use crate::aggregation::AggregatorKind;
 use crate::config::ExperimentConfig;
+use crate::fedtune::tuner::TunerSpec;
 use crate::overhead::{CostModel, Preference};
 use crate::system::SystemSpec;
 use crate::util::pool;
@@ -137,7 +140,13 @@ pub struct Cell {
     /// Initial local passes; fractional values (the paper's E = 0.5) are
     /// first-class for both fixed and FedTune-tuned cells.
     pub e0: f64,
-    /// `None` ⇒ the fixed-(M₀, E₀) baseline; `Some` ⇒ FedTune.
+    /// Tuner policy of this cell. The default `fedtune` spec follows the
+    /// preference: `None` ⇒ the fixed-(M₀, E₀) baseline, `Some` ⇒
+    /// FedTune; explicit `stepwise:`/`population:` specs drive the run
+    /// regardless (the `fig_tuners` bench sweeps this axis).
+    pub tuner: TunerSpec,
+    /// Application preference (α, β, γ, δ); also the Eq. (6) weights of
+    /// the cell's `compare_baseline` improvement column.
     pub preference: Option<Preference>,
     pub penalty: f64,
     /// Per-profile target-accuracy override (Fig. 5 stops each ladder
@@ -157,8 +166,13 @@ impl Cell {
         } else {
             format!(" sys:{}", self.system.spec_string())
         };
+        let tun = if self.tuner == TunerSpec::FedTune {
+            String::new()
+        } else {
+            format!(" tuner:{}", self.tuner.spec_string())
+        };
         format!(
-            "{}/{}/{} M{} E{} D{} {}{}",
+            "{}/{}/{} M{} E{} D{} {}{}{}",
             self.dataset,
             self.model,
             self.aggregator.name(),
@@ -166,7 +180,8 @@ impl Cell {
             self.e0,
             self.penalty,
             pref,
-            sys
+            sys,
+            tun
         )
     }
 }
@@ -174,8 +189,9 @@ impl Cell {
 /// Builder for a pooled experiment sweep. Axes default to the base
 /// config's single value; every setter replaces one axis. Cells are
 /// enumerated in fixed order — profiles → systems → aggregators → M₀ →
-/// E₀ → preferences → penalties — with seeds innermost, so results line
-/// up with the builder's axis order regardless of worker count.
+/// E₀ → preferences → tuners → penalties — with seeds innermost, so
+/// results line up with the builder's axis order regardless of worker
+/// count.
 #[derive(Debug, Clone)]
 pub struct Grid {
     pub(crate) profiles: Vec<(String, String, Option<f64>)>,
@@ -184,6 +200,7 @@ pub struct Grid {
     pub(crate) m0s: Vec<usize>,
     pub(crate) e0s: Vec<f64>,
     pub(crate) preferences: Vec<Option<Preference>>,
+    pub(crate) tuners: Vec<TunerSpec>,
     pub(crate) penalties: Vec<f64>,
     pub(crate) seeds: Vec<u64>,
     pub(crate) workers: usize,
@@ -207,6 +224,7 @@ impl Grid {
             m0s: vec![base.m0],
             e0s: vec![base.e0],
             preferences: vec![base.preference],
+            tuners: vec![base.tuner],
             penalties: vec![base.penalty],
             seeds: vec![base.seed],
             workers: pool::default_workers(),
@@ -277,6 +295,17 @@ impl Grid {
     /// Mixed axis: `None` cells run the fixed baseline, `Some` run FedTune.
     pub fn preference_options(mut self, v: &[Option<Preference>]) -> Grid {
         self.preferences = v.to_vec();
+        self
+    }
+
+    /// Tuner-policy axis: one cell set per spec (the `fig_tuners` bench
+    /// compares `fedtune` vs `stepwise:` vs `population:` head-to-head).
+    /// Under [`Grid::compare_baseline`] the axis must not contain
+    /// `fixed` — the fixed policy *is* the baseline leg, and mixing it
+    /// in would silently run the baseline twice; the sweep rejects that
+    /// with an error instead.
+    pub fn tuners(mut self, v: &[TunerSpec]) -> Grid {
+        self.tuners = v.to_vec();
         self
     }
 
@@ -397,18 +426,21 @@ impl Grid {
                     for &m0 in &self.m0s {
                         for &e0 in &self.e0s {
                             for preference in &self.preferences {
-                                for &penalty in &self.penalties {
-                                    out.push(Cell {
-                                        dataset: dataset.clone(),
-                                        model: model.clone(),
-                                        system: system.clone(),
-                                        aggregator,
-                                        m0,
-                                        e0,
-                                        preference: *preference,
-                                        penalty,
-                                        target: *target,
-                                    });
+                                for &tuner in &self.tuners {
+                                    for &penalty in &self.penalties {
+                                        out.push(Cell {
+                                            dataset: dataset.clone(),
+                                            model: model.clone(),
+                                            system: system.clone(),
+                                            aggregator,
+                                            m0,
+                                            e0,
+                                            tuner,
+                                            preference: *preference,
+                                            penalty,
+                                            target: *target,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -426,6 +458,7 @@ impl Grid {
             * self.m0s.len()
             * self.e0s.len()
             * self.preferences.len()
+            * self.tuners.len()
             * self.penalties.len()
     }
 
@@ -495,5 +528,26 @@ mod tests {
         let label = g.cells()[0].label();
         assert!(label.contains("speech"), "{label}");
         assert!(label.contains("0/0/1/0"), "{label}");
+        // The default fedtune policy stays silent; explicit specs show.
+        assert!(!label.contains("tuner:"), "{label}");
+    }
+
+    #[test]
+    fn tuners_axis_multiplies_cells() {
+        let specs = [
+            TunerSpec::FedTune,
+            TunerSpec::Stepwise { decay: 0.5, patience: 5 },
+            TunerSpec::Population { k: 4, interval: 10 },
+        ];
+        let g = Grid::new(ExperimentConfig::default()).tuners(&specs).penalties(&[1.0, 10.0]);
+        assert_eq!(g.num_cells(), 6);
+        let cells = g.cells();
+        // Tuners vary slower than penalties (axis order: tuners before
+        // penalties), and every cell names its policy.
+        assert_eq!(cells[0].tuner, TunerSpec::FedTune);
+        assert_eq!(cells[1].tuner, TunerSpec::FedTune);
+        assert_eq!(cells[2].tuner, TunerSpec::Stepwise { decay: 0.5, patience: 5 });
+        assert!(cells[2].label().contains("tuner:stepwise:0.5:5"), "{}", cells[2].label());
+        assert!(cells[4].label().contains("tuner:population:4:10"), "{}", cells[4].label());
     }
 }

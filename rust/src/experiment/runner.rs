@@ -25,7 +25,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::baselines;
 use crate::config::ExperimentConfig;
-use crate::overhead::{CostModel, Costs, Preference};
+use crate::fedtune::tuner::TunerSpec;
+use crate::overhead::{CostModel, Costs};
 use crate::store::{run_fingerprint, Fingerprint, RunStore, SweepJournal};
 use crate::trace::Trace;
 use crate::util::json::Json;
@@ -35,8 +36,9 @@ use crate::util::stats;
 use super::{Cell, Grid};
 
 /// Artifact schema identifier (bump on breaking layout changes).
-/// v2 = every cell object carries a `"system"` heterogeneity spec.
-pub const SCHEMA: &str = "fedtune.experiment.grid/v2";
+/// v2 = every cell object carries a `"system"` heterogeneity spec;
+/// v3 = every cell object carries a `"tuner"` policy spec.
+pub const SCHEMA: &str = "fedtune.experiment.grid/v3";
 
 /// Mean/standard deviation of one aggregated quantity over seeds.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -123,7 +125,7 @@ impl GridResult {
         self.cells.iter().find(|c| f(&c.cell))
     }
 
-    /// Serialize to the `fedtune.experiment.grid/v2` artifact (see the
+    /// Serialize to the `fedtune.experiment.grid/v3` artifact (see the
     /// module doc). Byte-identical for any worker count.
     pub fn to_json(&self) -> Json {
         let seeds: Vec<Json> = self.seeds.iter().map(|&s| Json::from(s)).collect();
@@ -269,6 +271,7 @@ fn cell_json(c: &CellResult) -> Json {
         ("dataset", c.cell.dataset.as_str().into()),
         ("model", c.cell.model.as_str().into()),
         ("system", c.cell.system.spec_string().as_str().into()),
+        ("tuner", c.cell.tuner.spec_string().as_str().into()),
         ("aggregator", c.cell.aggregator.name().into()),
         ("m0", c.cell.m0.into()),
         ("e0", c.cell.e0.into()),
@@ -318,16 +321,42 @@ fn plan(grid: &Grid) -> Result<Plan> {
     if cells.is_empty() || grid.seeds.is_empty() {
         bail!("experiment grid is empty (no cells or no seeds)");
     }
+    if grid.compare_baseline && grid.tuners.iter().any(TunerSpec::is_fixed) {
+        bail!(
+            "the tuners axis mixes `fixed` into a compare_baseline sweep — the \
+             fixed policy IS the baseline every cell is compared against, so it \
+             would run twice and report a zero-improvement row; drop `fixed` \
+             from --tuner / Grid::tuners or turn compare_baseline off"
+        );
+    }
     let mut jobs: Vec<Job> = Vec::new();
     let mut seen: HashSet<Fingerprint> = HashSet::new();
     let mut pairs: Vec<Pair> = Vec::with_capacity(cells.len() * grid.seeds.len());
     for (ci, cell) in cells.iter().enumerate() {
         for &seed in &grid.seeds {
-            let cfg = cell_config(grid, cell, cell.preference, seed)?;
+            let cfg = cell_config(grid, cell, seed, false)?;
             let cost_model = match grid.cost_model {
                 Some(cm) => cm,
                 None => cfg.cost_model()?,
             };
+            // Population scoring needs a preference; catch it here with
+            // the cell's label instead of failing mid-sweep on a pooled
+            // worker (config validation deliberately allows it, since
+            // the preference usually arrives on this axis).
+            if matches!(cfg.effective_tuner(), TunerSpec::Population { .. })
+                && cfg.preference.is_none()
+            {
+                bail!(
+                    "cell [{}]: the population tuner scores members on Eq. 6 and \
+                     needs a preference (put the cell on a preference axis or set \
+                     one in the base config)",
+                    cell.label()
+                );
+            }
+            // A cell whose effective policy moves (M, E) gets a fixed
+            // comparison leg under compare_baseline; cells that already
+            // run fixed (preference-less default) are their own baseline.
+            let cell_is_tuned = !cfg.effective_tuner().is_fixed();
             let tuned = run_fingerprint(&cfg, seed, &cost_model);
             if seen.insert(tuned) {
                 jobs.push(Job {
@@ -338,8 +367,8 @@ fn plan(grid: &Grid) -> Result<Plan> {
                     label: cell.label(),
                 });
             }
-            let base = if grid.compare_baseline && cell.preference.is_some() {
-                let base_cfg = cell_config(grid, cell, None, seed)?;
+            let base = if grid.compare_baseline && cell_is_tuned {
+                let base_cfg = cell_config(grid, cell, seed, true)?;
                 let fp = run_fingerprint(&base_cfg, seed, &cost_model);
                 if seen.insert(fp) {
                     jobs.push(Job {
@@ -361,7 +390,7 @@ fn plan(grid: &Grid) -> Result<Plan> {
     // Sweep identity: the ordered pair keys plus everything that shapes
     // the journaled records. Worker count is deliberately excluded — a
     // sweep may resume with a different pool size.
-    let mut id = format!("fedtune.sweep/v3;keep_traces={};seeds=", grid.keep_traces);
+    let mut id = format!("fedtune.sweep/v4;keep_traces={};seeds=", grid.keep_traces);
     for &s in &grid.seeds {
         id.push_str(&format!("{s},"));
     }
@@ -409,11 +438,15 @@ fn assemble(
         let base = have.get(&base_fp).ok_or_else(|| {
             anyhow!("internal: missing baseline record for cell [{}]", cell.label())
         })?;
-        let pref: Preference = cell.preference.expect("baseline leg implies a preference");
-        // Eq. (6): I(baseline, fedtune) < 0 ⇔ FedTune better; report with
-        // the paper's sign convention (positive = gain).
-        let i = base.costs.compare(&rec.costs, &pref);
-        rec.improvement_pct = Some(-i * 100.0);
+        // Eq. (6): I(baseline, tuned) < 0 ⇔ the tuner is better; report
+        // with the paper's sign convention (positive = gain). A
+        // preference-blind policy (stepwise) can run without a
+        // preference — it still gets baseline costs, just no Eq. (6)
+        // column to weight them with.
+        if let Some(pref) = cell.preference {
+            let i = base.costs.compare(&rec.costs, &pref);
+            rec.improvement_pct = Some(-i * 100.0);
+        }
         rec.baseline_costs = Some(base.costs);
     }
     Ok(rec)
@@ -686,8 +719,8 @@ fn aggregate_cell(cell: Cell, runs: Vec<RunRecord>) -> CellResult {
 fn cell_config(
     grid: &Grid,
     cell: &Cell,
-    preference: Option<Preference>,
     seed: u64,
+    baseline: bool,
 ) -> Result<ExperimentConfig> {
     let mut cfg = grid.base.clone();
     cfg.dataset = cell.dataset.clone();
@@ -698,7 +731,15 @@ fn cell_config(
     // E is fractional end-to-end: the config carries the true pass count
     // and the cache key derives from it directly (no ceil side-channel).
     cfg.e0 = cell.e0;
-    cfg.preference = preference;
+    if baseline {
+        // The comparison leg: the paper's fixed-(M₀, E₀) practice,
+        // whatever policy the cell itself runs.
+        cfg.tuner = TunerSpec::Fixed;
+        cfg.preference = None;
+    } else {
+        cfg.tuner = cell.tuner;
+        cfg.preference = cell.preference;
+    }
     cfg.penalty = cell.penalty;
     cfg.seed = seed;
     if let Some(mr) = grid.max_rounds {
@@ -714,6 +755,7 @@ fn cell_config(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::overhead::Preference;
 
     fn base_cfg() -> ExperimentConfig {
         ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
@@ -848,16 +890,67 @@ mod tests {
         let j = g.run().unwrap().to_json();
         assert_eq!(
             j.get("schema").unwrap().as_str(),
-            Some("fedtune.experiment.grid/v2")
+            Some("fedtune.experiment.grid/v3")
         );
         let cells = j.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("tuner").unwrap().as_str(), Some("fedtune"));
         let runs = cells[0].get("runs").unwrap().as_arr().unwrap();
         assert_eq!(runs.len(), 1);
         assert!(runs[0].get("comp_t").unwrap().as_f64().unwrap() > 0.0);
         // Parse back: the artifact is valid JSON.
         let round_trip = Json::parse(&j.pretty()).unwrap();
         assert_eq!(round_trip, j);
+    }
+
+    #[test]
+    fn compare_baseline_rejects_a_fixed_tuner_cell() {
+        let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+        let g = Grid::new(base_cfg())
+            .preferences(&[pref])
+            .tuners(&[TunerSpec::FedTune, TunerSpec::Fixed])
+            .seeds(&[1])
+            .compare_baseline(true);
+        let err = format!("{:#}", g.run().unwrap_err());
+        assert!(err.contains("fixed"), "{err}");
+        assert!(err.contains("baseline"), "{err}");
+        // Without the baseline comparison the same axis is fine.
+        let ok = Grid::new(base_cfg())
+            .preferences(&[pref])
+            .tuners(&[TunerSpec::FedTune, TunerSpec::Fixed])
+            .seeds(&[1])
+            .max_rounds(300);
+        assert!(ok.run().is_ok());
+    }
+
+    #[test]
+    fn stepwise_cells_share_one_run_across_preferences() {
+        // The stepwise policy never reads the preference, so its run
+        // identity omits it: P preference cells × 1 seed collapse to ONE
+        // stepwise engine run (plus one shared baseline), while each
+        // cell still reports its own Eq. (6) improvement column.
+        let prefs = [
+            Preference::new(0.0, 0.0, 1.0, 0.0).unwrap(),
+            Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(),
+        ];
+        // Cap-bound with an unreachable target: the long flat tail
+        // guarantees a plateau, so the stepwise runs diverge from the
+        // fixed baseline and the Eq. 6 columns are non-trivial.
+        let mut cfg = base_cfg();
+        cfg.target_accuracy = 0.99;
+        let g = Grid::new(cfg)
+            .preferences(&prefs)
+            .tuners(&[TunerSpec::Stepwise { decay: 0.5, patience: 5 }])
+            .seeds(&[1])
+            .max_rounds(600)
+            .compare_baseline(true);
+        let r = g.run().unwrap();
+        assert_eq!(r.cells.len(), 2);
+        assert_eq!(r.executed_runs, 2, "one stepwise run + one baseline, shared");
+        assert_eq!(r.cells[0].runs[0].costs, r.cells[1].runs[0].costs);
+        let a = r.cells[0].improvement.expect("pref cells get Eq. 6 columns");
+        let b = r.cells[1].improvement.unwrap();
+        assert_ne!(a.mean, b.mean, "same run, different Eq. 6 weighting");
     }
 
     #[test]

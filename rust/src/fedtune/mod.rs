@@ -37,7 +37,9 @@
 
 use crate::overhead::{Costs, Preference};
 
-pub mod schedule;
+pub mod population;
+pub mod stepwise;
+pub mod tuner;
 
 /// Table 3 signs: does overhead i ∈ {CompT, TransT, CompL, TransL} prefer
 /// larger M? (Eq. 10's (+1)/(−1) factors.)
@@ -343,6 +345,36 @@ impl FedTune {
         };
         self.decisions.push(d);
         Some(d)
+    }
+}
+
+/// FedTune as a pluggable [`tuner::Tuner`] policy — the trait methods
+/// delegate to the inherent controller above (inherent items win path
+/// resolution, so the fully-qualified calls below are not recursive).
+impl tuner::Tuner for FedTune {
+    fn current(&self) -> (usize, f64) {
+        (self.m(), self.e())
+    }
+
+    fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        cumulative: Costs,
+    ) -> Option<Decision> {
+        FedTune::observe_round(self, round, accuracy, cumulative)
+    }
+
+    fn spec(&self) -> String {
+        "fedtune".to_string()
+    }
+
+    fn activations(&self) -> usize {
+        FedTune::activations(self)
+    }
+
+    fn decisions(&self) -> &[Decision] {
+        FedTune::decisions(self)
     }
 }
 

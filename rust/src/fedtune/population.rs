@@ -1,0 +1,341 @@
+//! Population-based tuning policy (FedPop, Chen et al. 2023).
+//!
+//! Population-based training keeps `k` candidate hyper-parameter
+//! settings alive *inside one run* instead of committing to a single
+//! trajectory: members take turns driving the training loop, get scored
+//! on what they actually cost, and the losers of each generation are
+//! resampled from perturbed winners (exploit-and-explore). Ported to
+//! the paper's setting, a member is an (M, E) pair and the score is the
+//! paper's own objective — Eq. 6 preference-weighted overhead per unit
+//! of accuracy gained while the member was active (the same
+//! cost-per-accuracy normalization FedTune applies at line 14 of
+//! Algorithm 1). Lower is better; a member whose slot gains no accuracy
+//! scores worst.
+//!
+//! Mechanics per [`Tuner::observe_round`]:
+//!
+//! 1. each member drives `interval` consecutive rounds (its *slot*);
+//! 2. at the slot boundary the member is scored from the slot's
+//!    (accuracy gain, overhead delta) and the next member takes over;
+//! 3. when all `k` members have been scored (one *generation*), the
+//!    bottom half resample: each loser is replaced by a perturbed copy
+//!    of a random winner, clamped to [1, num_clients] × [e_floor, 256].
+//!
+//! All randomness — initial member spread, winner choice, perturbation —
+//! draws from the dedicated tuner stream
+//! (`seed ^` [`TUNER_STREAM_TAG`]), so a population run consumes
+//! **zero** draws from the engine or coordinator streams: convergence
+//! and selection RNG are bit-for-bit unperturbed by the policy.
+//!
+//! [`TUNER_STREAM_TAG`]: super::tuner::TUNER_STREAM_TAG
+
+use crate::overhead::{Costs, Preference};
+use crate::util::rng::Rng;
+
+use super::tuner::{Tuner, TunerInit, TunerSpec, TUNER_STREAM_TAG};
+use super::Decision;
+
+/// E cap shared with FedTune's paper defaults.
+const E_MAX: f64 = 256.0;
+
+/// One candidate hyper-parameter setting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Member {
+    m: usize,
+    e: f64,
+}
+
+/// FedPop-style (M, E) population controller (one per training run).
+#[derive(Debug, Clone)]
+pub struct PopulationTuner {
+    pref: Preference,
+    interval: usize,
+    e_floor: f64,
+    m_max: usize,
+
+    members: Vec<Member>,
+    /// Eq. 6-style score of each member this generation (None = not yet
+    /// driven); lower is better.
+    scores: Vec<Option<f64>>,
+    active: usize,
+    rounds_in_slot: usize,
+    /// Accuracy / cumulative overheads at the active slot's start.
+    slot_acc0: f64,
+    slot_cum0: Costs,
+
+    rng: Rng,
+    activations: usize,
+    decisions: Vec<Decision>,
+}
+
+impl PopulationTuner {
+    pub fn new(
+        k: usize,
+        interval: usize,
+        pref: Preference,
+        init: &TunerInit,
+    ) -> Result<PopulationTuner, String> {
+        TunerSpec::Population { k, interval }.validate()?;
+        if !init.e_floor.is_finite() || init.e_floor <= 0.0 {
+            return Err(format!("population E floor must be > 0, got {}", init.e_floor));
+        }
+        let m_max = init.num_clients.max(1);
+        if init.m0 < 1 || init.m0 > m_max {
+            return Err(format!("M0 = {} outside [1, {m_max}]", init.m0));
+        }
+        if !init.e0.is_finite() || !(init.e_floor..=E_MAX).contains(&init.e0) {
+            return Err(format!(
+                "E0 = {} outside [{}, {E_MAX}]",
+                init.e0, init.e_floor
+            ));
+        }
+        // Dedicated stream: the population's sampling never touches the
+        // engine (`seed`) or coordinator (`seed ^ 0xc00d`) streams.
+        let mut rng = Rng::new(init.seed ^ TUNER_STREAM_TAG);
+        // Member 0 is the configured (M₀, E₀) verbatim; the rest spread
+        // around it by log-uniform factors in [1/2, 2] per axis.
+        let mut members = vec![Member { m: init.m0, e: init.e0 }];
+        for _ in 1..k {
+            let fm = 2.0_f64.powf(rng.f64() * 2.0 - 1.0);
+            let fe = 2.0_f64.powf(rng.f64() * 2.0 - 1.0);
+            members.push(Member {
+                m: scale_m(init.m0, fm, m_max),
+                e: (init.e0 * fe).clamp(init.e_floor, E_MAX),
+            });
+        }
+        Ok(PopulationTuner {
+            pref,
+            interval,
+            e_floor: init.e_floor,
+            m_max,
+            scores: vec![None; k],
+            members,
+            active: 0,
+            rounds_in_slot: 0,
+            slot_acc0: 0.0,
+            slot_cum0: Costs::ZERO,
+            rng,
+            activations: 0,
+            decisions: Vec::new(),
+        })
+    }
+
+    /// Generation boundary: the bottom half resamples from perturbed
+    /// winners (narrower factors than the initial spread — exploit more,
+    /// explore less).
+    fn resample(&mut self) {
+        let k = self.members.len();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| {
+            let sa = self.scores[a].unwrap_or(f64::INFINITY);
+            let sb = self.scores[b].unwrap_or(f64::INFINITY);
+            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let survivors = k.div_ceil(2);
+        for &loser in &order[survivors..] {
+            let winner = self.members[order[self.rng.below(survivors)]];
+            let fm = (4.0 / 3.0_f64).powf(self.rng.f64() * 2.0 - 1.0);
+            let fe = (4.0 / 3.0_f64).powf(self.rng.f64() * 2.0 - 1.0);
+            self.members[loser] = Member {
+                m: scale_m(winner.m, fm, self.m_max),
+                e: (winner.e * fe).clamp(self.e_floor, E_MAX),
+            };
+        }
+        for s in self.scores.iter_mut() {
+            *s = None;
+        }
+    }
+}
+
+/// Multiply-and-round an M candidate, clamped to [1, m_max].
+fn scale_m(m: usize, factor: f64, m_max: usize) -> usize {
+    ((m as f64 * factor).round() as i64).clamp(1, m_max as i64) as usize
+}
+
+impl Tuner for PopulationTuner {
+    fn current(&self) -> (usize, f64) {
+        let a = self.members[self.active];
+        (a.m, a.e)
+    }
+
+    fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        cumulative: Costs,
+    ) -> Option<Decision> {
+        self.rounds_in_slot += 1;
+        if self.rounds_in_slot < self.interval {
+            return None;
+        }
+        // Slot boundary: score the active member — Eq. 6 weights over
+        // the overheads the slot spent, normalized by the accuracy it
+        // bought (cost per unit of accuracy; lower is better).
+        let gain = accuracy - self.slot_acc0;
+        let spent = cumulative.minus(&self.slot_cum0);
+        let w = self.pref.as_array();
+        let x = spent.as_array();
+        let score = if gain > 1e-12 {
+            (0..4).map(|i| w[i] * x[i]).sum::<f64>() / gain
+        } else {
+            f64::INFINITY // bought nothing: worst possible
+        };
+        self.scores[self.active] = Some(score);
+        self.activations += 1;
+
+        let before = self.members[self.active];
+        self.active += 1;
+        if self.active == self.members.len() {
+            self.resample();
+            self.active = 0;
+        }
+        self.rounds_in_slot = 0;
+        self.slot_acc0 = accuracy;
+        self.slot_cum0 = cumulative;
+
+        let after = self.members[self.active];
+        if after == before {
+            return None;
+        }
+        let d = Decision {
+            round,
+            m: after.m,
+            e: after.e,
+            delta_m: after.m as f64 - before.m as f64,
+            delta_e: after.e - before.e,
+            comparison: 0.0,
+            accuracy,
+        };
+        self.decisions.push(d);
+        Some(d)
+    }
+
+    fn spec(&self) -> String {
+        TunerSpec::Population { k: self.members.len(), interval: self.interval }
+            .spec_string()
+    }
+
+    fn activations(&self) -> usize {
+        self.activations
+    }
+
+    fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn init() -> TunerInit {
+        TunerInit {
+            m0: 20,
+            e0: 8.0,
+            preference: None, // the tuner takes its preference directly
+            eps: 0.01,
+            penalty: 10.0,
+            e_floor: 0.5,
+            num_clients: 100,
+            seed: 11,
+        }
+    }
+
+    fn pref() -> Preference {
+        Preference::new(0.25, 0.25, 0.25, 0.25).unwrap()
+    }
+
+    fn cum(r: usize) -> Costs {
+        Costs {
+            comp_t: 10.0 * r as f64,
+            trans_t: r as f64,
+            comp_l: 30.0 * r as f64,
+            trans_l: 5.0 * r as f64,
+        }
+    }
+
+    #[test]
+    fn member_zero_is_the_configured_point() {
+        let t = PopulationTuner::new(4, 10, pref(), &init()).unwrap();
+        assert_eq!(t.current(), (20, 8.0), "the run starts at (M0, E0) verbatim");
+        assert_eq!(t.spec(), "population:4:10");
+    }
+
+    #[test]
+    fn slots_rotate_members_and_score_each() {
+        let mut t = PopulationTuner::new(3, 2, pref(), &init()).unwrap();
+        let mut seen = vec![t.current()];
+        for r in 1..=12 {
+            // Steady accuracy growth: every slot buys some accuracy.
+            t.observe_round(r, 0.05 * r as f64, cum(r));
+            let cur = t.current();
+            if *seen.last().unwrap() != cur {
+                seen.push(cur);
+            }
+        }
+        // 12 rounds / 2-round slots = 6 slot boundaries = 6 scorings.
+        assert_eq!(t.activations(), 6);
+        assert!(
+            seen.len() > 1,
+            "rotation must move through distinct members: {seen:?}"
+        );
+        for &(m, e) in &seen {
+            assert!((1..=100).contains(&m), "M escaped bounds: {m}");
+            assert!((0.5..=256.0).contains(&e), "E escaped bounds: {e}");
+        }
+        assert_eq!(t.decisions().len(), seen.len() - 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_spread_across_seeds() {
+        let drive = |seed: u64| -> Vec<(usize, f64)> {
+            let mut i = init();
+            i.seed = seed;
+            let mut t = PopulationTuner::new(4, 1, pref(), &i).unwrap();
+            let mut trail = Vec::new();
+            for r in 1..=40 {
+                t.observe_round(r, (0.02 * r as f64).min(0.9), cum(r));
+                trail.push(t.current());
+            }
+            trail
+        };
+        assert_eq!(drive(5), drive(5), "one seed, one trajectory — always");
+        assert_ne!(drive(5), drive(6), "the tuner stream must depend on the seed");
+    }
+
+    #[test]
+    fn generations_resample_losers_within_bounds() {
+        let mut i = init();
+        i.num_clients = 30;
+        let mut t = PopulationTuner::new(4, 1, pref(), &i).unwrap();
+        // Drive many generations; alternate gain/no-gain so scores span
+        // finite and infinite values.
+        for r in 1..=200 {
+            let acc = if r % 3 == 0 { 0.004 * r as f64 } else { 0.004 * (r - r % 3) as f64 };
+            t.observe_round(r, acc, cum(r));
+            let (m, e) = t.current();
+            assert!((1..=30).contains(&m), "M escaped bounds: {m}");
+            assert!((0.5..=256.0).contains(&e), "E escaped bounds: {e}");
+        }
+        assert_eq!(t.activations(), 200, "interval=1 scores every round");
+        for d in t.decisions() {
+            assert!(d.delta_m.is_finite() && d.delta_e.is_finite());
+            assert!(d.m >= 1 && d.e >= 0.5);
+        }
+    }
+
+    #[test]
+    fn construction_validates_bounds() {
+        assert!(PopulationTuner::new(1, 10, pref(), &init()).is_err());
+        assert!(PopulationTuner::new(4, 0, pref(), &init()).is_err());
+        let mut i = init();
+        i.m0 = 0;
+        assert!(PopulationTuner::new(4, 10, pref(), &i).is_err());
+        let mut i = init();
+        i.e0 = 0.25; // below the floor
+        assert!(PopulationTuner::new(4, 10, pref(), &i).is_err());
+        let mut i = init();
+        i.e0 = 1000.0; // above the cap
+        assert!(PopulationTuner::new(4, 10, pref(), &i).is_err());
+    }
+}

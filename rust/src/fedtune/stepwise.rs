@@ -1,0 +1,236 @@
+//! Step-wise adaptive decay policy (Saadati & Amini 2024).
+//!
+//! The step-wise mechanism ports the classical learning-rate decay
+//! schedule to FL hyper-parameters: run at the current (M, E) until the
+//! accuracy *plateaus*, then take one discrete adaptation step and keep
+//! going. Each plateau step
+//!
+//! * **decays E multiplicatively** — `E ← max(e_floor, E · decay)` —
+//!   trading local computation for more frequent synchronization once
+//!   extra local passes stop paying (the paper's Table 3: smaller E
+//!   lowers CompT/CompL per round), and
+//! * **re-expands M** — `M ← min(m_max, M + max(1, M/4))` — widening
+//!   participation so rounds aggregate more data per synchronization
+//!   and the plateau breaks.
+//!
+//! A plateau is `patience` consecutive rounds without an accuracy
+//! improvement of at least `eps` over the best seen (the same ε that
+//! gates FedTune's activation, so the two policies share one
+//! sensitivity knob). The policy is fully deterministic — no RNG stream
+//! at all — and engine-agnostic like every [`super::tuner::Tuner`].
+
+use crate::overhead::Costs;
+
+use super::tuner::{Tuner, TunerInit, TunerSpec};
+use super::Decision;
+
+/// Step-wise adaptive (M, E) decay controller (one per training run).
+#[derive(Debug, Clone)]
+pub struct StepwiseTuner {
+    decay: f64,
+    patience: usize,
+    eps: f64,
+    e_floor: f64,
+    m_max: usize,
+
+    m: usize,
+    e: f64,
+    /// Best accuracy seen so far (plateau reference).
+    best_acc: f64,
+    /// Consecutive rounds without an eps-improvement.
+    stall: usize,
+
+    activations: usize,
+    decisions: Vec<Decision>,
+}
+
+impl StepwiseTuner {
+    pub fn new(decay: f64, patience: usize, init: &TunerInit) -> Result<StepwiseTuner, String> {
+        TunerSpec::Stepwise { decay, patience }.validate()?;
+        if !init.eps.is_finite() || init.eps <= 0.0 {
+            return Err(format!("stepwise plateau eps must be > 0, got {}", init.eps));
+        }
+        if !init.e_floor.is_finite() || init.e_floor <= 0.0 {
+            return Err(format!("stepwise E floor must be > 0, got {}", init.e_floor));
+        }
+        let m_max = init.num_clients.max(1);
+        if init.m0 < 1 || init.m0 > m_max {
+            return Err(format!("M0 = {} outside [1, {m_max}]", init.m0));
+        }
+        if !init.e0.is_finite() || init.e0 < init.e_floor {
+            return Err(format!(
+                "E0 = {} below the stepwise floor {}",
+                init.e0, init.e_floor
+            ));
+        }
+        Ok(StepwiseTuner {
+            decay,
+            patience,
+            eps: init.eps,
+            e_floor: init.e_floor,
+            m_max,
+            m: init.m0,
+            e: init.e0,
+            best_acc: 0.0,
+            stall: 0,
+            activations: 0,
+            decisions: Vec::new(),
+        })
+    }
+}
+
+impl Tuner for StepwiseTuner {
+    fn current(&self) -> (usize, f64) {
+        (self.m, self.e)
+    }
+
+    fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        _cumulative: Costs,
+    ) -> Option<Decision> {
+        if accuracy >= self.best_acc + self.eps {
+            self.best_acc = accuracy;
+            self.stall = 0;
+            return None;
+        }
+        self.stall += 1;
+        if self.stall < self.patience {
+            return None;
+        }
+        // Plateau: one adaptation step, then start counting afresh.
+        self.stall = 0;
+        self.activations += 1;
+        let (m_old, e_old) = (self.m, self.e);
+        self.e = (self.e * self.decay).max(self.e_floor);
+        self.m = (self.m + (self.m / 4).max(1)).min(self.m_max);
+        if self.m == m_old && self.e == e_old {
+            // Pinned at both bounds — nothing left to adapt.
+            return None;
+        }
+        let d = Decision {
+            round,
+            m: self.m,
+            e: self.e,
+            delta_m: self.m as f64 - m_old as f64,
+            delta_e: self.e - e_old,
+            comparison: 0.0,
+            accuracy,
+        };
+        self.decisions.push(d);
+        Some(d)
+    }
+
+    fn spec(&self) -> String {
+        TunerSpec::Stepwise { decay: self.decay, patience: self.patience }.spec_string()
+    }
+
+    fn activations(&self) -> usize {
+        self.activations
+    }
+
+    fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn init() -> TunerInit {
+        TunerInit {
+            m0: 20,
+            e0: 16.0,
+            preference: None,
+            eps: 0.01,
+            penalty: 10.0,
+            e_floor: 0.5,
+            num_clients: 100,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn improving_rounds_never_trigger_a_step() {
+        let mut t = StepwiseTuner::new(0.5, 3, &init()).unwrap();
+        for r in 1..50 {
+            let d = t.observe_round(r, 0.02 * r as f64, Costs::ZERO);
+            assert!(d.is_none(), "improving stream must not step (round {r})");
+        }
+        assert_eq!(t.current(), (20, 16.0));
+        assert_eq!(t.activations(), 0);
+    }
+
+    #[test]
+    fn plateau_decays_e_and_reexpands_m() {
+        let mut t = StepwiseTuner::new(0.5, 3, &init()).unwrap();
+        t.observe_round(1, 0.5, Costs::ZERO); // improves; sets the reference
+        // Three flat rounds = one plateau step.
+        assert!(t.observe_round(2, 0.5, Costs::ZERO).is_none());
+        assert!(t.observe_round(3, 0.5, Costs::ZERO).is_none());
+        let d = t.observe_round(4, 0.5, Costs::ZERO).expect("patience reached");
+        assert_eq!(d.e, 8.0, "E must halve");
+        assert_eq!(d.m, 25, "M must re-expand by max(1, M/4)");
+        assert_eq!(t.current(), (25, 8.0));
+        assert_eq!(t.activations(), 1);
+        assert_eq!(t.decisions().len(), 1);
+        // The plateau counter resets: the next step needs `patience` more
+        // flat rounds.
+        assert!(t.observe_round(5, 0.5, Costs::ZERO).is_none());
+        assert!(t.observe_round(6, 0.5, Costs::ZERO).is_none());
+        assert!(t.observe_round(7, 0.5, Costs::ZERO).is_some());
+    }
+
+    #[test]
+    fn e_is_floored_and_m_is_capped() {
+        let mut i = init();
+        i.e0 = 1.0;
+        i.num_clients = 24;
+        let mut t = StepwiseTuner::new(0.5, 1, &i).unwrap();
+        for r in 1..100 {
+            t.observe_round(r, 0.1, Costs::ZERO);
+            let (m, e) = t.current();
+            assert!(e >= 0.5, "E broke the floor: {e}");
+            assert!(m <= 24, "M escaped the population: {m}");
+        }
+        assert_eq!(t.current(), (24, 0.5), "a long plateau pins both bounds");
+        // Pinned at both bounds the policy goes quiet (no phantom
+        // decisions), though plateaus still count as activations.
+        let before = t.decisions().len();
+        for r in 100..110 {
+            assert!(t.observe_round(r, 0.1, Costs::ZERO).is_none());
+        }
+        assert_eq!(t.decisions().len(), before);
+    }
+
+    #[test]
+    fn fractional_e_descends_through_the_floor_grid() {
+        let mut i = init();
+        i.e0 = 0.9;
+        let mut t = StepwiseTuner::new(0.6, 1, &i).unwrap();
+        t.observe_round(1, 0.1, Costs::ZERO); // improves: sets the reference
+        t.observe_round(2, 0.1, Costs::ZERO); // flat: patience-1 plateau
+        let (_, e) = t.current();
+        assert!((e - 0.54).abs() < 1e-12, "E must decay multiplicatively: {e}");
+        t.observe_round(3, 0.1, Costs::ZERO);
+        assert_eq!(t.current().1, 0.5, "next decay clamps to the floor");
+    }
+
+    #[test]
+    fn construction_validates_bounds() {
+        assert!(StepwiseTuner::new(0.0, 3, &init()).is_err());
+        assert!(StepwiseTuner::new(1.0, 3, &init()).is_err());
+        assert!(StepwiseTuner::new(0.5, 0, &init()).is_err());
+        let mut i = init();
+        i.m0 = 0;
+        assert!(StepwiseTuner::new(0.5, 3, &i).is_err());
+        let mut i = init();
+        i.e0 = 0.25; // below the floor
+        assert!(StepwiseTuner::new(0.5, 3, &i).is_err());
+        let mut i = init();
+        i.eps = 0.0;
+        assert!(StepwiseTuner::new(0.5, 3, &i).is_err());
+    }
+}

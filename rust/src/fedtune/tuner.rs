@@ -1,0 +1,502 @@
+//! The tuner policy layer: what sets (M, E) each round.
+//!
+//! The paper's contribution is a *policy* — FedTune, Algorithm 1 — but a
+//! policy is one point in a family: related work tunes the same
+//! hyper-parameters with population-based training (FedPop, Chen et al.
+//! 2023) and step-wise adaptive decay (Saadati & Amini 2024). This
+//! module makes the policy pluggable:
+//!
+//! * [`Tuner`] — the trait every policy implements: `current()` reports
+//!   the (M, E) the coordinator should run next round, `observe_round`
+//!   feeds back (accuracy, cumulative [`Costs`]) and may return a
+//!   [`Decision`], and `spec()` names the policy canonically. Generic
+//!   introspection (`activations`, `decisions`) replaces the old
+//!   type-leaking `Schedule::fedtune()` downcast.
+//! * [`TunerSpec`] — the parameter-carrying spec
+//!   ([`TunerSpec::parse`] / [`TunerSpec::spec_string`] round-trip,
+//!   mirroring `Selector::by_name` and `SystemSpec::parse`), plus
+//!   [`TunerSpec::build`] to instantiate the policy from a
+//!   [`TunerInit`]. The spec string joins the run's content identity, so
+//!   `population:4:10` and `population:8:10` never share a cache record.
+//! * [`FixedTuner`] — the paper's baseline ("the practice of using
+//!   fixed M and E", §5.1) as the degenerate policy that never moves.
+//!
+//! The coordinator is agnostic to the policy behind the box. E is `f64`
+//! end-to-end, so the paper's fractional pass counts (E = 0.5, §3.2)
+//! flow through every policy alike:
+//!
+//! ```
+//! use fedtune::fedtune::tuner::{FixedTuner, Tuner, TunerInit, TunerSpec};
+//! use fedtune::overhead::Costs;
+//!
+//! let mut half_pass = FixedTuner::new(20, 0.5);
+//! assert_eq!(half_pass.current(), (20, 0.5));
+//! // Fixed schedules never react to round feedback...
+//! assert!(half_pass.observe_round(1, 0.42, Costs::ZERO).is_none());
+//! assert!(!half_pass.is_tuned());
+//!
+//! // ...while specs parse into live policies and round-trip canonically.
+//! let spec = TunerSpec::parse("stepwise:0.7:8").unwrap();
+//! assert_eq!(spec.spec_string(), "stepwise:0.7:8");
+//! assert_eq!(TunerSpec::parse(&spec.spec_string()).unwrap(), spec);
+//! let init = TunerInit {
+//!     m0: 20,
+//!     e0: 20.0,
+//!     preference: None,
+//!     eps: 0.01,
+//!     penalty: 10.0,
+//!     e_floor: 0.5,
+//!     num_clients: 100,
+//!     seed: 1,
+//! };
+//! let tuner = spec.build(&init).unwrap();
+//! assert!(tuner.is_tuned());
+//! assert_eq!(tuner.spec(), "stepwise:0.7:8");
+//! assert_eq!(tuner.current(), (20, 20.0));
+//! ```
+
+use crate::overhead::{Costs, Preference};
+
+use super::population::PopulationTuner;
+use super::stepwise::StepwiseTuner;
+use super::{Decision, FedTune, FedTuneConfig};
+
+/// Stream tag for tuner-internal randomness: policies that sample
+/// (population resampling/perturbation) draw from
+/// `Rng::new(seed ^ TUNER_STREAM_TAG)` — a stream disjoint from the
+/// engine (`seed`), coordinator (`seed ^ 0xc00d`) and system
+/// (`seed ^ 0x5e57e`) streams, so a stochastic tuner never perturbs
+/// convergence or selection randomness.
+pub const TUNER_STREAM_TAG: u64 = 0x7a9e5;
+
+/// A hyper-parameter tuning policy: what sets (M, E) each round.
+///
+/// The coordinator calls [`Tuner::current`] before every round and
+/// [`Tuner::observe_round`] after it; everything else is introspection
+/// for traces, tables and tests.
+pub trait Tuner: std::fmt::Debug + Send {
+    /// The (M, E) to run the next round with.
+    fn current(&self) -> (usize, f64);
+
+    /// Feed the finished round; returns a [`Decision`] when the policy
+    /// changes (M, E). Fixed schedules never react.
+    fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        cumulative: Costs,
+    ) -> Option<Decision>;
+
+    /// Canonical policy spec ([`TunerSpec::parse`] accepts it back).
+    fn spec(&self) -> String;
+
+    /// Whether this policy can move (M, E) at all.
+    fn is_tuned(&self) -> bool {
+        true
+    }
+
+    /// How many times the policy activated (0 for fixed schedules).
+    fn activations(&self) -> usize {
+        0
+    }
+
+    /// Every (M, E) decision taken so far (empty for fixed schedules).
+    fn decisions(&self) -> &[Decision] {
+        &[]
+    }
+}
+
+/// The paper's baseline: constants for the whole run. `e` may be
+/// fractional (the paper's E = 0.5).
+#[derive(Debug, Clone, Copy)]
+pub struct FixedTuner {
+    m: usize,
+    e: f64,
+}
+
+impl FixedTuner {
+    pub fn new(m: usize, e: f64) -> FixedTuner {
+        FixedTuner { m, e }
+    }
+}
+
+impl Tuner for FixedTuner {
+    fn current(&self) -> (usize, f64) {
+        (self.m, self.e)
+    }
+
+    fn observe_round(&mut self, _: usize, _: f64, _: Costs) -> Option<Decision> {
+        None
+    }
+
+    fn spec(&self) -> String {
+        "fixed".to_string()
+    }
+
+    fn is_tuned(&self) -> bool {
+        false
+    }
+}
+
+/// Everything a policy may need at construction, pulled from the
+/// experiment config by the run drivers (`baselines::run_sim`, the real
+/// engine path in `main`).
+#[derive(Debug, Clone, Copy)]
+pub struct TunerInit {
+    pub m0: usize,
+    pub e0: f64,
+    /// Application preference (α, β, γ, δ). Required by `fedtune` and
+    /// `population` (both score Eq. 6); ignored by `fixed` / `stepwise`.
+    pub preference: Option<Preference>,
+    /// Accuracy-improvement threshold: FedTune's activation ε and the
+    /// stepwise policy's plateau threshold.
+    pub eps: f64,
+    /// FedTune's penalty factor D (unread by the other policies).
+    pub penalty: f64,
+    /// Floor below which no policy descends E (default 0.5).
+    pub e_floor: f64,
+    /// Upper bound for M.
+    pub num_clients: usize,
+    /// Run seed; stochastic policies derive their own stream from it
+    /// via [`TUNER_STREAM_TAG`].
+    pub seed: u64,
+}
+
+/// Parameter-carrying tuner policy spec — the `--tuner` grammar.
+///
+/// The canonical string form ([`TunerSpec::spec_string`]) round-trips
+/// through [`TunerSpec::parse`] and joins the run-store content
+/// identity, so differently-parameterized policies never alias.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum TunerSpec {
+    /// The fixed-(M₀, E₀) baseline.
+    Fixed,
+    /// FedTune (Algorithm 1). ε, D and the E floor stay ordinary config
+    /// fields (`--eps`, `--penalty`, `--e-floor`); the spec carries no
+    /// arguments. The default spec: with no preference configured it
+    /// degrades to [`TunerSpec::Fixed`], preserving the pre-trait
+    /// "no preference = baseline" semantics.
+    #[default]
+    FedTune,
+    /// Step-wise adaptive decay (Saadati & Amini 2024): on an accuracy
+    /// plateau of `patience` rounds, E decays multiplicatively by
+    /// `decay` (floored at `e_floor`) and M re-expands.
+    Stepwise { decay: f64, patience: usize },
+    /// FedPop-style population tuning (Chen et al. 2023): `k` candidate
+    /// (M, E) members take turns driving `interval`-round slots, are
+    /// scored on Eq. 6 preference-weighted overhead per unit accuracy,
+    /// and losers resample from perturbed winners each generation.
+    Population { k: usize, interval: usize },
+}
+
+impl TunerSpec {
+    /// The accepted grammar, printed by `--help` and echoed by every
+    /// unknown-spec error (one source of truth, next to the parser).
+    pub const SPEC_HELP: &str = "fixed | fedtune | \
+        stepwise:<decay in (0,1)>:<patience >= 1> | \
+        population:<members >= 2>:<interval >= 1>";
+
+    /// Parse a tuner spec (see [`TunerSpec::SPEC_HELP`]). The empty
+    /// string means the default (`fedtune`). Returns a human-readable
+    /// error, echoing the grammar, for malformed specs.
+    pub fn parse(spec: &str) -> Result<TunerSpec, String> {
+        let spec = spec.trim();
+        let mut parts = spec.split(':');
+        let head = parts.next().unwrap_or("").trim();
+        let args: Vec<&str> = parts.map(str::trim).collect();
+        let no_args = |name: &str| -> Result<(), String> {
+            if args.is_empty() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "tuner {name:?} takes no arguments (expected {})",
+                    TunerSpec::SPEC_HELP
+                ))
+            }
+        };
+        let t = match head {
+            "" | "fedtune" => {
+                no_args("fedtune")?;
+                TunerSpec::FedTune
+            }
+            "fixed" => {
+                no_args("fixed")?;
+                TunerSpec::Fixed
+            }
+            "stepwise" => {
+                if args.len() != 2 {
+                    return Err(format!(
+                        "stepwise needs <decay>:<patience> (expected {})",
+                        TunerSpec::SPEC_HELP
+                    ));
+                }
+                let decay: f64 = args[0]
+                    .parse()
+                    .map_err(|_| format!("stepwise decay {:?} is not a number", args[0]))?;
+                let patience: usize = args[1].parse().map_err(|_| {
+                    format!("stepwise patience {:?} is not an integer", args[1])
+                })?;
+                TunerSpec::Stepwise { decay, patience }
+            }
+            "population" => {
+                if args.len() != 2 {
+                    return Err(format!(
+                        "population needs <members>:<interval> (expected {})",
+                        TunerSpec::SPEC_HELP
+                    ));
+                }
+                let k: usize = args[0].parse().map_err(|_| {
+                    format!("population member count {:?} is not an integer", args[0])
+                })?;
+                let interval: usize = args[1].parse().map_err(|_| {
+                    format!("population interval {:?} is not an integer", args[1])
+                })?;
+                TunerSpec::Population { k, interval }
+            }
+            other => {
+                return Err(format!(
+                    "unknown tuner spec {other:?} (expected {})",
+                    TunerSpec::SPEC_HELP
+                ))
+            }
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Canonical spec string; [`TunerSpec::parse`] accepts it back. It
+    /// joins the run's content identity, so it must be stable: floats
+    /// print in Rust's shortest round-trip form.
+    pub fn spec_string(&self) -> String {
+        match *self {
+            TunerSpec::Fixed => "fixed".to_string(),
+            TunerSpec::FedTune => "fedtune".to_string(),
+            TunerSpec::Stepwise { decay, patience } => {
+                format!("stepwise:{decay}:{patience}")
+            }
+            TunerSpec::Population { k, interval } => {
+                format!("population:{k}:{interval}")
+            }
+        }
+    }
+
+    /// Check parameter invariants. [`TunerSpec::parse`] enforces these
+    /// at parse time; programmatic constructions are re-checked through
+    /// `ExperimentConfig::validate`, so a config that validates always
+    /// produces a spec string [`TunerSpec::parse`] accepts back.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            TunerSpec::Fixed | TunerSpec::FedTune => Ok(()),
+            TunerSpec::Stepwise { decay, patience } => {
+                if !decay.is_finite() || decay <= 0.0 || decay >= 1.0 {
+                    return Err(format!("stepwise decay must be in (0, 1), got {decay}"));
+                }
+                if patience == 0 {
+                    return Err("stepwise patience must be >= 1 round".to_string());
+                }
+                Ok(())
+            }
+            TunerSpec::Population { k, interval } => {
+                if k < 2 {
+                    return Err(format!("population needs >= 2 members, got {k}"));
+                }
+                if interval == 0 {
+                    return Err("population interval must be >= 1 round".to_string());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The policy actually driving a run: the default `fedtune` spec
+    /// degrades to the fixed baseline when no preference is configured
+    /// (the pre-trait `Option<Preference>` semantics, which the grid's
+    /// shared-baseline legs and every existing config rely on).
+    pub fn effective(&self, has_preference: bool) -> TunerSpec {
+        match *self {
+            TunerSpec::FedTune if !has_preference => TunerSpec::Fixed,
+            t => t,
+        }
+    }
+
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, TunerSpec::Fixed)
+    }
+
+    /// Instantiate the policy. Errors (bad bounds, missing preference)
+    /// are human-readable strings, like the parsers'.
+    pub fn build(&self, init: &TunerInit) -> Result<Box<dyn Tuner>, String> {
+        match *self {
+            TunerSpec::Fixed => Ok(Box::new(FixedTuner::new(init.m0, init.e0))),
+            TunerSpec::FedTune => {
+                let pref = init.preference.ok_or_else(|| {
+                    "fedtune tuner needs a preference (alpha, beta, gamma, delta)"
+                        .to_string()
+                })?;
+                let cfg = FedTuneConfig {
+                    eps: init.eps,
+                    penalty: init.penalty,
+                    e_min: init.e_floor,
+                    ..FedTuneConfig::paper_defaults(init.num_clients)
+                };
+                Ok(Box::new(FedTune::new(pref, cfg, init.m0, init.e0)?))
+            }
+            TunerSpec::Stepwise { decay, patience } => {
+                Ok(Box::new(StepwiseTuner::new(decay, patience, init)?))
+            }
+            TunerSpec::Population { k, interval } => {
+                let pref = init.preference.ok_or_else(|| {
+                    "population tuner needs a preference for its Eq. 6 member scoring"
+                        .to_string()
+                })?;
+                Ok(Box::new(PopulationTuner::new(k, interval, pref, init)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::Preference;
+
+    fn init() -> TunerInit {
+        TunerInit {
+            m0: 20,
+            e0: 20.0,
+            preference: None,
+            eps: 0.01,
+            penalty: 10.0,
+            e_floor: 0.5,
+            num_clients: 100,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut t = FixedTuner::new(20, 20.0);
+        for r in 0..10 {
+            let d = t.observe_round(
+                r,
+                0.1 * r as f64,
+                Costs { comp_t: r as f64, trans_t: 1.0, comp_l: 1.0, trans_l: 1.0 },
+            );
+            assert!(d.is_none());
+            assert_eq!(t.current(), (20, 20.0));
+        }
+        assert!(!t.is_tuned());
+        assert_eq!(t.activations(), 0);
+        assert!(t.decisions().is_empty());
+        assert_eq!(t.spec(), "fixed");
+    }
+
+    #[test]
+    fn fixed_carries_fractional_e() {
+        let mut t = FixedTuner::new(10, 0.5);
+        assert_eq!(t.current(), (10, 0.5));
+        assert!(t.observe_round(1, 0.5, Costs::ZERO).is_none());
+        assert_eq!(t.current(), (10, 0.5));
+    }
+
+    #[test]
+    fn fedtune_builds_and_delegates_through_the_trait() {
+        let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+        let mut i = init();
+        i.preference = Some(pref);
+        let mut t = TunerSpec::FedTune.build(&i).unwrap();
+        assert!(t.is_tuned());
+        assert_eq!(t.spec(), "fedtune");
+        assert_eq!(t.current(), (20, 20.0));
+        let mut cum = Costs::ZERO;
+        for r in 1..20 {
+            cum.add(&Costs { comp_t: 2.0, trans_t: 1.0, comp_l: 3.0, trans_l: 4.0 });
+            t.observe_round(r, 0.03 * r as f64, cum);
+        }
+        // Generic introspection replaces the old fedtune() downcast.
+        assert!(t.activations() > 1);
+        assert_eq!(t.decisions().len(), t.activations() - 1);
+    }
+
+    #[test]
+    fn parse_accepts_the_grammar() {
+        assert_eq!(TunerSpec::parse("fixed").unwrap(), TunerSpec::Fixed);
+        assert_eq!(TunerSpec::parse("fedtune").unwrap(), TunerSpec::FedTune);
+        assert_eq!(TunerSpec::parse("").unwrap(), TunerSpec::FedTune);
+        assert_eq!(TunerSpec::parse(" fedtune ").unwrap(), TunerSpec::FedTune);
+        assert_eq!(
+            TunerSpec::parse("stepwise:0.5:5").unwrap(),
+            TunerSpec::Stepwise { decay: 0.5, patience: 5 }
+        );
+        assert_eq!(
+            TunerSpec::parse("population:4:10").unwrap(),
+            TunerSpec::Population { k: 4, interval: 10 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_and_echoes_the_grammar() {
+        for bad in [
+            "oort",
+            "fixed:1",
+            "fedtune:0.1",
+            "stepwise",
+            "stepwise:0.5",
+            "stepwise:1.0:5",
+            "stepwise:0:5",
+            "stepwise:abc:5",
+            "stepwise:0.5:0",
+            "stepwise:0.5:-1",
+            "population:1:10",
+            "population:4:0",
+            "population:4",
+            "population:x:10",
+        ] {
+            let err = TunerSpec::parse(bad).unwrap_err();
+            assert!(
+                err.contains("stepwise") || err.contains("population"),
+                "error for {bad:?} should name the offender or echo the grammar: {err}"
+            );
+        }
+        // The unknown-head error echoes the full grammar.
+        let err = TunerSpec::parse("oort").unwrap_err();
+        assert!(err.contains(TunerSpec::SPEC_HELP), "{err}");
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for spec in [
+            TunerSpec::Fixed,
+            TunerSpec::FedTune,
+            TunerSpec::Stepwise { decay: 0.75, patience: 3 },
+            TunerSpec::Population { k: 6, interval: 12 },
+        ] {
+            assert_eq!(
+                TunerSpec::parse(&spec.spec_string()).unwrap(),
+                spec,
+                "round trip broke for {}",
+                spec.spec_string()
+            );
+        }
+    }
+
+    #[test]
+    fn effective_degrades_default_fedtune_without_preference() {
+        assert_eq!(TunerSpec::FedTune.effective(false), TunerSpec::Fixed);
+        assert_eq!(TunerSpec::FedTune.effective(true), TunerSpec::FedTune);
+        // Explicit policies are never degraded.
+        let s = TunerSpec::Stepwise { decay: 0.5, patience: 5 };
+        assert_eq!(s.effective(false), s);
+        assert_eq!(TunerSpec::Fixed.effective(true), TunerSpec::Fixed);
+    }
+
+    #[test]
+    fn build_requires_preferences_where_scoring_needs_them() {
+        let i = init();
+        assert!(TunerSpec::FedTune.build(&i).is_err());
+        assert!(TunerSpec::Population { k: 4, interval: 10 }.build(&i).is_err());
+        // Stepwise is preference-free; fixed always builds.
+        assert!(TunerSpec::Stepwise { decay: 0.5, patience: 5 }.build(&i).is_ok());
+        assert!(TunerSpec::Fixed.build(&i).is_ok());
+    }
+}

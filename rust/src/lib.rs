@@ -14,14 +14,17 @@
 //!
 //! Quick tour: [`config::ExperimentConfig`] describes a run (including
 //! its [`system::SystemSpec`] — the per-client device/link heterogeneity
-//! population); [`engine::sim::SimEngine`] or
+//! population — and its [`fedtune::tuner::TunerSpec`] — the tuner policy
+//! setting (M, E)); [`engine::sim::SimEngine`] or
 //! [`engine::real::RealEngine`] execute rounds; [`coordinator::Server`]
-//! drives either engine to a target
-//! accuracy with or without [`fedtune::FedTune`] adjusting (M, E);
+//! drives either engine to a target accuracy under any
+//! [`fedtune::tuner::Tuner`] policy — the fixed baseline,
+//! [`fedtune::FedTune`] (Alg. 1), step-wise adaptive decay, or
+//! FedPop-style population tuning;
 //! [`experiment::Grid`] fans whole (profile × aggregator × M₀ × E₀ ×
-//! preference × seed) sweeps out over a worker pool and emits one stable
-//! JSON artifact per sweep; [`store`] content-addresses every run so
-//! sweeps dedupe shared work, cache across processes, and resume after
+//! preference × tuner × seed) sweeps out over a worker pool and emits one
+//! stable JSON artifact per sweep; [`store`] content-addresses every run
+//! so sweeps dedupe shared work, cache across processes, and resume after
 //! interruption.
 
 pub mod util;

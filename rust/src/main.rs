@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //! * `run`            — execute one experiment (sim or real engine)
-//! * `grid`           — 15-preference FedTune-vs-baseline comparison
+//! * `grid`           — 15-preference tuner-vs-baseline comparison
+//!                      (`--tuner` picks the policy)
 //! * `check-runtime`  — load the AOT artifacts, run one train/eval step
 //! * `info`           — print manifest / ladder / profile inventory
 //!
@@ -18,8 +19,7 @@ use fedtune::data::FederatedDataset;
 use fedtune::engine::real::{RealEngine, RealEngineConfig};
 use fedtune::engine::FlEngine;
 use fedtune::experiment::Grid;
-use fedtune::fedtune::schedule::Schedule;
-use fedtune::fedtune::{FedTune, FedTuneConfig};
+use fedtune::fedtune::tuner::TunerSpec;
 use fedtune::model::{ladder, Manifest, ParamVec};
 use fedtune::overhead::{CostModel, Preference};
 use fedtune::coordinator::selection::Selector;
@@ -59,8 +59,9 @@ fn print_help() {
          USAGE: fedtune <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
          run            execute one experiment (see `run --help`)\n  \
-         grid           FedTune vs baseline over the 15-preference grid\n                 \
-         (--cache-dir caches runs; --resume continues a killed sweep)\n  \
+         grid           tuner policy vs fixed baseline over the 15-preference grid\n                 \
+         (--tuner swaps the policy; --cache-dir caches runs; --resume\n                 \
+         continues a killed sweep)\n  \
          check-runtime  smoke-test the AOT artifact → PJRT path\n  \
          info           print models / datasets / artifact inventory\n                 \
          (--cache-dir adds run-cache statistics)\n"
@@ -68,6 +69,12 @@ fn print_help() {
 }
 
 fn common_cli(name: &str, about: &str) -> Cli {
+    // Spec-valued flags print their accepted grammar straight from the
+    // constants that live next to each parser — `--help` can never
+    // drift from what the parsers accept.
+    let tuner_help = format!("tuner policy: {}", TunerSpec::SPEC_HELP);
+    let selector_help = format!("participant selector: {}", Selector::SPEC_HELP);
+    let system_help = format!("client system heterogeneity: {}", SystemSpec::SPEC_HELP);
     Cli::new(name, about)
         .opt("config", "", "JSON config file (CLI flags override it)")
         .opt("dataset", "speech", "dataset profile: speech|emnist|cifar")
@@ -76,24 +83,16 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("engine", "sim", "sim|real")
         .opt("m0", "20", "initial participants per round")
         .opt("e0", "20", "initial local passes (fractional allowed, e.g. 0.5)")
-        .opt("preference", "", "alpha,beta,gamma,delta (empty = fixed baseline)")
-        .opt("eps", "0.01", "FedTune activation threshold")
+        .opt("tuner", "fedtune", &tuner_help)
+        .opt("preference", "", "alpha,beta,gamma,delta (empty + fedtune tuner = fixed baseline)")
+        .opt("eps", "0.01", "FedTune activation / stepwise plateau threshold")
         .opt("penalty", "10", "FedTune penalty factor D")
-        .opt("e-floor", "0.5", "minimum E FedTune may descend to (1 = classical integer floor)")
+        .opt("e-floor", "0.5", "minimum E a tuner may descend to (1 = classical integer floor)")
         .opt("target", "0", "target accuracy (0 = dataset default)")
         .opt("max-rounds", "20000", "round cap")
         .opt("lr", "0.05", "client learning rate (real engine)")
-        .opt(
-            "selector",
-            "random",
-            "participant selector: random | guided[:exploit] | deadline[:max-cost]",
-        )
-        .opt(
-            "system",
-            "homogeneous",
-            "client system heterogeneity: homogeneous | lognormal:<sigma> | \
-             classes:<name>:<factor>@<fraction>,...",
-        )
+        .opt("selector", "random", &selector_help)
+        .opt("system", "homogeneous", &system_help)
         .opt("seed", "1", "random seed")
         .opt("scale", "1.0", "client-population scale factor (real engine)")
         .opt("artifacts", "artifacts", "artifact directory (real engine)")
@@ -128,12 +127,13 @@ fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
     cfg.lr = cli.get("lr").map_err(anyhow::Error::msg)?;
     cfg.selector = Selector::by_name(&cli.get_str("selector")).with_context(|| {
         format!(
-            "bad selector spec {:?} (expected random | guided[:exploit >= 0] \
-             | deadline[:max-cost > 0])",
-            cli.get_str("selector")
+            "bad selector spec {:?} (expected {})",
+            cli.get_str("selector"),
+            Selector::SPEC_HELP
         )
     })?;
     cfg.system = SystemSpec::parse(&cli.get_str("system")).map_err(anyhow::Error::msg)?;
+    cfg.tuner = TunerSpec::parse(&cli.get_str("tuner")).map_err(anyhow::Error::msg)?;
     cfg.seed = cli.get("seed").map_err(anyhow::Error::msg)?;
     cfg.scale = cli.get("scale").map_err(anyhow::Error::msg)?;
     let pref = cli.get_str("preference");
@@ -163,8 +163,15 @@ fn cmd_run(args: Vec<String>) -> Result<()> {
         EngineKind::Real => run_real(&cli, &cfg)?,
     };
     println!(
-        "stop={:?} rounds={} accuracy={:.4} final M={} E={}",
-        result.stop, result.rounds, result.final_accuracy, result.final_m, result.final_e
+        "stop={:?} rounds={} accuracy={:.4} final M={} E={} (tuner {}: {} activations, {} decisions)",
+        result.stop,
+        result.rounds,
+        result.final_accuracy,
+        result.final_m,
+        result.final_e,
+        cfg.effective_tuner().spec_string(),
+        result.activations,
+        result.decisions.len()
     );
     println!(
         "CompT={:.4e}  TransT={:.4e}  CompL={:.4e}  TransL={:.4e}",
@@ -217,25 +224,12 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
         selector: cfg.selector,
         seed: cfg.seed,
     };
-    let schedule = match &cfg.preference {
-        None => Schedule::Fixed { m: cfg.m0, e: cfg.e0 },
-        Some(pref) => {
-            let ft_cfg = FedTuneConfig {
-                eps: cfg.eps,
-                penalty: cfg.penalty,
-                e_min: cfg.e_floor,
-                ..FedTuneConfig::paper_defaults(num_clients)
-            };
-            Schedule::Tuned(Box::new(
-                FedTune::new(*pref, ft_cfg, cfg.m0, cfg.e0).map_err(anyhow::Error::msg)?,
-            ))
-        }
-    };
-    Server::new(&mut engine, server_cfg, schedule).run()
+    let tuner = baselines::tuner_for(cfg, num_clients, cfg.seed)?;
+    Server::new(&mut engine, server_cfg, tuner).run()
 }
 
 fn cmd_grid(args: Vec<String>) -> Result<()> {
-    let cli = common_cli("fedtune grid", "15-preference FedTune vs fixed baseline")
+    let cli = common_cli("fedtune grid", "15-preference tuner policy vs fixed baseline")
         .opt("seeds", "1,2,3", "comma-separated seeds")
         .opt("workers", "0", "worker threads for the sweep (0 = all cores, capped)")
         .opt("json-out", "", "write the grid JSON artifact here")

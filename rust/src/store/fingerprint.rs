@@ -11,11 +11,18 @@
 //! [`Fingerprint`].
 //!
 //! One canonicalization rule matters for deduplication:
-//! **FedTune-only knobs.** A fixed-(M, E) run never reads `eps`, the
-//! penalty factor D, the E floor, or a preference, so those fields are
-//! omitted when `cfg.preference` is `None` — every baseline request
-//! inside a sweep (one per tuned cell per seed under `compare_baseline`,
-//! one per penalty on a Fig. 8-style D axis) keys to the same record.
+//! **tuner-only knobs.** A run keys on its *effective* tuner policy
+//! ([`crate::config::ExperimentConfig::effective_tuner`]) plus exactly
+//! the knobs that policy reads. A fixed-(M, E) run reads none of them,
+//! so `tuner`, `eps`, the penalty factor D, the E floor and the
+//! preference are all omitted — every baseline request inside a sweep
+//! (one per tuned cell per seed under `compare_baseline`, one per
+//! penalty on a Fig. 8-style D axis) keys to the same record. A
+//! `stepwise:` run reads `eps` (plateau threshold) and the E floor but
+//! neither D nor the preference, so it is shared across the whole
+//! preference axis; `fedtune` and `population:` read the preference and
+//! key on it. Over-keying would duplicate runs, under-keying would
+//! alias different physics — the tests below pin both directions.
 //!
 //! Invalidation is by schema bump: changing what a run means (engine
 //! semantics, record layout) must bump [`FINGERPRINT_VERSION`], which
@@ -27,10 +34,14 @@
 //! heterogeneity: the canonical [`crate::system::SystemSpec`] string
 //! joined the identity (and the selector spec became
 //! parameter-carrying), so every v1/v2 record is likewise a clean miss.
+//! Version 4 made the tuner policy pluggable: the canonical
+//! [`TunerSpec`] string joined the identity of every tuned run, so
+//! every v1/v2/v3 record is likewise a clean miss.
 
 use std::fmt;
 
 use crate::config::{EngineKind, ExperimentConfig};
+use crate::fedtune::tuner::TunerSpec;
 use crate::overhead::CostModel;
 use crate::util::json::Json;
 
@@ -39,8 +50,9 @@ use crate::util::json::Json;
 /// never match again. v2 = unified fractional E (`e` comes from
 /// `cfg.e0`; tuned runs carry an `e_floor`). v3 = per-client system
 /// heterogeneity (`system` spec string in the identity; selector spec
-/// carries its parameters).
-pub const FINGERPRINT_VERSION: u64 = 3;
+/// carries its parameters). v4 = pluggable tuner policies (`tuner`
+/// spec string in every tuned run's identity; per-policy knob keying).
+pub const FINGERPRINT_VERSION: u64 = 4;
 
 /// A 128-bit content hash, printed as 32 lowercase hex digits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -122,21 +134,46 @@ pub fn run_identity(cfg: &ExperimentConfig, seed: u64, cost_model: &CostModel) -
             ]),
         ),
     ]);
-    // FedTune-only knobs: omitted for fixed-(M, E) runs, which never read
-    // them — this is what dedupes shared baselines across a sweep.
-    if let Some(p) = &cfg.preference {
-        j.set(
-            "preference",
-            Json::Arr(vec![
-                p.alpha.into(),
-                p.beta.into(),
-                p.gamma.into(),
-                p.delta.into(),
-            ]),
-        );
-        j.set("eps", cfg.eps.into());
-        j.set("penalty", cfg.penalty.into());
-        j.set("e_floor", cfg.e_floor.into());
+    // Tuner-policy knobs: each effective policy keys on its canonical
+    // spec plus exactly the knobs it reads (see the module doc). Fixed
+    // runs read none — this is what dedupes shared baselines across a
+    // sweep — and preference-blind policies dedupe across preferences.
+    let set_pref = |j: &mut Json, cfg: &ExperimentConfig| {
+        if let Some(p) = &cfg.preference {
+            j.set(
+                "preference",
+                Json::Arr(vec![
+                    p.alpha.into(),
+                    p.beta.into(),
+                    p.gamma.into(),
+                    p.delta.into(),
+                ]),
+            );
+        }
+    };
+    match cfg.effective_tuner() {
+        TunerSpec::Fixed => {}
+        spec @ TunerSpec::FedTune => {
+            j.set("tuner", spec.spec_string().as_str().into());
+            set_pref(&mut j, cfg);
+            j.set("eps", cfg.eps.into());
+            j.set("penalty", cfg.penalty.into());
+            j.set("e_floor", cfg.e_floor.into());
+        }
+        spec @ TunerSpec::Stepwise { .. } => {
+            // Decay and patience ride in the spec string; eps is the
+            // plateau threshold. No preference, no penalty.
+            j.set("tuner", spec.spec_string().as_str().into());
+            j.set("eps", cfg.eps.into());
+            j.set("e_floor", cfg.e_floor.into());
+        }
+        spec @ TunerSpec::Population { .. } => {
+            // Member count and interval ride in the spec string; the
+            // preference weights the Eq. 6 member scores. No eps/penalty.
+            j.set("tuner", spec.spec_string().as_str().into());
+            set_pref(&mut j, cfg);
+            j.set("e_floor", cfg.e_floor.into());
+        }
     }
     j
 }
@@ -234,10 +271,77 @@ mod tests {
         let d1 = run_identity(&c, 3, &cm()).dump();
         let d2 = run_identity(&c, 3, &cm()).dump();
         assert_eq!(d1, d2);
-        assert!(d1.contains("\"v\":3"));
+        assert!(d1.contains("\"v\":4"));
         assert!(d1.contains("\"e\":0.5"));
         assert!(d1.contains("\"system\":\"homogeneous\""));
         assert!(d1.contains("\"selector\":\"random\""));
+        // Preference-less default = effectively fixed: no tuner key.
+        assert!(!d1.contains("\"tuner\""));
+        let mut tuned = cfg();
+        tuned.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
+        let d3 = run_identity(&tuned, 3, &cm()).dump();
+        assert!(d3.contains("\"tuner\":\"fedtune\""));
+    }
+
+    #[test]
+    fn tuner_spec_parameters_split_keys() {
+        use crate::fedtune::tuner::TunerSpec;
+        // Differently-parameterized policies are different physics and
+        // must never alias (the no-spec-aliasing acceptance criterion).
+        let mut a = cfg();
+        a.tuner = TunerSpec::Stepwise { decay: 0.5, patience: 5 };
+        let mut b = a.clone();
+        b.tuner = TunerSpec::Stepwise { decay: 0.6, patience: 5 };
+        let mut c = a.clone();
+        c.tuner = TunerSpec::Stepwise { decay: 0.5, patience: 6 };
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&b, 1, &cm()));
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&c, 1, &cm()));
+        let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+        let mut p1 = cfg();
+        p1.preference = Some(pref);
+        p1.tuner = TunerSpec::Population { k: 4, interval: 10 };
+        let mut p2 = p1.clone();
+        p2.tuner = TunerSpec::Population { k: 8, interval: 10 };
+        let mut p3 = p1.clone();
+        p3.tuner = TunerSpec::Population { k: 4, interval: 20 };
+        assert_ne!(run_fingerprint(&p1, 1, &cm()), run_fingerprint(&p2, 1, &cm()));
+        assert_ne!(run_fingerprint(&p1, 1, &cm()), run_fingerprint(&p3, 1, &cm()));
+        // And policies never alias each other on the same config.
+        let mut ft = p1.clone();
+        ft.tuner = TunerSpec::FedTune;
+        assert_ne!(run_fingerprint(&p1, 1, &cm()), run_fingerprint(&ft, 1, &cm()));
+    }
+
+    #[test]
+    fn per_policy_knob_keying() {
+        use crate::fedtune::tuner::TunerSpec;
+        let pref = Preference::new(1.0, 0.0, 0.0, 0.0).unwrap();
+        // Stepwise ignores the penalty factor and the preference: keys
+        // must not split on them (splitting would duplicate runs).
+        let mut a = cfg();
+        a.tuner = TunerSpec::Stepwise { decay: 0.5, patience: 5 };
+        let mut b = a.clone();
+        b.penalty = 1.0;
+        b.preference = Some(pref);
+        assert_eq!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&b, 1, &cm()));
+        // ...but it does read eps (plateau threshold) and the E floor.
+        let mut c = a.clone();
+        c.eps = 0.05;
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&c, 1, &cm()));
+        let mut d = a.clone();
+        d.e_floor = 1.0;
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&d, 1, &cm()));
+        // Population reads the preference (Eq. 6 scoring) but not eps/D.
+        let mut p = cfg();
+        p.tuner = TunerSpec::Population { k: 4, interval: 10 };
+        p.preference = Some(pref);
+        let mut q = p.clone();
+        q.preference = Some(Preference::new(0.0, 0.0, 1.0, 0.0).unwrap());
+        assert_ne!(run_fingerprint(&p, 1, &cm()), run_fingerprint(&q, 1, &cm()));
+        let mut r = p.clone();
+        r.eps = 0.05;
+        r.penalty = 1.0;
+        assert_eq!(run_fingerprint(&p, 1, &cm()), run_fingerprint(&r, 1, &cm()));
     }
 
     #[test]

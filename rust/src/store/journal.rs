@@ -6,13 +6,13 @@
 //! line. If the process dies, re-running the same grid with `--resume`
 //! replays the journal, skips the finished pairs, executes only the
 //! missing runs, and — because [`RunRecord`] JSON round-trips losslessly
-//! — still emits a `fedtune.experiment.grid/v2` artifact byte-identical
+//! — still emits a `fedtune.experiment.grid/v3` artifact byte-identical
 //! to an uninterrupted sweep.
 //!
-//! # File format (`fedtune.store.journal/v3`)
+//! # File format (`fedtune.store.journal/v4`)
 //!
 //! ```text
-//! {"schema":"fedtune.store.journal/v3","sweep":"<32 hex>"}   // header
+//! {"schema":"fedtune.store.journal/v4","sweep":"<32 hex>"}   // header
 //! {"cell":0,"seed":101,"record":{...}}                       // one per pair
 //! {"cell":0,"seed":202,"record":{...}}
 //! ...
@@ -44,7 +44,7 @@ use crate::util::json::Json;
 use super::fingerprint::Fingerprint;
 
 /// Schema identifier in the journal header line.
-pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v3";
+pub const JOURNAL_SCHEMA: &str = "fedtune.store.journal/v4";
 
 /// One replayed journal line: a finished `(cell, seed)` run record.
 #[derive(Debug, Clone)]

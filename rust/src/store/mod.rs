@@ -8,19 +8,20 @@
 //!
 //! * [`fingerprint`] — hashes a run's full identity (canonical config
 //!   JSON — `e0` is fractional and first-class, the client
-//!   [`crate::system::SystemSpec`] and parameterized selector included —
+//!   [`crate::system::SystemSpec`], parameterized selector and tuner
+//!   policy spec included —
 //!   plus seed, cost constants, schema version) into a stable hex
 //!   [`Fingerprint`] with
 //!   an in-repo FNV-1a 128-bit hasher. Identical runs — across cells,
 //!   penalties, figures, or whole processes — share one key.
 //! * [`run_store`] — a two-tier (memory + disk) [`RunStore`] persisting
-//!   one `fedtune.store.run/v3` JSON record per key under a cache
+//!   one `fedtune.store.run/v4` JSON record per key under a cache
 //!   directory, with lossless [`crate::experiment::RunRecord`]
 //!   round-trips and miss-on-corruption semantics.
 //! * [`journal`] — a per-sweep append-only [`SweepJournal`] of finished
 //!   (cell, seed) records, so an interrupted `fedtune grid` resumes where
 //!   it died and still emits a byte-identical
-//!   `fedtune.experiment.grid/v2` artifact.
+//!   `fedtune.experiment.grid/v3` artifact.
 //!
 //! [`crate::experiment::Grid`] drives all three: work items are a
 //! *deduped* set of fingerprints fanned out over the worker pool, and

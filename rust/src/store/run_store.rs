@@ -1,16 +1,16 @@
 //! Two-tier content-addressed run store.
 //!
 //! The memory tier is a plain map that serves repeated lookups inside one
-//! process; the optional disk tier persists one `fedtune.store.run/v3`
+//! process; the optional disk tier persists one `fedtune.store.run/v4`
 //! JSON record per [`Fingerprint`] under `<cache-dir>/runs/<hex>.json`,
 //! so later sweeps (a figure regeneration, a resumed grid) reuse finished
 //! runs across processes.
 //!
-//! # Record schema (`fedtune.store.run/v3`)
+//! # Record schema (`fedtune.store.run/v4`)
 //!
 //! ```text
 //! {
-//!   "schema": "fedtune.store.run/v3",
+//!   "schema": "fedtune.store.run/v4",
 //!   "fingerprint": "<32 hex digits>",     // must match the filename key
 //!   "record": { ...RunRecord...,          // experiment::runner layout
 //!               "trace": {"rounds": [...]} }   // only when kept
@@ -19,13 +19,14 @@
 //!
 //! v2 accompanied the fractional-E unification: the run's pass count
 //! lives in the fingerprinted config (`e0: f64`), so the v1 side-channel
-//! `"e"` field is gone. v3 accompanies per-client system heterogeneity:
+//! `"e"` field is gone. v3 accompanied per-client system heterogeneity:
 //! run identities grew a `system` spec (and a parameter-carrying
-//! selector spec), so pre-v3 records describe runs that no longer
-//! exist. Stale records (v1 or v2) are schema misses — they re-run and
-//! heal; `fedtune info --cache-dir` counts them
-//! ([`CacheStats::stale_runs`]) so operators can see why a warm cache
-//! re-executes.
+//! selector spec). v4 accompanies pluggable tuner policies: tuned run
+//! identities grew a `tuner` spec with per-policy knob keying, so
+//! pre-v4 records describe runs that no longer exist. Stale records
+//! (v1 through v3) are schema misses — they re-run and heal;
+//! `fedtune info --cache-dir` counts them ([`CacheStats::stale_runs`])
+//! so operators can see why a warm cache re-executes.
 //!
 //! # Failure semantics
 //!
@@ -49,7 +50,7 @@ use crate::util::json::Json;
 use super::fingerprint::Fingerprint;
 
 /// Schema identifier of one persisted run record.
-pub const RUN_SCHEMA: &str = "fedtune.store.run/v3";
+pub const RUN_SCHEMA: &str = "fedtune.store.run/v4";
 
 /// Name of the per-run subdirectory inside a cache dir.
 const RUNS_SUBDIR: &str = "runs";

@@ -99,6 +99,11 @@ pub enum SystemSpec {
 }
 
 impl SystemSpec {
+    /// The accepted grammar, printed by `--help` and echoed by every
+    /// unknown-spec error (one source of truth, next to the parser).
+    pub const SPEC_HELP: &str =
+        "homogeneous | lognormal:<sigma >= 0> | classes:<name>:<factor>@<fraction>,...";
+
     /// Parse the spec grammar (see the module doc). Returns a
     /// human-readable error for malformed specs.
     pub fn parse(spec: &str) -> Result<SystemSpec, String> {
@@ -140,8 +145,8 @@ impl SystemSpec {
             return Ok(s);
         }
         Err(format!(
-            "unknown system spec {spec:?} (expected homogeneous | lognormal:<sigma> | \
-             classes:<name>:<factor>@<fraction>,...)"
+            "unknown system spec {spec:?} (expected {})",
+            SystemSpec::SPEC_HELP
         ))
     }
 

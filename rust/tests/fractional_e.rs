@@ -7,7 +7,7 @@
 //! kept here as the reference implementation:
 //!
 //! 1. integral-E grids are unperturbed by the usize→f64 change — every
-//!    run record (and hence the `fedtune.experiment.grid/v2` artifact)
+//!    run record (and hence the `fedtune.experiment.grid/v3` artifact)
 //!    is byte-identical to what the old mirror computed;
 //! 2. E = 0.5 through the coordinator reproduces the old mirror's trace
 //!    bit-for-bit on the same seed.
@@ -97,7 +97,7 @@ fn base() -> ExperimentConfig {
 /// Contract 1: the usize→f64 unification must not perturb integral-E
 /// results. Every fixed-schedule (cell, seed) run of an integral-E grid
 /// matches the legacy mirror bit-for-bit, so the emitted
-/// `fedtune.experiment.grid/v2` JSON is byte-identical to what the
+/// `fedtune.experiment.grid/v3` JSON is byte-identical to what the
 /// pre-refactor pipeline produced.
 #[test]
 fn integral_e_grid_records_match_legacy_mirror_bitwise() {

@@ -10,7 +10,7 @@ use fedtune::coordinator::{Server, ServerConfig, StopReason};
 use fedtune::data::{DatasetProfile, FederatedDataset};
 use fedtune::engine::real::{RealEngine, RealEngineConfig};
 use fedtune::engine::FlEngine;
-use fedtune::fedtune::schedule::Schedule;
+use fedtune::fedtune::tuner::FixedTuner;
 use fedtune::model::ParamVec;
 use fedtune::overhead::CostModel;
 use fedtune::runtime::Runtime;
@@ -158,7 +158,7 @@ fn full_real_training_reaches_target_with_all_aggregators() {
                 selector: Selector::UniformRandom,
                 seed: 11,
             },
-            Schedule::Fixed { m: 10, e: 2.0 },
+            Box::new(FixedTuner::new(10, 2.0)),
         );
         let r = server.run().unwrap();
         assert_eq!(

@@ -2,11 +2,12 @@
 //! in-repo property-testing substrate (util::proptest).
 
 use fedtune::coordinator::selection::Selector;
+use fedtune::fedtune::tuner::TunerSpec;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ParamSpec, ParamVec};
 use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use fedtune::overhead::{CostModel, Costs, Preference};
-use fedtune::system::ClientSystemProfile;
+use fedtune::system::{ClientSystemProfile, SystemClass, SystemSpec};
 use fedtune::util::json::Json;
 use fedtune::util::proptest::{check, Gen};
 use fedtune::util::rng::Rng;
@@ -222,6 +223,78 @@ fn prop_adding_a_participant_never_decreases_any_overhead() {
             }
             if after.comp_t < before.comp_t || after.trans_t < before.trans_t {
                 return Err("max-based overhead decreased on a superset".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_every_spec_string_round_trips_to_the_same_policy() {
+    // Every parameter-carrying spec in the system — tuner policy,
+    // participant selector, client-system population — must satisfy
+    // parse(spec_string(spec)) == spec: the canonical string is the
+    // config/CLI/fingerprint identity, so a lossy round trip would
+    // alias or split cache records.
+    check(
+        "spec-roundtrip",
+        300,
+        |g: &mut Gen| {
+            let tuner = match g.usize(0, 3) {
+                0 => TunerSpec::Fixed,
+                1 => TunerSpec::FedTune,
+                2 => TunerSpec::Stepwise {
+                    decay: g.f64(0.01, 0.99),
+                    patience: g.usize(1, 50),
+                },
+                _ => TunerSpec::Population {
+                    k: g.usize(2, 12),
+                    interval: g.usize(1, 50),
+                },
+            };
+            let selector = match g.usize(0, 2) {
+                0 => Selector::UniformRandom,
+                1 => Selector::Guided { exploit: g.f64(0.0, 5.0) },
+                _ => Selector::Deadline { max_cost: g.f64(0.1, 1000.0) },
+            };
+            let system = match g.usize(0, 2) {
+                0 => SystemSpec::Homogeneous,
+                1 => SystemSpec::LogNormal { sigma: g.f64(0.0, 3.0) },
+                _ => {
+                    let names = ["fast", "slow", "edge"];
+                    let n = g.usize(1, 3);
+                    let per = 1.0 / n as f64;
+                    SystemSpec::Classes(
+                        (0..n)
+                            .map(|i| SystemClass {
+                                name: names[i].to_string(),
+                                factor: g.f64(0.05, 10.0),
+                                fraction: g.f64(0.0, per),
+                            })
+                            .collect(),
+                    )
+                }
+            };
+            (tuner, selector, system)
+        },
+        |(tuner, selector, system)| {
+            tuner.validate().map_err(|e| format!("generated invalid tuner: {e}"))?;
+            let t2 = TunerSpec::parse(&tuner.spec_string())
+                .map_err(|e| format!("tuner {:?}: {e}", tuner.spec_string()))?;
+            if t2 != *tuner {
+                return Err(format!("tuner drifted: {tuner:?} -> {t2:?}"));
+            }
+            selector.validate().map_err(|e| format!("generated invalid selector: {e}"))?;
+            let s2 = Selector::by_name(&selector.spec())
+                .ok_or_else(|| format!("selector spec rejected: {:?}", selector.spec()))?;
+            if s2 != *selector {
+                return Err(format!("selector drifted: {selector:?} -> {s2:?}"));
+            }
+            system.validate().map_err(|e| format!("generated invalid system: {e}"))?;
+            let y2 = SystemSpec::parse(&system.spec_string())
+                .map_err(|e| format!("system {:?}: {e}", system.spec_string()))?;
+            if y2 != *system {
+                return Err(format!("system drifted: {system:?} -> {y2:?}"));
             }
             Ok(())
         },

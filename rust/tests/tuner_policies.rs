@@ -1,0 +1,396 @@
+//! Acceptance: the pluggable tuner policy layer (ISSUE 5).
+//!
+//! The schedule layer was refactored from a closed two-variant enum
+//! (`Schedule::Fixed | Schedule::Tuned(Box<FedTune>)`) into the
+//! `fedtune::tuner::Tuner` trait with a parameter-carrying `TunerSpec`.
+//! These tests pin the contracts the refactor rests on:
+//!
+//! 1. `fixed` and `fedtune` runs through the trait are **bit-for-bit
+//!    identical** to the pre-refactor enum dispatch — witnessed against
+//!    a verbatim copy of the old `Schedule` enum driving a verbatim
+//!    copy of the old coordinator loop (the same discipline as
+//!    `tests/fractional_e.rs` and `tests/system_heterogeneity.rs`);
+//! 2. the two new policies (`stepwise:`, `population:`) run end-to-end
+//!    through `Grid`/`fedtune grid --tuner ...`, deterministically, and
+//!    are cache-keyed distinctly per parameterization;
+//! 3. the tuner spec joined the run identity (store schema v4): v3
+//!    records are clean misses that re-run and heal, and `fedtune
+//!    info`-style stats count them as stale;
+//! 4. `RunResult` exposes tuner activity generically (activations +
+//!    decisions via the trait) — no type-leaking downcast.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::engine::FlEngine;
+use fedtune::experiment::Grid;
+use fedtune::fedtune::tuner::TunerSpec;
+use fedtune::fedtune::{Decision, FedTune, FedTuneConfig};
+use fedtune::overhead::{Costs, Preference};
+use fedtune::store::{RunStore, RUN_SCHEMA};
+use fedtune::system::ClientSystemProfile;
+use fedtune::trace::{RoundRecord, Trace};
+use fedtune::util::rng::Rng;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fedtune_tuner_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+// ---------------------------------------------------------------------------
+// The pre-refactor schedule layer, verbatim
+// ---------------------------------------------------------------------------
+
+/// The old `Schedule` dispatch, verbatim (rust/src/fedtune/schedule.rs
+/// as of PR 4; the unused `is_tuned`/`fedtune` accessors are elided).
+/// This is the closed enum the `Tuner` trait replaced — kept here as
+/// the reference the trait-based pipeline is pinned against.
+#[derive(Debug, Clone)]
+enum Schedule {
+    Fixed { m: usize, e: f64 },
+    Tuned(Box<FedTune>),
+}
+
+impl Schedule {
+    fn current(&self) -> (usize, f64) {
+        match self {
+            Schedule::Fixed { m, e } => (*m, *e),
+            Schedule::Tuned(ft) => (ft.m(), ft.e()),
+        }
+    }
+
+    fn observe_round(
+        &mut self,
+        round: usize,
+        accuracy: f64,
+        cumulative: Costs,
+    ) -> Option<Decision> {
+        match self {
+            Schedule::Fixed { .. } => None,
+            Schedule::Tuned(ft) => ft.observe_round(round, accuracy, cumulative),
+        }
+    }
+}
+
+/// The pre-refactor coordinator loop, verbatim (`Server::run` as of
+/// PR 4, with the `Schedule` enum dispatch inlined): selector RNG
+/// stream `seed ^ 0xc00d`, per-participant (n_k, profile_k) cost rows,
+/// stop conditions and trace recording. What every `fixed`/`fedtune`
+/// run must still reproduce bit-for-bit through the `Tuner` trait.
+fn preschedule_mirror(
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> (usize, f64, Costs, usize, f64, Trace) {
+    let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
+    let cost_model = cfg.cost_model().unwrap();
+    let target = cfg.target().unwrap();
+    let num_clients = FlEngine::num_clients(&engine);
+    let mut schedule = match &cfg.preference {
+        None => Schedule::Fixed { m: cfg.m0, e: cfg.e0 },
+        Some(pref) => {
+            let ft_cfg = FedTuneConfig {
+                eps: cfg.eps,
+                penalty: cfg.penalty,
+                e_min: cfg.e_floor,
+                ..FedTuneConfig::paper_defaults(num_clients)
+            };
+            Schedule::Tuned(Box::new(
+                FedTune::new(*pref, ft_cfg, cfg.m0, cfg.e0).unwrap(),
+            ))
+        }
+    };
+    let mut rng = Rng::new(seed ^ 0xc00d);
+    let mut trace = Trace::new();
+    let mut cum = Costs::ZERO;
+    let mut accuracy = 0.0;
+    let mut round = 0;
+    loop {
+        if accuracy >= target {
+            break;
+        }
+        if round >= cfg.max_rounds {
+            break;
+        }
+        round += 1;
+        let (m, e) = schedule.current();
+        let participants = cfg.selector.select(
+            engine.client_sizes(),
+            engine.client_systems(),
+            m,
+            &mut rng,
+        );
+        let rows: Vec<(usize, ClientSystemProfile)> = participants
+            .iter()
+            .map(|&k| (engine.client_sizes()[k], engine.client_systems()[k]))
+            .collect();
+        let outcome = engine.run_round(&participants, e).unwrap();
+        accuracy = outcome.accuracy;
+        let delta = cost_model.round_costs(&rows, e);
+        cum.add(&delta);
+        let decision = schedule.observe_round(round, accuracy, cum);
+        trace.push(RoundRecord {
+            round,
+            m,
+            e,
+            accuracy,
+            train_loss: outcome.train_loss,
+            costs: cum,
+            fedtune_activated: decision.is_some(),
+        });
+    }
+    let (final_m, final_e) = schedule.current();
+    (round, accuracy, cum, final_m, final_e, trace)
+}
+
+/// Acceptance 1a: `fixed` through the trait replays the enum dispatch
+/// bit for bit — rounds, accuracy, all four overheads, the whole trace.
+#[test]
+fn fixed_runs_match_preschedule_dispatch_bitwise() {
+    for (e0, seed) in [(4.0, 5u64), (20.0, 1), (0.5, 7)] {
+        let mut cfg = base();
+        cfg.e0 = e0;
+        cfg.max_rounds = if e0 < 1.0 { 60_000 } else { 8000 };
+        assert_eq!(cfg.effective_tuner(), TunerSpec::Fixed);
+        let unified = baselines::run_sim(&cfg, seed).unwrap();
+        let (rounds, accuracy, costs, final_m, final_e, trace) =
+            preschedule_mirror(&cfg, seed);
+        assert_eq!(unified.rounds, rounds, "E0 = {e0}");
+        assert_eq!(unified.final_accuracy, accuracy);
+        assert_eq!(unified.costs, costs);
+        assert_eq!((unified.final_m, unified.final_e), (final_m, final_e));
+        assert_eq!(
+            unified.trace.to_json().dump(),
+            trace.to_json().dump(),
+            "fixed E0 = {e0} trace must equal the pre-refactor dispatch, bit for bit"
+        );
+    }
+}
+
+/// Acceptance 1b: `fedtune` through the trait replays the enum dispatch
+/// bit for bit, for several preferences — and the generic introspection
+/// agrees with the trace's activation flags.
+#[test]
+fn fedtune_runs_match_preschedule_dispatch_bitwise() {
+    let prefs = [
+        Preference::new(0.25, 0.25, 0.25, 0.25).unwrap(),
+        Preference::new(1.0, 0.0, 0.0, 0.0).unwrap(),
+        Preference::new(0.0, 0.5, 0.0, 0.5).unwrap(),
+    ];
+    for (i, pref) in prefs.iter().enumerate() {
+        let mut cfg = base();
+        cfg.max_rounds = 2000; // equivalence holds wherever the run stops
+        cfg.preference = Some(*pref);
+        assert_eq!(cfg.effective_tuner(), TunerSpec::FedTune);
+        let seed = 3 + i as u64;
+        let unified = baselines::run_sim(&cfg, seed).unwrap();
+        let (rounds, accuracy, costs, final_m, final_e, trace) =
+            preschedule_mirror(&cfg, seed);
+        assert_eq!(unified.rounds, rounds, "pref {}", pref.label());
+        assert_eq!(unified.final_accuracy, accuracy);
+        assert_eq!(unified.costs, costs);
+        assert_eq!((unified.final_m, unified.final_e), (final_m, final_e));
+        assert_eq!(
+            unified.trace.to_json().dump(),
+            trace.to_json().dump(),
+            "fedtune {} trace must equal the pre-refactor dispatch, bit for bit",
+            pref.label()
+        );
+        // Generic introspection: every decision round is flagged in the
+        // trace, and vice versa.
+        let flagged = trace.records().iter().filter(|r| r.fedtune_activated).count();
+        assert_eq!(unified.decisions.len(), flagged);
+        if unified.activations > 0 {
+            assert_eq!(unified.activations, unified.decisions.len() + 1);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The two new policies, end to end
+// ---------------------------------------------------------------------------
+
+/// The stepwise policy adapts on plateaus: run to the round cap and E
+/// must have decayed (M re-expanded) at least once, within bounds.
+#[test]
+fn stepwise_adapts_on_plateau_end_to_end() {
+    let mut cfg = base();
+    cfg.tuner = TunerSpec::parse("stepwise:0.5:3").unwrap();
+    cfg.target_accuracy = 0.99; // unreachable: run to the cap
+    cfg.max_rounds = 300;
+    let r = baselines::run_sim(&cfg, 9).unwrap();
+    assert_eq!(r.rounds, 300);
+    assert!(r.activations > 0, "300 capped rounds must plateau at least once");
+    assert!(!r.decisions.is_empty());
+    assert!(r.final_e < cfg.e0, "E must decay on plateaus: {}", r.final_e);
+    assert!(r.final_m >= cfg.m0, "M only re-expands: {}", r.final_m);
+    assert!(r.final_e >= cfg.e_floor);
+    // Decisions and trace agree on when the policy moved.
+    let flagged = r.trace.records().iter().filter(|x| x.fedtune_activated).count();
+    assert_eq!(r.decisions.len(), flagged);
+    // Every trace round runs the (M, E) the policy held at that point.
+    for w in r.trace.records().windows(2) {
+        assert!(w[1].e <= w[0].e, "stepwise E is non-increasing");
+        assert!(w[1].m >= w[0].m, "stepwise M is non-decreasing");
+    }
+}
+
+/// The population policy is seed-deterministic and never perturbs
+/// convergence: same config + seed ⇒ bitwise-identical run; different
+/// seed ⇒ a different member trajectory.
+#[test]
+fn population_runs_deterministically_end_to_end() {
+    let mut cfg = base();
+    cfg.tuner = TunerSpec::parse("population:3:5").unwrap();
+    cfg.preference = Some(Preference::new(0.25, 0.25, 0.25, 0.25).unwrap());
+    cfg.max_rounds = 400;
+    cfg.target_accuracy = 0.99;
+    let a = baselines::run_sim(&cfg, 11).unwrap();
+    let b = baselines::run_sim(&cfg, 11).unwrap();
+    assert_eq!(a.costs, b.costs);
+    assert_eq!(a.trace.to_json().dump(), b.trace.to_json().dump());
+    assert_eq!(a.activations, 400 / 5, "every 5-round slot is scored");
+    let c = baselines::run_sim(&cfg, 12).unwrap();
+    assert_ne!(
+        a.trace.to_json().dump(),
+        c.trace.to_json().dump(),
+        "the dedicated tuner stream must key on the seed"
+    );
+    for rec in a.trace.records() {
+        assert!(rec.m >= 1 && rec.e >= cfg.e_floor && rec.e <= 256.0);
+    }
+}
+
+/// Both new policies run through the grid with baseline comparison, and
+/// the artifact names each cell's policy spec.
+#[test]
+fn new_policies_run_through_the_grid_with_baselines() {
+    let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
+    let tuners = [
+        TunerSpec::FedTune,
+        TunerSpec::parse("stepwise:0.5:5").unwrap(),
+        TunerSpec::parse("population:3:5").unwrap(),
+    ];
+    let mut cfg = base();
+    cfg.max_rounds = 1500;
+    let r = Grid::new(cfg)
+        .preferences(&[pref])
+        .tuners(&tuners)
+        .seeds(&[1])
+        .compare_baseline(true)
+        .run()
+        .unwrap();
+    assert_eq!(r.cells.len(), 3);
+    // 3 tuned runs + 1 shared fixed baseline.
+    assert_eq!(r.executed_runs, 4, "the baseline leg is shared across policies");
+    for c in &r.cells {
+        assert!(c.improvement.is_some(), "every policy gets an Eq. 6 column");
+        assert!(c.baseline_costs.is_some());
+    }
+    let dump = r.to_json().dump();
+    assert!(dump.contains("\"tuner\":\"fedtune\""), "{dump:.300}");
+    assert!(dump.contains("\"tuner\":\"stepwise:0.5:5\""));
+    assert!(dump.contains("\"tuner\":\"population:3:5\""));
+}
+
+// ---------------------------------------------------------------------------
+// Store identity (schema v4)
+// ---------------------------------------------------------------------------
+
+/// Tuner parameterizations key their own cache records: a sweep with a
+/// different spec never hits the other's runs, while re-running the
+/// same spec is a pure cache hit.
+#[test]
+fn tuner_axis_cache_keys_distinctly_per_parameterization() {
+    let dir = tmp_dir("keys");
+    let make = |spec: &str| {
+        let mut cfg = base();
+        cfg.max_rounds = 300;
+        cfg.tuner = TunerSpec::parse(spec).unwrap();
+        cfg.target_accuracy = 0.99;
+        Grid::new(cfg).seeds(&[7]).cache_dir(dir.clone())
+    };
+    let a = make("stepwise:0.5:5").run().unwrap();
+    assert_eq!((a.executed_runs, a.cache_hits), (1, 0));
+    let b = make("stepwise:0.6:5").run().unwrap();
+    assert_eq!(
+        (b.executed_runs, b.cache_hits),
+        (1, 0),
+        "a different decay must be a different record — no spec aliasing"
+    );
+    let warm = make("stepwise:0.5:5").run().unwrap();
+    assert_eq!((warm.executed_runs, warm.cache_hits), (0, 1));
+    assert_eq!(warm.to_json().pretty(), a.to_json().pretty());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Schema bump: v3 cache records (pre-tuner identities) are clean
+/// misses under the v4 store — they re-run, heal, and change no bytes;
+/// `fedtune info`'s stats count them as stale meanwhile.
+#[test]
+fn v3_cache_records_are_misses_under_v4() {
+    let dir = tmp_dir("v3miss");
+    let make = || {
+        let mut cfg = base();
+        cfg.max_rounds = 300;
+        Grid::new(cfg).m0s(&[5, 20]).seeds(&[3]).cache_dir(dir.clone())
+    };
+    let cold = make().run().unwrap();
+    assert_eq!(cold.executed_runs, 2);
+
+    // Downgrade every record to the v3 schema tag, as if written by the
+    // pre-tuner binary.
+    let runs_dir = dir.join("runs");
+    let files: Vec<PathBuf> =
+        fs::read_dir(&runs_dir).unwrap().map(|e| e.unwrap().path()).collect();
+    assert_eq!(files.len(), 2);
+    for f in &files {
+        let text = fs::read_to_string(f).unwrap();
+        fs::write(f, text.replace(RUN_SCHEMA, "fedtune.store.run/v3")).unwrap();
+    }
+    let stats = RunStore::stats(&dir).unwrap();
+    assert_eq!(stats.stale_runs, 2, "v3 records must report as stale");
+
+    let rerun = make().run().unwrap();
+    assert_eq!(rerun.executed_runs, 2, "v3 records must all miss");
+    assert_eq!(rerun.cache_hits, 0);
+    assert_eq!(rerun.to_json().pretty(), cold.to_json().pretty());
+
+    // The re-run healed the cache back to v4: now everything hits.
+    let healed = make().run().unwrap();
+    assert_eq!(healed.executed_runs, 0);
+    assert_eq!(RunStore::stats(&dir).unwrap().stale_runs, 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Generic introspection on `RunResult`: the fixed baseline reports
+/// zero activity; tuned runs report their decision trail — all through
+/// the trait, no downcasting anywhere.
+#[test]
+fn run_result_exposes_generic_tuner_introspection() {
+    let cfg = base();
+    let fixed = baselines::run_sim(&cfg, 2).unwrap();
+    assert_eq!(fixed.activations, 0);
+    assert!(fixed.decisions.is_empty());
+
+    let mut tuned_cfg = base();
+    tuned_cfg.preference = Some(Preference::new(0.0, 0.0, 1.0, 0.0).unwrap());
+    tuned_cfg.max_rounds = 2000;
+    let tuned = baselines::run_sim(&tuned_cfg, 2).unwrap();
+    assert!(tuned.activations > 0);
+    if let Some(last) = tuned.decisions.last() {
+        assert_eq!((last.m, last.e), (tuned.final_m, tuned.final_e));
+    }
+    // Decision rounds are sorted and within the run.
+    for w in tuned.decisions.windows(2) {
+        assert!(w[0].round < w[1].round);
+    }
+    assert!(tuned.decisions.iter().all(|d| d.round <= tuned.rounds));
+}
