@@ -20,7 +20,7 @@ use crate::fedtune::Decision;
 use crate::overhead::{CostModel, Costs};
 use crate::system::ClientSystemProfile;
 use crate::trace::{RoundRecord, Trace};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, streams};
 
 use selection::Selector;
 
@@ -71,7 +71,9 @@ pub struct Server<'e, E: FlEngine> {
 
 impl<'e, E: FlEngine> Server<'e, E> {
     pub fn new(engine: &'e mut E, cfg: ServerConfig, tuner: Box<dyn Tuner>) -> Server<'e, E> {
-        let rng = Rng::new(cfg.seed ^ 0xc00d);
+        // Dedicated coordinator stream (see `util::rng::streams`):
+        // selection draws never touch the engine's untagged stream.
+        let rng = Rng::new(cfg.seed ^ streams::COORDINATOR);
         Server { engine, cfg, tuner, rng }
     }
 

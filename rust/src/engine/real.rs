@@ -17,7 +17,7 @@ use crate::data::FederatedDataset;
 use crate::model::ParamVec;
 use crate::runtime::Runtime;
 use crate::system::{ClientSystemProfile, SystemSpec};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, streams};
 
 use super::{FlEngine, RoundOutcome};
 
@@ -71,7 +71,9 @@ impl RealEngine {
             meta.classes,
             dataset.profile.classes
         );
-        let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+        // Dedicated real-engine stream (see `util::rng::streams`) for
+        // He init and batch order.
+        let mut rng = Rng::new(cfg.seed ^ streams::REAL_ENGINE);
         let global = ParamVec::init_he(&meta.params, &mut rng);
         let aggregator = Aggregator::new(cfg.aggregator);
         let systems = cfg.system.profiles(dataset.clients.len(), cfg.seed);

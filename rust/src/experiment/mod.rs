@@ -391,12 +391,16 @@ impl Grid {
     /// `FEDTUNE_RESUME` environment variables — how the examples and
     /// bench binaries opt into caching without new CLI plumbing.
     pub fn cache_from_env(mut self) -> Grid {
+        // lint: allow(nondeterminism-ban) -- harness opt-in: cache
+        // location only, never run semantics (identity is fingerprinted).
         if let Ok(d) = std::env::var("FEDTUNE_CACHE_DIR") {
             if !d.is_empty() {
                 self.cache_dir = Some(PathBuf::from(d));
             }
         }
         let truthy = |k: &str| {
+            // lint: allow(nondeterminism-ban) -- same harness opt-in
+            // (FEDTUNE_NO_CACHE / FEDTUNE_RESUME toggles).
             std::env::var(k)
                 .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
                 .unwrap_or(false)

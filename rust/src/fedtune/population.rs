@@ -23,16 +23,15 @@
 //!
 //! All randomness — initial member spread, winner choice, perturbation —
 //! draws from the dedicated tuner stream
-//! (`seed ^` [`TUNER_STREAM_TAG`]), so a population run consumes
+//! (`seed ^` [`streams::TUNER`]), so a population run consumes
 //! **zero** draws from the engine or coordinator streams: convergence
-//! and selection RNG are bit-for-bit unperturbed by the policy.
-//!
-//! [`TUNER_STREAM_TAG`]: super::tuner::TUNER_STREAM_TAG
+//! and selection RNG are bit-for-bit unperturbed by the policy. See
+//! [`crate::util::rng::streams`] for the full stream registry.
 
 use crate::overhead::{Costs, Preference};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, streams};
 
-use super::tuner::{Tuner, TunerInit, TunerSpec, TUNER_STREAM_TAG};
+use super::tuner::{Tuner, TunerInit, TunerSpec};
 use super::Decision;
 
 /// E cap shared with FedTune's paper defaults.
@@ -89,9 +88,9 @@ impl PopulationTuner {
                 init.e0, init.e_floor
             ));
         }
-        // Dedicated stream: the population's sampling never touches the
-        // engine (`seed`) or coordinator (`seed ^ 0xc00d`) streams.
-        let mut rng = Rng::new(init.seed ^ TUNER_STREAM_TAG);
+        // Dedicated stream (see `util::rng::streams`): the population's
+        // sampling never touches the engine or coordinator streams.
+        let mut rng = Rng::new(init.seed ^ streams::TUNER);
         // Member 0 is the configured (M₀, E₀) verbatim; the rest spread
         // around it by log-uniform factors in [1/2, 2] per axis.
         let mut members = vec![Member { m: init.m0, e: init.e0 }];

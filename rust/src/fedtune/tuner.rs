@@ -61,14 +61,6 @@ use super::population::PopulationTuner;
 use super::stepwise::StepwiseTuner;
 use super::{Decision, FedTune, FedTuneConfig};
 
-/// Stream tag for tuner-internal randomness: policies that sample
-/// (population resampling/perturbation) draw from
-/// `Rng::new(seed ^ TUNER_STREAM_TAG)` — a stream disjoint from the
-/// engine (`seed`), coordinator (`seed ^ 0xc00d`) and system
-/// (`seed ^ 0x5e57e`) streams, so a stochastic tuner never perturbs
-/// convergence or selection randomness.
-pub const TUNER_STREAM_TAG: u64 = 0x7a9e5;
-
 /// A hyper-parameter tuning policy: what sets (M, E) each round.
 ///
 /// The coordinator calls [`Tuner::current`] before every round and
@@ -158,7 +150,8 @@ pub struct TunerInit {
     /// Upper bound for M.
     pub num_clients: usize,
     /// Run seed; stochastic policies derive their own stream from it
-    /// via [`TUNER_STREAM_TAG`].
+    /// via [`crate::util::rng::streams::TUNER`] — see
+    /// [`crate::util::rng::streams`] for the full stream registry.
     pub seed: u64,
 }
 

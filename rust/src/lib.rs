@@ -26,6 +26,23 @@
 //! stable JSON artifact per sweep; [`store`] content-addresses every run
 //! so sweeps dedupe shared work, cache across processes, and resume after
 //! interruption.
+//!
+//! Determinism is load-bearing here (the run store caches by config
+//! fingerprint — see DESIGN.md §14): the crate is `forbid(unsafe_code)`
+//! except for the two PJRT literal-marshalling views (`pjrt` feature,
+//! where it relaxes to `deny` + per-function allows), and `cargo xtask
+//! lint` statically enforces the RNG-stream registry, nondeterminism
+//! bans, and fingerprint/schema coherence.
+
+#![cfg_attr(not(feature = "pjrt"), forbid(unsafe_code))]
+#![cfg_attr(feature = "pjrt", deny(unsafe_code))]
+
+/// Version tag of the determinism/cache-identity lint pass this tree is
+/// validated against (`cargo xtask lint`). Printed by `fedtune info`
+/// next to the store schema tags so cache-debugging output records
+/// which invariant checker vetted the build. Rule `schema-tag-drift`
+/// cross-checks this against the xtask binary's own version.
+pub const LINT_TOOL: &str = "fedtune-lint/v1";
 
 pub mod util;
 

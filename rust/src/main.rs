@@ -413,15 +413,18 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
         }
         Err(_) => println!("\n(no artifacts at {dir}; run `make artifacts`)"),
     }
+    println!("\n== invariant checkers ==");
+    println!("  {}  (cargo xtask lint; see DESIGN.md §14)", fedtune::LINT_TOOL);
     let cache_dir = cli.get_str("cache-dir");
     if !cache_dir.is_empty() {
         match RunStore::stats(std::path::Path::new(&cache_dir)) {
             Ok(s) => {
                 println!("\n== run cache ({cache_dir}) ==");
                 println!(
-                    "  schema: {} / {}",
+                    "  schema: {} / {}  (lint: {})",
                     fedtune::store::RUN_SCHEMA,
-                    fedtune::store::JOURNAL_SCHEMA
+                    fedtune::store::JOURNAL_SCHEMA,
+                    fedtune::LINT_TOOL
                 );
                 println!("  {:>6} run records   {:>12} bytes", s.run_entries, s.run_bytes);
                 println!(

@@ -3,6 +3,9 @@
 use anyhow::{anyhow, bail, Result};
 
 /// f32 tensor literal from a flat slice (row-major).
+// Byte view of an f32 slice for PJRT upload: same allocation, length
+// scaled by 4 — safe because f32 has no invalid bit patterns as u8.
+#[allow(unsafe_code)]
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let elems: usize = shape.iter().product();
     if elems != data.len() {
@@ -20,6 +23,8 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
 }
 
 /// i32 tensor literal from a flat slice.
+// Same byte-view pattern as `lit_f32`, for i32.
+#[allow(unsafe_code)]
 pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
     let elems: usize = shape.iter().product();
     if elems != data.len() {

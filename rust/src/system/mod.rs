@@ -40,13 +40,7 @@
 //! Example: `classes:fast:0.5@0.3,slow:4.0@0.2` — 30% of clients run at
 //! half cost, 20% at 4× (stragglers), the remaining 50% at the baseline.
 
-use crate::util::rng::Rng;
-
-/// Stream tag for profile derivation: profiles come from
-/// `Rng::new(seed ^ SYSTEM_STREAM_TAG)`, a stream disjoint from the
-/// engine (`seed`) and coordinator (`seed ^ 0xc00d`) streams, so adding
-/// heterogeneity never perturbs convergence or selection randomness.
-const SYSTEM_STREAM_TAG: u64 = 0x5e57e;
+use crate::util::rng::{Rng, streams};
 
 /// One client's system rates relative to the paper's homogeneous client.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -210,14 +204,15 @@ impl SystemSpec {
     }
 
     /// Derive the population's profiles: `k` clients, deterministic in
-    /// (spec, seed). Uses its own RNG stream (`seed ^ SYSTEM_STREAM_TAG`)
-    /// so existing engine/selector streams are bit-for-bit unperturbed
-    /// by the system layer.
+    /// (spec, seed). Uses its own RNG stream
+    /// (`seed ^` [`streams::SYSTEM`] — see [`crate::util::rng::streams`]
+    /// for the full registry) so existing engine/selector streams are
+    /// bit-for-bit unperturbed by the system layer.
     pub fn profiles(&self, k: usize, seed: u64) -> Vec<ClientSystemProfile> {
         match self {
             SystemSpec::Homogeneous => vec![ClientSystemProfile::BASELINE; k],
             SystemSpec::LogNormal { sigma } => {
-                let mut rng = Rng::new(seed ^ SYSTEM_STREAM_TAG);
+                let mut rng = Rng::new(seed ^ streams::SYSTEM);
                 (0..k)
                     .map(|_| ClientSystemProfile {
                         compute_factor: (sigma * rng.gauss()).exp(),
@@ -226,7 +221,7 @@ impl SystemSpec {
                     .collect()
             }
             SystemSpec::Classes(classes) => {
-                let mut rng = Rng::new(seed ^ SYSTEM_STREAM_TAG);
+                let mut rng = Rng::new(seed ^ streams::SYSTEM);
                 (0..k)
                     .map(|_| {
                         let u = rng.f64();

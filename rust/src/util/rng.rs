@@ -8,7 +8,47 @@
 //!
 //! Everything is reproducible from a single `u64` seed; all experiment
 //! drivers thread seeds explicitly so that every table/figure bench is
-//! deterministic.
+//! deterministic. Subsystems that need their *own* randomness derive it
+//! from the run seed via a named tag in [`streams`] — the one registry
+//! of every derived stream in the crate.
+
+/// The RNG stream registry: every XOR tag that derives a subsystem
+/// stream from the run seed, in one place.
+///
+/// A run's seed feeds several independent generators. Keeping them on
+/// disjoint streams is a load-bearing determinism invariant: it is what
+/// lets a stochastic tuner consume randomness without perturbing
+/// convergence, or a heterogeneity spec reshape the client population
+/// without moving participant selection by a single draw. The full map:
+///
+/// | stream      | derivation                                | consumer |
+/// |-------------|-------------------------------------------|----------|
+/// | engine      | `Rng::new(seed)` (untagged)               | sim-engine convergence noise; dataset synthesis |
+/// | coordinator | `Rng::new(seed ^ COORDINATOR)`            | participant selection ([`crate::coordinator::Server`]) |
+/// | real engine | `Rng::new(seed ^ REAL_ENGINE)`            | He init + batch order ([`crate::engine::real::RealEngine`]) |
+/// | system      | `Rng::new(seed ^ SYSTEM)`                 | per-client profiles ([`crate::system::SystemSpec::profiles`]) |
+/// | tuner       | `Rng::new(seed ^ TUNER)`                  | stochastic tuner policies ([`crate::fedtune::population::PopulationTuner`]) |
+/// | proptest    | `Rng::new(seed ^ case·PROPTEST_MIX)`      | per-case property-test streams ([`crate::util::proptest`]) |
+///
+/// Rules (enforced by `cargo xtask lint`, rule `rng-stream-registry`):
+/// every `seed ^ tag` derivation must name a constant from this module;
+/// raw hex tags at use sites and duplicate tag values here are both
+/// lint errors. To add a stream: register a fresh constant below (pick
+/// a value no other constant uses), document its consumer in the table
+/// above, and derive with `Rng::new(seed ^ streams::<NAME>)`.
+pub mod streams {
+    /// Coordinator stream: participant selection draws.
+    pub const COORDINATOR: u64 = 0xc00d;
+    /// Real-engine stream: parameter init and client batch order.
+    pub const REAL_ENGINE: u64 = 0x5eed;
+    /// System stream: per-client heterogeneity profile derivation.
+    pub const SYSTEM: u64 = 0x5e57e;
+    /// Tuner stream: stochastic tuner-policy sampling.
+    pub const TUNER: u64 = 0x7a9e5;
+    /// Property-test per-case mixer: case index times this odd constant
+    /// (the SplitMix64 increment) spreads cases over distinct streams.
+    pub const PROPTEST_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+}
 
 /// PCG64 XSL-RR generator.
 #[derive(Debug, Clone)]

@@ -27,7 +27,7 @@ use fedtune::overhead::{CostModel, Costs, Preference};
 use fedtune::store::RUN_SCHEMA;
 use fedtune::system::ClientSystemProfile;
 use fedtune::trace::{RoundRecord, Trace};
-use fedtune::util::rng::Rng;
+use fedtune::util::rng::{Rng, streams};
 
 /// The pre-heterogeneity `CostModel::round_costs`, verbatim (homogeneous
 /// Eqs. 2–5): the mirror must stay pinned to the *old* cost equations so
@@ -47,7 +47,7 @@ fn legacy_round_costs(cm: &CostModel, sizes: &[usize], e: f64) -> Costs {
 
 /// The experiment runner's old fixed-fractional loop, verbatim: the
 /// hand-kept mirror of `coordinator::Server::run` for fixed schedules
-/// (same selector RNG stream `seed ^ 0xc00d`, stop conditions and cost
+/// (same selector RNG stream `seed ^ streams::COORDINATOR`, stop conditions and cost
 /// accounting — via the pinned [`legacy_round_costs`]). It survives only
 /// in pins like this one, as the reference the unified coordinator path
 /// is checked against. (`tests/system_heterogeneity.rs` and
@@ -62,7 +62,7 @@ fn legacy_fixed_mirror(
 ) -> (usize, f64, Costs, Trace) {
     let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
     let target = cfg.target().unwrap();
-    let mut rng = Rng::new(seed ^ 0xc00d); // same stream as coordinator::Server
+    let mut rng = Rng::new(seed ^ streams::COORDINATOR); // same stream as coordinator::Server
     let systems = vec![ClientSystemProfile::BASELINE; engine.client_sizes().len()];
     let mut trace = Trace::new();
     let mut cum = Costs::ZERO;

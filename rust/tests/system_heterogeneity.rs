@@ -26,7 +26,7 @@ use fedtune::overhead::{CostModel, Costs};
 use fedtune::store::{run_fingerprint, RunStore, RUN_SCHEMA};
 use fedtune::system::{ClientSystemProfile, SystemSpec};
 use fedtune::trace::{RoundRecord, Trace};
-use fedtune::util::rng::Rng;
+use fedtune::util::rng::{Rng, streams};
 
 fn base() -> ExperimentConfig {
     ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
@@ -53,7 +53,7 @@ fn legacy_round_costs(cm: &CostModel, sizes: &[usize], e: f64) -> Costs {
 }
 
 /// The pre-refactor fixed-schedule round loop, verbatim (selector RNG
-/// stream `seed ^ 0xc00d`, stop conditions, homogeneous cost
+/// stream `seed ^ streams::COORDINATOR`, stop conditions, homogeneous cost
 /// accounting): what every `SystemSpec::Homogeneous` run must still
 /// reproduce bit-for-bit through the refactored pipeline.
 fn prerefactor_fixed_mirror(
@@ -63,7 +63,7 @@ fn prerefactor_fixed_mirror(
     let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
     let cost_model = cfg.cost_model().unwrap();
     let target = cfg.target().unwrap();
-    let mut rng = Rng::new(seed ^ 0xc00d);
+    let mut rng = Rng::new(seed ^ streams::COORDINATOR);
     let systems = vec![ClientSystemProfile::BASELINE; engine.client_sizes().len()];
     let mut trace = Trace::new();
     let mut cum = Costs::ZERO;

@@ -32,7 +32,7 @@ use fedtune::overhead::{Costs, Preference};
 use fedtune::store::{RunStore, RUN_SCHEMA};
 use fedtune::system::ClientSystemProfile;
 use fedtune::trace::{RoundRecord, Trace};
-use fedtune::util::rng::Rng;
+use fedtune::util::rng::{Rng, streams};
 
 fn base() -> ExperimentConfig {
     ExperimentConfig { max_rounds: 8000, ..ExperimentConfig::default() }
@@ -82,7 +82,7 @@ impl Schedule {
 
 /// The pre-refactor coordinator loop, verbatim (`Server::run` as of
 /// PR 4, with the `Schedule` enum dispatch inlined): selector RNG
-/// stream `seed ^ 0xc00d`, per-participant (n_k, profile_k) cost rows,
+/// stream `seed ^ streams::COORDINATOR`, per-participant (n_k, profile_k) cost rows,
 /// stop conditions and trace recording. What every `fixed`/`fedtune`
 /// run must still reproduce bit-for-bit through the `Tuner` trait.
 fn preschedule_mirror(
@@ -107,7 +107,7 @@ fn preschedule_mirror(
             ))
         }
     };
-    let mut rng = Rng::new(seed ^ 0xc00d);
+    let mut rng = Rng::new(seed ^ streams::COORDINATOR);
     let mut trace = Trace::new();
     let mut cum = Costs::ZERO;
     let mut accuracy = 0.0;

@@ -1,0 +1,339 @@
+//! A small Rust lexer — just enough token structure for the lint rules.
+//!
+//! This is deliberately not a parser: the determinism rules only need
+//! identifiers, numeric/string literals and punctuation with line
+//! numbers, plus two comment-level artifacts (`lint: allow(...)`
+//! directives and the *absence* of comment text from the token stream).
+//! Handled Rust surface: line and nested block comments, string
+//! literals with escapes including the `\<newline>` continuation (used
+//! by the `SPEC_HELP` constants), raw strings up to `r###"…"###`, byte
+//! strings, char literals vs. lifetimes, hex/float numeric literals,
+//! and `#[cfg(test)]`-gated items (stripped before rules run — test
+//! code may legitimately use wall clocks and stale schema literals).
+
+/// Token class. Comments never become tokens; lifetimes are dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    /// Ident/Punct: the source text. Num: the literal text (e.g.
+    /// `0x5e57e`). Str: the *content* with escapes resolved loosely and
+    /// `\<newline>` continuations joined (what substring checks need).
+    pub text: String,
+    pub line: usize,
+}
+
+/// One well-formed `// lint: allow(<rule>) -- <reason>` directive.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub line: usize,
+}
+
+/// Lex output for one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+    /// Malformed allow directives: (line, what's wrong). These are lint
+    /// violations themselves — a typo'd escape hatch must not silently
+    /// suppress nothing.
+    pub bad_allows: Vec<(usize, String)>,
+}
+
+pub fn lex(source: &str) -> Lexed {
+    let b: Vec<char> = source.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && b[j] != '\n' {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            harvest_allow(&text, line, &mut out);
+            i = j;
+        } else if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && b.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && b.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+        } else if c == '"' {
+            let tok_line = line;
+            let (content, ni, nl) = lex_string(&b, i + 1, line);
+            out.tokens.push(Token { kind: Kind::Str, text: content, line: tok_line });
+            i = ni;
+            line = nl;
+        } else if c == 'b' && b.get(i + 1) == Some(&'"') {
+            let tok_line = line;
+            let (content, ni, nl) = lex_string(&b, i + 2, line);
+            out.tokens.push(Token { kind: Kind::Str, text: content, line: tok_line });
+            i = ni;
+            line = nl;
+        } else if c == 'r' && raw_string_hashes(&b, i + 1).is_some() {
+            let hashes = raw_string_hashes(&b, i + 1).unwrap();
+            let tok_line = line;
+            let mut j = i + 1 + hashes + 1; // past r, hashes, opening quote
+            let mut content = String::new();
+            while j < b.len() {
+                if b[j] == '"' && closes_raw(&b, j + 1, hashes) {
+                    j += 1 + hashes;
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                content.push(b[j]);
+                j += 1;
+            }
+            out.tokens.push(Token { kind: Kind::Str, text: content, line: tok_line });
+            i = j;
+        } else if c == '\'' {
+            // Char literal ('x', '\n', ':') vs. lifetime ('a, '_).
+            if b.get(i + 1) == Some(&'\\') {
+                let mut j = i + 2;
+                while j < b.len() && b[j] != '\'' {
+                    j += 1;
+                }
+                i = j + 1;
+            } else if b.get(i + 2) == Some(&'\'') {
+                if b.get(i + 1) == Some(&'\n') {
+                    line += 1;
+                }
+                i += 3;
+            } else {
+                let mut j = i + 1;
+                while j < b.len() && (b[j] == '_' || b[j].is_alphanumeric()) {
+                    j += 1;
+                }
+                i = j;
+            }
+        } else if c.is_ascii_digit() {
+            let mut text = String::new();
+            let mut j = i;
+            while j < b.len() {
+                let ch = b[j];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    text.push(ch);
+                    j += 1;
+                } else if ch == '.'
+                    && b.get(j + 1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+                {
+                    text.push('.');
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { kind: Kind::Num, text, line });
+            i = j;
+        } else if c == '_' || c.is_alphabetic() {
+            let mut text = String::new();
+            let mut j = i;
+            while j < b.len() && (b[j] == '_' || b[j].is_alphanumeric()) {
+                text.push(b[j]);
+                j += 1;
+            }
+            out.tokens.push(Token { kind: Kind::Ident, text, line });
+            i = j;
+        } else {
+            out.tokens.push(Token { kind: Kind::Punct, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `r`, `r#`, `r##`… followed by `"` → Some(number of hashes).
+fn raw_string_hashes(b: &[char], mut j: usize) -> Option<usize> {
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn closes_raw(b: &[char], j: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| b.get(j + k) == Some(&'#'))
+}
+
+/// Cooked string body starting just after the opening quote. Returns
+/// (content, index-after-closing-quote, line). Escapes are resolved
+/// loosely — exact unescaping does not matter for substring checks, but
+/// the `\<newline>` continuation must join lines the way rustc does
+/// (skip the newline and the next line's leading whitespace).
+fn lex_string(b: &[char], mut i: usize, mut line: usize) -> (String, usize, usize) {
+    let mut s = String::new();
+    while i < b.len() {
+        match b[i] {
+            '"' => return (s, i + 1, line),
+            '\\' => match b.get(i + 1) {
+                Some('\n') => {
+                    line += 1;
+                    i += 2;
+                    while i < b.len() && (b[i] == ' ' || b[i] == '\t' || b[i] == '\r') {
+                        i += 1;
+                    }
+                }
+                Some('n') => {
+                    s.push('\n');
+                    i += 2;
+                }
+                Some('t') => {
+                    s.push('\t');
+                    i += 2;
+                }
+                Some(&other) => {
+                    s.push(other);
+                    i += 2;
+                }
+                None => {
+                    i += 1;
+                }
+            },
+            '\n' => {
+                s.push('\n');
+                line += 1;
+                i += 1;
+            }
+            c => {
+                s.push(c);
+                i += 1;
+            }
+        }
+    }
+    (s, i, line)
+}
+
+const DIRECTIVE: &str = "lint: allow(";
+
+fn harvest_allow(comment: &str, line: usize, out: &mut Lexed) {
+    let Some(pos) = comment.find(DIRECTIVE) else { return };
+    let rest = &comment[pos + DIRECTIVE.len()..];
+    let Some(close) = rest.find(')') else {
+        out.bad_allows
+            .push((line, "unclosed `lint: allow(` directive".to_string()));
+        return;
+    };
+    let rule = rest[..close].trim().to_string();
+    let reason = rest[close + 1..]
+        .trim_start()
+        .strip_prefix("--")
+        .map(str::trim)
+        .unwrap_or("");
+    if rule.is_empty() {
+        out.bad_allows
+            .push((line, "`lint: allow()` needs a rule name".to_string()));
+    } else if reason.is_empty() {
+        out.bad_allows.push((
+            line,
+            format!("`lint: allow({rule})` needs a ` -- <reason>` justification"),
+        ));
+    } else {
+        out.allows.push(Allow { rule, line });
+    }
+}
+
+/// Drop every `#[cfg(test)]`-gated item from the token stream: the
+/// attribute, any stacked attributes after it, and the item through its
+/// closing `}` (mod/fn/impl/struct) or `;` (use/const). Test code may
+/// use wall clocks, env vars, and deliberately stale schema literals.
+pub fn strip_test_items(tokens: Vec<Token>) -> Vec<Token> {
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut i = 0;
+    while i < tokens.len() {
+        if is_cfg_test_attr(&tokens, i) {
+            let mut j = skip_attr(&tokens, i);
+            while j < tokens.len()
+                && tokens[j].text == "#"
+                && tokens.get(j + 1).map(|t| t.text == "[").unwrap_or(false)
+            {
+                j = skip_attr(&tokens, j);
+            }
+            // Skip the gated item: through the first top-level `{`'s
+            // matching brace, or through a `;` if one comes first.
+            while j < tokens.len() && tokens[j].text != "{" && tokens[j].text != ";" {
+                j += 1;
+            }
+            if j < tokens.len() && tokens[j].text == "{" {
+                j = match_delim(&tokens, j, "{", "}");
+            } else if j < tokens.len() {
+                j += 1; // the `;`
+            }
+            i = j;
+        } else {
+            out.push(tokens[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_cfg_test_attr(t: &[Token], i: usize) -> bool {
+    t.get(i).map(|x| x.text == "#").unwrap_or(false)
+        && t.get(i + 1).map(|x| x.text == "[").unwrap_or(false)
+        && t.get(i + 2).map(|x| x.text == "cfg").unwrap_or(false)
+        && t.get(i + 3).map(|x| x.text == "(").unwrap_or(false)
+        && t.get(i + 4).map(|x| x.text == "test").unwrap_or(false)
+        && t.get(i + 5).map(|x| x.text == ")").unwrap_or(false)
+        && t.get(i + 6).map(|x| x.text == "]").unwrap_or(false)
+}
+
+/// Index just past an attribute: `i` points at `#`, `i + 1` at `[`.
+fn skip_attr(t: &[Token], i: usize) -> usize {
+    match_delim(t, i + 1, "[", "]")
+}
+
+/// Index just past the delimiter that matches the opener at `open_at`.
+pub fn match_delim(t: &[Token], open_at: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut j = open_at;
+    while j < t.len() {
+        if t[j].kind == Kind::Punct {
+            if t[j].text == open {
+                depth += 1;
+            } else if t[j].text == close {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    t.len()
+}

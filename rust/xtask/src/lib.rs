@@ -1,0 +1,1020 @@
+//! fedtune-lint: the determinism & cache-identity static-analysis pass
+//! behind `cargo xtask lint` (DESIGN.md §14).
+//!
+//! Every invariant here used to live in comments and convention; this
+//! crate makes them hard errors over the token stream of `rust/src/`:
+//!
+//! * **rng-stream-registry** — every RNG stream derivation names a
+//!   constant from `util::rng::streams`; raw hex tags and duplicate or
+//!   unregistered constants are errors.
+//! * **nondeterminism-ban** — no wall clocks, no iteration over
+//!   default-hasher maps/sets, no environment reads in core modules.
+//! * **fingerprint-completeness** — every `ExperimentConfig` field (and
+//!   every `TunerSpec`/`Selector`/`SystemSpec` payload field) is either
+//!   named in `store/fingerprint.rs` or carries a reasoned entry in
+//!   `fingerprint_allowlist.txt`.
+//! * **spec-help-sync** — each `SPEC_HELP` grammar string mentions every
+//!   parse arm's leading token in the adjacent parser.
+//! * **schema-tag-drift** — every `fedtune.store.*/vN` and
+//!   `fedtune.sweep/vN` tag agrees with `FINGERPRINT_VERSION`, and
+//!   `fedtune-lint/vN` tags agree with [`LINT_VERSION`].
+//!
+//! Escape hatch: `// lint: allow(<rule>) -- <reason>` on (or directly
+//! above) the offending line. A directive without a reason is itself a
+//! violation. Test code (`#[cfg(test)]` items) is exempt wholesale.
+//!
+//! Rules whose anchor files are missing skip silently — that is what
+//! lets the fixture trees under `tests/fixtures/` stay three files
+//! small while the real tree exercises everything.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::Path;
+
+pub mod lexer;
+
+use lexer::{Kind, Token};
+
+/// Version tag of this lint pass. Must agree with the `LINT_TOOL`
+/// constant in the fedtune crate — rule `schema-tag-drift` checks that.
+pub const LINT_VERSION: &str = "fedtune-lint/v1";
+
+pub const R_STREAMS: &str = "rng-stream-registry";
+pub const R_NONDET: &str = "nondeterminism-ban";
+pub const R_FINGERPRINT: &str = "fingerprint-completeness";
+pub const R_SPEC_HELP: &str = "spec-help-sync";
+pub const R_SCHEMA: &str = "schema-tag-drift";
+/// Malformed `lint: allow(...)` directives; never suppressible.
+pub const R_ALLOW: &str = "allow-syntax";
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the scanned source root (or the allowlist file
+    /// name for stale-allowlist findings).
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+#[derive(Debug)]
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+struct SrcFile {
+    rel: String,
+    tokens: Vec<Token>,
+    allows: Vec<lexer::Allow>,
+    bad_allows: Vec<(usize, String)>,
+    /// Lines that carry at least one (non-test) token — the anchor set
+    /// for own-line-or-next-code-line allow targeting.
+    code_lines: BTreeSet<usize>,
+}
+
+/// Run every rule over `src_root` (a `src/` directory). `allowlist` is
+/// the fingerprint allowlist file (absent entries simply don't excuse
+/// anything). `lint_version` is what `fedtune-lint/vN` tags in the tree
+/// must agree with — pass [`LINT_VERSION`].
+pub fn run(
+    src_root: &Path,
+    allowlist: Option<&Path>,
+    lint_version: &str,
+) -> Result<Report, String> {
+    if !src_root.is_dir() {
+        return Err(format!("source root {} is not a directory", src_root.display()));
+    }
+    let mut rels = Vec::new();
+    walk(src_root, Path::new(""), &mut rels)?;
+    rels.sort();
+
+    let mut files = Vec::with_capacity(rels.len());
+    for rel in &rels {
+        let full = src_root.join(rel);
+        let text = fs::read_to_string(&full)
+            .map_err(|e| format!("reading {}: {e}", full.display()))?;
+        let lexed = lexer::lex(&text);
+        let tokens = lexer::strip_test_items(lexed.tokens);
+        let code_lines = tokens.iter().map(|t| t.line).collect();
+        files.push(SrcFile {
+            rel: rel.clone(),
+            tokens,
+            allows: lexed.allows,
+            bad_allows: lexed.bad_allows,
+            code_lines,
+        });
+    }
+
+    let mut raw = Vec::new();
+    for f in &files {
+        for (line, msg) in &f.bad_allows {
+            raw.push(Violation {
+                file: f.rel.clone(),
+                line: *line,
+                rule: R_ALLOW,
+                message: msg.clone(),
+            });
+        }
+    }
+    rule_rng_streams(&files, &mut raw);
+    rule_nondeterminism(&files, &mut raw);
+    rule_fingerprint(&files, allowlist, &mut raw);
+    rule_spec_help(&files, &mut raw);
+    rule_schema_tags(&files, lint_version, &mut raw);
+
+    let violations = raw
+        .into_iter()
+        .filter(|v| v.rule == R_ALLOW || !suppressed(&files, v))
+        .collect();
+    Ok(Report { files: files.len(), violations })
+}
+
+fn walk(root: &Path, rel: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let dir = root.join(rel);
+    let entries =
+        fs::read_dir(&dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let sub = if rel.as_os_str().is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{name}", rel.display())
+        };
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, Path::new(&sub), out)?;
+        } else if name.ends_with(".rs") {
+            out.push(sub);
+        }
+    }
+    Ok(())
+}
+
+/// An allow directive at line A covers line A itself (trailing comment)
+/// or, when A holds no code, the next line that does (comment block
+/// directly above the offending statement).
+fn suppressed(files: &[SrcFile], v: &Violation) -> bool {
+    let Some(f) = files.iter().find(|f| f.rel == v.file) else { return false };
+    f.allows.iter().any(|a| {
+        if a.rule != v.rule {
+            return false;
+        }
+        let target = if f.code_lines.contains(&a.line) {
+            Some(a.line)
+        } else {
+            f.code_lines.range(a.line + 1..).next().copied()
+        };
+        a.line == v.line || target == Some(v.line)
+    })
+}
+
+fn find<'a>(files: &'a [SrcFile], rel: &str) -> Option<&'a SrcFile> {
+    files.iter().find(|f| f.rel == rel)
+}
+
+fn is_screaming(s: &str) -> bool {
+    s.len() >= 2
+        && s.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+        && s.chars().any(|c| c.is_ascii_uppercase())
+}
+
+fn seq(t: &[Token], i: usize, words: &[&str]) -> bool {
+    words
+        .iter()
+        .enumerate()
+        .all(|(k, w)| t.get(i + k).map(|x| x.text == *w).unwrap_or(false))
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: rng-stream-registry
+// ---------------------------------------------------------------------
+
+const REGISTRY_FILE: &str = "util/rng.rs";
+
+fn normalize_num(s: &str) -> String {
+    s.to_ascii_lowercase().replace('_', "")
+}
+
+fn rule_rng_streams(files: &[SrcFile], out: &mut Vec<Violation>) {
+    let Some(rng) = find(files, REGISTRY_FILE) else { return };
+    let t = &rng.tokens;
+
+    // Locate `mod streams { … }` and harvest its constants.
+    let mut span = None;
+    for i in 0..t.len() {
+        if seq(t, i, &["mod", "streams"]) {
+            let mut j = i + 2;
+            while j < t.len() && t[j].text != "{" {
+                j += 1;
+            }
+            if j < t.len() {
+                span = Some((j, lexer::match_delim(t, j, "{", "}")));
+            }
+            break;
+        }
+    }
+    let Some((open, end)) = span else {
+        out.push(Violation {
+            file: rng.rel.clone(),
+            line: 1,
+            rule: R_STREAMS,
+            message: "no `mod streams` registry found — every RNG stream tag must \
+                      be a named constant in util::rng::streams"
+                .to_string(),
+        });
+        return;
+    };
+
+    let mut names: Vec<String> = Vec::new();
+    let mut values: Vec<(String, String)> = Vec::new(); // (normalized value, name)
+    let mut i = open;
+    while i < end {
+        if t[i].text == "const" {
+            if let Some(name_tok) = t.get(i + 1).filter(|x| x.kind == Kind::Ident) {
+                let mut j = i + 2;
+                while j < end && t[j].text != "=" {
+                    j += 1;
+                }
+                if let Some(num) = t.get(j + 1).filter(|x| x.kind == Kind::Num) {
+                    let norm = normalize_num(&num.text);
+                    if let Some((_, first)) = values.iter().find(|(v, _)| *v == norm) {
+                        out.push(Violation {
+                            file: rng.rel.clone(),
+                            line: num.line,
+                            rule: R_STREAMS,
+                            message: format!(
+                                "stream constant {} duplicates the tag value of {} — \
+                                 two registered streams would collide",
+                                name_tok.text, first
+                            ),
+                        });
+                    } else {
+                        values.push((norm, name_tok.text.clone()));
+                    }
+                    names.push(name_tok.text.clone());
+                }
+            }
+        }
+        i += 1;
+    }
+
+    for f in files {
+        let t = &f.tokens;
+        let in_registry =
+            |idx: usize| f.rel == REGISTRY_FILE && idx > open && idx < end;
+
+        // Raw hex tags XOR'd anywhere outside the registry.
+        for idx in 0..t.len() {
+            let tok = &t[idx];
+            if tok.kind != Kind::Num || !tok.text.starts_with("0x") || in_registry(idx)
+            {
+                continue;
+            }
+            let xor_adjacent = (idx > 0 && t[idx - 1].text == "^")
+                || t.get(idx + 1).map(|x| x.text == "^").unwrap_or(false);
+            if xor_adjacent {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: tok.line,
+                    rule: R_STREAMS,
+                    message: format!(
+                        "raw hex stream tag {} — register it as a named constant in \
+                         util::rng::streams and use `seed ^ streams::<NAME>`",
+                        tok.text
+                    ),
+                });
+            }
+        }
+
+        // Inside `Rng::new(...)`: no raw hex, and every SCREAMING_CASE
+        // constant must be a registry member (so deleting a registry
+        // entry fails the lint at its use sites).
+        let mut idx = 0;
+        while idx + 4 < t.len() {
+            if !seq(t, idx, &["Rng", ":", ":", "new", "("]) {
+                idx += 1;
+                continue;
+            }
+            let close = lexer::match_delim(t, idx + 4, "(", ")");
+            for k in (idx + 5)..close.saturating_sub(1) {
+                let tok = &t[k];
+                let xor_adjacent = t[k - 1].text == "^"
+                    || t.get(k + 1).map(|x| x.text == "^").unwrap_or(false);
+                if tok.kind == Kind::Num && tok.text.starts_with("0x") && !xor_adjacent
+                {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: tok.line,
+                        rule: R_STREAMS,
+                        message: format!(
+                            "raw hex literal {} inside Rng::new(..) — derive streams \
+                             from a util::rng::streams constant",
+                            tok.text
+                        ),
+                    });
+                } else if tok.kind == Kind::Ident
+                    && is_screaming(&tok.text)
+                    && !names.iter().any(|n| *n == tok.text)
+                {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: tok.line,
+                        rule: R_STREAMS,
+                        message: format!(
+                            "stream constant {} is not registered in \
+                             util::rng::streams",
+                            tok.text
+                        ),
+                    });
+                }
+            }
+            idx = close;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: nondeterminism-ban
+// ---------------------------------------------------------------------
+
+/// Harness modules that legitimately touch clocks/environment: the CLI
+/// substrate, logging (timestamps, FEDTUNE_LOG), the PJRT runtime and
+/// the perf metrics layer (both *measure* wall time; neither feeds run
+/// results, which are keyed purely on config + seed).
+fn nondet_exempt(rel: &str) -> bool {
+    rel == "util/cli.rs"
+        || rel == "util/logging.rs"
+        || rel.starts_with("runtime/")
+        || rel.starts_with("metrics/")
+}
+
+const ITER_METHODS: &[&str] = &["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+
+fn rule_nondeterminism(files: &[SrcFile], out: &mut Vec<Violation>) {
+    for f in files {
+        if nondet_exempt(&f.rel) {
+            continue;
+        }
+        let t = &f.tokens;
+        for i in 0..t.len() {
+            for (head, what) in
+                [("SystemTime", "SystemTime::now"), ("Instant", "Instant::now")]
+            {
+                if seq(t, i, &[head, ":", ":", "now"]) {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: t[i].line,
+                        rule: R_NONDET,
+                        message: format!(
+                            "{what} in a core module — run outcomes must be a pure \
+                             function of (config, seed)"
+                        ),
+                    });
+                }
+            }
+            if seq(t, i, &["env", ":", ":"]) {
+                if let Some(m) = t.get(i + 3) {
+                    if m.text == "var" || m.text == "var_os" || m.text == "vars" {
+                        out.push(Violation {
+                            file: f.rel.clone(),
+                            line: t[i].line,
+                            rule: R_NONDET,
+                            message: format!(
+                                "environment read env::{} in a core module — config \
+                                 must flow through ExperimentConfig/CLI, not ambient \
+                                 state",
+                                m.text
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
+        // Default-hasher map/set iteration: collect names declared (or
+        // typed, for fields and params) as HashMap/HashSet, then flag
+        // order-dependent consumption of them.
+        let mut tracked: Vec<String> = Vec::new();
+        for i in 0..t.len() {
+            if t[i].kind != Kind::Ident
+                || !t.get(i + 1).map(|x| x.text == ":").unwrap_or(false)
+            {
+                continue;
+            }
+            if i > 0 && t[i - 1].text == ":" {
+                continue; // `a::b` path segment, not a binding
+            }
+            if t.get(i + 2).map(|x| x.text == ":").unwrap_or(false) {
+                continue; // `name::…` path, not `name: Type`
+            }
+            let mut j = i + 2;
+            while j < t.len()
+                && matches!(t[j].text.as_str(), "&" | "mut" | "std" | "collections" | ":")
+            {
+                j += 1;
+            }
+            if t.get(j)
+                .map(|x| x.text == "HashMap" || x.text == "HashSet")
+                .unwrap_or(false)
+                && !tracked.contains(&t[i].text)
+            {
+                tracked.push(t[i].text.clone());
+            }
+        }
+        for i in 0..t.len() {
+            if t[i].kind == Kind::Ident && tracked.contains(&t[i].text) {
+                if t.get(i + 1).map(|x| x.text == ".").unwrap_or(false) {
+                    if let Some(m) = t.get(i + 2) {
+                        if ITER_METHODS.contains(&m.text.as_str())
+                            && t.get(i + 3).map(|x| x.text == "(").unwrap_or(false)
+                        {
+                            out.push(Violation {
+                                file: f.rel.clone(),
+                                line: t[i].line,
+                                rule: R_NONDET,
+                                message: format!(
+                                    "iteration over default-hasher collection `{}` \
+                                     (.{}()) — order is nondeterministic; use a \
+                                     BTreeMap/BTreeSet or sort first",
+                                    t[i].text, m.text
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            if t[i].text == "for" {
+                let mut j = i + 1;
+                while j < t.len() && j < i + 32 && t[j].text != "in" && t[j].text != "{"
+                {
+                    j += 1;
+                }
+                if j >= t.len() || t[j].text != "in" {
+                    continue;
+                }
+                let mut expr: Vec<&Token> = Vec::new();
+                let mut k = j + 1;
+                while k < t.len() && k < j + 12 && t[k].text != "{" {
+                    expr.push(&t[k]);
+                    k += 1;
+                }
+                while expr
+                    .first()
+                    .map(|x| x.text == "&" || x.text == "mut")
+                    .unwrap_or(false)
+                {
+                    expr.remove(0);
+                }
+                if expr.len() == 1
+                    && expr[0].kind == Kind::Ident
+                    && tracked.contains(&expr[0].text)
+                {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: expr[0].line,
+                        rule: R_NONDET,
+                        message: format!(
+                            "for-loop over default-hasher collection `{}` — order is \
+                             nondeterministic; use a BTreeMap/BTreeSet or sort first",
+                            expr[0].text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: fingerprint-completeness
+// ---------------------------------------------------------------------
+
+const FINGERPRINT_FILE: &str = "store/fingerprint.rs";
+
+/// (scope name, defining file, true = struct / false = enum payloads)
+const FINGERPRINT_SCOPES: &[(&str, &str, bool)] = &[
+    ("ExperimentConfig", "config/mod.rs", true),
+    ("TunerSpec", "fedtune/tuner.rs", false),
+    ("Selector", "coordinator/selection.rs", false),
+    ("SystemSpec", "system/mod.rs", false),
+];
+
+fn struct_fields(t: &[Token], name: &str) -> Option<Vec<(String, usize)>> {
+    for i in 0..t.len() {
+        if !seq(t, i, &["struct", name]) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < t.len() && t[j].text != "{" {
+            if t[j].text == ";" || t[j].text == "(" {
+                return Some(Vec::new()); // unit/tuple struct
+            }
+            j += 1;
+        }
+        if j >= t.len() {
+            return None;
+        }
+        let end = lexer::match_delim(t, j, "{", "}");
+        let mut fields = Vec::new();
+        let mut k = j + 1;
+        while k + 1 < end {
+            if t[k].text == "#" && t[k + 1].text == "[" {
+                k = lexer::match_delim(t, k + 1, "[", "]");
+            } else if t[k].text == "pub"
+                && t[k + 1].kind == Kind::Ident
+                && t.get(k + 2).map(|x| x.text == ":").unwrap_or(false)
+            {
+                fields.push((t[k + 1].text.clone(), t[k + 1].line));
+                k += 3;
+            } else {
+                k += 1;
+            }
+        }
+        return Some(fields);
+    }
+    None
+}
+
+fn enum_payload_fields(t: &[Token], name: &str) -> Option<Vec<(String, usize)>> {
+    for i in 0..t.len() {
+        if !seq(t, i, &["enum", name]) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < t.len() && t[j].text != "{" {
+            j += 1;
+        }
+        if j >= t.len() {
+            return None;
+        }
+        let end = lexer::match_delim(t, j, "{", "}");
+        let mut fields = Vec::new();
+        let mut k = j + 1;
+        while k < end {
+            if t[k].text == "#" && t.get(k + 1).map(|x| x.text == "[").unwrap_or(false)
+            {
+                k = lexer::match_delim(t, k + 1, "[", "]");
+            } else if t[k].text == "(" {
+                k = lexer::match_delim(t, k, "(", ")"); // tuple payload: skip
+            } else if t[k].text == "{" {
+                // Named payload: fields are `name:` directly after the
+                // opening `{` or after a `,`.
+                let inner_end = lexer::match_delim(t, k, "{", "}");
+                let mut m = k;
+                while m + 2 < inner_end {
+                    if (t[m].text == "{" || t[m].text == ",")
+                        && t[m + 1].kind == Kind::Ident
+                        && t[m + 2].text == ":"
+                    {
+                        fields.push((t[m + 1].text.clone(), t[m + 1].line));
+                    }
+                    m += 1;
+                }
+                k = inner_end;
+            } else {
+                k += 1;
+            }
+        }
+        return Some(fields);
+    }
+    None
+}
+
+struct AllowEntry {
+    key: String, // "Scope.field"
+    line: usize,
+}
+
+fn parse_allowlist(
+    path: &Path,
+    out: &mut Vec<Violation>,
+) -> Vec<AllowEntry> {
+    let display = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string());
+    let Ok(text) = fs::read_to_string(path) else { return Vec::new() };
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = idx + 1;
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let (key, reason) = match s.split_once("--") {
+            Some((k, r)) => (k.trim(), r.trim()),
+            None => (s, ""),
+        };
+        if reason.is_empty() {
+            out.push(Violation {
+                file: display.clone(),
+                line,
+                rule: R_FINGERPRINT,
+                message: format!(
+                    "allowlist entry {key:?} needs a ` -- <reason>` justification"
+                ),
+            });
+            continue;
+        }
+        if key.split('.').count() != 2 {
+            out.push(Violation {
+                file: display.clone(),
+                line,
+                rule: R_FINGERPRINT,
+                message: format!(
+                    "allowlist entry {key:?} must be `<Scope>.<field>` \
+                     (e.g. TunerSpec.decay)"
+                ),
+            });
+            continue;
+        }
+        entries.push(AllowEntry { key: key.to_string(), line });
+    }
+    entries
+}
+
+fn rule_fingerprint(
+    files: &[SrcFile],
+    allowlist: Option<&Path>,
+    out: &mut Vec<Violation>,
+) {
+    let Some(fp) = find(files, FINGERPRINT_FILE) else { return };
+
+    // Every identifier and every word inside a string literal of the
+    // fingerprint module counts as "named in the identity".
+    let mut named: BTreeSet<String> = BTreeSet::new();
+    for tok in &fp.tokens {
+        match tok.kind {
+            Kind::Ident => {
+                named.insert(tok.text.clone());
+            }
+            Kind::Str => {
+                for w in tok
+                    .text
+                    .split(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+                {
+                    if !w.is_empty() {
+                        named.insert(w.to_string());
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let allow_display = allowlist
+        .and_then(|p| p.file_name())
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "fingerprint_allowlist.txt".to_string());
+    let entries = match allowlist {
+        Some(p) => parse_allowlist(p, out),
+        None => Vec::new(),
+    };
+
+    let mut known_keys: BTreeSet<String> = BTreeSet::new();
+    for &(scope, rel, is_struct) in FINGERPRINT_SCOPES {
+        let Some(f) = find(files, rel) else { continue };
+        let fields = if is_struct {
+            struct_fields(&f.tokens, scope)
+        } else {
+            enum_payload_fields(&f.tokens, scope)
+        };
+        let Some(fields) = fields else { continue };
+        for (field, line) in fields {
+            let key = format!("{scope}.{field}");
+            known_keys.insert(key.clone());
+            if named.contains(&field) {
+                continue;
+            }
+            if entries.iter().any(|e| e.key == key) {
+                continue;
+            }
+            out.push(Violation {
+                file: f.rel.clone(),
+                line,
+                rule: R_FINGERPRINT,
+                message: format!(
+                    "{key} is not named in {FINGERPRINT_FILE} and has no entry in \
+                     {allow_display} — cached runs could alias across different \
+                     values of this field"
+                ),
+            });
+        }
+    }
+    for e in &entries {
+        let scope = e.key.split('.').next().unwrap_or("");
+        let scope_scanned = FINGERPRINT_SCOPES
+            .iter()
+            .any(|&(s, rel, _)| s == scope && find(files, rel).is_some());
+        if scope_scanned && !known_keys.contains(&e.key) {
+            out.push(Violation {
+                file: allow_display.clone(),
+                line: e.line,
+                rule: R_FINGERPRINT,
+                message: format!(
+                    "stale allowlist entry {}: no such field exists any more",
+                    e.key
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 4: spec-help-sync
+// ---------------------------------------------------------------------
+
+const SPEC_PARSERS: &[(&str, &str)] = &[
+    ("fedtune/tuner.rs", "parse"),
+    ("coordinator/selection.rs", "by_name"),
+    ("system/mod.rs", "parse"),
+];
+
+fn find_spec_help(t: &[Token]) -> Option<String> {
+    for i in 0..t.len() {
+        if t[i].text != "SPEC_HELP" {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < t.len() && t[j].text != "=" && t[j].text != ";" {
+            j += 1;
+        }
+        if j < t.len() && t[j].text == "=" {
+            if let Some(s) = t.get(j + 1).filter(|x| x.kind == Kind::Str) {
+                return Some(s.text.clone());
+            }
+        }
+    }
+    None
+}
+
+fn fn_body_span(t: &[Token], name: &str) -> Option<(usize, usize)> {
+    for i in 0..t.len() {
+        if !seq(t, i, &["fn", name]) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < t.len() && t[j].text != "(" {
+            j += 1;
+        }
+        if j >= t.len() {
+            return None;
+        }
+        let after_params = lexer::match_delim(t, j, "(", ")");
+        let mut k = after_params;
+        while k < t.len() && t[k].text != "{" && t[k].text != ";" {
+            k += 1;
+        }
+        if k >= t.len() || t[k].text != "{" {
+            return None;
+        }
+        return Some((k, lexer::match_delim(t, k, "{", "}")));
+    }
+    None
+}
+
+/// A parse-arm head: lowercase word (underscores allowed), optionally
+/// with one trailing `:` (prefix-style arms like `lognormal:`).
+fn arm_head(s: &str) -> Option<&str> {
+    let core = s.strip_suffix(':').unwrap_or(s);
+    if !core.is_empty()
+        && core.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+    {
+        Some(core)
+    } else {
+        None
+    }
+}
+
+fn rule_spec_help(files: &[SrcFile], out: &mut Vec<Violation>) {
+    for &(rel, fn_name) in SPEC_PARSERS {
+        let Some(f) = find(files, rel) else { continue };
+        let Some((open, end)) = fn_body_span(&f.tokens, fn_name) else { continue };
+        let Some(help) = find_spec_help(&f.tokens) else {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: f.tokens[open].line,
+                rule: R_SPEC_HELP,
+                message: format!(
+                    "parser fn {fn_name} has no adjacent SPEC_HELP constant"
+                ),
+            });
+            continue;
+        };
+        for tok in &f.tokens[open..end] {
+            if tok.kind != Kind::Str {
+                continue;
+            }
+            let Some(head) = arm_head(&tok.text) else { continue };
+            if !help.contains(head) {
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: tok.line,
+                    rule: R_SPEC_HELP,
+                    message: format!(
+                        "parse arm {head:?} in fn {fn_name} is not mentioned by \
+                         SPEC_HELP ({help:?}) — help text and grammar drifted"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 5: schema-tag-drift
+// ---------------------------------------------------------------------
+
+fn digits_after(s: &str, at: usize) -> Option<u64> {
+    let rest = &s[at..];
+    let n: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    n.parse().ok()
+}
+
+fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violation>) {
+    let Some(fp) = find(files, FINGERPRINT_FILE) else { return };
+    let t = &fp.tokens;
+    let mut version = None;
+    for i in 0..t.len() {
+        if t[i].text != "FINGERPRINT_VERSION" {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < t.len() && t[j].text != "=" && t[j].text != ";" {
+            j += 1;
+        }
+        if j < t.len() && t[j].text == "=" {
+            if let Some(num) = t.get(j + 1).filter(|x| x.kind == Kind::Num) {
+                version = num.text.parse::<u64>().ok();
+                break;
+            }
+        }
+    }
+    let Some(version) = version else {
+        out.push(Violation {
+            file: fp.rel.clone(),
+            line: 1,
+            rule: R_SCHEMA,
+            message: "FINGERPRINT_VERSION constant not found".to_string(),
+        });
+        return;
+    };
+    let lint_n = lint_version
+        .rfind('v')
+        .and_then(|p| digits_after(lint_version, p + 1));
+
+    for f in files {
+        for tok in &f.tokens {
+            if tok.kind != Kind::Str {
+                continue;
+            }
+            let s = &tok.text;
+            let mut from = 0;
+            while let Some(p) = s[from..].find("fedtune.store.") {
+                let start = from + p + "fedtune.store.".len();
+                from = start;
+                let Some(slash) = s[start..].find('/') else { continue };
+                let tail = start + slash + 1;
+                if !s[tail..].starts_with('v') {
+                    continue;
+                }
+                if let Some(n) = digits_after(s, tail + 1) {
+                    if n != version {
+                        out.push(Violation {
+                            file: f.rel.clone(),
+                            line: tok.line,
+                            rule: R_SCHEMA,
+                            message: format!(
+                                "store schema tag \"fedtune.store.{}/v{n}\" disagrees \
+                                 with FINGERPRINT_VERSION = {version}",
+                                &s[start..start + slash]
+                            ),
+                        });
+                    }
+                }
+            }
+            let mut from = 0;
+            while let Some(p) = s[from..].find("fedtune.sweep/v") {
+                let at = from + p + "fedtune.sweep/v".len();
+                from = at;
+                if let Some(n) = digits_after(s, at) {
+                    if n != version {
+                        out.push(Violation {
+                            file: f.rel.clone(),
+                            line: tok.line,
+                            rule: R_SCHEMA,
+                            message: format!(
+                                "sweep id version v{n} disagrees with \
+                                 FINGERPRINT_VERSION = {version}"
+                            ),
+                        });
+                    }
+                }
+            }
+            let mut from = 0;
+            while let Some(p) = s[from..].find("fedtune-lint/v") {
+                let at = from + p + "fedtune-lint/v".len();
+                from = at;
+                if let (Some(n), Some(expect)) = (digits_after(s, at), lint_n) {
+                    if n != expect {
+                        out.push(Violation {
+                            file: f.rel.clone(),
+                            line: tok.line,
+                            rule: R_SCHEMA,
+                            message: format!(
+                                "lint tool tag v{n} disagrees with the xtask \
+                                 LINT_VERSION ({lint_version})"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn screaming_case_detection() {
+        assert!(is_screaming("COORDINATOR"));
+        assert!(is_screaming("E_MAX"));
+        assert!(is_screaming("V2"));
+        assert!(!is_screaming("u64"));
+        assert!(!is_screaming("Rng"));
+        assert!(!is_screaming("seed"));
+        assert!(!is_screaming("_"));
+        assert!(!is_screaming("42"));
+    }
+
+    #[test]
+    fn arm_heads() {
+        assert_eq!(arm_head("lognormal:"), Some("lognormal"));
+        assert_eq!(arm_head("fixed"), Some("fixed"));
+        assert_eq!(arm_head("max_cost"), Some("max_cost"));
+        assert_eq!(arm_head(""), None);
+        assert_eq!(arm_head(":"), None);
+        assert_eq!(arm_head("two words"), None);
+        assert_eq!(arm_head("stepwise:{decay}"), None);
+        assert_eq!(arm_head("Fixed"), None);
+    }
+
+    #[test]
+    fn num_normalization() {
+        assert_eq!(normalize_num("0x9e37_79b9"), "0x9e3779b9");
+        assert_eq!(normalize_num("0xC00D"), "0xc00d");
+    }
+
+    #[test]
+    fn lexer_handles_spec_help_continuation() {
+        let src = "const H: &str = \"fixed | fedtune | \\\n        stepwise:<d>\";";
+        let lexed = lexer::lex(src);
+        let s = lexed
+            .tokens
+            .iter()
+            .find(|t| t.kind == Kind::Str)
+            .expect("string token");
+        assert_eq!(s.text, "fixed | fedtune | stepwise:<d>");
+    }
+
+    #[test]
+    fn lexer_separates_lifetimes_from_char_literals() {
+        let src = "impl<'e, E> S<'e, E> { fn f() { x.split(':'); } }";
+        let lexed = lexer::lex(src);
+        assert!(lexed.tokens.iter().all(|t| t.text != "e" || t.kind != Kind::Ident));
+        assert!(!lexed.tokens.iter().any(|t| t.kind == Kind::Str));
+    }
+
+    #[test]
+    fn cfg_test_items_are_stripped() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn gone() { let t = Instant::now(); }\n}\nfn also_live() {}";
+        let lexed = lexer::lex(src);
+        let t = lexer::strip_test_items(lexed.tokens);
+        assert!(t.iter().any(|x| x.text == "live"));
+        assert!(t.iter().any(|x| x.text == "also_live"));
+        assert!(!t.iter().any(|x| x.text == "Instant"));
+    }
+
+    #[test]
+    fn allow_directive_parsing() {
+        let good = lexer::lex("// lint: allow(nondeterminism-ban) -- reproduction knob\nlet x = 1;");
+        assert_eq!(good.allows.len(), 1);
+        assert_eq!(good.allows[0].rule, "nondeterminism-ban");
+        assert!(good.bad_allows.is_empty());
+
+        let bad = lexer::lex("// lint: allow(nondeterminism-ban)\nlet x = 1;");
+        assert!(bad.allows.is_empty());
+        assert_eq!(bad.bad_allows.len(), 1);
+    }
+}

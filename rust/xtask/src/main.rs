@@ -1,0 +1,76 @@
+//! `cargo xtask lint` — run the determinism & cache-identity lint over
+//! `rust/src/` (see lib.rs and DESIGN.md §14 for the rule catalogue).
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::{run, LINT_VERSION};
+
+const USAGE: &str = "usage: cargo xtask lint [--src <dir>] [--allowlist <file>]";
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(cmd) = args.next() else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    if cmd != "lint" {
+        eprintln!("unknown subcommand {cmd:?}\n{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    // Default to the fedtune sources next to this crate, so the lint
+    // works from any cwd inside the workspace.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut src = manifest.join("../src");
+    let mut allowlist = manifest.join("fingerprint_allowlist.txt");
+    while let Some(flag) = args.next() {
+        let mut value = |name: &str| {
+            args.next().ok_or_else(|| format!("{name} needs a value\n{USAGE}"))
+        };
+        match flag.as_str() {
+            "--src" => match value("--src") {
+                Ok(v) => src = PathBuf::from(v),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--allowlist" => match value("--allowlist") {
+                Ok(v) => allowlist = PathBuf::from(v),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown flag {other:?}\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    match run(&src, Some(&allowlist), LINT_VERSION) {
+        Ok(report) if report.violations.is_empty() => {
+            println!("{LINT_VERSION}: {} files, 0 violations", report.files);
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for v in &report.violations {
+                eprintln!("{}/{v}", src.display());
+            }
+            eprintln!(
+                "{LINT_VERSION}: {} files, {} violation(s)",
+                report.files,
+                report.violations.len()
+            );
+            ExitCode::from(1)
+        }
+        Err(e) => {
+            eprintln!("{LINT_VERSION}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,9 @@
+// Fixture: the same wall-clock call as bad_nondet, but carrying a
+// well-formed allow directive — the tree must lint clean.
+
+use std::time::Instant;
+
+pub fn stopwatch() -> Instant {
+    // lint: allow(nondeterminism-ban) -- harness-side stopwatch, never run state
+    Instant::now()
+}

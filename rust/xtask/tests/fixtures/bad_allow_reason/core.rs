@@ -1,0 +1,9 @@
+// Fixture violations: an allow directive without a ` -- <reason>` is
+// itself an error, and it suppresses nothing.
+
+use std::time::Instant;
+
+pub fn stopwatch() -> Instant {
+    // lint: allow(nondeterminism-ban)
+    Instant::now()
+}

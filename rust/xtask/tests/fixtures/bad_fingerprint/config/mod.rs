@@ -1,0 +1,7 @@
+// Fixture: `new_knob` was added to the config but never taught to the
+// fingerprint (and has no allowlist entry).
+
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub new_knob: f64,
+}

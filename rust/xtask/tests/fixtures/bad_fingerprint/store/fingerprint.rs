@@ -1,0 +1,7 @@
+// Fixture fingerprint: names `seed` but not `new_knob`.
+
+pub const FINGERPRINT_VERSION: u64 = 4;
+
+pub fn fingerprint(seed: u64) -> u64 {
+    seed
+}

@@ -1,0 +1,21 @@
+// Fixture violations: wall clock, environment read, and iteration over
+// a default-hasher map — three nondeterminism-ban findings.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}
+
+pub fn knob() -> Option<String> {
+    std::env::var("SOME_KNOB").ok()
+}
+
+pub fn sum(m: HashMap<u32, u32>) -> u32 {
+    let mut s = 0;
+    for (_, v) in &m {
+        s += v;
+    }
+    s
+}

@@ -1,0 +1,4 @@
+// Fixture violation: the journal tag was left at v3 after a fingerprint
+// version bump to v4.
+
+pub const JOURNAL_TAG: &str = "fedtune.store.journal/v3";

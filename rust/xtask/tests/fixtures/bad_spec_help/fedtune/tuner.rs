@@ -1,0 +1,17 @@
+// Fixture violation: the parser grew a `population:` arm that SPEC_HELP
+// never mentions.
+
+pub const SPEC_HELP: &str = "fixed | fedtune";
+
+pub struct TunerSpec;
+
+impl TunerSpec {
+    pub fn parse(spec: &str) -> Result<(), String> {
+        match spec {
+            "fixed" => Ok(()),
+            "fedtune" => Ok(()),
+            s if s.starts_with("population:") => Ok(()),
+            _ => Err("unknown tuner spec".to_string()),
+        }
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture violation: raw hex stream tag instead of a registry constant.
+
+pub fn server(seed: u64) -> crate::util::rng::Rng {
+    crate::util::rng::Rng::new(seed ^ 0xdead)
+}

@@ -1,0 +1,13 @@
+// Fixture: a registry exists, but core.rs XORs a raw hex tag anyway.
+
+pub mod streams {
+    pub const COORDINATOR: u64 = 0xc00d;
+}
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed)
+    }
+}

@@ -1,0 +1,7 @@
+// Fixture violation: two registered streams share one tag value
+// (spelled differently — normalization must still catch it).
+
+pub mod streams {
+    pub const COORDINATOR: u64 = 0xc00d;
+    pub const REAL_ENGINE: u64 = 0xC0_0D;
+}

@@ -1,0 +1,5 @@
+// Fixture: every field is fingerprinted; the rot is in allow.txt.
+
+pub struct ExperimentConfig {
+    pub seed: u64,
+}

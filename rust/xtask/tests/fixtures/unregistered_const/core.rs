@@ -1,0 +1,7 @@
+// Fixture violation: MYSTERY is not a registered stream constant.
+
+use crate::util::rng::{streams, Rng};
+
+pub fn server(seed: u64) -> Rng {
+    Rng::new(seed ^ streams::MYSTERY)
+}

@@ -1,0 +1,14 @@
+// Fixture: registry with a single stream; core.rs names one that does
+// not exist (e.g. it was deleted from the registry but not its users).
+
+pub mod streams {
+    pub const COORDINATOR: u64 = 0xc00d;
+}
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed)
+    }
+}

@@ -1,0 +1,127 @@
+//! Fixture tests for the determinism & cache-identity lint: each
+//! known-bad mini source tree under `tests/fixtures/` must fail with a
+//! violation naming exactly the rule it was built to break, and the
+//! real `rust/src/` tree must pass clean.
+
+use std::path::{Path, PathBuf};
+
+use xtask::{
+    run, Violation, LINT_VERSION, R_ALLOW, R_FINGERPRINT, R_NONDET, R_SCHEMA,
+    R_SPEC_HELP, R_STREAMS,
+};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn lint(name: &str) -> Vec<Violation> {
+    run(&fixture(name), None, LINT_VERSION)
+        .expect("fixture lint run should not error")
+        .violations
+}
+
+fn assert_one(vs: &[Violation], rule: &str, needle: &str) {
+    assert!(
+        vs.iter().any(|v| v.rule == rule && v.message.contains(needle)),
+        "expected a [{rule}] violation mentioning {needle:?}, got: {vs:#?}"
+    );
+}
+
+#[test]
+fn raw_hex_stream_tag_fails() {
+    let vs = lint("bad_stream");
+    assert_one(&vs, R_STREAMS, "0xdead");
+    assert!(vs.iter().all(|v| v.rule == R_STREAMS), "{vs:#?}");
+}
+
+#[test]
+fn duplicate_stream_value_fails() {
+    let vs = lint("dup_stream");
+    assert_one(&vs, R_STREAMS, "REAL_ENGINE");
+    assert_one(&vs, R_STREAMS, "COORDINATOR");
+}
+
+#[test]
+fn unregistered_stream_constant_fails() {
+    let vs = lint("unregistered_const");
+    assert_one(&vs, R_STREAMS, "MYSTERY");
+}
+
+#[test]
+fn wall_clock_env_and_hashmap_iteration_fail() {
+    let vs = lint("bad_nondet");
+    assert_one(&vs, R_NONDET, "Instant::now");
+    assert_one(&vs, R_NONDET, "env::var");
+    assert_one(&vs, R_NONDET, "default-hasher");
+    assert_eq!(vs.len(), 3, "{vs:#?}");
+}
+
+#[test]
+fn reasoned_allow_directive_suppresses() {
+    let vs = lint("allowed_nondet");
+    assert!(vs.is_empty(), "allow directive should suppress: {vs:#?}");
+}
+
+#[test]
+fn reasonless_allow_directive_is_an_error_and_suppresses_nothing() {
+    let vs = lint("bad_allow_reason");
+    assert_one(&vs, R_ALLOW, "reason");
+    assert_one(&vs, R_NONDET, "Instant::now");
+}
+
+#[test]
+fn unfingerprinted_config_field_fails() {
+    let vs = lint("bad_fingerprint");
+    assert_one(&vs, R_FINGERPRINT, "ExperimentConfig.new_knob");
+    assert_eq!(vs.len(), 1, "{vs:#?}");
+}
+
+#[test]
+fn stale_and_reasonless_allowlist_entries_fail() {
+    let root = fixture("stale_allowlist");
+    let vs = run(&root, Some(&root.join("allow.txt")), LINT_VERSION)
+        .expect("fixture lint run should not error")
+        .violations;
+    assert_one(&vs, R_FINGERPRINT, "ExperimentConfig.ghost");
+    assert_one(&vs, R_FINGERPRINT, "reason");
+    assert_eq!(vs.len(), 2, "{vs:#?}");
+}
+
+#[test]
+fn spec_help_drift_fails() {
+    let vs = lint("bad_spec_help");
+    assert_one(&vs, R_SPEC_HELP, "population");
+    assert_eq!(vs.len(), 1, "{vs:#?}");
+}
+
+#[test]
+fn schema_tag_drift_fails() {
+    let vs = lint("bad_schema_tag");
+    assert_one(&vs, R_SCHEMA, "fedtune.store.journal/v3");
+    assert_eq!(vs.len(), 1, "{vs:#?}");
+}
+
+/// The real tree must hold every invariant the lint enforces — this is
+/// the same check CI's `cargo xtask lint` step runs, as a plain test so
+/// `cargo test` alone catches drift.
+#[test]
+fn live_tree_passes() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run(
+        &manifest.join("../src"),
+        Some(&manifest.join("fingerprint_allowlist.txt")),
+        LINT_VERSION,
+    )
+    .expect("lint over rust/src should not error");
+    assert!(
+        report.violations.is_empty(),
+        "live tree has lint violations:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files > 20, "suspiciously few files: {}", report.files);
+}
