@@ -4,6 +4,13 @@
 //! * FedTune observe_round < 1 µs,
 //! * simulator ≥ 1e6 rounds/s equivalent (sub-µs per round),
 //! * runtime marshal overhead < 5% of execute time.
+//!
+//! With `-- --out PATH` the run also writes a machine-readable
+//! `fedtune.bench/v1` report: per-bench statistics for every
+//! unconditional bench plus named-phase wall times from the
+//! [`fedtune::obs::wall`] plane. `BENCH_baseline.json` at the repo root
+//! is a committed instance of this report; CI diffs its *schema* (bench
+//! names and field sets, never timings) against a fresh run.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -15,18 +22,58 @@ use fedtune::engine::sim::{SimEngine, SimParams};
 use fedtune::engine::FlEngine;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ParamSpec, ParamVec};
+use fedtune::obs::{names, wall};
 use fedtune::overhead::{CostModel, Costs, Preference};
 use fedtune::util::json::Json;
 use fedtune::util::rng::Rng;
-use harness::bench;
+use harness::{bench, Sample};
+
+/// Schema tag of the `--out` report (bump on any shape change).
+const BENCH_SCHEMA: &str = "fedtune.bench/v1";
 
 fn specs_of(n: usize) -> Vec<ParamSpec> {
     vec![ParamSpec { name: "w".into(), shape: vec![n] }]
 }
 
+/// `--out PATH` / `--out=PATH` after `cargo bench -- ...`; unknown args
+/// are ignored so cargo's own flags pass through (same convention as
+/// [`harness::cached`]).
+fn out_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    let mut i = 1;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--out" && i + 1 < args.len() {
+            return Some(args[i + 1].clone());
+        } else if let Some(p) = a.strip_prefix("--out=") {
+            return Some(p.to_string());
+        }
+        i += 1;
+    }
+    None
+}
+
+fn sample_json(s: &Sample) -> Json {
+    Json::from_pairs(vec![
+        ("mean_ns", s.mean_ns.into()),
+        ("std_ns", s.std_ns.into()),
+        ("min_ns", s.min_ns.into()),
+        ("iters_per_sample", s.iters_per_sample.into()),
+        ("samples", s.samples.into()),
+    ])
+}
+
 fn main() {
+    // The metrics plane doubles as the phase profiler here: each section
+    // below is bracketed by a stopwatch and lapped into its `bench.*`
+    // timer — unconditionally, so the report's phase key set is stable
+    // even when the json/pjrt sections have nothing to do.
+    wall::enable();
+    let mut report: Vec<(&str, Sample)> = Vec::new();
+
     // --- aggregation throughput (FedAvg over 20 updates of 80k params,
     //     the paper's speech/ResNet-10 configuration) -----------------------
+    let sw = wall::stopwatch();
     let n = 80_000;
     let specs = specs_of(n);
     let mut rng = Rng::new(1);
@@ -42,6 +89,7 @@ fn main() {
         let mut agg = Aggregator::new(AggregatorKind::FedAvg);
         agg.aggregate(&mut global, &updates);
     });
+    report.push(("fedavg_aggregate_20x80k", s));
     let bytes = (20 * n * 4) as f64;
     let gbs = bytes / (s.mean_ns * 1e-9) / 1e9;
     println!("  → aggregation throughput: {gbs:.2} GB/s (target ≥ 1)");
@@ -51,15 +99,19 @@ fn main() {
         let mut agg = Aggregator::new(AggregatorKind::FedNova);
         agg.aggregate(&mut global, &updates);
     });
+    report.push(("fednova_aggregate_20x80k", s));
     println!("  → fednova round: {:.1} µs", s.mean_us());
 
     let s = bench("fedadagrad_aggregate_20x80k", 300, || {
         let mut agg = Aggregator::new(AggregatorKind::fedadagrad_paper());
         agg.aggregate(&mut global, &updates);
     });
+    report.push(("fedadagrad_aggregate_20x80k", s));
     println!("  → fedadagrad round: {:.1} µs", s.mean_us());
+    wall::lap(names::BENCH_AGGREGATION, sw);
 
     // --- FedTune controller step -----------------------------------------
+    let sw = wall::stopwatch();
     let pref = Preference::new(0.25, 0.25, 0.25, 0.25).unwrap();
     let mut ft =
         FedTune::new(pref, FedTuneConfig::paper_defaults(2112), 20, 20.0).unwrap();
@@ -77,10 +129,13 @@ fn main() {
         cum.add(&Costs { comp_t: 3.0, trans_t: 1.0, comp_l: 9.0, trans_l: 20.0 });
         ft.observe_round(round, acc, cum)
     });
+    report.push(("fedtune_observe_round", s));
     println!("  → fedtune step: {:.3} µs (target < 1 µs)", s.mean_us());
     assert!(s.mean_us() < 1.0, "fedtune step too slow: {:.3} µs", s.mean_us());
+    wall::lap(names::BENCH_CONTROLLER, sw);
 
     // --- selection over the full speech population ------------------------
+    let sw = wall::stopwatch();
     let profile = DatasetProfile::speech();
     let mut srng = Rng::new(2);
     let sizes = fedtune::data::ClientSizes::generate(&profile, &mut srng).sizes;
@@ -90,32 +145,45 @@ fn main() {
     let s = bench("selection_uniform_20_of_2112", 200, || {
         Selector::UniformRandom.select(&sizes, &systems, 20, &mut sel_rng)
     });
+    report.push(("selection_uniform_20_of_2112", s));
     println!("  → selection: {:.2} µs", s.mean_us());
+    wall::lap(names::BENCH_SELECTION, sw);
 
     // --- one simulated round (engine only) --------------------------------
+    let sw = wall::stopwatch();
     let mut eng = SimEngine::new(&profile, SimParams::default(), 4);
     let parts: Vec<usize> = (0..20).collect();
     let s = bench("sim_engine_round", 200, || {
         eng.run_round(&parts, 2.0).unwrap()
     });
+    report.push(("sim_engine_round", s));
     println!("  → sim round: {:.3} µs", s.mean_us());
+    wall::lap(names::BENCH_SIM, sw);
 
     // --- overhead accounting ----------------------------------------------
+    let sw = wall::stopwatch();
     let cm = CostModel::from_flops_params(12_500_000, 79_700);
     let rows: Vec<(usize, fedtune::system::ClientSystemProfile)> = (0..20)
         .map(|i| (1 + i * 7 % 300, fedtune::system::ClientSystemProfile::BASELINE))
         .collect();
     let s = bench("cost_model_round", 100, || cm.round_costs(&rows, 2.0));
+    report.push(("cost_model_round", s));
     println!("  → cost accounting: {:.4} µs", s.mean_us());
+    wall::lap(names::BENCH_COST, sw);
 
     // --- JSON substrate -----------------------------------------------------
+    // Conditional: present in stdout but kept out of the `--out` report so
+    // its bench-name set is machine-independent.
+    let sw = wall::stopwatch();
     let manifest_like = std::fs::read_to_string("artifacts/manifest.json").ok();
     if let Some(text) = &manifest_like {
         let s = bench("json_parse_manifest", 200, || Json::parse(text).unwrap());
         println!("  → manifest parse: {:.1} µs ({} bytes)", s.mean_us(), text.len());
     }
+    wall::lap(names::BENCH_JSON, sw);
 
-    // --- PJRT execute path (needs artifacts) -------------------------------
+    // --- PJRT execute path (needs artifacts; also out-of-report) ----------
+    let sw = wall::stopwatch();
     match fedtune::runtime::Runtime::new("artifacts") {
         Ok(mut rt) => {
             rt.load_model("mlp-s").unwrap();
@@ -174,6 +242,35 @@ fn main() {
             println!("  → eval_step: {:.2} ms", s.mean_ms());
         }
         Err(_) => println!("(no artifacts/: skipping PJRT microbenches — run `make artifacts`)"),
+    }
+    wall::lap(names::BENCH_PJRT, sw);
+
+    if let Some(path) = out_path() {
+        let benches = Json::from_pairs(
+            report.iter().map(|(name, s)| (*name, sample_json(s))).collect(),
+        );
+        let phases = Json::from_pairs(
+            [
+                names::BENCH_AGGREGATION,
+                names::BENCH_CONTROLLER,
+                names::BENCH_SELECTION,
+                names::BENCH_SIM,
+                names::BENCH_COST,
+                names::BENCH_JSON,
+                names::BENCH_PJRT,
+            ]
+            .iter()
+            .map(|&p| (p, wall::timer_secs(p).into()))
+            .collect(),
+        );
+        let out = Json::from_pairs(vec![
+            ("schema", BENCH_SCHEMA.into()),
+            ("benches", benches),
+            ("phases", phases),
+        ]);
+        std::fs::write(&path, out.pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing bench report {path}: {e}"));
+        println!("bench report written to {path}");
     }
 
     println!("\nperf_micro PASSED all targets");

@@ -16,6 +16,7 @@
 //!   (Paper §5.2 uses η = 0.1, β₁ = 0, τ = 1e-3.)
 
 use crate::model::ParamVec;
+use crate::obs::{names, wall};
 
 /// Which aggregation algorithm a run uses.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -89,6 +90,10 @@ impl Aggregator {
     /// Panics on empty updates (the coordinator never submits an empty
     /// round) and on layout mismatches (programmer error).
     pub fn aggregate(&mut self, global: &mut ParamVec, updates: &[ClientUpdate]) {
+        wall::time(names::AGG_AGGREGATE, || self.aggregate_inner(global, updates))
+    }
+
+    fn aggregate_inner(&mut self, global: &mut ParamVec, updates: &[ClientUpdate]) {
         assert!(!updates.is_empty(), "aggregate with no updates");
         let total_n: usize = updates.iter().map(|u| u.n).sum();
         assert!(total_n > 0, "aggregate with zero total data points");

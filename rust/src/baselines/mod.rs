@@ -14,6 +14,7 @@ use crate::coordinator::{RunResult, Server, ServerConfig};
 use crate::engine::sim::{SimEngine, SimParams};
 use crate::fedtune::tuner::{Tuner, TunerInit};
 use crate::model::ladder;
+use crate::obs::FlightRecorder;
 use crate::overhead::CostModel;
 
 /// Build the sim engine for a config (ladder model → ceiling + costs,
@@ -64,6 +65,18 @@ pub fn run_sim_with_cost_model(
     seed: u64,
     cost_model: CostModel,
 ) -> Result<RunResult> {
+    run_sim_traced(cfg, seed, cost_model, None)
+}
+
+/// [`run_sim_with_cost_model`] with an optional flight recorder attached
+/// to the coordinator. Recording is write-only sim-time telemetry, so
+/// the returned [`RunResult`] is bitwise identical either way.
+pub fn run_sim_traced(
+    cfg: &ExperimentConfig,
+    seed: u64,
+    cost_model: CostModel,
+    recorder: Option<&mut FlightRecorder>,
+) -> Result<RunResult> {
     assert_eq!(cfg.engine, EngineKind::Sim, "run_sim needs a sim config");
     let mut engine = sim_engine_for(cfg, seed)?;
     let num_clients = crate::engine::FlEngine::num_clients(&engine);
@@ -75,7 +88,11 @@ pub fn run_sim_with_cost_model(
         seed,
     };
     let tuner = tuner_for(cfg, num_clients, seed)?;
-    Server::new(&mut engine, server_cfg, tuner).run()
+    let server = Server::new(&mut engine, server_cfg, tuner);
+    match recorder {
+        Some(rec) => server.with_recorder(rec).run(),
+        None => server.run(),
+    }
 }
 
 #[cfg(test)]

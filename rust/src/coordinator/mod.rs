@@ -17,6 +17,7 @@ use anyhow::Result;
 use crate::engine::FlEngine;
 use crate::fedtune::tuner::Tuner;
 use crate::fedtune::Decision;
+use crate::obs::recorder::{self, FlightRecorder, RoundObservation};
 use crate::overhead::{CostModel, Costs};
 use crate::system::ClientSystemProfile;
 use crate::trace::{RoundRecord, Trace};
@@ -67,6 +68,10 @@ pub struct Server<'e, E: FlEngine> {
     cfg: ServerConfig,
     tuner: Box<dyn Tuner>,
     rng: Rng,
+    /// Optional deterministic flight recorder (`obs::recorder`). Write-
+    /// only: the run never reads it back, so recording cannot perturb
+    /// selection, tuning, or results.
+    recorder: Option<&'e mut FlightRecorder>,
 }
 
 impl<'e, E: FlEngine> Server<'e, E> {
@@ -74,7 +79,14 @@ impl<'e, E: FlEngine> Server<'e, E> {
         // Dedicated coordinator stream (see `util::rng::streams`):
         // selection draws never touch the engine's untagged stream.
         let rng = Rng::new(cfg.seed ^ streams::COORDINATOR);
-        Server { engine, cfg, tuner, rng }
+        Server { engine, cfg, tuner, rng, recorder: None }
+    }
+
+    /// Attach a flight recorder; every round emits a `round` event (plus
+    /// a `decision` event when the tuner fires) on sim-time only.
+    pub fn with_recorder(mut self, rec: &'e mut FlightRecorder) -> Server<'e, E> {
+        self.recorder = Some(rec);
+        self
     }
 
     /// Drive rounds until the target accuracy or the round cap.
@@ -130,7 +142,24 @@ impl<'e, E: FlEngine> Server<'e, E> {
                 costs: cum,
                 fedtune_activated: decision.is_some(),
             });
-            if let Some(d) = decision {
+            if let Some(rec) = self.recorder.as_deref_mut() {
+                rec.push(recorder::round_event(&RoundObservation {
+                    round,
+                    m,
+                    e,
+                    participants: &participants,
+                    rows: &rows,
+                    accuracy,
+                    train_loss: outcome.train_loss,
+                    cum_costs: &cum,
+                    update_norm: outcome.update_norm,
+                    activated: decision.is_some(),
+                }));
+            }
+            if let Some(d) = &decision {
+                if let Some(rec) = self.recorder.as_deref_mut() {
+                    rec.push(recorder::decision_event(d));
+                }
                 crate::log_debug!(
                     "round {round}: tuner → M={} E={} (ΔM={:.3}, ΔE={:.3}, I={:.3})",
                     d.m, d.e, d.delta_m, d.delta_e, d.comparison
@@ -277,6 +306,37 @@ mod tests {
             b.costs.comp_t,
             a.costs.comp_t
         );
+    }
+
+    #[test]
+    fn flight_recorder_is_deterministic_and_neutral() {
+        let profile = DatasetProfile::speech();
+        let run_traced = |record: bool| {
+            let mut eng = SimEngine::new(&profile, SimParams::default(), 11);
+            let mut rec = FlightRecorder::new();
+            let server = Server::new(&mut eng, cfg(0.8, 5000), fixed(20, 20.0));
+            let server =
+                if record { server.with_recorder(&mut rec) } else { server };
+            let r = server.run().unwrap();
+            (r, rec.take_events())
+        };
+        let (r1, ev1) = run_traced(true);
+        let (r2, ev2) = run_traced(true);
+        let (r3, ev3) = run_traced(false);
+        // One round event per round, byte-identical across repeats.
+        assert_eq!(ev1.len(), r1.rounds);
+        assert_eq!(ev1, ev2);
+        // Recording never changes the run itself.
+        assert_eq!(r1.rounds, r3.rounds);
+        assert_eq!(r1.final_accuracy, r3.final_accuracy);
+        assert!(ev3.is_empty());
+        let first = &ev1[0];
+        assert_eq!(first.get("ev").unwrap().as_str(), Some("round"));
+        assert_eq!(
+            first.get("participants").unwrap().as_arr().unwrap().len(),
+            20
+        );
+        assert_eq!(first.get("cost_rows").unwrap().as_arr().unwrap().len(), 20);
     }
 
     #[test]

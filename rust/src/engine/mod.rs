@@ -25,6 +25,11 @@ pub struct RoundOutcome {
     pub accuracy: f64,
     /// Mean training loss across the round's local steps (diagnostic).
     pub train_loss: f64,
+    /// L2 norm of the aggregated global-model update this round, when
+    /// the engine materializes parameters (the real engine does; the
+    /// simulator has no parameter vector and reports `None`). Surfaced
+    /// by the flight recorder, never read by the control loop.
+    pub update_norm: Option<f64>,
 }
 
 /// One federated-learning execution backend.

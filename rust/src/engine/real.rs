@@ -15,6 +15,7 @@ use anyhow::{Context, Result};
 use crate::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use crate::data::FederatedDataset;
 use crate::model::ParamVec;
+use crate::obs::{names, wall};
 use crate::runtime::Runtime;
 use crate::system::{ClientSystemProfile, SystemSpec};
 use crate::util::rng::{Rng, streams};
@@ -105,6 +106,16 @@ impl RealEngine {
     /// Local training for one client: E passes of mini-batch SGD.
     /// Returns (trained params, steps taken, mean loss).
     fn train_client(
+        &mut self,
+        client_idx: usize,
+        e: f64,
+    ) -> Result<(ParamVec, usize, f64)> {
+        wall::time(names::ENGINE_REAL_TRAIN_CLIENT, || {
+            self.train_client_inner(client_idx, e)
+        })
+    }
+
+    fn train_client_inner(
         &mut self,
         client_idx: usize,
         e: f64,
@@ -321,7 +332,9 @@ impl FlEngine for RealEngine {
             loss_sum += loss;
             updates.push(ClientUpdate { params, n: self.dataset.sizes[k], tau });
         }
+        let before = self.global.clone();
         self.aggregator.aggregate(&mut self.global, &updates);
+        let update_norm = Some(self.global.delta(&before).l2_norm());
         anyhow::ensure!(
             self.global.all_finite(),
             "global model diverged to non-finite values (round {})",
@@ -332,6 +345,7 @@ impl FlEngine for RealEngine {
         Ok(RoundOutcome {
             accuracy,
             train_loss: loss_sum / participants.len() as f64,
+            update_norm,
         })
     }
 }

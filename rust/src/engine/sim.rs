@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use crate::data::{ClientSizes, DatasetProfile};
+use crate::obs::{names, wall};
 use crate::system::{ClientSystemProfile, SystemSpec};
 use crate::util::rng::Rng;
 
@@ -175,22 +176,25 @@ impl FlEngine for SimEngine {
     }
 
     fn run_round(&mut self, participants: &[usize], e: f64) -> Result<RoundOutcome> {
-        anyhow::ensure!(!participants.is_empty(), "round with no participants");
-        anyhow::ensure!(e > 0.0, "non-positive pass count {e}");
-        let m = participants.len();
-        let rate = self.params.rate(m, e);
-        let jitter = self.rng.normal(1.0, self.params.rate_noise).max(0.0);
-        self.accuracy += rate * jitter * (self.params.a_max - self.accuracy);
-        self.accuracy = self.accuracy.clamp(0.0, self.params.a_max);
-        self.rounds_run += 1;
+        wall::time(names::ENGINE_SIM_ROUND, || {
+            anyhow::ensure!(!participants.is_empty(), "round with no participants");
+            anyhow::ensure!(e > 0.0, "non-positive pass count {e}");
+            let m = participants.len();
+            let rate = self.params.rate(m, e);
+            let jitter = self.rng.normal(1.0, self.params.rate_noise).max(0.0);
+            self.accuracy += rate * jitter * (self.params.a_max - self.accuracy);
+            self.accuracy = self.accuracy.clamp(0.0, self.params.a_max);
+            self.rounds_run += 1;
 
-        let measured = (self.accuracy
-            + self.rng.normal(0.0, self.params.measure_noise))
-        .clamp(0.0, 1.0);
-        // Loss proxy: CE-ish, monotone in the accuracy gap.
-        let loss = -(measured.max(1e-3) / self.params.a_max).min(0.999).ln()
-            + 0.05;
-        Ok(RoundOutcome { accuracy: measured, train_loss: loss })
+            let measured = (self.accuracy
+                + self.rng.normal(0.0, self.params.measure_noise))
+            .clamp(0.0, 1.0);
+            // Loss proxy: CE-ish, monotone in the accuracy gap.
+            let loss = -(measured.max(1e-3) / self.params.a_max).min(0.999).ln()
+                + 0.05;
+            // No parameter vector in the simulator ⇒ no update norm.
+            Ok(RoundOutcome { accuracy: measured, train_loss: loss, update_norm: None })
+        })
     }
 }
 

@@ -212,6 +212,7 @@ pub struct Grid {
     pub(crate) cache_dir: Option<PathBuf>,
     pub(crate) no_cache: bool,
     pub(crate) resume: bool,
+    pub(crate) trace_out: Option<PathBuf>,
     pub(crate) base: ExperimentConfig,
 }
 
@@ -236,6 +237,7 @@ impl Grid {
             cache_dir: None,
             no_cache: false,
             resume: false,
+            trace_out: None,
             base,
         }
     }
@@ -384,6 +386,19 @@ impl Grid {
     /// dir.
     pub fn resume(mut self, on: bool) -> Grid {
         self.resume = on;
+        self
+    }
+
+    /// Write a deterministic flight-recorder trace of this sweep to
+    /// `path` as `fedtune.obs.trace/v1` JSONL (see [`crate::obs`]).
+    /// Telemetry is write-only, so the sweep artifact is byte-identical
+    /// with or without it, and repeating a sweep against the same cache
+    /// state reproduces the trace byte-for-byte. The trace *does* depend
+    /// on cache state (cache-served runs emit lookup `hit` events instead
+    /// of per-round events), and the path is deliberately not part of the
+    /// sweep fingerprint.
+    pub fn trace_out(mut self, path: impl Into<PathBuf>) -> Grid {
+        self.trace_out = Some(path.into());
         self
     }
 

@@ -17,6 +17,11 @@
 //! [`crate::store::RunStore`] and finished pairs checkpoint into a
 //! [`crate::store::SweepJournal`] as they complete, so repeated sweeps
 //! are near-free and interrupted ones resume.
+//!
+//! Under [`Grid::trace_out`] the sweep additionally writes a
+//! deterministic flight-recorder trace ([`crate::obs`]): per-run event
+//! blocks are collected on the workers but assembled **after the join in
+//! plan order**, so the trace is byte-identical for any worker count.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -25,7 +30,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::baselines;
 use crate::config::ExperimentConfig;
+use crate::coordinator::StopReason;
 use crate::fedtune::tuner::TunerSpec;
+use crate::obs::recorder::{self, FlightRecorder};
 use crate::overhead::{CostModel, Costs};
 use crate::store::{run_fingerprint, Fingerprint, RunStore, SweepJournal};
 use crate::trace::Trace;
@@ -292,6 +299,22 @@ struct Job {
     label: String,
 }
 
+/// A worker's finished run: the record plus its flight-recorder event
+/// block (`run_start`, per-round events, `run_finish`). Empty when the
+/// sweep is not tracing.
+struct Done {
+    rec: RunRecord,
+    events: Vec<Json>,
+}
+
+/// [`StopReason`] in the trace's snake-case vocabulary.
+fn stop_str(stop: StopReason) -> &'static str {
+    match stop {
+        StopReason::TargetReached => "target_reached",
+        StopReason::MaxRounds => "max_rounds",
+    }
+}
+
 /// One (cell, seed) slot of the artifact, joined to its run keys.
 struct Pair {
     ci: usize,
@@ -458,6 +481,7 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
     let Plan { cells, jobs, pairs, sweep } = plan(grid)?;
     let n_seeds = grid.seeds.len();
     let keep_traces = grid.keep_traces;
+    let tracing = grid.trace_out.is_some();
 
     let caching = grid.cache_dir.is_some() && !grid.no_cache;
     let mut store = match (&grid.cache_dir, caching) {
@@ -488,6 +512,9 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
         }
         journal = Some(jn);
     }
+    // Trace bookkeeping: how each pair was served, snapshotted per tier.
+    let restored = finished.len();
+    let journaled: HashSet<(usize, u64)> = finished.keys().copied().collect();
 
     // Store lookups for every key an unfinished pair still needs.
     let mut needed: HashSet<Fingerprint> = HashSet::new();
@@ -502,11 +529,16 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
     }
     let mut have: HashMap<Fingerprint, RunRecord> = HashMap::new();
     let mut cache_hits = 0usize;
+    let mut lookup_events: Vec<Json> = Vec::new();
     for job in &jobs {
         if !needed.contains(&job.fp) {
             continue;
         }
-        if let Some(rec) = store.get(&job.fp, keep_traces) {
+        let (rec, outcome) = store.get_classified(&job.fp, keep_traces);
+        if tracing {
+            lookup_events.push(recorder::lookup(&job.fp.hex(), outcome.as_str()));
+        }
+        if let Some(rec) = rec {
             have.insert(job.fp, rec);
             cache_hits += 1;
         }
@@ -534,6 +566,7 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
     // Pairs fully served by cache hits finalize (and checkpoint) now.
     // The journal is an optimization, so append failures degrade to a
     // warning here exactly as they do on the executed path below.
+    let mut cache_served: HashSet<(usize, u64)> = HashSet::new();
     for pi in 0..pairs.len() {
         let p = &pairs[pi];
         if remaining[pi] == 0 && !finished.contains_key(&(p.ci, p.seed)) {
@@ -543,6 +576,7 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
                     crate::log_warn!("sweep journal append failed: {err:#}");
                 }
             }
+            cache_served.insert((p.ci, p.seed));
             finished.insert((p.ci, p.seed), rec);
         }
     }
@@ -561,12 +595,30 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
     let outcomes = pool::scope_map_each(
         run_jobs,
         grid.workers,
-        |_, job: Job| -> Result<RunRecord> {
+        |_, job: Job| -> Result<Done> {
             // Every run — fixed or tuned, integral or fractional E — goes
             // through the one coordinator loop (`Server::run`).
-            let single =
-                baselines::run_sim_with_cost_model(&job.cfg, job.seed, job.cost_model)?;
-            Ok(RunRecord {
+            let mut flight = if tracing { Some(FlightRecorder::new()) } else { None };
+            let mut events: Vec<Json> = Vec::new();
+            if tracing {
+                events.push(recorder::run_start(&job.fp.hex(), &job.label, job.seed));
+            }
+            let single = baselines::run_sim_traced(
+                &job.cfg,
+                job.seed,
+                job.cost_model,
+                flight.as_mut(),
+            )?;
+            if let Some(f) = flight.take() {
+                events.extend(f.take_events());
+                events.push(recorder::run_finish(
+                    &job.fp.hex(),
+                    single.rounds,
+                    single.final_accuracy,
+                    stop_str(single.stop),
+                ));
+            }
+            let rec = RunRecord {
                 seed: job.seed,
                 rounds: single.rounds,
                 final_accuracy: single.final_accuracy,
@@ -576,12 +628,13 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
                 improvement_pct: None,
                 baseline_costs: None,
                 trace: if keep_traces { Some(single.trace) } else { None },
-            })
+            };
+            Ok(Done { rec, events })
         },
         |i, res| {
             // Collector-thread hook, in completion order.
             let rec = match res {
-                Ok(Ok(r)) => r,
+                Ok(Ok(d)) => &d.rec,
                 _ => return, // errors surface after the join below
             };
             let fp = keys[i];
@@ -621,10 +674,13 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
             }
         },
     );
+    let mut run_blocks: Vec<Vec<Json>> = Vec::with_capacity(outcomes.len());
     for (i, out) in outcomes.into_iter().enumerate() {
-        out.map_err(|panic| anyhow!("{panic}"))
-            .and_then(|r| r.map(|_| ()))
+        let done = out
+            .map_err(|panic| anyhow!("{panic}"))
+            .and_then(|r| r)
             .with_context(|| contexts[i].clone())?;
+        run_blocks.push(done.events);
     }
 
     // Deterministic join: pairs in artifact order, independent of which
@@ -662,6 +718,39 @@ pub(crate) fn execute(grid: &Grid) -> Result<GridResult> {
         let runs = flat[ci * n_seeds..(ci + 1) * n_seeds].to_vec();
         cell_results.push(aggregate_cell(cell, runs));
     }
+
+    // Flight-recorder assembly: header → journal replay → store lookups
+    // (job plan order) → executed-run blocks (job plan order) → per-cell
+    // pair provenance → sweep summary. Everything here is derived from
+    // plan-ordered collections, never from completion order.
+    if let Some(path) = &grid.trace_out {
+        let mut events: Vec<Json> = Vec::new();
+        events.push(recorder::header(&sweep.hex()));
+        if caching {
+            events.push(recorder::journal_resume(restored, pairs.len()));
+        }
+        events.append(&mut lookup_events);
+        for mut block in run_blocks {
+            events.append(&mut block);
+        }
+        for (ci, cr) in cell_results.iter().enumerate() {
+            events.push(recorder::cell_start(ci, &cr.cell.label()));
+            for &seed in &grid.seeds {
+                let source = if journaled.contains(&(ci, seed)) {
+                    "journal"
+                } else if cache_served.contains(&(ci, seed)) {
+                    "cache"
+                } else {
+                    "executed"
+                };
+                events.push(recorder::pair(ci, seed, source));
+            }
+            events.push(recorder::cell_finish(ci));
+        }
+        events.push(recorder::sweep_finish(executed_runs, cache_hits));
+        recorder::write_jsonl(path, &events)?;
+    }
+
     Ok(GridResult {
         seeds: grid.seeds.clone(),
         cells: cell_results,

@@ -42,7 +42,7 @@
 /// next to the store schema tags so cache-debugging output records
 /// which invariant checker vetted the build. Rule `schema-tag-drift`
 /// cross-checks this against the xtask binary's own version.
-pub const LINT_TOOL: &str = "fedtune-lint/v1";
+pub const LINT_TOOL: &str = "fedtune-lint/v2";
 
 pub mod util;
 
@@ -56,6 +56,7 @@ pub mod experiment;
 pub mod fedtune;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod overhead;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -18,14 +18,16 @@ use fedtune::coordinator::{Server, ServerConfig};
 use fedtune::data::FederatedDataset;
 use fedtune::engine::real::{RealEngine, RealEngineConfig};
 use fedtune::engine::FlEngine;
-use fedtune::experiment::Grid;
+use fedtune::experiment::{Grid, GridResult};
 use fedtune::fedtune::tuner::TunerSpec;
 use fedtune::model::{ladder, Manifest, ParamVec};
+use fedtune::obs::{names, wall};
 use fedtune::overhead::{CostModel, Preference};
 use fedtune::coordinator::selection::Selector;
 use fedtune::store::RunStore;
 use fedtune::system::SystemSpec;
 use fedtune::util::cli::Cli;
+use fedtune::util::json::Json;
 use fedtune::util::logging;
 use fedtune::util::rng::Rng;
 
@@ -61,10 +63,12 @@ fn print_help() {
          run            execute one experiment (see `run --help`)\n  \
          grid           tuner policy vs fixed baseline over the 15-preference grid\n                 \
          (--tuner swaps the policy; --cache-dir caches runs; --resume\n                 \
-         continues a killed sweep)\n  \
+         continues a killed sweep; --trace-out records a flight-recorder\n                 \
+         trace; --metrics-out captures wall-clock metrics)\n  \
          check-runtime  smoke-test the AOT artifact → PJRT path\n  \
          info           print models / datasets / artifact inventory\n                 \
-         (--cache-dir adds run-cache statistics)\n"
+         (--cache-dir adds run-cache statistics; --metrics lists the\n                 \
+         wall-clock metric registry)\n"
     );
 }
 
@@ -96,7 +100,11 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("seed", "1", "random seed")
         .opt("scale", "1.0", "client-population scale factor (real engine)")
         .opt("artifacts", "artifacts", "artifact directory (real engine)")
-        .opt("trace-out", "", "write per-round trace CSV here")
+        .opt(
+            "trace-out",
+            "",
+            "write a trace here (run: per-round CSV; grid: flight-recorder JSONL)",
+        )
 }
 
 fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
@@ -245,6 +253,12 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
             "continue an interrupted sweep from its journal in --cache-dir \
              (artifact stays byte-identical to an uninterrupted run)",
         )
+        .opt(
+            "metrics-out",
+            "",
+            "enable the wall-clock metrics plane, write its JSON snapshot here \
+             and print an end-of-sweep summary line",
+        )
         .parse(args)
         .map_err(anyhow::Error::msg)?;
     let cfg = parse_config(&cli)?;
@@ -282,7 +296,15 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
     if !cache_dir.is_empty() {
         grid = grid.cache_dir(cache_dir.as_str());
     }
-    let result = grid.run()?;
+    let trace_out = cli.get_str("trace-out");
+    if !trace_out.is_empty() {
+        grid = grid.trace_out(trace_out.as_str());
+    }
+    let metrics_out = cli.get_str("metrics-out");
+    if !metrics_out.is_empty() {
+        wall::enable();
+    }
+    let result = wall::time(names::SWEEP, || grid.run())?;
 
     println!(
         "{:<22} {:>12} {:>12} {:>12} {:>14} {:>9} {:>9} {:>10}",
@@ -308,12 +330,57 @@ fn cmd_grid(args: Vec<String>) -> Result<()> {
         result.executed_runs, result.cache_hits
     );
 
+    if !trace_out.is_empty() {
+        println!("flight-recorder trace written to {trace_out}");
+    }
+    if !metrics_out.is_empty() {
+        print_sweep_summary(&result);
+        let mut text = Json::from_pairs(vec![
+            ("schema", fedtune::obs::METRICS_SCHEMA.into()),
+            ("metrics", wall::snapshot()),
+        ])
+        .pretty();
+        text.push('\n');
+        std::fs::write(&metrics_out, text)
+            .with_context(|| format!("writing metrics snapshot {metrics_out:?}"))?;
+        println!("wall-clock metrics written to {metrics_out}");
+    }
+
     let json_out = cli.get_str("json-out");
     if !json_out.is_empty() {
         result.write_json(&json_out)?;
         println!("grid artifact written to {json_out}");
     }
     Ok(())
+}
+
+/// The end-of-sweep one-liner: wall time, executed/cached split, pool
+/// utilization (busy ÷ span·workers, averaged over scopes) and the three
+/// largest timers. Wall-clock, so informational only.
+fn print_sweep_summary(result: &GridResult) {
+    let wall_s = wall::timer_secs(names::SWEEP);
+    let busy = wall::timer_secs(names::POOL_BUSY);
+    let span = wall::timer_secs(names::POOL_SPAN);
+    let scopes = wall::counter(names::POOL_SCOPES);
+    let workers = wall::counter(names::POOL_WORKERS);
+    let util = if span > 0.0 && scopes > 0 {
+        let mean_workers = workers as f64 / scopes as f64;
+        (busy / (span * mean_workers) * 100.0).min(100.0)
+    } else {
+        0.0
+    };
+    let top: Vec<String> = wall::top_timers(3)
+        .into_iter()
+        .map(|(name, secs, calls)| format!("{name} {secs:.2}s/{calls}"))
+        .collect();
+    println!(
+        "sweep: {:.2}s wall, {} executed / {} cached, pool {:.0}% utilized; top timers: {}",
+        wall_s,
+        result.executed_runs,
+        result.cache_hits,
+        util,
+        top.join(", ")
+    );
 }
 
 fn cmd_check_runtime(args: Vec<String>) -> Result<()> {
@@ -382,6 +449,7 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
     let cli = Cli::new("fedtune info", "inventory of models, datasets, artifacts")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("cache-dir", "", "also print run-cache statistics for this directory")
+        .flag("metrics", "list the registered wall-clock metric names (DESIGN.md §15)")
         .parse(args)
         .map_err(anyhow::Error::msg)?;
     println!("== static ladder (paper Table 2) ==");
@@ -415,15 +483,29 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
     }
     println!("\n== invariant checkers ==");
     println!("  {}  (cargo xtask lint; see DESIGN.md §14)", fedtune::LINT_TOOL);
+    println!(
+        "  {}  (flight-recorder trace schema; see DESIGN.md §15)",
+        fedtune::obs::TRACE_SCHEMA
+    );
+    if cli.get_flag("metrics") {
+        println!(
+            "\n== wall-clock metrics registry ({}) ==",
+            fedtune::obs::METRICS_SCHEMA
+        );
+        for &(name, kind, desc) in names::ALL {
+            println!("  {name:<26} {kind:<8} {desc}");
+        }
+    }
     let cache_dir = cli.get_str("cache-dir");
     if !cache_dir.is_empty() {
         match RunStore::stats(std::path::Path::new(&cache_dir)) {
             Ok(s) => {
                 println!("\n== run cache ({cache_dir}) ==");
                 println!(
-                    "  schema: {} / {}  (lint: {})",
+                    "  schema: {} / {}  (trace: {}, lint: {})",
                     fedtune::store::RUN_SCHEMA,
                     fedtune::store::JOURNAL_SCHEMA,
+                    fedtune::obs::TRACE_SCHEMA,
                     fedtune::LINT_TOOL
                 );
                 println!("  {:>6} run records   {:>12} bytes", s.run_entries, s.run_bytes);

@@ -1,7 +1,12 @@
-//! Process-wide metrics registry: named counters and timers.
+//! Metrics registry substrate: named counters and timers.
 //!
-//! Deliberately simple (atomics + a mutexed map); used by the coordinator
-//! and runtime to expose where time goes, and by `fedtune info --metrics`.
+//! Deliberately simple (atomics + a mutexed map). This module holds the
+//! passive data structures only; the process-wide instance lives in
+//! [`crate::obs::wall`], which gates recording behind an opt-in flag and
+//! feeds `fedtune grid --metrics-out` and `fedtune info --metrics`.
+//! Everything here is wall-clock and must never influence run results —
+//! that split is what keeps sweep artifacts byte-identical with and
+//! without telemetry (see `DESIGN.md` §15).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -96,6 +101,16 @@ impl Registry {
         out
     }
 
+    /// Fold an externally measured duration into the named timer (for
+    /// callers that cannot wrap the measured region in a closure, e.g.
+    /// stopwatches handed across threads).
+    pub fn record_nanos(&self, name: &str, nanos: u64) {
+        let mut timers = self.timers.lock().unwrap();
+        let e = timers.entry(name.to_string()).or_insert((0, 0));
+        e.0 += nanos;
+        e.1 += 1;
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
@@ -171,5 +186,37 @@ mod tests {
         let r = Registry::new();
         assert_eq!(r.counter("nope"), 0);
         assert_eq!(r.timer_secs("nope"), 0.0);
+    }
+
+    #[test]
+    fn concurrent_adds_do_not_lose_updates() {
+        let c = Counter::default();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.add(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8 * 1000 * 3);
+    }
+
+    #[test]
+    fn mean_micros_is_zero_without_calls() {
+        let t = Timer::default();
+        assert_eq!(t.calls(), 0);
+        assert_eq!(t.mean_micros(), 0.0);
+    }
+
+    #[test]
+    fn registry_record_nanos_matches_timer_semantics() {
+        let r = Registry::new();
+        r.record_nanos("lap", 2_000_000);
+        r.record_nanos("lap", 1_000_000);
+        assert!((r.timer_secs("lap") - 3e-3).abs() < 1e-12);
+        let snap = r.snapshot();
+        assert_eq!(snap.path(&["timers", "lap", "calls"]).unwrap().as_usize(), Some(2));
     }
 }

@@ -1,0 +1,34 @@
+//! Observability: a flight recorder and a metrics plane, kept strictly
+//! apart.
+//!
+//! Two planes with opposite contracts (`DESIGN.md` §15):
+//!
+//! * [`recorder`] — the **deterministic flight recorder**: structured
+//!   JSONL events on sim-time only (rounds, tuner decisions, store
+//!   lookups, cell assembly). Identical config + cache state ⇒
+//!   byte-identical trace. Safe to diff, safe to commit.
+//! * [`wall`] — the **wall-clock metrics plane**: opt-in counters and
+//!   timers over the hot paths (engines, aggregation, store I/O, worker
+//!   pool). Nondeterministic by nature, observational by contract: it
+//!   never feeds back into results, so enabling it cannot change a
+//!   single artifact byte.
+//!
+//! The fedtune-lint `nondeterminism-ban` enforces the split (only
+//! `obs/wall.rs` may touch `Instant`), and its `metric-name-registry`
+//! rule pins every metric name to a constant in [`names`].
+
+pub mod names;
+pub mod recorder;
+pub mod wall;
+
+pub use recorder::FlightRecorder;
+
+/// Schema tag stamped into every flight-recorder trace header. Bump the
+/// version whenever an event's name or field set changes — the
+/// `schema-tag-drift` lint cross-checks every occurrence of
+/// `fedtune.obs.trace/vN` in the tree against this constant.
+pub const TRACE_SCHEMA: &str = "fedtune.obs.trace/v1";
+
+/// Schema tag for the `--metrics-out` wall-clock dump. Advisory only:
+/// metrics are not a cache surface, so this tag is not lint-checked.
+pub const METRICS_SCHEMA: &str = "fedtune.obs.metrics/v1";

@@ -1,0 +1,107 @@
+//! Registry of every wall-clock metric name.
+//!
+//! The fedtune-lint `metric-name-registry` rule (a mirror of
+//! `rng-stream-registry`) requires every counter/timer published through
+//! [`crate::obs::wall`] to name itself with a constant defined here;
+//! ad-hoc string literals at call sites and duplicate names are lint
+//! errors. Keeping the catalogue in one place lets `fedtune info
+//! --metrics` print what each series measures without grepping.
+
+/// Timer: one simulated federated round (train + aggregate + eval).
+pub const ENGINE_SIM_ROUND: &str = "engine.sim.round";
+/// Timer: one client's local training pass in the real (PJRT) engine.
+pub const ENGINE_REAL_TRAIN_CLIENT: &str = "engine.real.train_client";
+/// Timer: one server-side aggregation over a round's client updates.
+pub const AGG_AGGREGATE: &str = "aggregation.aggregate";
+/// Timer: one run-record read from the on-disk store tier.
+pub const STORE_READ: &str = "store.disk.read";
+/// Timer: one run-record write (tmp file + atomic rename).
+pub const STORE_WRITE: &str = "store.disk.write";
+/// Counter: bytes read from the on-disk store tier.
+pub const STORE_READ_BYTES: &str = "store.disk.read.bytes";
+/// Counter: bytes written to the on-disk store tier.
+pub const STORE_WRITE_BYTES: &str = "store.disk.write.bytes";
+/// Counter: run-store lookups served from the memory or disk tier.
+pub const STORE_HITS: &str = "store.lookup.hits";
+/// Counter: run-store lookups that found nothing usable.
+pub const STORE_MISSES: &str = "store.lookup.misses";
+/// Timer: how long items sat queued before a pool worker picked them up.
+pub const POOL_QUEUE_WAIT: &str = "pool.queue_wait";
+/// Timer: per-item worker busy time inside the pool.
+pub const POOL_BUSY: &str = "pool.busy";
+/// Timer: wall span of one pool scope, first enqueue to join.
+pub const POOL_SPAN: &str = "pool.span";
+/// Counter: items submitted to the pool.
+pub const POOL_ITEMS: &str = "pool.items";
+/// Counter: pool scopes entered.
+pub const POOL_SCOPES: &str = "pool.scopes";
+/// Counter: workers requested across pool scopes (divide by
+/// [`POOL_SCOPES`] for the average width).
+pub const POOL_WORKERS: &str = "pool.workers";
+/// Timer: one whole grid sweep, measured CLI-side around `Grid::run`.
+pub const SWEEP: &str = "sweep.run";
+/// Timer: `perf_micro` aggregation phase.
+pub const BENCH_AGGREGATION: &str = "bench.aggregation";
+/// Timer: `perf_micro` FedTune controller phase.
+pub const BENCH_CONTROLLER: &str = "bench.controller";
+/// Timer: `perf_micro` client-selection phase.
+pub const BENCH_SELECTION: &str = "bench.selection";
+/// Timer: `perf_micro` sim-engine phase.
+pub const BENCH_SIM: &str = "bench.sim";
+/// Timer: `perf_micro` cost-accounting phase.
+pub const BENCH_COST: &str = "bench.cost";
+/// Timer: `perf_micro` JSON-substrate phase.
+pub const BENCH_JSON: &str = "bench.json";
+/// Timer: `perf_micro` PJRT execute phase.
+pub const BENCH_PJRT: &str = "bench.pjrt";
+
+/// The full catalogue as `(name, kind, what it measures)` rows — the
+/// table behind `fedtune info --metrics`.
+pub const ALL: &[(&str, &str, &str)] = &[
+    (ENGINE_SIM_ROUND, "timer", "one simulated federated round"),
+    (ENGINE_REAL_TRAIN_CLIENT, "timer", "one real-engine client training pass"),
+    (AGG_AGGREGATE, "timer", "one server aggregation step"),
+    (STORE_READ, "timer", "one run-record disk read"),
+    (STORE_WRITE, "timer", "one run-record disk write"),
+    (STORE_READ_BYTES, "counter", "bytes read from the run store"),
+    (STORE_WRITE_BYTES, "counter", "bytes written to the run store"),
+    (STORE_HITS, "counter", "run-store lookup hits"),
+    (STORE_MISSES, "counter", "run-store lookup misses"),
+    (POOL_QUEUE_WAIT, "timer", "pool queue wait per item"),
+    (POOL_BUSY, "timer", "pool worker busy time per item"),
+    (POOL_SPAN, "timer", "pool scope wall span"),
+    (POOL_ITEMS, "counter", "items submitted to the pool"),
+    (POOL_SCOPES, "counter", "pool scopes entered"),
+    (POOL_WORKERS, "counter", "workers requested across pool scopes"),
+    (SWEEP, "timer", "whole grid sweep"),
+    (BENCH_AGGREGATION, "timer", "perf_micro aggregation phase"),
+    (BENCH_CONTROLLER, "timer", "perf_micro controller phase"),
+    (BENCH_SELECTION, "timer", "perf_micro selection phase"),
+    (BENCH_SIM, "timer", "perf_micro sim-engine phase"),
+    (BENCH_COST, "timer", "perf_micro cost-model phase"),
+    (BENCH_JSON, "timer", "perf_micro JSON phase"),
+    (BENCH_PJRT, "timer", "perf_micro PJRT phase"),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::ALL;
+    use std::collections::BTreeSet;
+
+    /// The lint enforces this statically; the test keeps `ALL` honest too.
+    #[test]
+    fn catalogue_has_no_duplicate_names() {
+        let names: BTreeSet<&str> = ALL.iter().map(|(n, _, _)| *n).collect();
+        assert_eq!(names.len(), ALL.len(), "duplicate metric name in ALL");
+    }
+
+    #[test]
+    fn kinds_are_timer_or_counter() {
+        for (name, kind, _) in ALL {
+            assert!(
+                *kind == "timer" || *kind == "counter",
+                "{name}: bad kind {kind}"
+            );
+        }
+    }
+}

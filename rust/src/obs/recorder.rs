@@ -1,0 +1,292 @@
+//! Deterministic flight recorder: structured per-round / per-sweep
+//! events on sim-time only.
+//!
+//! Every event is a JSON object with an `"ev"` discriminator, emitted as
+//! one compact line of JSONL (sorted keys, shortest-round-trip floats),
+//! so two runs of the same config against the same cache state produce
+//! byte-identical traces. The recorder serializes values the coordinator
+//! and runner already computed — it never measures, allocates RNG
+//! streams, or feeds anything back into the run. Wall-clock telemetry
+//! lives in the separate [`crate::obs::wall`] plane.
+//!
+//! The event schema is tagged [`crate::obs::TRACE_SCHEMA`]; any change
+//! to event names or fields bumps that version (enforced by the
+//! fedtune-lint `schema-tag-drift` rule, see `DESIGN.md` §15).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::fedtune::Decision;
+use crate::overhead::Costs;
+use crate::system::ClientSystemProfile;
+use crate::util::json::Json;
+
+/// An in-memory ordered buffer of trace events.
+///
+/// The coordinator appends round/decision events while it runs; the
+/// experiment runner owns assembly order (header, lookups, runs, cells)
+/// so traces stay byte-identical regardless of worker count.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    events: Vec<Json>,
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    /// Append one event (a `{"ev": ..}` object from this module).
+    pub fn push(&mut self, event: Json) {
+        self.events.push(event);
+    }
+
+    pub fn events(&self) -> &[Json] {
+        &self.events
+    }
+
+    /// Consume the recorder, yielding its events in emission order.
+    pub fn take_events(self) -> Vec<Json> {
+        self.events
+    }
+}
+
+/// Everything the coordinator knows at the end of one round, borrowed —
+/// the recorder serializes, it never computes.
+pub struct RoundObservation<'a> {
+    /// 1-based round index.
+    pub round: usize,
+    /// Effective participant target M for this round.
+    pub m: usize,
+    /// Effective local-epoch setting E for this round.
+    pub e: f64,
+    /// Selected client ids, in selection order.
+    pub participants: &'a [usize],
+    /// Per-participant `(n_k, system profile)` rows, aligned with
+    /// `participants`.
+    pub rows: &'a [(usize, ClientSystemProfile)],
+    /// Global model accuracy measured after this round.
+    pub accuracy: f64,
+    /// Mean participant training loss for this round.
+    pub train_loss: f64,
+    /// Cumulative Eq. 2 cost terms through this round.
+    pub cum_costs: &'a Costs,
+    /// L2 norm of the aggregated global-model update, when the engine
+    /// reports one (the sim engine does not materialize parameters).
+    pub update_norm: Option<f64>,
+    /// Whether the tuner activated on this round's observation.
+    pub activated: bool,
+}
+
+fn costs_json(c: &Costs) -> Json {
+    Json::from_pairs(vec![
+        ("comp_t", c.comp_t.into()),
+        ("trans_t", c.trans_t.into()),
+        ("comp_l", c.comp_l.into()),
+        ("trans_l", c.trans_l.into()),
+    ])
+}
+
+/// Trace header: schema tag + the sweep fingerprint it belongs to.
+pub fn header(sweep_hex: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "header".into()),
+        ("schema", super::TRACE_SCHEMA.into()),
+        ("sweep", sweep_hex.into()),
+    ])
+}
+
+/// Journal replay restored `restored` of `total` pairs before execution.
+pub fn journal_resume(restored: usize, total: usize) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "journal_resume".into()),
+        ("restored", restored.into()),
+        ("total", total.into()),
+    ])
+}
+
+/// One run-store lookup: `outcome` is `"hit"`, `"miss"` or `"stale"`.
+pub fn lookup(fp_hex: &str, outcome: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "lookup".into()),
+        ("fp", fp_hex.into()),
+        ("outcome", outcome.into()),
+    ])
+}
+
+/// A run is about to execute (cache miss).
+pub fn run_start(fp_hex: &str, label: &str, seed: u64) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "run_start".into()),
+        ("fp", fp_hex.into()),
+        ("label", label.into()),
+        ("seed", seed.into()),
+    ])
+}
+
+/// One coordinator round, from a [`RoundObservation`].
+pub fn round_event(o: &RoundObservation<'_>) -> Json {
+    let cost_rows: Vec<Json> = o
+        .rows
+        .iter()
+        .map(|(n, sys)| {
+            Json::Arr(vec![
+                (*n).into(),
+                sys.compute_factor.into(),
+                sys.link_factor.into(),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("ev", "round".into()),
+        ("round", o.round.into()),
+        ("m", o.m.into()),
+        ("e", o.e.into()),
+        ("participants", o.participants.to_vec().into()),
+        ("cost_rows", Json::Arr(cost_rows)),
+        ("accuracy", o.accuracy.into()),
+        ("train_loss", o.train_loss.into()),
+        ("cum_costs", costs_json(o.cum_costs)),
+        ("update_norm", o.update_norm.map_or(Json::Null, Json::from)),
+        ("tuner_activated", o.activated.into()),
+    ])
+}
+
+/// A tuner decision fired on this round.
+pub fn decision_event(d: &Decision) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "decision".into()),
+        ("round", d.round.into()),
+        ("m", d.m.into()),
+        ("e", d.e.into()),
+        ("delta_m", d.delta_m.into()),
+        ("delta_e", d.delta_e.into()),
+        ("comparison", d.comparison.into()),
+        ("accuracy", d.accuracy.into()),
+    ])
+}
+
+/// An executed run finished; `stop` is the [`crate::coordinator::StopReason`]
+/// in snake case.
+pub fn run_finish(fp_hex: &str, rounds: usize, final_accuracy: f64, stop: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "run_finish".into()),
+        ("fp", fp_hex.into()),
+        ("rounds", rounds.into()),
+        ("final_accuracy", final_accuracy.into()),
+        ("stop", stop.into()),
+    ])
+}
+
+/// Assembly of one grid cell begins.
+pub fn cell_start(cell: usize, label: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "cell_start".into()),
+        ("cell", cell.into()),
+        ("label", label.into()),
+    ])
+}
+
+/// One `(cell, seed)` pair finalized; `source` is `"journal"`, `"cache"`
+/// or `"executed"`.
+pub fn pair(cell: usize, seed: u64, source: &str) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "pair".into()),
+        ("cell", cell.into()),
+        ("seed", seed.into()),
+        ("source", source.into()),
+    ])
+}
+
+/// Assembly of one grid cell is complete.
+pub fn cell_finish(cell: usize) -> Json {
+    Json::from_pairs(vec![("ev", "cell_finish".into()), ("cell", cell.into())])
+}
+
+/// Sweep summary: how many runs executed vs were served by the cache.
+pub fn sweep_finish(executed: usize, cache_hits: usize) -> Json {
+    Json::from_pairs(vec![
+        ("ev", "sweep_finish".into()),
+        ("executed", executed.into()),
+        ("cache_hits", cache_hits.into()),
+    ])
+}
+
+/// Write events as JSONL: one compact line per event, trailing newline.
+pub fn write_jsonl(path: &Path, events: &[Json]) -> Result<()> {
+    let mut text = String::new();
+    for ev in events {
+        text.push_str(&ev.dump());
+        text.push('\n');
+    }
+    std::fs::write(path, text)
+        .with_context(|| format!("writing flight-recorder trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_tagged_and_compact() {
+        let h = header("00ff");
+        assert_eq!(h.get("ev").unwrap().as_str(), Some("header"));
+        assert_eq!(h.get("schema").unwrap().as_str(), Some(super::super::TRACE_SCHEMA));
+        // Compact dump: single line, sorted keys.
+        let line = h.dump();
+        assert!(!line.contains('\n'));
+        assert!(line.find("\"ev\"").unwrap() < line.find("\"schema\"").unwrap());
+    }
+
+    #[test]
+    fn round_event_serializes_rows_aligned_with_participants() {
+        let rows = vec![
+            (120, ClientSystemProfile { compute_factor: 1.0, link_factor: 2.0 }),
+            (80, ClientSystemProfile { compute_factor: 0.5, link_factor: 1.0 }),
+        ];
+        let participants = vec![7usize, 3];
+        let cum = Costs { comp_t: 1.0, trans_t: 2.0, comp_l: 3.0, trans_l: 4.0 };
+        let ev = round_event(&RoundObservation {
+            round: 5,
+            m: 2,
+            e: 2.0,
+            participants: &participants,
+            rows: &rows,
+            accuracy: 0.5,
+            train_loss: 1.25,
+            cum_costs: &cum,
+            update_norm: None,
+            activated: true,
+        });
+        assert_eq!(ev.path(&["participants", "0"]).unwrap().as_usize(), Some(7));
+        assert_eq!(ev.path(&["cost_rows", "1", "0"]).unwrap().as_usize(), Some(80));
+        assert_eq!(ev.path(&["cum_costs", "trans_l"]).unwrap().as_f64(), Some(4.0));
+        assert_eq!(ev.get("update_norm"), Some(&Json::Null));
+        assert_eq!(ev.get("tuner_activated").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn recorder_preserves_emission_order() {
+        let mut rec = FlightRecorder::new();
+        rec.push(header("aa"));
+        rec.push(sweep_finish(1, 2));
+        assert_eq!(rec.events().len(), 2);
+        let evs = rec.take_events();
+        assert_eq!(evs[0].get("ev").unwrap().as_str(), Some("header"));
+        assert_eq!(evs[1].get("ev").unwrap().as_str(), Some("sweep_finish"));
+    }
+
+    #[test]
+    fn jsonl_writer_emits_one_line_per_event() {
+        let dir = std::env::temp_dir()
+            .join(format!("fedtune-obs-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        write_jsonl(&path, &[header("aa"), cell_finish(0)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.ends_with('\n'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,140 @@
+//! Wall-clock metrics plane: the nondeterministic half of `obs`.
+//!
+//! This is the only `obs` file exempt from the fedtune-lint
+//! `nondeterminism-ban` — every `Instant` the library reads for
+//! telemetry lives here, behind a process-wide opt-in. Disabled (the
+//! default) the hooks cost one relaxed atomic load; enabled they feed a
+//! global [`Registry`]. Measurements are observational only: no run
+//! result, selection, or cache key may depend on them, which is what
+//! keeps sweep artifacts and flight-recorder traces byte-identical with
+//! and without metrics collection.
+//!
+//! Names passed to [`time`], [`count`] and [`lap`] must be constants
+//! from [`crate::obs::names`] (lint rule `metric-name-registry`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::metrics::Registry;
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+/// Switch the metrics plane on. Process-wide and one-way: there is no
+/// disable, so a snapshot never covers a half-instrumented window.
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether the metrics plane is recording.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Run `f`, folding its wall time into the timer `name` when enabled.
+pub fn time<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    if !enabled() {
+        return f();
+    }
+    let t0 = Instant::now();
+    let out = f();
+    registry().record_nanos(name, t0.elapsed().as_nanos() as u64);
+    out
+}
+
+/// Add `v` to the counter `name` (no-op when disabled).
+pub fn count(name: &str, v: u64) {
+    if enabled() {
+        registry().count(name, v);
+    }
+}
+
+/// A started stopwatch, or an inert one when the plane is disabled.
+/// `Send`, so it can ride through the worker-pool queue with an item.
+#[derive(Debug)]
+pub struct Stopwatch(Option<Instant>);
+
+/// Start a stopwatch; pair with [`lap`] to record the elapsed time.
+pub fn stopwatch() -> Stopwatch {
+    Stopwatch(if enabled() { Some(Instant::now()) } else { None })
+}
+
+/// Record the time elapsed since `sw` was started under the timer
+/// `name`. Inert stopwatches record nothing.
+pub fn lap(name: &str, sw: Stopwatch) {
+    if let Some(t0) = sw.0 {
+        registry().record_nanos(name, t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Snapshot of the global registry (`{"counters": .., "timers": ..}`).
+pub fn snapshot() -> Json {
+    registry().snapshot()
+}
+
+/// Total seconds accumulated under the timer `name`.
+pub fn timer_secs(name: &str) -> f64 {
+    registry().timer_secs(name)
+}
+
+/// Current value of the counter `name`.
+pub fn counter(name: &str) -> u64 {
+    registry().counter(name)
+}
+
+/// The `n` largest timers by total seconds: `(name, secs, calls)`.
+pub fn top_timers(n: usize) -> Vec<(String, f64, u64)> {
+    let snap = snapshot();
+    let mut out: Vec<(String, f64, u64)> = Vec::new();
+    if let Some(timers) = snap.get("timers").and_then(Json::as_obj) {
+        for (name, t) in timers {
+            let secs = t.get("secs").and_then(Json::as_f64).unwrap_or(0.0);
+            let calls =
+                t.get("calls").and_then(Json::as_usize).unwrap_or(0) as u64;
+            out.push((name.clone(), secs, calls));
+        }
+    }
+    out.sort_by(|a, b| b.1.total_cmp(&a.1));
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `enable()` is process-global and one-way, so this single test
+    /// covers the before/after transition; other tests in this binary
+    /// may observe the enabled state but never depend on its absence.
+    #[test]
+    fn disabled_hooks_are_inert_then_enabled_hooks_record() {
+        // Inert stopwatches carry no instant before enable()... unless a
+        // parallel test already enabled the plane; both are valid ends.
+        let sw = stopwatch();
+        lap(crate::obs::names::BENCH_JSON, sw);
+
+        enable();
+        assert!(enabled());
+        let out = time(crate::obs::names::BENCH_COST, || 21 * 2);
+        assert_eq!(out, 42);
+        assert!(timer_secs(crate::obs::names::BENCH_COST) > 0.0);
+
+        count(crate::obs::names::POOL_ITEMS, 2);
+        assert!(counter(crate::obs::names::POOL_ITEMS) >= 2);
+
+        let sw = stopwatch();
+        lap(crate::obs::names::BENCH_SELECTION, sw);
+        let top = top_timers(10);
+        assert!(top.iter().any(|(n, _, _)| n == crate::obs::names::BENCH_COST));
+        // Sorted descending by total seconds.
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -36,4 +36,4 @@ pub mod run_store;
 
 pub use fingerprint::{run_fingerprint, run_identity, Fingerprint};
 pub use journal::{JournalEntry, SweepJournal, JOURNAL_SCHEMA};
-pub use run_store::{CacheStats, RunStore, RUN_SCHEMA};
+pub use run_store::{CacheStats, Lookup, RunStore, RUN_SCHEMA};

@@ -45,6 +45,7 @@ use anyhow::{Context, Result};
 
 use crate::experiment::runner::{run_record_from_json, run_record_json};
 use crate::experiment::RunRecord;
+use crate::obs::{names, wall};
 use crate::util::json::Json;
 
 use super::fingerprint::Fingerprint;
@@ -73,6 +74,30 @@ pub struct CacheStats {
     /// Journals whose header schema is not the current
     /// [`super::JOURNAL_SCHEMA`] — their sweeps cannot resume from them.
     pub stale_journals: usize,
+}
+
+/// How one [`RunStore::get_classified`] lookup resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup {
+    /// Served from the memory or disk tier.
+    Hit,
+    /// Nothing stored under the key.
+    Miss,
+    /// Something was stored but unusable: stale/wrong schema, corrupt
+    /// JSON, key mismatch, or a trace-demanding lookup over a trace-less
+    /// record. Counts as a miss; re-running the job heals the entry.
+    Stale,
+}
+
+impl Lookup {
+    /// Flight-recorder event spelling (`"hit"` / `"miss"` / `"stale"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Lookup::Hit => "hit",
+            Lookup::Miss => "miss",
+            Lookup::Stale => "stale",
+        }
+    }
 }
 
 /// In-memory + on-disk run cache keyed by [`Fingerprint`].
@@ -119,23 +144,46 @@ impl RunStore {
     /// kept its per-round trace — a trace-less record is then a miss so
     /// the runner re-executes (and upgrades) it.
     pub fn get(&mut self, fp: &Fingerprint, need_trace: bool) -> Option<RunRecord> {
+        self.get_classified(fp, need_trace).0
+    }
+
+    /// [`RunStore::get`], also classifying how the lookup resolved (the
+    /// flight recorder emits the [`Lookup`] per job). Accounting is
+    /// unchanged: a [`Lookup::Stale`] still counts as a miss.
+    pub fn get_classified(
+        &mut self,
+        fp: &Fingerprint,
+        need_trace: bool,
+    ) -> (Option<RunRecord>, Lookup) {
+        let mut found_unusable = false;
         if let Some(rec) = self.mem.get(fp) {
             if !need_trace || rec.trace.is_some() {
                 self.hits += 1;
-                return Some(rec.clone());
+                wall::count(names::STORE_HITS, 1);
+                return (Some(rec.clone()), Lookup::Hit);
             }
+            found_unusable = true;
         }
         if let Some(path) = self.file(fp) {
-            if let Some(rec) = read_record(&path, fp) {
-                if !need_trace || rec.trace.is_some() {
-                    self.hits += 1;
-                    self.mem.insert(*fp, rec.clone());
-                    return Some(rec);
+            if let Some(text) =
+                wall::time(names::STORE_READ, || fs::read_to_string(&path).ok())
+            {
+                wall::count(names::STORE_READ_BYTES, text.len() as u64);
+                found_unusable = true;
+                if let Some(rec) = parse_record(&text, fp) {
+                    if !need_trace || rec.trace.is_some() {
+                        self.hits += 1;
+                        wall::count(names::STORE_HITS, 1);
+                        self.mem.insert(*fp, rec.clone());
+                        return (Some(rec), Lookup::Hit);
+                    }
                 }
             }
         }
         self.misses += 1;
-        None
+        wall::count(names::STORE_MISSES, 1);
+        let outcome = if found_unusable { Lookup::Stale } else { Lookup::Miss };
+        (None, outcome)
     }
 
     /// Persist a finished run. Disk-backed stores write through (later
@@ -163,8 +211,10 @@ impl RunStore {
         text.push('\n');
         // Temp + rename: a killed process never leaves a torn record.
         let tmp = path.with_extension(format!("tmp{}", std::process::id()));
-        let ok = fs::write(&tmp, text.as_bytes())
-            .and_then(|_| fs::rename(&tmp, &path));
+        wall::count(names::STORE_WRITE_BYTES, text.len() as u64);
+        let ok = wall::time(names::STORE_WRITE, || {
+            fs::write(&tmp, text.as_bytes()).and_then(|_| fs::rename(&tmp, &path))
+        });
         if let Err(err) = ok {
             let _ = fs::remove_file(&tmp);
             crate::log_warn!("run cache write failed for {path:?}: {err}");
@@ -241,11 +291,10 @@ fn read_head(path: &Path, n: u64) -> Option<String> {
     Some(String::from_utf8_lossy(&buf).into_owned())
 }
 
-/// Parse one on-disk record; any defect (bad JSON, wrong schema, wrong
-/// key, missing fields) is a miss, not an error.
-fn read_record(path: &Path, fp: &Fingerprint) -> Option<RunRecord> {
-    let text = fs::read_to_string(path).ok()?;
-    let j = Json::parse(&text).ok()?;
+/// Parse one on-disk record's text; any defect (bad JSON, wrong schema,
+/// wrong key, missing fields) is a miss, not an error.
+fn parse_record(text: &str, fp: &Fingerprint) -> Option<RunRecord> {
+    let j = Json::parse(text).ok()?;
     if j.get("schema")?.as_str()? != RUN_SCHEMA {
         return None;
     }
@@ -361,6 +410,27 @@ mod tests {
         fs::write(&path, full.replace(&fp.hex(), &other.hex())).unwrap();
         let mut fresh = RunStore::open(&dir).unwrap();
         assert!(fresh.get(&fp, false).is_none(), "key mismatch must miss");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lookups_classify_hit_miss_stale() {
+        let dir = tmp_dir("classify");
+        let fp = Fingerprint::of_bytes(b"k5");
+        let mut s = RunStore::open(&dir).unwrap();
+        assert_eq!(s.get_classified(&fp, false).1, Lookup::Miss);
+        s.put(&fp, &record(9, false));
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert_eq!(fresh.get_classified(&fp, false).1, Lookup::Hit);
+        // Trace demanded but not kept: stored-but-unusable.
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert_eq!(fresh.get_classified(&fp, true).1, Lookup::Stale);
+        // Old schema tag: also stored-but-unusable.
+        let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace(RUN_SCHEMA, "fedtune.store.run/v1")).unwrap();
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert_eq!(fresh.get_classified(&fp, false).1, Lookup::Stale);
         let _ = fs::remove_dir_all(&dir);
     }
 

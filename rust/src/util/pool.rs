@@ -8,6 +8,8 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
+use crate::obs::{names, wall};
+
 /// Number of workers to use by default (cores, capped).
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -50,28 +52,42 @@ where
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
+    wall::count(names::POOL_SCOPES, 1);
+    wall::count(names::POOL_ITEMS, n as u64);
+    wall::count(names::POOL_WORKERS, workers as u64);
+    let span = wall::stopwatch();
     if workers == 1 {
         // Fast path, no threads: keeps single-worker runs fully deterministic
         // and avoids thread overhead for tiny rounds.
-        return items
+        let out = items
             .into_iter()
             .enumerate()
             .map(|(i, item)| {
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    f(i, item)
+                    wall::time(names::POOL_BUSY, || f(i, item))
                 }))
                 .map_err(|e| panic_msg(&e));
                 on_done(i, &r);
                 r
             })
             .collect();
+        wall::lap(names::POOL_SPAN, span);
+        return out;
     }
 
-    let queue: Arc<Mutex<Vec<(usize, T)>>> =
-        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
+    // Each queued item carries a stopwatch started at enqueue, so the
+    // pop side can report how long work sat waiting for a free worker.
+    let queue: Arc<Mutex<Vec<(usize, T, wall::Stopwatch)>>> = Arc::new(Mutex::new(
+        items
+            .into_iter()
+            .enumerate()
+            .rev()
+            .map(|(i, item)| (i, item, wall::stopwatch()))
+            .collect(),
+    ));
     let (tx, rx) = mpsc::channel::<(usize, Result<R, String>)>();
 
-    std::thread::scope(|s| {
+    let out = std::thread::scope(|s| {
         for _ in 0..workers {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
@@ -80,9 +96,12 @@ where
                 let next = queue.lock().unwrap().pop();
                 match next {
                     None => break,
-                    Some((i, item)) => {
+                    Some((i, item, waited)) => {
+                        wall::lap(names::POOL_QUEUE_WAIT, waited);
                         let r = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| f(i, item)),
+                            std::panic::AssertUnwindSafe(|| {
+                                wall::time(names::POOL_BUSY, || f(i, item))
+                            }),
                         )
                         .map_err(|e| panic_msg(&e));
                         if tx.send((i, r)).is_err() {
@@ -101,7 +120,9 @@ where
         out.into_iter()
             .map(|o| o.unwrap_or_else(|| Err("worker died before producing a result".into())))
             .collect()
-    })
+    });
+    wall::lap(names::POOL_SPAN, span);
+    out
 }
 
 fn panic_msg(e: &Box<dyn std::any::Any + Send>) -> String {

@@ -1,0 +1,188 @@
+//! Integration: the two observability planes (`fedtune::obs`).
+//!
+//! Acceptance contract of the subsystem: telemetry is *neutral* (a sweep
+//! artifact is byte-identical with and without it, even with the
+//! wall-clock metrics plane enabled), the flight-recorder trace is
+//! byte-deterministic (repeat runs and different worker counts reproduce
+//! it exactly), the trace reflects cache state faithfully (cold = miss +
+//! executed rounds, warm = hit + no rounds), and the metrics plane
+//! actually observes the hot paths it claims to instrument.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
+use fedtune::config::ExperimentConfig;
+use fedtune::experiment::Grid;
+use fedtune::model::{ParamSpec, ParamVec};
+use fedtune::obs::{names, wall, TRACE_SCHEMA};
+use fedtune::overhead::Preference;
+use fedtune::util::json::Json;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig { max_rounds: 300, ..ExperimentConfig::default() }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fedtune_obs_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn parse_lines(path: &PathBuf) -> Vec<Json> {
+    fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).expect("every trace line is valid JSON"))
+        .collect()
+}
+
+fn ev(e: &Json) -> &str {
+    e.get("ev").and_then(Json::as_str).expect("every event has an \"ev\" tag")
+}
+
+/// Acceptance: `--trace-out` (with the metrics plane enabled on top)
+/// changes nothing in the artifact, and the trace itself is
+/// byte-identical across repeats and worker counts.
+#[test]
+fn tracing_is_neutral_and_byte_deterministic() {
+    wall::enable(); // the nondeterministic plane must not perturb anything
+    let dir = tmp_dir("neutral");
+    let pref = Preference::new(0.0, 0.0, 1.0, 0.0).unwrap();
+    let make = |workers: usize| {
+        Grid::new(base())
+            .preferences(&[pref])
+            .seeds(&[1, 2])
+            .compare_baseline(true)
+            .workers(workers)
+    };
+    let plain = make(2).run().unwrap().to_json().dump();
+
+    let t1 = dir.join("w2_a.jsonl");
+    let traced = make(2).trace_out(&t1).run().unwrap().to_json().dump();
+    assert_eq!(plain, traced, "telemetry must not change the artifact");
+
+    let t2 = dir.join("w2_b.jsonl");
+    make(2).trace_out(&t2).run().unwrap();
+    assert_eq!(
+        fs::read(&t1).unwrap(),
+        fs::read(&t2).unwrap(),
+        "repeated run must reproduce the trace byte-for-byte"
+    );
+
+    let t3 = dir.join("w1.jsonl");
+    make(1).trace_out(&t3).run().unwrap();
+    assert_eq!(
+        fs::read(&t1).unwrap(),
+        fs::read(&t3).unwrap(),
+        "worker count must not change the trace"
+    );
+
+    // Composition: header first, one run block per unique job (2 tuned +
+    // 2 baselines), one pair per (cell, seed), summary last.
+    let evs = parse_lines(&t1);
+    assert_eq!(ev(&evs[0]), "header");
+    assert_eq!(evs[0].get("schema").and_then(Json::as_str), Some(TRACE_SCHEMA));
+    let count = |kind: &str| evs.iter().filter(|e| ev(e) == kind).count();
+    assert_eq!(count("run_start"), 4);
+    assert_eq!(count("run_finish"), 4);
+    assert_eq!(count("lookup"), 4, "every unique job is looked up once");
+    assert_eq!(count("cell_start"), 1);
+    assert_eq!(count("pair"), 2);
+    assert!(count("round") > 0, "executed runs must emit round events");
+    let round = evs.iter().find(|e| ev(e) == "round").unwrap();
+    assert!(
+        !round.get("participants").and_then(Json::as_arr).unwrap().is_empty(),
+        "round events carry the selected cohort"
+    );
+    assert!(round.path(&["cum_costs", "comp_t"]).is_some());
+    let last = evs.last().unwrap();
+    assert_eq!(ev(last), "sweep_finish");
+    assert_eq!(last.get("executed").and_then(Json::as_usize), Some(4));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The trace deliberately depends on cache state: a cold sweep records
+/// misses and per-round events, a warm one records hits, no rounds, and
+/// `cache` pair provenance.
+#[test]
+fn cache_state_shapes_the_trace_predictably() {
+    let dir = tmp_dir("cache");
+    let cache = dir.join("cache");
+    let make = |out: &PathBuf| {
+        Grid::new(base())
+            .seeds(&[5])
+            .cache_dir(cache.clone())
+            .trace_out(out)
+            .workers(2)
+    };
+
+    let cold_p = dir.join("cold.jsonl");
+    let cold = make(&cold_p).run().unwrap();
+    assert_eq!(cold.executed_runs, 1);
+    let evs = parse_lines(&cold_p);
+    assert_eq!(ev(&evs[1]), "journal_resume", "caching sweeps log journal replay");
+    assert_eq!(evs[1].get("restored").and_then(Json::as_usize), Some(0));
+    assert!(evs
+        .iter()
+        .any(|e| ev(e) == "lookup"
+            && e.get("outcome").and_then(Json::as_str) == Some("miss")));
+    assert!(evs.iter().any(|e| ev(e) == "run_start"));
+    assert!(evs.iter().any(|e| ev(e) == "round"));
+
+    let warm_p = dir.join("warm.jsonl");
+    let warm = make(&warm_p).run().unwrap();
+    assert_eq!(warm.executed_runs, 0);
+    let evs = parse_lines(&warm_p);
+    assert!(evs
+        .iter()
+        .any(|e| ev(e) == "lookup"
+            && e.get("outcome").and_then(Json::as_str) == Some("hit")));
+    assert!(
+        evs.iter().all(|e| ev(e) != "round" && ev(e) != "run_start"),
+        "cache-served sweeps execute (and therefore record) no runs"
+    );
+    assert!(evs
+        .iter()
+        .any(|e| ev(e) == "pair"
+            && e.get("source").and_then(Json::as_str) == Some("cache")));
+    let last = evs.last().unwrap();
+    assert_eq!(ev(last), "sweep_finish");
+    assert_eq!(last.get("executed").and_then(Json::as_usize), Some(0));
+    assert_eq!(last.get("cache_hits").and_then(Json::as_usize), Some(1));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The wall-clock plane observes the instrumented hot paths: sim engine
+/// rounds, pool busy time, store lookups, and (driven directly, since
+/// sim sweeps never materialize parameters) aggregation.
+#[test]
+fn metrics_plane_records_hot_paths() {
+    wall::enable();
+    Grid::new(base()).seeds(&[1]).workers(2).run().unwrap();
+    assert!(wall::timer_secs(names::ENGINE_SIM_ROUND) > 0.0);
+    assert!(wall::timer_secs(names::POOL_BUSY) > 0.0);
+    assert!(wall::counter(names::POOL_ITEMS) >= 1);
+    assert!(wall::counter(names::POOL_SCOPES) >= 1);
+    assert!(wall::counter(names::STORE_MISSES) >= 1);
+
+    let specs = [ParamSpec { name: "w".into(), shape: vec![4] }];
+    let mut global = ParamVec::zeros(&specs);
+    let update = ClientUpdate { params: ParamVec::zeros(&specs), n: 10, tau: 5 };
+    let calls = |snap: &Json| {
+        snap.path(&["timers", names::AGG_AGGREGATE, "calls"])
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+    };
+    let before = calls(&wall::snapshot());
+    Aggregator::new(AggregatorKind::FedAvg).aggregate(&mut global, &[update]);
+    let after = calls(&wall::snapshot());
+    assert_eq!(after, before + 1, "aggregate() must tick its timer");
+
+    // The snapshot is exactly what `--metrics-out` serializes.
+    let snap = wall::snapshot();
+    assert!(snap.path(&["timers", names::ENGINE_SIM_ROUND, "secs"]).is_some());
+    assert!(snap.path(&["counters", names::POOL_ITEMS]).is_some());
+}

@@ -16,8 +16,13 @@
 //! * **spec-help-sync** — each `SPEC_HELP` grammar string mentions every
 //!   parse arm's leading token in the adjacent parser.
 //! * **schema-tag-drift** — every `fedtune.store.*/vN` and
-//!   `fedtune.sweep/vN` tag agrees with `FINGERPRINT_VERSION`, and
-//!   `fedtune-lint/vN` tags agree with [`LINT_VERSION`].
+//!   `fedtune.sweep/vN` tag agrees with `FINGERPRINT_VERSION`,
+//!   `fedtune-lint/vN` tags agree with [`LINT_VERSION`], and every
+//!   `fedtune.obs.trace/vN` tag agrees with `obs::TRACE_SCHEMA`.
+//! * **metric-name-registry** — every metric name published through
+//!   `obs::wall` (`time`/`count`/`lap`) is a constant registered in
+//!   `obs::names`; ad-hoc string literals and duplicate names are
+//!   errors.
 //!
 //! Escape hatch: `// lint: allow(<rule>) -- <reason>` on (or directly
 //! above) the offending line. A directive without a reason is itself a
@@ -37,13 +42,14 @@ use lexer::{Kind, Token};
 
 /// Version tag of this lint pass. Must agree with the `LINT_TOOL`
 /// constant in the fedtune crate — rule `schema-tag-drift` checks that.
-pub const LINT_VERSION: &str = "fedtune-lint/v1";
+pub const LINT_VERSION: &str = "fedtune-lint/v2";
 
 pub const R_STREAMS: &str = "rng-stream-registry";
 pub const R_NONDET: &str = "nondeterminism-ban";
 pub const R_FINGERPRINT: &str = "fingerprint-completeness";
 pub const R_SPEC_HELP: &str = "spec-help-sync";
 pub const R_SCHEMA: &str = "schema-tag-drift";
+pub const R_METRICS: &str = "metric-name-registry";
 /// Malformed `lint: allow(...)` directives; never suppressible.
 pub const R_ALLOW: &str = "allow-syntax";
 
@@ -128,6 +134,7 @@ pub fn run(
     rule_fingerprint(&files, allowlist, &mut raw);
     rule_spec_help(&files, &mut raw);
     rule_schema_tags(&files, lint_version, &mut raw);
+    rule_metric_names(&files, &mut raw);
 
     let violations = raw
         .into_iter()
@@ -348,11 +355,16 @@ fn rule_rng_streams(files: &[SrcFile], out: &mut Vec<Violation>) {
 
 /// Harness modules that legitimately touch clocks/environment: the CLI
 /// substrate, logging (timestamps, FEDTUNE_LOG), the PJRT runtime and
-/// the perf metrics layer (both *measure* wall time; neither feeds run
-/// results, which are keyed purely on config + seed).
+/// the wall-clock metrics plane — the `metrics` substrate plus
+/// `obs/wall.rs`, the single file allowed to read `Instant` for
+/// telemetry (all of them *measure* wall time; none feeds run results,
+/// which are keyed purely on config + seed). The flight recorder
+/// (`obs/recorder.rs`) is deliberately NOT exempt: its trace must stay
+/// deterministic.
 fn nondet_exempt(rel: &str) -> bool {
     rel == "util/cli.rs"
         || rel == "util/logging.rs"
+        || rel == "obs/wall.rs"
         || rel.starts_with("runtime/")
         || rel.starts_with("metrics/")
 }
@@ -872,6 +884,28 @@ fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violati
         .rfind('v')
         .and_then(|p| digits_after(lint_version, p + 1));
 
+    // Flight-recorder trace schema: the registered version lives in the
+    // `TRACE_SCHEMA` constant of obs/mod.rs (absent in fixture trees →
+    // the trace checks skip, like every other missing anchor).
+    let trace_n = find(files, "obs/mod.rs").and_then(|obs| {
+        let t = &obs.tokens;
+        for i in 0..t.len() {
+            if t[i].text != "TRACE_SCHEMA" {
+                continue;
+            }
+            let mut j = i + 1;
+            while j < t.len() && t[j].text != "=" && t[j].text != ";" {
+                j += 1;
+            }
+            if j < t.len() && t[j].text == "=" {
+                if let Some(s) = t.get(j + 1).filter(|x| x.kind == Kind::Str) {
+                    return s.text.rfind('v').and_then(|p| digits_after(&s.text, p + 1));
+                }
+            }
+        }
+        None
+    });
+
     for f in files {
         for tok in &f.tokens {
             if tok.kind != Kind::Str {
@@ -921,6 +955,24 @@ fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violati
                 }
             }
             let mut from = 0;
+            while let Some(p) = s[from..].find("fedtune.obs.trace/v") {
+                let at = from + p + "fedtune.obs.trace/v".len();
+                from = at;
+                if let (Some(n), Some(expect)) = (digits_after(s, at), trace_n) {
+                    if n != expect {
+                        out.push(Violation {
+                            file: f.rel.clone(),
+                            line: tok.line,
+                            rule: R_SCHEMA,
+                            message: format!(
+                                "trace schema tag \"fedtune.obs.trace/v{n}\" \
+                                 disagrees with obs::TRACE_SCHEMA (v{expect})"
+                            ),
+                        });
+                    }
+                }
+            }
+            let mut from = 0;
             while let Some(p) = s[from..].find("fedtune-lint/v") {
                 let at = from + p + "fedtune-lint/v".len();
                 from = at;
@@ -938,6 +990,125 @@ fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violati
                     }
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 6: metric-name-registry
+// ---------------------------------------------------------------------
+
+const METRIC_REGISTRY_FILE: &str = "obs/names.rs";
+
+/// `wall::<fn>(` heads whose first argument is a metric name.
+const METRIC_SINKS: &[&str] = &["time", "count", "lap"];
+
+/// Mirror of `rng-stream-registry` for the wall-clock metrics plane:
+/// harvest the `const NAME: &str = "series.name";` catalogue from
+/// `obs/names.rs` (duplicate series names are collisions), then require
+/// the first argument of every `wall::time`/`wall::count`/`wall::lap`
+/// call to be a registered constant — never an ad-hoc string literal,
+/// never an unregistered SCREAMING_CASE name.
+fn rule_metric_names(files: &[SrcFile], out: &mut Vec<Violation>) {
+    let Some(reg) = find(files, METRIC_REGISTRY_FILE) else { return };
+    let t = &reg.tokens;
+
+    let mut names: Vec<String> = Vec::new();
+    let mut values: Vec<(String, String)> = Vec::new(); // (series, const)
+    for i in 0..t.len() {
+        if t[i].text != "const" {
+            continue;
+        }
+        let Some(name_tok) = t.get(i + 1).filter(|x| x.kind == Kind::Ident) else {
+            continue;
+        };
+        let mut j = i + 2;
+        while j < t.len() && t[j].text != "=" && t[j].text != ";" {
+            j += 1;
+        }
+        if j >= t.len() || t[j].text != "=" {
+            continue;
+        }
+        let Some(val) = t.get(j + 1).filter(|x| x.kind == Kind::Str) else {
+            continue; // e.g. the `ALL` table — not a name constant
+        };
+        if let Some((_, first)) = values.iter().find(|(v, _)| *v == val.text) {
+            out.push(Violation {
+                file: reg.rel.clone(),
+                line: val.line,
+                rule: R_METRICS,
+                message: format!(
+                    "metric constant {} duplicates the series name {:?} already \
+                     registered as {} — two metrics would merge silently",
+                    name_tok.text, val.text, first
+                ),
+            });
+        } else {
+            values.push((val.text.clone(), name_tok.text.clone()));
+        }
+        names.push(name_tok.text.clone());
+    }
+
+    for f in files {
+        let t = &f.tokens;
+        let mut idx = 0;
+        while idx + 5 < t.len() {
+            let is_sink = seq(t, idx, &["wall", ":", ":"])
+                && t.get(idx + 3)
+                    .map(|x| METRIC_SINKS.contains(&x.text.as_str()))
+                    .unwrap_or(false)
+                && t.get(idx + 4).map(|x| x.text == "(").unwrap_or(false);
+            if !is_sink {
+                idx += 1;
+                continue;
+            }
+            let sink = t[idx + 3].text.clone();
+            // First argument, skipping reference/deref sigils.
+            let mut a = idx + 5;
+            while t.get(a).map(|x| x.text == "&" || x.text == "*").unwrap_or(false) {
+                a += 1;
+            }
+            match t.get(a) {
+                Some(arg) if arg.kind == Kind::Str => {
+                    out.push(Violation {
+                        file: f.rel.clone(),
+                        line: arg.line,
+                        rule: R_METRICS,
+                        message: format!(
+                            "ad-hoc metric name {:?} passed to wall::{sink} — \
+                             register it as a constant in obs::names",
+                            arg.text
+                        ),
+                    });
+                }
+                Some(arg) if arg.kind == Kind::Ident => {
+                    // Walk a `names::FOO`-style path to its last segment.
+                    let mut last = a;
+                    while t.get(last + 1).map(|x| x.text == ":").unwrap_or(false)
+                        && t.get(last + 2).map(|x| x.text == ":").unwrap_or(false)
+                        && t.get(last + 3)
+                            .map(|x| x.kind == Kind::Ident)
+                            .unwrap_or(false)
+                    {
+                        last += 3;
+                    }
+                    let tail = &t[last];
+                    if is_screaming(&tail.text) && !names.iter().any(|n| *n == tail.text)
+                    {
+                        out.push(Violation {
+                            file: f.rel.clone(),
+                            line: tail.line,
+                            rule: R_METRICS,
+                            message: format!(
+                                "metric constant {} is not registered in obs::names",
+                                tail.text
+                            ),
+                        });
+                    }
+                }
+                _ => {}
+            }
+            idx = a + 1;
         }
     }
 }

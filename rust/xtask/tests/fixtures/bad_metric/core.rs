@@ -1,0 +1,11 @@
+// Fixture violations: an ad-hoc string-literal metric name and an
+// unregistered SCREAMING_CASE constant, both fed to obs::wall sinks.
+// The CLEAN call is registered and must pass.
+
+pub const MYSTERY_METRIC: &str = "engine.mystery";
+
+pub fn record() {
+    wall::time("adhoc.name", || 1);
+    wall::count(MYSTERY_METRIC, 1);
+    wall::count(CLEAN, 1);
+}

@@ -1,0 +1,6 @@
+// Fixture violation: ROUND_AGAIN re-registers ROUND's series name, so
+// two metrics would merge into one series silently.
+
+pub const ROUND: &str = "engine.round";
+pub const ROUND_AGAIN: &str = "engine.round";
+pub const CLEAN: &str = "engine.clean";

@@ -1,0 +1,4 @@
+// Fixture violation: a consumer still writes the v1 trace tag after the
+// recorder's schema was bumped to v2 in obs/mod.rs.
+
+pub const STALE_TRACE_TAG: &str = "fedtune.obs.trace/v1";

@@ -1,0 +1,1 @@
+pub const TRACE_SCHEMA: &str = "fedtune.obs.trace/v2";

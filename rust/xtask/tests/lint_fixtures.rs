@@ -6,8 +6,8 @@
 use std::path::{Path, PathBuf};
 
 use xtask::{
-    run, Violation, LINT_VERSION, R_ALLOW, R_FINGERPRINT, R_NONDET, R_SCHEMA,
-    R_SPEC_HELP, R_STREAMS,
+    run, Violation, LINT_VERSION, R_ALLOW, R_FINGERPRINT, R_METRICS, R_NONDET,
+    R_SCHEMA, R_SPEC_HELP, R_STREAMS,
 };
 
 fn fixture(name: &str) -> PathBuf {
@@ -98,6 +98,22 @@ fn spec_help_drift_fails() {
 fn schema_tag_drift_fails() {
     let vs = lint("bad_schema_tag");
     assert_one(&vs, R_SCHEMA, "fedtune.store.journal/v3");
+    assert_eq!(vs.len(), 1, "{vs:#?}");
+}
+
+#[test]
+fn duplicate_and_adhoc_metric_names_fail() {
+    let vs = lint("bad_metric");
+    assert_one(&vs, R_METRICS, "ROUND_AGAIN");
+    assert_one(&vs, R_METRICS, "adhoc.name");
+    assert_one(&vs, R_METRICS, "MYSTERY_METRIC");
+    assert_eq!(vs.len(), 3, "{vs:#?}");
+}
+
+#[test]
+fn obs_trace_tag_drift_fails() {
+    let vs = lint("bad_obs_tag");
+    assert_one(&vs, R_SCHEMA, "fedtune.obs.trace/v1");
     assert_eq!(vs.len(), 1, "{vs:#?}");
 }
 
