@@ -17,7 +17,8 @@ mod harness;
 
 use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use fedtune::coordinator::selection::Selector;
-use fedtune::data::DatasetProfile;
+use fedtune::data::{DatasetProfile, Population};
+use fedtune::system::SystemSpec;
 use fedtune::engine::sim::{SimEngine, SimParams};
 use fedtune::engine::FlEngine;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
@@ -141,12 +142,29 @@ fn main() {
     let sizes = fedtune::data::ClientSizes::generate(&profile, &mut srng).sizes;
     let systems =
         vec![fedtune::system::ClientSystemProfile::BASELINE; sizes.len()];
+    let pop = Population::eager(sizes, systems);
     let mut sel_rng = Rng::new(3);
     let s = bench("selection_uniform_20_of_2112", 200, || {
-        Selector::UniformRandom.select(&sizes, &systems, 20, &mut sel_rng)
+        Selector::UniformRandom.select(&pop, 20, &mut sel_rng)
     });
     report.push(("selection_uniform_20_of_2112", s));
     println!("  → selection: {:.2} µs", s.mean_us());
+
+    // --- sampled-pool scoring on a million-client lazy roster -------------
+    // The virtualization hot path: a guided selector that derives only
+    // its 512-client candidate pool from a K = 1e6 lazy population.
+    let huge = Population::lazy(
+        profile.size_dist,
+        SystemSpec::LogNormal { sigma: 0.5 },
+        1_000_000,
+        7,
+    );
+    let pooled = Selector::Guided { exploit: 1.0, pool: Some(512) };
+    let s = bench("selector.sampled", 50, || {
+        pooled.select(&huge, 20, &mut sel_rng)
+    });
+    report.push(("selector.sampled", s));
+    println!("  → sampled-pool selection (K=1e6, pool=512): {:.2} µs", s.mean_us());
     wall::lap(names::BENCH_SELECTION, sw);
 
     // --- one simulated round (engine only) --------------------------------
@@ -158,6 +176,15 @@ fn main() {
     });
     report.push(("sim_engine_round", s));
     println!("  → sim round: {:.3} µs", s.mean_us());
+
+    // --- single lazy (size, profile) derivation (RNG jump-ahead) ----------
+    let mut next_k = 0usize;
+    let s = bench("population.derive", 200, || {
+        next_k = (next_k + 999_983) % 1_000_000; // stride the whole roster
+        huge.row(next_k)
+    });
+    report.push(("population.derive", s));
+    println!("  → lazy row derivation: {:.3} µs", s.mean_us());
     wall::lap(names::BENCH_SIM, sw);
 
     // --- overhead accounting ----------------------------------------------

@@ -65,6 +65,11 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Shrink factor for client population (real engine practicality).
     pub scale: f64,
+    /// Population-size override: run with exactly K clients instead of
+    /// the dataset profile's default (applied after `scale`). `None`
+    /// keeps the profile default — and keeps the config's JSON and
+    /// store fingerprint byte-identical to pre-override artifacts.
+    pub clients: Option<usize>,
 }
 
 impl Default for ExperimentConfig {
@@ -88,16 +93,22 @@ impl Default for ExperimentConfig {
             system: SystemSpec::Homogeneous,
             seed: 1,
             scale: 1.0,
+            clients: None,
         }
     }
 }
 
 impl ExperimentConfig {
-    /// Resolve the dataset profile (applying `scale`).
+    /// Resolve the dataset profile (applying `scale`, then the explicit
+    /// `clients` override when set).
     pub fn profile(&self) -> Result<DatasetProfile> {
         let p = DatasetProfile::by_name(&self.dataset)
             .with_context(|| format!("unknown dataset {:?}", self.dataset))?;
-        Ok(if self.scale < 1.0 { p.scaled(self.scale) } else { p })
+        let mut p = if self.scale < 1.0 { p.scaled(self.scale) } else { p };
+        if let Some(k) = self.clients {
+            p.train_clients = k;
+        }
+        Ok(p)
     }
 
     /// The tuner policy actually driving this run: the default
@@ -150,6 +161,9 @@ impl ExperimentConfig {
         if self.scale <= 0.0 || self.scale > 1.0 {
             bail!("scale must be in (0, 1]");
         }
+        if self.clients == Some(0) {
+            bail!("clients override must be >= 1");
+        }
         if self.eps <= 0.0 || self.penalty < 1.0 {
             bail!("eps must be > 0 and penalty >= 1");
         }
@@ -198,6 +212,11 @@ impl ExperimentConfig {
             ("system", self.system.spec_string().as_str().into()),
             ("tuner", self.tuner.spec_string().as_str().into()),
         ]);
+        // Emitted only when set: default-K configs keep their historical
+        // JSON (and therefore their store fingerprints) byte-identical.
+        if let Some(k) = self.clients {
+            j.set("clients", k.into());
+        }
         if let Some(p) = &self.preference {
             j.set(
                 "preference",
@@ -275,6 +294,9 @@ impl ExperimentConfig {
         if let Some(v) = gf("scale") {
             cfg.scale = v;
         }
+        if let Some(v) = gu("clients") {
+            cfg.clients = Some(v);
+        }
         if let Some(p) = j.get("preference") {
             let arr = p.as_arr().context("preference must be an array")?;
             if arr.len() != 4 {
@@ -331,9 +353,10 @@ mod tests {
         c.e_floor = 0.25;
         c.seed = 99;
         c.scale = 0.5;
-        c.selector = Selector::Deadline { max_cost: 150.0 };
+        c.selector = Selector::Deadline { max_cost: 150.0, pool: Some(512) };
         c.system = SystemSpec::LogNormal { sigma: 0.5 };
         c.tuner = TunerSpec::Stepwise { decay: 0.7, patience: 4 };
+        c.clients = Some(5000);
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c2.dataset, "emnist");
@@ -343,8 +366,13 @@ mod tests {
         assert_eq!(c2.e_floor, 0.25);
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.scale, 0.5);
+        assert_eq!(c2.clients, Some(5000));
+        assert_eq!(c2.profile().unwrap().train_clients, 5000);
         // Parameter-carrying specs survive the round trip intact.
-        assert_eq!(c2.selector, Selector::Deadline { max_cost: 150.0 });
+        assert_eq!(
+            c2.selector,
+            Selector::Deadline { max_cost: 150.0, pool: Some(512) }
+        );
         assert_eq!(c2.system, SystemSpec::LogNormal { sigma: 0.5 });
         assert_eq!(c2.tuner, TunerSpec::Stepwise { decay: 0.7, patience: 4 });
         let p = c2.preference.unwrap();
@@ -373,10 +401,36 @@ mod tests {
         c.system = SystemSpec::LogNormal { sigma: -0.5 };
         assert!(c.validate().is_err());
         let mut c = ExperimentConfig::default();
-        c.selector = Selector::Deadline { max_cost: 0.0 };
+        c.selector = Selector::Deadline { max_cost: 0.0, pool: None };
         assert!(c.validate().is_err());
         let mut c = ExperimentConfig::default();
-        c.selector = Selector::Guided { exploit: -1.0 };
+        c.selector = Selector::Guided { exploit: -1.0, pool: None };
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.selector = Selector::Guided { exploit: 1.0, pool: Some(0) };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn clients_override_defaults_and_validation() {
+        // Absent from JSON ⇒ None, and the emitted JSON omits the key —
+        // pre-override configs and fingerprints stay byte-identical.
+        let j = Json::parse(r#"{"e0": 2.0}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.clients, None);
+        assert!(c.to_json().get("clients").is_none());
+        assert_eq!(c.profile().unwrap().train_clients, 2112); // speech default
+        // Explicit override flows into the resolved profile, after scale.
+        let j = Json::parse(r#"{"clients": 1000000}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.profile().unwrap().train_clients, 1_000_000);
+        let mut c = ExperimentConfig::default();
+        c.scale = 0.05;
+        c.clients = Some(777);
+        assert_eq!(c.profile().unwrap().train_clients, 777, "override beats scale");
+        // Zero is rejected.
+        let mut c = ExperimentConfig::default();
+        c.clients = Some(0);
         assert!(c.validate().is_err());
     }
 

@@ -110,17 +110,13 @@ impl<'e, E: FlEngine> Server<'e, E> {
             round += 1;
 
             let (m, e) = self.tuner.current();
-            let participants = self.cfg.selector.select(
-                self.engine.client_sizes(),
-                self.engine.client_systems(),
-                m,
-                &mut self.rng,
-            );
+            let participants =
+                self.cfg.selector.select(self.engine.population(), m, &mut self.rng);
+            // Only the round's participants are ever materialized — on a
+            // lazy population this is the O(M)-per-round guarantee.
             let rows: Vec<(usize, ClientSystemProfile)> = participants
                 .iter()
-                .map(|&k| {
-                    (self.engine.client_sizes()[k], self.engine.client_systems()[k])
-                })
+                .map(|&k| self.engine.population().row(k))
                 .collect();
 
             let outcome = self.engine.run_round(&participants, e)?;

@@ -12,12 +12,22 @@
 //! dataset size — on heterogeneous populations a small-but-slow device
 //! misses deadlines that a large-but-fast one makes.
 //!
+//! Scoring selectors (guided, deadline) walk every client's `(n_k,
+//! profile_k)` row, which is O(K) per round — fine at paper scale,
+//! ruinous at a million clients. Both therefore accept an optional
+//! *candidate pool*: score only `pool` uniformly-sampled candidates
+//! (drawn on the same coordinator stream), which bounds per-round work
+//! by O(pool) regardless of K. A pool of `None` — or any pool ≥ K —
+//! takes the exact full-roster code path, drawing no pool sample, so
+//! legacy specs stay byte-identical.
+//!
 //! Spec strings ([`Selector::by_name`] / [`Selector::spec`]) carry the
-//! parameters — `random`, `guided:<exploit>`, `deadline:<max-cost>` — so
-//! configs, the CLI and the run-store fingerprint all distinguish, say,
-//! `deadline:100` from `deadline:200`.
+//! parameters — `random`, `guided:<exploit>[:pool]`,
+//! `deadline:<max-cost>[:pool]` — so configs, the CLI and the run-store
+//! fingerprint all distinguish, say, `deadline:100` from `deadline:200`
+//! (and either from `deadline:100:4096`).
 
-use crate::system::ClientSystemProfile;
+use crate::data::Population;
 use crate::util::rng::Rng;
 
 /// Deadline assumed when `deadline` is given with no explicit budget:
@@ -36,49 +46,64 @@ pub enum Selector {
     UniformRandom,
     /// Oort-lite (§6 Extension 1): sample biased toward data-rich clients
     /// (probability ∝ n_k^exploit), trading fairness for statistical
-    /// utility per round.
-    Guided { exploit: f64 },
+    /// utility per round. `pool` caps how many candidates are scored
+    /// (None = whole roster).
+    Guided { exploit: f64, pool: Option<usize> },
     /// Deadline variant (§6): uniformly sample among clients whose
     /// modeled round time `n_k · compute_k` is within the budget (slow
-    /// clients never finish).
-    Deadline { max_cost: f64 },
+    /// clients never finish). `pool` caps how many candidates are scored
+    /// (None = whole roster).
+    Deadline { max_cost: f64, pool: Option<usize> },
 }
 
 impl Selector {
     /// The accepted grammar, printed by `--help` and echoed by every
     /// unknown-spec error (one source of truth, next to the parser).
-    pub const SPEC_HELP: &str =
-        "random | guided[:exploit >= 0] | deadline[:max-cost > 0]";
+    pub const SPEC_HELP: &str = "random | guided[:exploit >= 0[:pool >= 1]] \
+         | deadline[:max-cost > 0[:pool >= 1]]";
 
-    /// Parse a selector spec: `random`, `guided` / `guided:<exploit>`,
-    /// `deadline` / `deadline:<max-cost>`. Bare `guided` defaults to
-    /// exploit = 1.0; bare `deadline` to [`DEFAULT_DEADLINE_COST`].
-    /// Malformed or unknown specs return `None`; callers attach
-    /// [`Selector::SPEC_HELP`] to the error they raise.
+    /// Parse a selector spec: `random`, `guided` / `guided:<exploit>` /
+    /// `guided:<exploit>:<pool>`, `deadline` / `deadline:<max-cost>` /
+    /// `deadline:<max-cost>:<pool>`. Bare `guided` defaults to
+    /// exploit = 1.0; bare `deadline` to [`DEFAULT_DEADLINE_COST`]; an
+    /// absent pool scores the whole roster. Malformed or unknown specs
+    /// return `None`; callers attach [`Selector::SPEC_HELP`] to the
+    /// error they raise.
     pub fn by_name(spec: &str) -> Option<Selector> {
         let spec = spec.trim();
-        let (head, arg) = match spec.split_once(':') {
-            Some((h, a)) => (h, Some(a.trim())),
-            None => (spec, None),
+        let mut parts = spec.split(':');
+        let head = parts.next()?.trim();
+        let args: Vec<&str> = parts.map(str::trim).collect();
+        let pool_arg = |a: Option<&&str>| -> Option<Option<usize>> {
+            match a {
+                None => Some(None),
+                Some(p) => p.parse::<usize>().ok().filter(|&p| p >= 1).map(Some),
+            }
         };
         match head {
-            "random" => match arg {
-                None => Some(Selector::UniformRandom),
-                Some(_) => None,
+            "random" => match args.is_empty() {
+                true => Some(Selector::UniformRandom),
+                false => None,
             },
-            "guided" => {
-                let exploit = match arg {
+            "guided" if args.len() <= 2 => {
+                let exploit = match args.first() {
                     None => 1.0,
-                    Some(a) => a.parse::<f64>().ok().filter(|x| x.is_finite() && *x >= 0.0)?,
+                    Some(a) => {
+                        a.parse::<f64>().ok().filter(|x| x.is_finite() && *x >= 0.0)?
+                    }
                 };
-                Some(Selector::Guided { exploit })
+                let pool = pool_arg(args.get(1))?;
+                Some(Selector::Guided { exploit, pool })
             }
-            "deadline" => {
-                let max_cost = match arg {
+            "deadline" if args.len() <= 2 => {
+                let max_cost = match args.first() {
                     None => DEFAULT_DEADLINE_COST,
-                    Some(a) => a.parse::<f64>().ok().filter(|x| x.is_finite() && *x > 0.0)?,
+                    Some(a) => {
+                        a.parse::<f64>().ok().filter(|x| x.is_finite() && *x > 0.0)?
+                    }
                 };
-                Some(Selector::Deadline { max_cost })
+                let pool = pool_arg(args.get(1))?;
+                Some(Selector::Deadline { max_cost, pool })
             }
             _ => None,
         }
@@ -89,75 +114,103 @@ impl Selector {
     /// `ExperimentConfig::validate`, so a config that validates always
     /// produces a spec string [`Selector::by_name`] accepts back.
     pub fn validate(&self) -> Result<(), String> {
+        let check_pool = |pool: Option<usize>| match pool {
+            Some(0) => Err("selector pool must be >= 1, got 0".to_string()),
+            _ => Ok(()),
+        };
         match *self {
             Selector::UniformRandom => Ok(()),
-            Selector::Guided { exploit } => {
+            Selector::Guided { exploit, pool } => {
                 if !exploit.is_finite() || exploit < 0.0 {
                     return Err(format!(
                         "guided exploit must be finite and >= 0, got {exploit}"
                     ));
                 }
-                Ok(())
+                check_pool(pool)
             }
-            Selector::Deadline { max_cost } => {
+            Selector::Deadline { max_cost, pool } => {
                 if !max_cost.is_finite() || max_cost <= 0.0 {
                     return Err(format!(
                         "deadline max-cost must be finite and > 0, got {max_cost}"
                     ));
                 }
-                Ok(())
+                check_pool(pool)
             }
         }
     }
 
     /// Canonical spec string; [`Selector::by_name`] parses it back.
     pub fn spec(&self) -> String {
+        let with_pool = |s: String, pool: Option<usize>| match pool {
+            None => s,
+            Some(p) => format!("{s}:{p}"),
+        };
         match *self {
             Selector::UniformRandom => "random".to_string(),
-            Selector::Guided { exploit } => format!("guided:{exploit}"),
-            Selector::Deadline { max_cost } => format!("deadline:{max_cost}"),
+            Selector::Guided { exploit, pool } => {
+                with_pool(format!("guided:{exploit}"), pool)
+            }
+            Selector::Deadline { max_cost, pool } => {
+                with_pool(format!("deadline:{max_cost}"), pool)
+            }
         }
     }
 
-    /// Select min(m, available) distinct client indices. `systems` must
-    /// be parallel to `sizes` (the engine's per-client profiles).
-    pub fn select(
-        &self,
-        sizes: &[usize],
-        systems: &[ClientSystemProfile],
-        m: usize,
-        rng: &mut Rng,
-    ) -> Vec<usize> {
-        let k = sizes.len();
-        debug_assert_eq!(k, systems.len(), "sizes/systems must be parallel");
+    /// The candidate roster a scoring selector works over: the whole
+    /// population when `pool` is absent or ≥ K (no pool draw — exactly
+    /// the pre-pool draw sequence), else `pool` uniformly-sampled
+    /// distinct candidates drawn on the caller's (coordinator) stream.
+    fn candidates(k: usize, pool: Option<usize>, rng: &mut Rng) -> Vec<usize> {
+        match pool {
+            Some(p) if p < k => rng.sample_indices(k, p),
+            _ => (0..k).collect(),
+        }
+    }
+
+    /// Select min(m, candidates) distinct client indices from the
+    /// population view. Scoring selectors materialize only their
+    /// candidate rows, so a pooled selector stays O(pool) even on a
+    /// million-client lazy population.
+    pub fn select(&self, pop: &Population, m: usize, rng: &mut Rng) -> Vec<usize> {
+        let k = pop.len();
         if k == 0 || m == 0 {
             return Vec::new();
         }
         let m = m.min(k);
         match *self {
             Selector::UniformRandom => rng.sample_indices(k, m),
-            Selector::Guided { exploit } => {
+            Selector::Guided { exploit, pool } => {
+                let cand = Self::candidates(k, pool, rng);
+                let m = m.min(cand.len());
                 // Weighted reservoir-ish: draw without replacement with
                 // probability ∝ n_k^exploit.
-                let mut weights: Vec<f64> =
-                    sizes.iter().map(|&n| (n.max(1) as f64).powf(exploit)).collect();
+                let mut weights: Vec<f64> = cand
+                    .iter()
+                    .map(|&i| (pop.size(i).max(1) as f64).powf(exploit))
+                    .collect();
                 let mut picked = Vec::with_capacity(m);
                 for _ in 0..m {
-                    let i = rng.categorical(&weights);
-                    picked.push(i);
-                    weights[i] = 0.0;
+                    let j = rng.categorical(&weights);
+                    picked.push(cand[j]);
+                    weights[j] = 0.0;
                 }
                 picked
             }
-            Selector::Deadline { max_cost } => {
-                let cost = |i: usize| systems[i].round_time(sizes[i]);
-                let eligible: Vec<usize> = (0..k).filter(|&i| cost(i) <= max_cost).collect();
+            Selector::Deadline { max_cost, pool } => {
+                let cand = Self::candidates(k, pool, rng);
+                let m = m.min(cand.len());
+                let cost = |i: usize| {
+                    let (n, sys) = pop.row(i);
+                    sys.round_time(n)
+                };
+                let eligible: Vec<usize> =
+                    cand.iter().copied().filter(|&i| cost(i) <= max_cost).collect();
                 if eligible.is_empty() {
                     // Nobody can meet the deadline: degrade to the
-                    // min(m, k) fastest clients by modeled round time
-                    // rather than stalling training — and rather than
-                    // silently collapsing the round's M to 1.
-                    let mut by_speed: Vec<usize> = (0..k).collect();
+                    // min(m, candidates) fastest clients by modeled round
+                    // time rather than stalling training — and rather
+                    // than silently collapsing the round's M to 1.
+                    let mut by_speed = cand;
                     by_speed.sort_by(|&a, &b| {
                         cost(a)
                             .partial_cmp(&cost(b))
@@ -180,22 +233,31 @@ impl Selector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::system::ClientSystemProfile;
 
     fn sizes() -> Vec<usize> {
         vec![1, 5, 10, 50, 100, 2, 8, 300, 40, 3]
     }
 
-    fn baseline_systems(k: usize) -> Vec<ClientSystemProfile> {
-        vec![ClientSystemProfile::BASELINE; k]
+    fn baseline_pop(sizes: Vec<usize>) -> Population {
+        let k = sizes.len();
+        Population::eager(sizes, vec![ClientSystemProfile::BASELINE; k])
+    }
+
+    fn guided(exploit: f64) -> Selector {
+        Selector::Guided { exploit, pool: None }
+    }
+
+    fn deadline(max_cost: f64) -> Selector {
+        Selector::Deadline { max_cost, pool: None }
     }
 
     #[test]
     fn uniform_selects_exactly_m_distinct() {
-        let s = sizes();
-        let sys = baseline_systems(s.len());
+        let pop = baseline_pop(sizes());
         let mut rng = Rng::new(1);
-        for m in 1..=s.len() {
-            let picked = Selector::UniformRandom.select(&s, &sys, m, &mut rng);
+        for m in 1..=pop.len() {
+            let picked = Selector::UniformRandom.select(&pop, m, &mut rng);
             assert_eq!(picked.len(), m);
             let mut p = picked.clone();
             p.sort_unstable();
@@ -206,30 +268,28 @@ mod tests {
 
     #[test]
     fn m_larger_than_population_is_clamped() {
-        let s = sizes();
-        let sys = baseline_systems(s.len());
+        let pop = baseline_pop(sizes());
         let mut rng = Rng::new(2);
-        let picked = Selector::UniformRandom.select(&s, &sys, 100, &mut rng);
-        assert_eq!(picked.len(), s.len());
+        let picked = Selector::UniformRandom.select(&pop, 100, &mut rng);
+        assert_eq!(picked.len(), pop.len());
     }
 
     #[test]
     fn empty_population() {
         let mut rng = Rng::new(3);
-        assert!(Selector::UniformRandom.select(&[], &[], 5, &mut rng).is_empty());
-        let s = sizes();
-        let sys = baseline_systems(s.len());
-        assert!(Selector::UniformRandom.select(&s, &sys, 0, &mut rng).is_empty());
+        let empty = Population::eager(Vec::new(), Vec::new());
+        assert!(Selector::UniformRandom.select(&empty, 5, &mut rng).is_empty());
+        let pop = baseline_pop(sizes());
+        assert!(Selector::UniformRandom.select(&pop, 0, &mut rng).is_empty());
     }
 
     #[test]
     fn uniform_is_unbiased_ish() {
-        let s = vec![1usize; 20];
-        let sys = baseline_systems(20);
+        let pop = baseline_pop(vec![1usize; 20]);
         let mut rng = Rng::new(4);
         let mut counts = vec![0usize; 20];
         for _ in 0..5000 {
-            for i in Selector::UniformRandom.select(&s, &sys, 5, &mut rng) {
+            for i in Selector::UniformRandom.select(&pop, 5, &mut rng) {
                 counts[i] += 1;
             }
         }
@@ -241,15 +301,11 @@ mod tests {
 
     #[test]
     fn guided_prefers_data_rich_clients() {
-        let s = sizes(); // client 7 has 300 points
-        let sys = baseline_systems(s.len());
+        let pop = baseline_pop(sizes()); // client 7 has 300 points
         let mut rng = Rng::new(5);
         let mut hits = 0;
         for _ in 0..1000 {
-            if (Selector::Guided { exploit: 1.0 })
-                .select(&s, &sys, 3, &mut rng)
-                .contains(&7)
-            {
+            if guided(1.0).select(&pop, 3, &mut rng).contains(&7) {
                 hits += 1;
             }
         }
@@ -259,11 +315,10 @@ mod tests {
 
     #[test]
     fn guided_returns_distinct() {
-        let s = sizes();
-        let sys = baseline_systems(s.len());
+        let pop = baseline_pop(sizes());
         let mut rng = Rng::new(6);
         for _ in 0..100 {
-            let p = Selector::Guided { exploit: 2.0 }.select(&s, &sys, 6, &mut rng);
+            let p = guided(2.0).select(&pop, 6, &mut rng);
             let mut q = p.clone();
             q.sort_unstable();
             q.dedup();
@@ -274,10 +329,10 @@ mod tests {
     #[test]
     fn deadline_excludes_slow_clients() {
         let s = sizes();
-        let sys = baseline_systems(s.len());
+        let pop = baseline_pop(s.clone());
         let mut rng = Rng::new(7);
         for _ in 0..100 {
-            let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 5, &mut rng);
+            let p = deadline(10.0).select(&pop, 5, &mut rng);
             assert!(!p.is_empty());
             assert!(p.iter().all(|&i| s[i] <= 10), "{p:?}");
         }
@@ -288,14 +343,16 @@ mod tests {
         // Client 0: 100 points on a 4× straggler (modeled time 400);
         // client 1: 300 points on a 0.1× accelerator (modeled time 30).
         // Under a budget of 50 only the big-but-fast client qualifies.
-        let s = vec![100usize, 300];
-        let sys = vec![
-            ClientSystemProfile { compute_factor: 4.0, link_factor: 1.0 },
-            ClientSystemProfile { compute_factor: 0.1, link_factor: 1.0 },
-        ];
+        let pop = Population::eager(
+            vec![100usize, 300],
+            vec![
+                ClientSystemProfile { compute_factor: 4.0, link_factor: 1.0 },
+                ClientSystemProfile { compute_factor: 0.1, link_factor: 1.0 },
+            ],
+        );
         let mut rng = Rng::new(11);
         for _ in 0..20 {
-            let p = Selector::Deadline { max_cost: 50.0 }.select(&s, &sys, 2, &mut rng);
+            let p = deadline(50.0).select(&pop, 2, &mut rng);
             assert_eq!(p, vec![1], "only the fast device meets the deadline");
         }
     }
@@ -304,64 +361,145 @@ mod tests {
     fn deadline_fallback_returns_min_m_k_fastest() {
         // Nobody qualifies: the round must keep its M (min(m, k)), not
         // collapse to a single client.
-        let s = vec![50usize, 80, 60];
-        let sys = baseline_systems(3);
+        let pop = baseline_pop(vec![50usize, 80, 60]);
         let mut rng = Rng::new(8);
-        let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 2, &mut rng);
+        let p = deadline(10.0).select(&pop, 2, &mut rng);
         assert_eq!(p, vec![0, 2], "the two fastest clients, in speed order");
         // m >= k falls back to everyone.
-        let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 5, &mut rng);
+        let p = deadline(10.0).select(&pop, 5, &mut rng);
         assert_eq!(p, vec![0, 2, 1]);
         // The fallback respects modeled time: a straggler profile can
         // demote the smallest client.
-        let sys = vec![
-            ClientSystemProfile { compute_factor: 10.0, link_factor: 1.0 },
-            ClientSystemProfile::BASELINE,
-            ClientSystemProfile::BASELINE,
-        ];
-        let p = Selector::Deadline { max_cost: 10.0 }.select(&s, &sys, 2, &mut rng);
+        let pop = Population::eager(
+            vec![50usize, 80, 60],
+            vec![
+                ClientSystemProfile { compute_factor: 10.0, link_factor: 1.0 },
+                ClientSystemProfile::BASELINE,
+                ClientSystemProfile::BASELINE,
+            ],
+        );
+        let p = deadline(10.0).select(&pop, 2, &mut rng);
         assert_eq!(p, vec![2, 1], "client 0 is slowest once its 10x factor counts");
+    }
+
+    #[test]
+    fn pool_at_or_above_k_is_byte_identical_to_unpooled() {
+        // pool >= K must take the exact legacy code path: same picks AND
+        // the same number of raw draws (verified by comparing the next
+        // output of each rng afterwards).
+        let pop = baseline_pop(sizes());
+        let k = pop.len();
+        for (unpooled, pooled) in [
+            (guided(1.5), Selector::Guided { exploit: 1.5, pool: Some(k) }),
+            (guided(1.5), Selector::Guided { exploit: 1.5, pool: Some(k + 7) }),
+            (deadline(60.0), Selector::Deadline { max_cost: 60.0, pool: Some(k) }),
+            (
+                deadline(60.0),
+                Selector::Deadline { max_cost: 60.0, pool: Some(k + 7) },
+            ),
+        ] {
+            let mut r1 = Rng::new(21);
+            let mut r2 = Rng::new(21);
+            for _ in 0..10 {
+                assert_eq!(
+                    unpooled.select(&pop, 4, &mut r1),
+                    pooled.select(&pop, 4, &mut r2),
+                    "picks diverge for {}",
+                    pooled.spec()
+                );
+            }
+            assert_eq!(r1.next_u64(), r2.next_u64(), "draw counts diverge");
+        }
+    }
+
+    #[test]
+    fn pooled_selection_is_deterministic_and_within_pool_bounds() {
+        let pop = baseline_pop(sizes());
+        for sel in [
+            Selector::Guided { exploit: 1.0, pool: Some(4) },
+            Selector::Deadline { max_cost: 1000.0, pool: Some(4) },
+        ] {
+            let mut r1 = Rng::new(31);
+            let mut r2 = Rng::new(31);
+            let a = sel.select(&pop, 8, &mut r1);
+            let b = sel.select(&pop, 8, &mut r2);
+            assert_eq!(a, b, "same seed must reproduce {}", sel.spec());
+            // Effective M is capped by the pool, never by K.
+            assert_eq!(a.len(), 4, "{}", sel.spec());
+            let mut d = a.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), a.len(), "duplicates from {}", sel.spec());
+        }
+    }
+
+    #[test]
+    fn pooled_deadline_fallback_stays_within_pool() {
+        // Deadline nobody can meet + pool: the fastest-clients fallback
+        // must rank only the sampled candidates.
+        let pop = baseline_pop(sizes());
+        let sel = Selector::Deadline { max_cost: 0.5, pool: Some(3) };
+        let mut rng = Rng::new(41);
+        // Replay the pool draw to know the candidate set.
+        let mut shadow = Rng::new(41);
+        let cand = shadow.sample_indices(pop.len(), 3);
+        let picked = sel.select(&pop, 2, &mut rng);
+        assert_eq!(picked.len(), 2);
+        assert!(picked.iter().all(|i| cand.contains(i)), "{picked:?} ⊄ {cand:?}");
     }
 
     #[test]
     fn name_lookup_parses_full_specs() {
         assert_eq!(Selector::by_name("random"), Some(Selector::UniformRandom));
-        assert_eq!(Selector::by_name("guided"), Some(Selector::Guided { exploit: 1.0 }));
+        assert_eq!(Selector::by_name("guided"), Some(guided(1.0)));
+        assert_eq!(Selector::by_name("guided:2.5"), Some(guided(2.5)));
         assert_eq!(
-            Selector::by_name("guided:2.5"),
-            Some(Selector::Guided { exploit: 2.5 })
+            Selector::by_name("guided:2.5:4096"),
+            Some(Selector::Guided { exploit: 2.5, pool: Some(4096) })
         );
         assert_eq!(
             Selector::by_name("deadline"),
-            Some(Selector::Deadline { max_cost: DEFAULT_DEADLINE_COST })
+            Some(deadline(DEFAULT_DEADLINE_COST))
         );
+        assert_eq!(Selector::by_name("deadline:150"), Some(deadline(150.0)));
         assert_eq!(
-            Selector::by_name("deadline:150"),
-            Some(Selector::Deadline { max_cost: 150.0 })
+            Selector::by_name("deadline:150:512"),
+            Some(Selector::Deadline { max_cost: 150.0, pool: Some(512) })
         );
         assert!(Selector::by_name("oort").is_none());
         assert!(Selector::by_name("guided:abc").is_none());
         assert!(Selector::by_name("guided:-1").is_none());
+        assert!(Selector::by_name("guided:1:0").is_none());
+        assert!(Selector::by_name("guided:1:2.5").is_none());
+        assert!(Selector::by_name("guided:1:10:3").is_none());
         assert!(Selector::by_name("deadline:0").is_none());
+        assert!(Selector::by_name("deadline:150:0").is_none());
         assert!(Selector::by_name("random:2").is_none());
     }
 
     #[test]
     fn validate_matches_parse_rules() {
         assert!(Selector::UniformRandom.validate().is_ok());
-        assert!(Selector::Guided { exploit: 1.0 }.validate().is_ok());
-        assert!(Selector::Deadline { max_cost: 150.0 }.validate().is_ok());
-        assert!(Selector::Guided { exploit: -1.0 }.validate().is_err());
-        assert!(Selector::Deadline { max_cost: 0.0 }.validate().is_err());
-        assert!(Selector::Deadline { max_cost: f64::NAN }.validate().is_err());
+        assert!(guided(1.0).validate().is_ok());
+        assert!(deadline(150.0).validate().is_ok());
+        assert!(Selector::Guided { exploit: 1.0, pool: Some(64) }.validate().is_ok());
+        assert!(guided(-1.0).validate().is_err());
+        assert!(deadline(0.0).validate().is_err());
+        assert!(deadline(f64::NAN).validate().is_err());
+        assert!(Selector::Guided { exploit: 1.0, pool: Some(0) }.validate().is_err());
+        assert!(
+            Selector::Deadline { max_cost: 1.0, pool: Some(0) }.validate().is_err()
+        );
     }
 
     #[test]
     fn spec_round_trips() {
         for sel in [
             Selector::UniformRandom,
-            Selector::Guided { exploit: 2.5 },
-            Selector::Deadline { max_cost: 150.0 },
+            guided(2.5),
+            deadline(150.0),
+            Selector::Guided { exploit: 2.5, pool: Some(4096) },
+            Selector::Deadline { max_cost: 150.0, pool: Some(512) },
         ] {
             assert_eq!(Selector::by_name(&sel.spec()), Some(sel), "spec {}", sel.spec());
         }

@@ -15,10 +15,17 @@
 //! * [`FederatedDataset`] — actual features/labels for the real PJRT
 //!   engine: Gaussian class prototypes + per-client concept shift, so the
 //!   task is genuinely learnable and genuinely non-IID.
+//!
+//! Plus the scale layer: [`Population`] virtualizes the per-client
+//! `(size, system-profile)` state — clients derive lazily from
+//! `(seed, id)`, so million-client populations cost O(M) per round
+//! instead of O(K) up front (see [`population`]).
 
+pub mod population;
 pub mod profiles;
 pub mod synth;
 
+pub use population::{skip_sizes, Population};
 pub use profiles::DatasetProfile;
 pub use synth::{ClientSizes, FederatedDataset, TestSet};
 

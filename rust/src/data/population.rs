@@ -1,0 +1,303 @@
+//! Virtualized client populations: O(M)-per-round lazy client state.
+//!
+//! The overhead model (Eq. 2) is defined over the M participants of a
+//! round, yet the engines used to materialize all K clients' sizes and
+//! system profiles up front — capping population size far below the
+//! "millions of users" regime the paper targets. [`Population`] replaces
+//! the eager `Vec<usize>` / `Vec<ClientSystemProfile>` pair behind the
+//! engine trait with a *view*: client `k`'s `(size_k, profile_k)` is a
+//! pure function of `(seed, k)`, derived on demand by jumping a pristine
+//! RNG stream to client `k`'s draw position ([`Rng::advance`], O(log k))
+//! and replaying exactly the draw the eager loop would have made there.
+//!
+//! Stream layout (see [`streams`]): sizes ride the *data* stream
+//! (`seed ^ DATA`, where `DATA = 0` registers the historically untagged
+//! `Rng::new(seed)` stream by name), system profiles the *system*
+//! stream (`seed ^ SYSTEM`). Both layouts have a fixed raw-draw count
+//! per client, which is what makes positional jumping exact:
+//!
+//! * `PowerLaw` — one uniform per client: client k sits at raw offset k.
+//! * `LogNormal` — one Gaussian per client; Box–Muller produces cos/sin
+//!   pairs, so even clients consume a fresh pair (raw offset k) and odd
+//!   clients consume the cached sin half (replayed by drawing the pair
+//!   at offset k−1 and discarding the cos). Assumes the Box–Muller
+//!   rejection branch (`u1 <= EPSILON`, probability ≈ 2⁻⁵² per pair)
+//!   never fires; the equivalence property suite pins lazy ≡ eager on
+//!   every shipped profile so a violating seed cannot land silently.
+//! * `Fixed` — no draws.
+//!
+//! The sim engine's convergence noise historically shared the data
+//! stream *after* the K size draws; [`skip_sizes`] fast-forwards an
+//! engine RNG past them (including Box–Muller spare-state parity) so a
+//! lazy engine's convergence noise is bit-for-bit the eager engine's.
+//!
+//! Every lazy derivation bumps a per-instance counter (mirrored into
+//! the wall-clock plane as `population.materialized`), which is how
+//! `tests/population_scale.rs` pins the O(M) claim: a million-client
+//! run materializes at most rounds × M clients, not K.
+
+use std::cell::Cell;
+
+use crate::obs::{names, wall};
+use crate::system::{ClientSystemProfile, SystemSpec};
+use crate::util::rng::{streams, Rng};
+
+use super::profiles::SizeDistribution;
+use super::synth::draw_size;
+
+/// Derive ONE client's dataset size without materializing the rest:
+/// bit-for-bit equal to `ClientSizes::generate(profile, rng).sizes[k]`
+/// for a pristine `rng = Rng::new(seed ^ DATA)` (see the module doc for
+/// the per-distribution stream layout).
+pub fn size_at(dist: &SizeDistribution, seed: u64, k: usize) -> usize {
+    let mut rng = Rng::new(seed ^ streams::DATA);
+    match *dist {
+        SizeDistribution::PowerLaw { .. } => {
+            rng.advance(k as u128);
+            draw_size(dist, &mut rng)
+        }
+        SizeDistribution::LogNormal { .. } => {
+            if k % 2 == 0 {
+                rng.advance(k as u128);
+            } else {
+                rng.advance(k as u128 - 1);
+                rng.gauss(); // discard the cos half; the sin half is client k's
+            }
+            draw_size(dist, &mut rng)
+        }
+        SizeDistribution::Fixed { .. } => draw_size(dist, &mut rng),
+    }
+}
+
+/// Fast-forward an engine RNG past the `count` size draws the eager
+/// constructor used to consume, leaving it in exactly the state (raw
+/// position AND Box–Muller spare) sequential generation would have —
+/// the convergence-noise stream depends on it.
+pub fn skip_sizes(dist: &SizeDistribution, rng: &mut Rng, count: usize) {
+    match *dist {
+        SizeDistribution::PowerLaw { .. } => rng.advance(count as u128),
+        SizeDistribution::LogNormal { .. } => {
+            // count draws consume 2·⌈count/2⌉ raws; after an odd count
+            // the sin half of the last pair is still cached.
+            if count % 2 == 0 {
+                rng.advance(count as u128);
+            } else {
+                rng.advance(count as u128 - 1);
+                rng.gauss(); // consumes the final pair, caches its sin half
+            }
+        }
+        SizeDistribution::Fixed { .. } => {}
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Backing {
+    /// Derive `(size_k, profile_k)` on demand from `(seed, k)` — the
+    /// sim engine's backing; nothing is stored per client.
+    Lazy { size_dist: SizeDistribution, system: SystemSpec, clients: usize, seed: u64 },
+    /// Pre-materialized vectors — the real engine's backing (its
+    /// feature/label shards are inherently materialized anyway).
+    Eager { sizes: Vec<usize>, systems: Vec<ClientSystemProfile> },
+}
+
+/// A population of K clients, viewed one participant at a time.
+///
+/// Replaces `FlEngine::client_sizes()` / `client_systems()`: only the
+/// clients a caller actually asks for are derived, so per-round cost is
+/// O(M) regardless of K. See the module doc for derivation semantics.
+#[derive(Debug, Clone)]
+pub struct Population {
+    backing: Backing,
+    /// Lazy derivations served by this instance (eager reads are free
+    /// and deliberately uncounted). `Cell`, not the global wall plane:
+    /// tests read it per-engine without cross-test interference.
+    materialized: Cell<u64>,
+}
+
+impl Population {
+    /// A lazy view over `clients` clients whose sizes follow `size_dist`
+    /// on the data stream and whose system profiles follow `system` on
+    /// the system stream, both derived from `seed`.
+    pub fn lazy(
+        size_dist: SizeDistribution,
+        system: SystemSpec,
+        clients: usize,
+        seed: u64,
+    ) -> Population {
+        Population {
+            backing: Backing::Lazy { size_dist, system, clients, seed },
+            materialized: Cell::new(0),
+        }
+    }
+
+    /// An eager view over pre-materialized vectors (real engine, tests).
+    pub fn eager(sizes: Vec<usize>, systems: Vec<ClientSystemProfile>) -> Population {
+        assert_eq!(sizes.len(), systems.len(), "sizes/systems length mismatch");
+        Population {
+            backing: Backing::Eager { sizes, systems },
+            materialized: Cell::new(0),
+        }
+    }
+
+    /// Number of clients K in the population.
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            Backing::Lazy { clients, .. } => *clients,
+            Backing::Eager { sizes, .. } => sizes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Client `k`'s dataset size n_k.
+    pub fn size(&self, k: usize) -> usize {
+        match &self.backing {
+            Backing::Lazy { size_dist, seed, clients, .. } => {
+                assert!(k < *clients, "client {k} out of {clients}");
+                self.count_materialized();
+                size_at(size_dist, *seed, k)
+            }
+            Backing::Eager { sizes, .. } => sizes[k],
+        }
+    }
+
+    /// Client `k`'s system profile.
+    pub fn system(&self, k: usize) -> ClientSystemProfile {
+        match &self.backing {
+            Backing::Lazy { system, seed, clients, .. } => {
+                assert!(k < *clients, "client {k} out of {clients}");
+                self.count_materialized();
+                system.profile_at(k, *seed)
+            }
+            Backing::Eager { systems, .. } => systems[k],
+        }
+    }
+
+    /// Client `k`'s full cost row `(n_k, profile_k)` — what the
+    /// coordinator materializes for each of a round's M participants.
+    pub fn row(&self, k: usize) -> (usize, ClientSystemProfile) {
+        match &self.backing {
+            Backing::Lazy { size_dist, system, seed, clients } => {
+                assert!(k < *clients, "client {k} out of {clients}");
+                self.count_materialized();
+                (size_at(size_dist, *seed, k), system.profile_at(k, *seed))
+            }
+            Backing::Eager { sizes, systems } => (sizes[k], systems[k]),
+        }
+    }
+
+    /// Lazy per-client derivations this instance has served (a full
+    /// `row` counts once). The O(M) memory claim as a number:
+    /// `tests/population_scale.rs` asserts it stays ≤ rounds × M on a
+    /// million-client run. Always 0 for eager backings.
+    pub fn materialized(&self) -> u64 {
+        self.materialized.get()
+    }
+
+    /// Materialize every client's size — O(K); tests and full-roster
+    /// selector scoring only.
+    pub fn sizes_vec(&self) -> Vec<usize> {
+        (0..self.len()).map(|k| self.size(k)).collect()
+    }
+
+    /// Materialize every client's profile — O(K); tests and full-roster
+    /// selector scoring only.
+    pub fn systems_vec(&self) -> Vec<ClientSystemProfile> {
+        (0..self.len()).map(|k| self.system(k)).collect()
+    }
+
+    fn count_materialized(&self) {
+        self.materialized.set(self.materialized.get() + 1);
+        wall::count(names::POPULATION_MATERIALIZED, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::profiles::DatasetProfile;
+    use super::super::synth::ClientSizes;
+    use super::*;
+
+    #[test]
+    fn lazy_sizes_match_eager_generation() {
+        for profile in DatasetProfile::all() {
+            for seed in [1u64, 7, 42] {
+                let mut rng = Rng::new(seed ^ streams::DATA);
+                let eager = ClientSizes::generate(&profile, &mut rng).sizes;
+                for (k, want) in eager.iter().enumerate() {
+                    assert_eq!(
+                        size_at(&profile.size_dist, seed, k),
+                        *want,
+                        "{} client {k} seed {seed}",
+                        profile.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_sizes_reproduces_post_generation_state() {
+        for profile in DatasetProfile::all() {
+            for count in [0usize, 1, 2, 5, profile.train_clients] {
+                let mut p = profile.clone();
+                p.train_clients = count;
+                let mut sequential = Rng::new(11 ^ streams::DATA);
+                ClientSizes::generate(&p, &mut sequential);
+                let mut jumped = Rng::new(11 ^ streams::DATA);
+                skip_sizes(&profile.size_dist, &mut jumped, count);
+                // State AND spare parity: the next Gaussians must agree,
+                // which only holds if the cached sin half survives.
+                for _ in 0..4 {
+                    assert_eq!(
+                        sequential.gauss().to_bits(),
+                        jumped.gauss().to_bits(),
+                        "{} count {count}",
+                        profile.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_and_eager_views_agree_and_count() {
+        let profile = DatasetProfile::emnist();
+        let spec = SystemSpec::LogNormal { sigma: 0.5 };
+        let lazy = Population::lazy(profile.size_dist, spec.clone(), 64, 9);
+        let eager = Population::eager(lazy.sizes_vec(), lazy.systems_vec());
+        assert_eq!(lazy.len(), eager.len());
+        for k in 0..64 {
+            assert_eq!(lazy.row(k), eager.row(k));
+        }
+        // 64 sizes + 64 systems + 64 rows lazily derived; eager reads free.
+        assert_eq!(lazy.materialized(), 192);
+        assert_eq!(eager.materialized(), 0);
+    }
+
+    #[test]
+    fn size_is_population_size_independent() {
+        // Client k's identity must not depend on K — the property that
+        // makes `--clients` a pure scale knob.
+        let d = DatasetProfile::speech().size_dist;
+        let small = Population::lazy(d, SystemSpec::Homogeneous, 100, 3);
+        let huge = Population::lazy(d, SystemSpec::Homogeneous, 1_000_000, 3);
+        for k in [0usize, 1, 50, 99] {
+            assert_eq!(small.size(k), huge.size(k));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn lazy_out_of_range_panics() {
+        Population::lazy(
+            SizeDistribution::Fixed { n: 5 },
+            SystemSpec::Homogeneous,
+            10,
+            1,
+        )
+        .size(10);
+    }
+}

@@ -36,7 +36,10 @@ impl ClientSizes {
     }
 }
 
-fn draw_size(dist: &SizeDistribution, rng: &mut Rng) -> usize {
+/// One client-size draw. Shared with [`super::population`]: the lazy
+/// per-client derivation must replay exactly this function at exactly
+/// the eager loop's stream position, so there is one copy of it.
+pub(crate) fn draw_size(dist: &SizeDistribution, rng: &mut Rng) -> usize {
     match *dist {
         SizeDistribution::PowerLaw { lo, hi, exponent } => {
             rng.power_law(lo as f64, hi as f64, exponent).round().max(lo as f64) as usize

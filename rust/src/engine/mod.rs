@@ -16,7 +16,7 @@
 pub mod real;
 pub mod sim;
 
-use crate::system::ClientSystemProfile;
+use crate::data::Population;
 
 /// What a round reports back to the coordinator.
 #[derive(Debug, Clone, Copy)]
@@ -40,14 +40,13 @@ pub trait FlEngine {
     /// Total number of registered clients K.
     fn num_clients(&self) -> usize;
 
-    /// Per-client dataset sizes n_k (len == num_clients).
-    fn client_sizes(&self) -> &[usize];
-
-    /// Per-client system profiles (len == num_clients): device/link rate
-    /// multipliers the coordinator's cost accounting and
-    /// heterogeneity-aware selectors read. Homogeneous engines return
-    /// all-[`ClientSystemProfile::BASELINE`] rows.
-    fn client_systems(&self) -> &[ClientSystemProfile];
+    /// The client population view: per-client dataset sizes n_k and
+    /// system profiles (device/link rate multipliers), served one
+    /// participant at a time. The sim engine backs this lazily — only
+    /// clients actually asked for are ever derived, which is what makes
+    /// million-client populations O(M) per round — while the real
+    /// engine's is eager (its data shards are materialized anyway).
+    fn population(&self) -> &Population;
 
     /// Execute one training round with the given participants and local
     /// pass count `e` (fractional passes allowed, §3.2's E = 0.5).

@@ -13,11 +13,11 @@
 use anyhow::{Context, Result};
 
 use crate::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
-use crate::data::FederatedDataset;
+use crate::data::{FederatedDataset, Population};
 use crate::model::ParamVec;
 use crate::obs::{names, wall};
 use crate::runtime::Runtime;
-use crate::system::{ClientSystemProfile, SystemSpec};
+use crate::system::SystemSpec;
 use crate::util::rng::{Rng, streams};
 
 use super::{FlEngine, RoundOutcome};
@@ -43,7 +43,7 @@ pub struct RealEngine {
     cfg: RealEngineConfig,
     global: ParamVec,
     aggregator: Aggregator,
-    systems: Vec<ClientSystemProfile>,
+    population: Population,
     rng: Rng,
     rounds_run: usize,
     /// Cumulative local SGD steps executed (τ total) — perf accounting.
@@ -77,14 +77,18 @@ impl RealEngine {
         let mut rng = Rng::new(cfg.seed ^ streams::REAL_ENGINE);
         let global = ParamVec::init_he(&meta.params, &mut rng);
         let aggregator = Aggregator::new(cfg.aggregator);
+        // The real engine materializes data shards anyway, so its
+        // population view is eager: sizes from the dataset, profiles
+        // derived once up front.
         let systems = cfg.system.profiles(dataset.clients.len(), cfg.seed);
+        let population = Population::eager(dataset.sizes.clone(), systems);
         Ok(RealEngine {
             runtime,
             dataset,
             cfg,
             global,
             aggregator,
-            systems,
+            population,
             rng,
             rounds_run: 0,
             total_steps: 0,
@@ -310,12 +314,8 @@ impl FlEngine for RealEngine {
         self.dataset.clients.len()
     }
 
-    fn client_sizes(&self) -> &[usize] {
-        &self.dataset.sizes
-    }
-
-    fn client_systems(&self) -> &[ClientSystemProfile] {
-        &self.systems
+    fn population(&self) -> &Population {
+        &self.population
     }
 
     fn run_round(&mut self, participants: &[usize], e: f64) -> Result<RoundOutcome> {

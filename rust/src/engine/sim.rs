@@ -21,10 +21,10 @@
 
 use anyhow::Result;
 
-use crate::data::{ClientSizes, DatasetProfile};
+use crate::data::{skip_sizes, DatasetProfile, Population};
 use crate::obs::{names, wall};
-use crate::system::{ClientSystemProfile, SystemSpec};
-use crate::util::rng::Rng;
+use crate::system::SystemSpec;
+use crate::util::rng::{streams, Rng};
 
 use super::{FlEngine, RoundOutcome};
 
@@ -103,8 +103,7 @@ impl SimParams {
 pub struct SimEngine {
     profile: DatasetProfile,
     params: SimParams,
-    sizes: Vec<usize>,
-    systems: Vec<ClientSystemProfile>,
+    population: Population,
     accuracy: f64,
     rng: Rng,
     rounds_run: usize,
@@ -127,14 +126,23 @@ impl SimEngine {
         seed: u64,
         system: &SystemSpec,
     ) -> SimEngine {
-        let mut rng = Rng::new(seed);
-        let sizes = ClientSizes::generate(profile, &mut rng).sizes;
-        let systems = system.profiles(sizes.len(), seed);
+        // The population is a lazy view — no per-client state up front.
+        // The convergence RNG historically shared the data stream with
+        // the eager size generation, drawing *after* the K size draws;
+        // fast-forwarding past them keeps every trajectory bit-for-bit
+        // identical to the eager constructor at any K.
+        let mut rng = Rng::new(seed ^ streams::DATA);
+        skip_sizes(&profile.size_dist, &mut rng, profile.train_clients);
+        let population = Population::lazy(
+            profile.size_dist,
+            system.clone(),
+            profile.train_clients,
+            seed,
+        );
         SimEngine {
             profile: profile.clone(),
             params,
-            sizes,
-            systems,
+            population,
             accuracy: 0.0,
             rng,
             rounds_run: 0,
@@ -164,15 +172,11 @@ impl FlEngine for SimEngine {
     }
 
     fn num_clients(&self) -> usize {
-        self.sizes.len()
+        self.population.len()
     }
 
-    fn client_sizes(&self) -> &[usize] {
-        &self.sizes
-    }
-
-    fn client_systems(&self) -> &[ClientSystemProfile] {
-        &self.systems
+    fn population(&self) -> &Population {
+        &self.population
     }
 
     fn run_round(&mut self, participants: &[usize], e: f64) -> Result<RoundOutcome> {
@@ -282,13 +286,19 @@ mod tests {
             9,
             &SystemSpec::LogNormal { sigma: 0.8 },
         );
-        assert_eq!(homog.client_sizes(), hetero.client_sizes());
+        use crate::system::ClientSystemProfile;
+        assert_eq!(
+            homog.population().sizes_vec(),
+            hetero.population().sizes_vec()
+        );
         assert!(hetero
-            .client_systems()
+            .population()
+            .systems_vec()
             .iter()
             .any(|c| *c != ClientSystemProfile::BASELINE));
         assert!(homog
-            .client_systems()
+            .population()
+            .systems_vec()
             .iter()
             .all(|c| *c == ClientSystemProfile::BASELINE));
         let parts: Vec<usize> = (0..10).collect();

@@ -43,19 +43,20 @@
 //! `n = 0` restores the default. The CLI exposes this as
 //! `fedtune grid --workers N`.
 //!
-//! # JSON artifact schema (`fedtune.experiment.grid/v3`)
+//! # JSON artifact schema (`fedtune.experiment.grid/v4`)
 //!
 //! [`GridResult::to_json`] / [`GridResult::write_json`] emit:
 //!
 //! ```text
 //! {
-//!   "schema": "fedtune.experiment.grid/v3",
+//!   "schema": "fedtune.experiment.grid/v4",
 //!   "seeds": [101, 202, 303],
 //!   "cells": [
 //!     {
 //!       "dataset": "speech", "model": "resnet-10",
 //!       "system": "homogeneous",              // client heterogeneity spec
 //!       "tuner": "fedtune",                   // tuner policy spec
+//!       "clients": null,                      // population-size override (K)
 //!       "aggregator": "fedavg", "m0": 20, "e0": 20, "penalty": 10,
 //!       "preference": [0, 0, 1, 0],          // null for the fixed baseline
 //!       "runs": [                             // one entry per seed, in order
@@ -152,6 +153,10 @@ pub struct Cell {
     /// Per-profile target-accuracy override (Fig. 5 stops each ladder
     /// model just under its own ceiling).
     pub target: Option<f64>,
+    /// Population-size override of this cell (`None` = dataset default).
+    /// The million-client scale sweeps ride this axis; the lazy
+    /// [`crate::data::Population`] keeps any K O(M)-per-round.
+    pub clients: Option<usize>,
 }
 
 impl Cell {
@@ -171,8 +176,12 @@ impl Cell {
         } else {
             format!(" tuner:{}", self.tuner.spec_string())
         };
+        let pop = match self.clients {
+            None => String::new(),
+            Some(k) => format!(" K{k}"),
+        };
         format!(
-            "{}/{}/{} M{} E{} D{} {}{}{}",
+            "{}/{}/{} M{} E{} D{} {}{}{}{}",
             self.dataset,
             self.model,
             self.aggregator.name(),
@@ -181,17 +190,18 @@ impl Cell {
             self.penalty,
             pref,
             sys,
-            tun
+            tun,
+            pop
         )
     }
 }
 
 /// Builder for a pooled experiment sweep. Axes default to the base
 /// config's single value; every setter replaces one axis. Cells are
-/// enumerated in fixed order — profiles → systems → aggregators → M₀ →
-/// E₀ → preferences → tuners → penalties — with seeds innermost, so
-/// results line up with the builder's axis order regardless of worker
-/// count.
+/// enumerated in fixed order — profiles → populations → systems →
+/// aggregators → M₀ → E₀ → preferences → tuners → penalties — with
+/// seeds innermost, so results line up with the builder's axis order
+/// regardless of worker count.
 #[derive(Debug, Clone)]
 pub struct Grid {
     pub(crate) profiles: Vec<(String, String, Option<f64>)>,
@@ -202,6 +212,7 @@ pub struct Grid {
     pub(crate) preferences: Vec<Option<Preference>>,
     pub(crate) tuners: Vec<TunerSpec>,
     pub(crate) penalties: Vec<f64>,
+    pub(crate) populations: Vec<Option<usize>>,
     pub(crate) seeds: Vec<u64>,
     pub(crate) workers: usize,
     pub(crate) compare_baseline: bool,
@@ -227,6 +238,7 @@ impl Grid {
             preferences: vec![base.preference],
             tuners: vec![base.tuner],
             penalties: vec![base.penalty],
+            populations: vec![base.clients],
             seeds: vec![base.seed],
             workers: pool::default_workers(),
             compare_baseline: false,
@@ -314,6 +326,15 @@ impl Grid {
     /// Penalty-factor axis (Fig. 8 sweeps D).
     pub fn penalties(mut self, v: &[f64]) -> Grid {
         self.penalties = v.to_vec();
+        self
+    }
+
+    /// Population-size axis: one cell set per K override (`None` = the
+    /// dataset profile's default). Million-client entries are fine —
+    /// per-client state derives lazily, so a cell's cost scales with
+    /// rounds × M, not K.
+    pub fn populations(mut self, v: &[Option<usize>]) -> Grid {
+        self.populations = v.to_vec();
         self
     }
 
@@ -440,25 +461,28 @@ impl Grid {
     pub fn cells(&self) -> Vec<Cell> {
         let mut out = Vec::new();
         for (dataset, model, target) in &self.profiles {
-            for system in &self.systems {
-                for &aggregator in &self.aggregators {
-                    for &m0 in &self.m0s {
-                        for &e0 in &self.e0s {
-                            for preference in &self.preferences {
-                                for &tuner in &self.tuners {
-                                    for &penalty in &self.penalties {
-                                        out.push(Cell {
-                                            dataset: dataset.clone(),
-                                            model: model.clone(),
-                                            system: system.clone(),
-                                            aggregator,
-                                            m0,
-                                            e0,
-                                            tuner,
-                                            preference: *preference,
-                                            penalty,
-                                            target: *target,
-                                        });
+            for &clients in &self.populations {
+                for system in &self.systems {
+                    for &aggregator in &self.aggregators {
+                        for &m0 in &self.m0s {
+                            for &e0 in &self.e0s {
+                                for preference in &self.preferences {
+                                    for &tuner in &self.tuners {
+                                        for &penalty in &self.penalties {
+                                            out.push(Cell {
+                                                dataset: dataset.clone(),
+                                                model: model.clone(),
+                                                system: system.clone(),
+                                                aggregator,
+                                                m0,
+                                                e0,
+                                                tuner,
+                                                preference: *preference,
+                                                penalty,
+                                                target: *target,
+                                                clients,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -472,6 +496,7 @@ impl Grid {
 
     pub fn num_cells(&self) -> usize {
         self.profiles.len()
+            * self.populations.len()
             * self.systems.len()
             * self.aggregators.len()
             * self.m0s.len()
@@ -568,5 +593,21 @@ mod tests {
         assert_eq!(cells[2].tuner, TunerSpec::Stepwise { decay: 0.5, patience: 5 });
         assert!(cells[2].label().contains("tuner:stepwise:0.5:5"), "{}", cells[2].label());
         assert!(cells[4].label().contains("tuner:population:4:10"), "{}", cells[4].label());
+    }
+
+    #[test]
+    fn populations_axis_multiplies_cells_and_labels() {
+        let g = Grid::new(ExperimentConfig::default())
+            .populations(&[None, Some(1_000_000)])
+            .m0s(&[1, 10]);
+        assert_eq!(g.num_cells(), 4);
+        let cells = g.cells();
+        // Populations vary slower than M₀ (axis order: populations
+        // right after profiles).
+        assert_eq!(cells[0].clients, None);
+        assert_eq!(cells[1].clients, None);
+        assert_eq!(cells[2].clients, Some(1_000_000));
+        assert!(cells[2].label().contains(" K1000000"), "{}", cells[2].label());
+        assert!(!cells[0].label().contains(" K"), "{}", cells[0].label());
     }
 }

@@ -44,8 +44,10 @@ use super::{Cell, Grid};
 
 /// Artifact schema identifier (bump on breaking layout changes).
 /// v2 = every cell object carries a `"system"` heterogeneity spec;
-/// v3 = every cell object carries a `"tuner"` policy spec.
-pub const SCHEMA: &str = "fedtune.experiment.grid/v3";
+/// v3 = every cell object carries a `"tuner"` policy spec;
+/// v4 = every cell object carries a `"clients"` population-size
+/// override (`null` = dataset default).
+pub const SCHEMA: &str = "fedtune.experiment.grid/v4";
 
 /// Mean/standard deviation of one aggregated quantity over seeds.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -132,7 +134,7 @@ impl GridResult {
         self.cells.iter().find(|c| f(&c.cell))
     }
 
-    /// Serialize to the `fedtune.experiment.grid/v3` artifact (see the
+    /// Serialize to the `fedtune.experiment.grid/v4` artifact (see the
     /// module doc). Byte-identical for any worker count.
     pub fn to_json(&self) -> Json {
         let seeds: Vec<Json> = self.seeds.iter().map(|&s| Json::from(s)).collect();
@@ -274,11 +276,16 @@ fn cell_json(c: &CellResult) -> Json {
         ]),
         None => Json::Null,
     };
+    let clients = match c.cell.clients {
+        Some(k) => k.into(),
+        None => Json::Null,
+    };
     Json::from_pairs(vec![
         ("dataset", c.cell.dataset.as_str().into()),
         ("model", c.cell.model.as_str().into()),
         ("system", c.cell.system.spec_string().as_str().into()),
         ("tuner", c.cell.tuner.spec_string().as_str().into()),
+        ("clients", clients),
         ("aggregator", c.cell.aggregator.name().into()),
         ("m0", c.cell.m0.into()),
         ("e0", c.cell.e0.into()),
@@ -830,6 +837,7 @@ fn cell_config(
         cfg.preference = cell.preference;
     }
     cfg.penalty = cell.penalty;
+    cfg.clients = cell.clients;
     cfg.seed = seed;
     if let Some(mr) = grid.max_rounds {
         cfg.max_rounds = mr;
@@ -979,11 +987,12 @@ mod tests {
         let j = g.run().unwrap().to_json();
         assert_eq!(
             j.get("schema").unwrap().as_str(),
-            Some("fedtune.experiment.grid/v3")
+            Some("fedtune.experiment.grid/v4")
         );
         let cells = j.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].get("tuner").unwrap().as_str(), Some("fedtune"));
+        assert_eq!(cells[0].get("clients"), Some(&Json::Null));
         let runs = cells[0].get("runs").unwrap().as_arr().unwrap();
         assert_eq!(runs.len(), 1);
         assert!(runs[0].get("comp_t").unwrap().as_f64().unwrap() > 0.0);

@@ -99,6 +99,12 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .opt("system", "homogeneous", &system_help)
         .opt("seed", "1", "random seed")
         .opt("scale", "1.0", "client-population scale factor (real engine)")
+        .opt(
+            "clients",
+            "",
+            "population-size override K (empty = dataset default; lazy \
+             derivation keeps even 1000000 O(M) per round)",
+        )
         .opt("artifacts", "artifacts", "artifact directory (real engine)")
         .opt(
             "trace-out",
@@ -144,6 +150,14 @@ fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
     cfg.tuner = TunerSpec::parse(&cli.get_str("tuner")).map_err(anyhow::Error::msg)?;
     cfg.seed = cli.get("seed").map_err(anyhow::Error::msg)?;
     cfg.scale = cli.get("scale").map_err(anyhow::Error::msg)?;
+    let clients = cli.get_str("clients");
+    if !clients.is_empty() {
+        cfg.clients = Some(
+            clients
+                .parse::<usize>()
+                .with_context(|| format!("bad --clients value {clients:?}"))?,
+        );
+    }
     let pref = cli.get_str("preference");
     if !pref.is_empty() {
         let w: Vec<f64> = pref

@@ -38,6 +38,9 @@ pub const POOL_SCOPES: &str = "pool.scopes";
 /// Counter: workers requested across pool scopes (divide by
 /// [`POOL_SCOPES`] for the average width).
 pub const POOL_WORKERS: &str = "pool.workers";
+/// Counter: lazy per-client derivations served by virtual populations
+/// (the O(M) claim: bounded by rounds × M, never K — DESIGN.md §16).
+pub const POPULATION_MATERIALIZED: &str = "population.materialized";
 /// Timer: one whole grid sweep, measured CLI-side around `Grid::run`.
 pub const SWEEP: &str = "sweep.run";
 /// Timer: `perf_micro` aggregation phase.
@@ -73,6 +76,7 @@ pub const ALL: &[(&str, &str, &str)] = &[
     (POOL_ITEMS, "counter", "items submitted to the pool"),
     (POOL_SCOPES, "counter", "pool scopes entered"),
     (POOL_WORKERS, "counter", "workers requested across pool scopes"),
+    (POPULATION_MATERIALIZED, "counter", "lazy per-client population derivations"),
     (SWEEP, "timer", "whole grid sweep"),
     (BENCH_AGGREGATION, "timer", "perf_micro aggregation phase"),
     (BENCH_CONTROLLER, "timer", "perf_micro controller phase"),

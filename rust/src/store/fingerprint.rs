@@ -134,6 +134,14 @@ pub fn run_identity(cfg: &ExperimentConfig, seed: u64, cost_model: &CostModel) -
             ]),
         ),
     ]);
+    // The population-size override is real physics (it changes every
+    // size/profile derivation), but it joins the identity only when
+    // set: default-K runs keep their historical keys, so existing
+    // caches stay warm across the virtual-population refactor (no
+    // version bump needed — `clients` never existed in old identities).
+    if let Some(k) = cfg.clients {
+        j.set("clients", k.into());
+    }
     // Tuner-policy knobs: each effective policy keys on its canonical
     // spec plus exactly the knobs it reads (see the module doc). Fixed
     // runs read none — this is what dedupes shared baselines across a
@@ -365,14 +373,41 @@ mod tests {
         use crate::coordinator::selection::Selector;
         let mut a = cfg();
         let mut b = cfg();
-        a.selector = Selector::Deadline { max_cost: 100.0 };
-        b.selector = Selector::Deadline { max_cost: 200.0 };
+        a.selector = Selector::Deadline { max_cost: 100.0, pool: None };
+        b.selector = Selector::Deadline { max_cost: 200.0, pool: None };
         assert_ne!(
             run_fingerprint(&a, 1, &cm()),
             run_fingerprint(&b, 1, &cm()),
             "deadline budgets select differently and must not alias"
         );
-        b.selector = Selector::Guided { exploit: 1.0 };
+        b.selector = Selector::Guided { exploit: 1.0, pool: None };
         assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&b, 1, &cm()));
+        // The candidate pool changes which clients are even scored: a
+        // pooled selector must never alias its full-roster sibling, and
+        // different pools must not alias each other.
+        let mut c = cfg();
+        c.selector = Selector::Deadline { max_cost: 100.0, pool: Some(512) };
+        assert_ne!(run_fingerprint(&a, 1, &cm()), run_fingerprint(&c, 1, &cm()));
+        let mut d = cfg();
+        d.selector = Selector::Deadline { max_cost: 100.0, pool: Some(1024) };
+        assert_ne!(run_fingerprint(&c, 1, &cm()), run_fingerprint(&d, 1, &cm()));
+    }
+
+    #[test]
+    fn clients_override_splits_keys_only_when_set() {
+        // None must reproduce the historical identity bytes (warm
+        // caches survive the refactor); Some(K) is real physics.
+        let base = cfg();
+        let d = run_identity(&base, 1, &cm()).dump();
+        assert!(!d.contains("\"clients\""), "default-K identity gained a key: {d}");
+        let mut big = cfg();
+        big.clients = Some(1_000_000);
+        assert_ne!(run_fingerprint(&base, 1, &cm()), run_fingerprint(&big, 1, &cm()));
+        let mut other = cfg();
+        other.clients = Some(500_000);
+        assert_ne!(
+            run_fingerprint(&big, 1, &cm()),
+            run_fingerprint(&other, 1, &cm())
+        );
     }
 }

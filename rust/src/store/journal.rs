@@ -6,7 +6,7 @@
 //! line. If the process dies, re-running the same grid with `--resume`
 //! replays the journal, skips the finished pairs, executes only the
 //! missing runs, and — because [`RunRecord`] JSON round-trips losslessly
-//! — still emits a `fedtune.experiment.grid/v3` artifact byte-identical
+//! — still emits a `fedtune.experiment.grid/v4` artifact byte-identical
 //! to an uninterrupted sweep.
 //!
 //! # File format (`fedtune.store.journal/v4`)

@@ -21,7 +21,7 @@
 //! * [`journal`] — a per-sweep append-only [`SweepJournal`] of finished
 //!   (cell, seed) records, so an interrupted `fedtune grid` resumes where
 //!   it died and still emits a byte-identical
-//!   `fedtune.experiment.grid/v3` artifact.
+//!   `fedtune.experiment.grid/v4` artifact.
 //!
 //! [`crate::experiment::Grid`] drives all three: work items are a
 //! *deduped* set of fingerprints fanned out over the worker pool, and

@@ -242,6 +242,47 @@ impl SystemSpec {
         }
     }
 
+    /// Derive ONE client's profile without materializing the rest of
+    /// the population: bit-for-bit equal to `profiles(k', seed)[k]` for
+    /// any population size `k' > k`. Positions a pristine system stream
+    /// at client `k`'s draws via [`Rng::advance`] using each variant's
+    /// fixed per-client draw count — `lognormal` consumes exactly one
+    /// Box–Muller pair (two raw outputs: cos → compute, sin → link),
+    /// `classes` exactly one uniform, `homogeneous` none. The lognormal
+    /// layout assumes Box–Muller never rejects (`u1 <= EPSILON`,
+    /// probability ≈ 2⁻⁵² per pair); the equivalence suite in
+    /// `tests/prop_invariants.rs` pins the eager and lazy paths against
+    /// each other on every shipped spec.
+    pub fn profile_at(&self, k: usize, seed: u64) -> ClientSystemProfile {
+        match self {
+            SystemSpec::Homogeneous => ClientSystemProfile::BASELINE,
+            SystemSpec::LogNormal { sigma } => {
+                let mut rng = Rng::new(seed ^ streams::SYSTEM);
+                rng.advance(2 * k as u128);
+                ClientSystemProfile {
+                    compute_factor: (sigma * rng.gauss()).exp(),
+                    link_factor: (sigma * rng.gauss()).exp(),
+                }
+            }
+            SystemSpec::Classes(classes) => {
+                let mut rng = Rng::new(seed ^ streams::SYSTEM);
+                rng.advance(k as u128);
+                let u = rng.f64();
+                let mut acc = 0.0;
+                for c in classes {
+                    acc += c.fraction;
+                    if u < acc {
+                        return ClientSystemProfile {
+                            compute_factor: c.factor,
+                            link_factor: c.factor,
+                        };
+                    }
+                }
+                ClientSystemProfile::BASELINE
+            }
+        }
+    }
+
     pub fn is_homogeneous(&self) -> bool {
         matches!(self, SystemSpec::Homogeneous)
     }
@@ -347,6 +388,30 @@ mod tests {
         assert!((2500..3500).contains(&fast), "fast {fast}");
         assert!((1500..2500).contains(&slow), "slow {slow}");
         assert!((4500..5500).contains(&base), "baseline {base}");
+    }
+
+    #[test]
+    fn profile_at_matches_eager_profiles() {
+        for spec in [
+            SystemSpec::Homogeneous,
+            SystemSpec::LogNormal { sigma: 0.5 },
+            SystemSpec::parse("classes:fast:0.5@0.3,slow:4.0@0.2").unwrap(),
+        ] {
+            for seed in [1u64, 9, 77] {
+                let eager = spec.profiles(200, seed);
+                for (k, want) in eager.iter().enumerate() {
+                    assert_eq!(
+                        spec.profile_at(k, seed),
+                        *want,
+                        "{} client {k} seed {seed}",
+                        spec.spec_string()
+                    );
+                }
+                // Population-size independence: client k's profile does
+                // not depend on how many clients come after it.
+                assert_eq!(spec.profile_at(150, seed), eager[150]);
+            }
+        }
     }
 
     #[test]

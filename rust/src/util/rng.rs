@@ -23,7 +23,7 @@
 ///
 /// | stream      | derivation                                | consumer |
 /// |-------------|-------------------------------------------|----------|
-/// | engine      | `Rng::new(seed)` (untagged)               | sim-engine convergence noise; dataset synthesis |
+/// | data        | `Rng::new(seed ^ DATA)` (`DATA = 0`)      | client sizes + sim-engine convergence noise; dataset synthesis ([`crate::data::Population`]) |
 /// | coordinator | `Rng::new(seed ^ COORDINATOR)`            | participant selection ([`crate::coordinator::Server`]) |
 /// | real engine | `Rng::new(seed ^ REAL_ENGINE)`            | He init + batch order ([`crate::engine::real::RealEngine`]) |
 /// | system      | `Rng::new(seed ^ SYSTEM)`                 | per-client profiles ([`crate::system::SystemSpec::profiles`]) |
@@ -37,6 +37,14 @@
 /// a value no other constant uses), document its consumer in the table
 /// above, and derive with `Rng::new(seed ^ streams::<NAME>)`.
 pub mod streams {
+    /// Data stream: client dataset sizes, synthesis, and the sim
+    /// engine's convergence noise. The tag is the XOR identity — this
+    /// registers, by name, the historically *untagged* `Rng::new(seed)`
+    /// stream the data layer has always drawn from. The zero value is
+    /// load-bearing: it keeps every pre-virtualization artifact
+    /// byte-identical while letting lazy per-client derivation
+    /// ([`crate::data::Population`]) name the stream it jumps along.
+    pub const DATA: u64 = 0;
     /// Coordinator stream: participant selection draws.
     pub const COORDINATOR: u64 = 0xc00d;
     /// Real-engine stream: parameter init and client batch order.
@@ -97,6 +105,38 @@ impl Rng {
         let rot = (self.state >> 122) as u32;
         let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
         xsl.rotate_right(rot)
+    }
+
+    /// Jump the generator forward by `delta` raw outputs in O(log delta)
+    /// — the standard LCG jump-ahead (square-and-multiply over the
+    /// affine map `state ← state·MULT + inc`), exactly equivalent to
+    /// calling [`Rng::next_u64`] `delta` times and discarding the
+    /// results. This is what makes lazy per-client derivation O(log k)
+    /// instead of O(k): position a pristine stream at any client's draw
+    /// without materializing the prefix.
+    ///
+    /// The Box–Muller spare is cleared: a jump lands *between* raw
+    /// outputs, so any cached half-pair from before the jump would not
+    /// match sequential replay. Callers that need spare-state parity
+    /// (e.g. [`crate::data::skip_sizes`]) re-establish it by replaying
+    /// the draw that produced it.
+    pub fn advance(&mut self, delta: u128) {
+        let mut acc_mult: u128 = 1;
+        let mut acc_plus: u128 = 0;
+        let mut cur_mult = PCG_MULT;
+        let mut cur_plus = self.inc;
+        let mut d = delta;
+        while d > 0 {
+            if d & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            d >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+        self.gauss_spare = None;
     }
 
     /// Uniform in [0, 1).
@@ -231,10 +271,18 @@ impl Rng {
 
     /// Sample `m` distinct indices from [0, n) (m <= n), uniform.
     ///
-    /// Partial Fisher–Yates — O(n) memory, O(m) swaps; the participant
-    /// selector (paper's random selection) calls this every round.
+    /// Partial Fisher–Yates, O(m) swaps; the participant selector
+    /// (paper's random selection) calls this every round. When n is
+    /// large relative to m the dense 0..n scratch vector is replaced by
+    /// a sparse displaced-entry map with an identical draw sequence and
+    /// identical outputs, so selecting 20 of a million clients is O(m)
+    /// memory — the switch is invisible to callers and to the bytes of
+    /// any artifact.
     pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
         assert!(m <= n, "sample {m} from {n}");
+        if n > 1024 && n / 4 > m {
+            return self.sample_indices_sparse(n, m);
+        }
         let mut idx: Vec<usize> = (0..n).collect();
         for i in 0..m {
             let j = i + self.below(n - i);
@@ -242,6 +290,25 @@ impl Rng {
         }
         idx.truncate(m);
         idx
+    }
+
+    /// Sparse partial Fisher–Yates: only displaced entries are stored.
+    /// Step i of the dense walk reads position j = i + below(n-i) and
+    /// swaps it with position i; since j >= i always, positions < i are
+    /// never read again, so a map of displaced slots reproduces the
+    /// dense walk draw-for-draw and output-for-output.
+    fn sample_indices_sparse(&mut self, n: usize, m: usize) -> Vec<usize> {
+        use std::collections::HashMap;
+        let mut displaced: HashMap<usize, usize> = HashMap::with_capacity(2 * m);
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            let j = i + self.below(n - i);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            out.push(vj);
+            displaced.insert(j, vi);
+        }
+        out
     }
 
     /// Gaussian-perturbed multiplicative noise: x * max(0, N(1, cv)).
@@ -381,6 +448,51 @@ mod tests {
         let mut s = v.clone();
         s.sort_unstable();
         assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn advance_equals_sequential_draws() {
+        for &seed in &[0u64, 1, 42, u64::MAX] {
+            for &k in &[0u128, 1, 2, 7, 63, 64, 1000, 1_000_000] {
+                let mut seq = Rng::new(seed);
+                for _ in 0..k {
+                    seq.next_u64();
+                }
+                let mut jmp = Rng::new(seed);
+                jmp.advance(k);
+                for _ in 0..8 {
+                    assert_eq!(seq.next_u64(), jmp.next_u64(), "seed {seed} k {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_clears_gauss_spare() {
+        let mut r = Rng::new(5);
+        r.gauss(); // leaves a cached sin half-pair
+        assert!(r.gauss_spare.is_some());
+        r.advance(0);
+        assert!(r.gauss_spare.is_none());
+    }
+
+    #[test]
+    fn sparse_sample_matches_dense_walk() {
+        // Replays the dense partial Fisher–Yates by hand on the same
+        // stream and checks the sparse path reproduces it exactly.
+        for &(n, m) in &[(2000usize, 1usize), (5000, 20), (100_000, 64), (1 << 20, 17)] {
+            let mut dense_rng = Rng::new(n as u64 ^ 0xabcd);
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..m {
+                let j = i + dense_rng.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(m);
+            let mut sparse_rng = Rng::new(n as u64 ^ 0xabcd);
+            let got = sparse_rng.sample_indices(n, m);
+            assert_eq!(got, idx, "n {n} m {m}");
+            assert_eq!(dense_rng.next_u64(), sparse_rng.next_u64());
+        }
     }
 
     #[test]

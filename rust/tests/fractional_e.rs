@@ -7,7 +7,7 @@
 //! kept here as the reference implementation:
 //!
 //! 1. integral-E grids are unperturbed by the usize→f64 change — every
-//!    run record (and hence the `fedtune.experiment.grid/v3` artifact)
+//!    run record (and hence the `fedtune.experiment.grid/v4` artifact)
 //!    is byte-identical to what the old mirror computed;
 //! 2. E = 0.5 through the coordinator reproduces the old mirror's trace
 //!    bit-for-bit on the same seed.
@@ -25,7 +25,6 @@ use fedtune::experiment::runner::run_record_json;
 use fedtune::experiment::{Grid, RunRecord};
 use fedtune::overhead::{CostModel, Costs, Preference};
 use fedtune::store::RUN_SCHEMA;
-use fedtune::system::ClientSystemProfile;
 use fedtune::trace::{RoundRecord, Trace};
 use fedtune::util::rng::{Rng, streams};
 
@@ -63,7 +62,6 @@ fn legacy_fixed_mirror(
     let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
     let target = cfg.target().unwrap();
     let mut rng = Rng::new(seed ^ streams::COORDINATOR); // same stream as coordinator::Server
-    let systems = vec![ClientSystemProfile::BASELINE; engine.client_sizes().len()];
     let mut trace = Trace::new();
     let mut cum = Costs::ZERO;
     let mut accuracy = 0.0;
@@ -71,9 +69,9 @@ fn legacy_fixed_mirror(
     while accuracy < target && round < cfg.max_rounds {
         round += 1;
         let participants =
-            cfg.selector.select(engine.client_sizes(), &systems, cfg.m0, &mut rng);
+            cfg.selector.select(engine.population(), cfg.m0, &mut rng);
         let sizes: Vec<usize> =
-            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
+            participants.iter().map(|&k| engine.population().size(k)).collect();
         let outcome = engine.run_round(&participants, e).unwrap();
         accuracy = outcome.accuracy;
         cum.add(&legacy_round_costs(&cost_model, &sizes, e));
@@ -97,7 +95,7 @@ fn base() -> ExperimentConfig {
 /// Contract 1: the usize→f64 unification must not perturb integral-E
 /// results. Every fixed-schedule (cell, seed) run of an integral-E grid
 /// matches the legacy mirror bit-for-bit, so the emitted
-/// `fedtune.experiment.grid/v3` JSON is byte-identical to what the
+/// `fedtune.experiment.grid/v4` JSON is byte-identical to what the
 /// pre-refactor pipeline produced.
 #[test]
 fn integral_e_grid_records_match_legacy_mirror_bitwise() {

@@ -1,0 +1,194 @@
+//! Acceptance: virtualized million-client populations (ISSUE 8).
+//!
+//! The population layer was refactored from eager `Vec<usize>` /
+//! `Vec<ClientSystemProfile>` pairs into the lazy [`Population`] view:
+//! client k's `(size_k, profile_k)` is derived on demand from
+//! `(seed, k)` by RNG jump-ahead, so a round touches O(M) client state
+//! regardless of K. These tests pin the claims the refactor rests on:
+//!
+//! 1. a K = 1,000,000 run completes in CI-friendly time and its
+//!    per-instance `materialized()` ledger stays at rounds × M — the
+//!    O(M) guarantee as a number, not a slogan;
+//! 2. million-client sweeps are byte-identical across worker counts
+//!    (the determinism contract survives the scale knob);
+//! 3. `--clients` cells cache under their own store identity and never
+//!    alias default-K records;
+//! 4. sampled-pool selectors (`guided:<e>:<pool>`) keep scoring O(pool)
+//!    on a million-client roster instead of materializing the world.
+//!
+//! The bit-for-bit lazy ≡ eager derivation equivalence itself is pinned
+//! property-style in `tests/prop_invariants.rs` and unit-style in
+//! `data::population`; the default-K byte-identity to pre-refactor
+//! artifacts is pinned by the verbatim mirrors in
+//! `tests/fractional_e.rs` / `tests/system_heterogeneity.rs` /
+//! `tests/tuner_policies.rs`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedtune::baselines;
+use fedtune::config::ExperimentConfig;
+use fedtune::coordinator::selection::Selector;
+use fedtune::coordinator::{Server, ServerConfig};
+use fedtune::engine::FlEngine;
+use fedtune::experiment::Grid;
+
+const MILLION: usize = 1_000_000;
+
+fn base() -> ExperimentConfig {
+    // Run to a fixed round cap so every test knows its exact round count.
+    ExperimentConfig {
+        max_rounds: 120,
+        target_accuracy: 0.99,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fedtune_scale_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// Run one configured sim to completion and return (result rounds,
+/// lazily materialized client derivations) from the engine's ledger.
+fn run_counting(cfg: &ExperimentConfig, seed: u64) -> (usize, u64) {
+    let mut engine = baselines::sim_engine_for(cfg, seed).unwrap();
+    assert_eq!(engine.num_clients(), cfg.profile().unwrap().train_clients);
+    let server_cfg = ServerConfig {
+        target_accuracy: cfg.target().unwrap(),
+        max_rounds: cfg.max_rounds,
+        cost_model: cfg.cost_model().unwrap(),
+        selector: cfg.selector,
+        seed,
+    };
+    let tuner = baselines::tuner_for(cfg, engine.num_clients(), seed).unwrap();
+    let r = Server::new(&mut engine, server_cfg, tuner).run().unwrap();
+    (r.rounds, engine.population().materialized())
+}
+
+/// Acceptance 1: the tentpole claim. A million-client run completes at
+/// the round cap and derives exactly rounds × M clients — never K.
+#[test]
+fn million_client_run_materializes_rounds_times_m_not_k() {
+    let mut cfg = base();
+    cfg.clients = Some(MILLION);
+    assert_eq!(cfg.profile().unwrap().train_clients, MILLION);
+    let (rounds, materialized) = run_counting(&cfg, 1);
+    assert_eq!(rounds, cfg.max_rounds, "capped run must hit the cap");
+    // Fixed schedule ⇒ M = m0 every round; uniform selection derives
+    // nothing, the coordinator's cost rows derive exactly M clients.
+    assert_eq!(materialized, (rounds * cfg.m0) as u64);
+    assert!(materialized <= (rounds * cfg.m0) as u64, "O(M) ceiling broken");
+}
+
+/// The ledger scales with M and rounds, not with K: the same config at
+/// default K derives the same count per round.
+#[test]
+fn materialization_is_population_size_independent() {
+    let small = base();
+    let mut huge = base();
+    huge.clients = Some(MILLION);
+    let (r1, m1) = run_counting(&small, 3);
+    let (r2, m2) = run_counting(&huge, 3);
+    assert_eq!(r1, r2, "both run to the cap");
+    assert_eq!(m1, m2, "per-round derivations must not depend on K");
+}
+
+/// Acceptance 2: the populations axis through the grid, byte-identical
+/// across worker counts — determinism survives the scale knob.
+#[test]
+fn million_client_sweep_is_byte_identical_across_worker_counts() {
+    let make = |workers: usize| {
+        Grid::new(base())
+            .populations(&[None, Some(MILLION)])
+            .seeds(&[1, 2])
+            .workers(workers)
+            .run()
+            .unwrap()
+    };
+    let serial = make(1);
+    let pooled = make(4);
+    assert_eq!(serial.cells.len(), 2);
+    assert_eq!(serial.executed_runs, 4);
+    assert_eq!(
+        serial.to_json().pretty(),
+        pooled.to_json().pretty(),
+        "--workers 1 vs 4 must emit byte-identical artifacts"
+    );
+    // The artifact names the knob on every cell row.
+    let dump = serial.to_json().dump();
+    assert!(dump.contains("\"clients\":null"), "{dump:.400}");
+    assert!(dump.contains("\"clients\":1000000"), "{dump:.400}");
+    assert!(serial.cells[1].cell.label().contains("K1000000"));
+    // Different K skips a different number of size draws before the
+    // convergence stream, so the trajectories genuinely differ.
+    assert_ne!(
+        serial.cells[0].runs[0].final_accuracy,
+        serial.cells[1].runs[0].final_accuracy,
+        "K must reach the convergence stream (skip_sizes fast-forward)"
+    );
+}
+
+/// Acceptance 3: `clients` is real run identity — million-client cells
+/// cache their own records, warm passes are pure hits, and a default-K
+/// sweep against the same store never aliases them.
+#[test]
+fn million_client_cells_cache_under_their_own_identity() {
+    let dir = tmp_dir("identity");
+    let make = || {
+        Grid::new(base())
+            .populations(&[Some(MILLION)])
+            .seeds(&[3])
+            .cache_dir(dir.clone())
+    };
+    let cold = make().run().unwrap();
+    assert_eq!((cold.executed_runs, cold.cache_hits), (1, 0));
+    let warm = make().run().unwrap();
+    assert_eq!((warm.executed_runs, warm.cache_hits), (0, 1));
+    assert_eq!(warm.to_json().pretty(), cold.to_json().pretty());
+    let default_k = Grid::new(base())
+        .seeds(&[3])
+        .cache_dir(dir.clone())
+        .run()
+        .unwrap();
+    assert_eq!(
+        (default_k.executed_runs, default_k.cache_hits),
+        (1, 0),
+        "a default-K run must miss the K=1000000 record"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Acceptance 4: sampled-pool guided selection on a million-client
+/// roster derives only pool + M clients per round — size-proportional
+/// scoring without a K-sized sweep.
+#[test]
+fn sampled_guided_selection_keeps_million_client_rounds_o_pool() {
+    let mut cfg = base();
+    cfg.max_rounds = 40;
+    cfg.clients = Some(MILLION);
+    cfg.selector = Selector::by_name("guided:1.5:256").unwrap();
+    assert_eq!(
+        cfg.selector,
+        Selector::Guided { exploit: 1.5, pool: Some(256) }
+    );
+    let (rounds, materialized) = run_counting(&cfg, 5);
+    assert_eq!(rounds, 40);
+    // Per round: ≤ pool size derivations to score candidates plus M
+    // cost rows. A full-roster scorer would need 40 × 1e6 instead.
+    let per_round_cap = (256 + cfg.m0) as u64;
+    assert!(
+        materialized <= rounds as u64 * per_round_cap,
+        "{materialized} derivations exceed rounds × (pool + M) = {}",
+        rounds as u64 * per_round_cap
+    );
+    assert!(materialized > 0, "pooled scoring still derives the pool");
+
+    // Deadline with a pool obeys the same ceiling.
+    cfg.selector = Selector::by_name("deadline:1e6:256").unwrap();
+    let (rounds, materialized) = run_counting(&cfg, 5);
+    assert_eq!(rounds, 40);
+    assert!(materialized <= rounds as u64 * per_round_cap);
+}

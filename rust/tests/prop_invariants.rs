@@ -2,6 +2,7 @@
 //! in-repo property-testing substrate (util::proptest).
 
 use fedtune::coordinator::selection::Selector;
+use fedtune::data::{ClientSizes, DatasetProfile, Population};
 use fedtune::fedtune::tuner::TunerSpec;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
 use fedtune::model::{ParamSpec, ParamVec};
@@ -65,7 +66,8 @@ fn prop_selection_returns_distinct_valid_clients() {
         |(sizes, m, seed)| {
             let mut rng = Rng::new(*seed);
             let systems = vec![ClientSystemProfile::BASELINE; sizes.len()];
-            let picked = Selector::UniformRandom.select(sizes, &systems, *m, &mut rng);
+            let pop = Population::eager(sizes.clone(), systems);
+            let picked = Selector::UniformRandom.select(&pop, *m, &mut rng);
             if picked.len() != (*m).min(sizes.len()) {
                 return Err(format!("picked {} of {}", picked.len(), m));
             }
@@ -252,10 +254,14 @@ fn prop_every_spec_string_round_trips_to_the_same_policy() {
                     interval: g.usize(1, 50),
                 },
             };
+            let pool = match g.usize(0, 2) {
+                0 => None,
+                _ => Some(g.usize(1, 4096)),
+            };
             let selector = match g.usize(0, 2) {
                 0 => Selector::UniformRandom,
-                1 => Selector::Guided { exploit: g.f64(0.0, 5.0) },
-                _ => Selector::Deadline { max_cost: g.f64(0.1, 1000.0) },
+                1 => Selector::Guided { exploit: g.f64(0.0, 5.0), pool },
+                _ => Selector::Deadline { max_cost: g.f64(0.1, 1000.0), pool },
             };
             let system = match g.usize(0, 2) {
                 0 => SystemSpec::Homogeneous,
@@ -295,6 +301,149 @@ fn prop_every_spec_string_round_trips_to_the_same_policy() {
                 .map_err(|e| format!("system {:?}: {e}", system.spec_string()))?;
             if y2 != *system {
                 return Err(format!("system drifted: {system:?} -> {y2:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lazy_population_matches_eager_generation_bitwise() {
+    // The virtualization acceptance pin (DESIGN.md §16): deriving client
+    // k's (size, profile) from (seed, k) by RNG jump-ahead must equal
+    // the eager generate-then-index path bit-for-bit for every shipped
+    // size distribution × system spec — otherwise lazy and eager engines
+    // would silently run different experiments under one fingerprint.
+    check(
+        "lazy-eq-eager-population",
+        60,
+        |g: &mut Gen| {
+            let profile_idx = g.usize(0, 2);
+            let system = match g.usize(0, 2) {
+                0 => SystemSpec::Homogeneous,
+                1 => SystemSpec::LogNormal { sigma: g.f64(0.0, 3.0) },
+                _ => SystemSpec::Classes(vec![
+                    SystemClass {
+                        name: "fast".into(),
+                        factor: g.f64(0.05, 10.0),
+                        fraction: g.f64(0.0, 0.5),
+                    },
+                    SystemClass {
+                        name: "slow".into(),
+                        factor: g.f64(0.05, 10.0),
+                        fraction: g.f64(0.0, 0.5),
+                    },
+                ]),
+            };
+            let seed = g.rng.next_u64();
+            let clients = g.usize(1, 300);
+            (profile_idx, system, seed, clients)
+        },
+        |(profile_idx, system, seed, clients)| {
+            let mut profile = DatasetProfile::all()[*profile_idx].clone();
+            profile.train_clients = *clients;
+            let mut data_rng = Rng::new(*seed ^ fedtune::util::rng::streams::DATA);
+            let eager_sizes = ClientSizes::generate(&profile, &mut data_rng).sizes;
+            let eager_systems = system.profiles(*clients, *seed);
+            let lazy =
+                Population::lazy(profile.size_dist, system.clone(), *clients, *seed);
+            for k in 0..*clients {
+                let (n, p) = lazy.row(k);
+                if n != eager_sizes[k] {
+                    return Err(format!(
+                        "{} size[{k}]: lazy {n} != eager {}",
+                        profile.name, eager_sizes[k]
+                    ));
+                }
+                let q = eager_systems[k];
+                if p.compute_factor.to_bits() != q.compute_factor.to_bits()
+                    || p.link_factor.to_bits() != q.link_factor.to_bits()
+                {
+                    return Err(format!(
+                        "{} profile[{k}]: lazy {p:?} != eager {q:?}",
+                        profile.name
+                    ));
+                }
+            }
+            // Each row derivation counts exactly once — the O(M) ledger.
+            if lazy.materialized() != *clients as u64 {
+                return Err(format!(
+                    "materialized {} != {clients} rows derived",
+                    lazy.materialized()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pooled_selection_within_pool_and_degrades_at_full_roster() {
+    // Sampled candidate pools (guided:<e>:<pool>, deadline:<c>:<pool>):
+    // pool >= K must take the exact unpooled path — same picks AND same
+    // post-selection RNG state — while pool < K must pick at most pool
+    // distinct valid clients, deterministically per seed.
+    check(
+        "pooled-selection",
+        200,
+        |g: &mut Gen| {
+            let k = g.usize(1, 400);
+            let m = g.usize(1, 64);
+            let pool = g.usize(1, 500);
+            let guided = g.bool();
+            let exploit_or_cost =
+                if guided { g.f64(0.0, 4.0) } else { g.f64(0.1, 1000.0) };
+            let sizes: Vec<usize> = (0..k).map(|_| g.usize(1, 316)).collect();
+            (sizes, m, pool, guided, exploit_or_cost, g.rng.next_u64())
+        },
+        |(sizes, m, pool, guided, x, seed)| {
+            let k = sizes.len();
+            let pop = Population::eager(
+                sizes.clone(),
+                vec![ClientSystemProfile::BASELINE; k],
+            );
+            let pooled = if *guided {
+                Selector::Guided { exploit: *x, pool: Some(*pool) }
+            } else {
+                Selector::Deadline { max_cost: *x, pool: Some(*pool) }
+            };
+            let unpooled = if *guided {
+                Selector::Guided { exploit: *x, pool: None }
+            } else {
+                Selector::Deadline { max_cost: *x, pool: None }
+            };
+            let picked = pooled.select(&pop, *m, &mut Rng::new(*seed));
+            let again = pooled.select(&pop, *m, &mut Rng::new(*seed));
+            if picked != again {
+                return Err("pooled selection not deterministic per seed".into());
+            }
+            let mut sorted = picked.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != picked.len() {
+                return Err("pooled selection returned duplicates".into());
+            }
+            if picked.iter().any(|&i| i >= k) {
+                return Err("pooled selection out of range".into());
+            }
+            if picked.len() > (*m).min(*pool).min(k) {
+                return Err(format!(
+                    "picked {} > min(m={m}, pool={pool}, k={k})",
+                    picked.len()
+                ));
+            }
+            if *pool >= k {
+                // Full-roster degradation: byte-identical to unpooled.
+                let mut r1 = Rng::new(*seed);
+                let mut r2 = Rng::new(*seed);
+                let a = pooled.select(&pop, *m, &mut r1);
+                let b = unpooled.select(&pop, *m, &mut r2);
+                if a != b {
+                    return Err(format!("pool {pool} >= k {k} drifted: {a:?} != {b:?}"));
+                }
+                if r1.next_u64() != r2.next_u64() {
+                    return Err("pool >= k consumed extra RNG draws".into());
+                }
             }
             Ok(())
         },

@@ -1,7 +1,7 @@
 //! Integration: the content-addressed run store (`fedtune::store`) —
 //! in-sweep baseline dedup, warm-cache sweeps with zero engine runs,
 //! corruption fallback, trace-demand upgrades, and interrupted-sweep
-//! resume — all with byte-identical `fedtune.experiment.grid/v3`
+//! resume — all with byte-identical `fedtune.experiment.grid/v4`
 //! artifacts (the acceptance contract of the store subsystem).
 
 use std::fs;

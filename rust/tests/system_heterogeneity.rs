@@ -24,7 +24,7 @@ use fedtune::engine::FlEngine;
 use fedtune::experiment::Grid;
 use fedtune::overhead::{CostModel, Costs};
 use fedtune::store::{run_fingerprint, RunStore, RUN_SCHEMA};
-use fedtune::system::{ClientSystemProfile, SystemSpec};
+use fedtune::system::SystemSpec;
 use fedtune::trace::{RoundRecord, Trace};
 use fedtune::util::rng::{Rng, streams};
 
@@ -64,7 +64,6 @@ fn prerefactor_fixed_mirror(
     let cost_model = cfg.cost_model().unwrap();
     let target = cfg.target().unwrap();
     let mut rng = Rng::new(seed ^ streams::COORDINATOR);
-    let systems = vec![ClientSystemProfile::BASELINE; engine.client_sizes().len()];
     let mut trace = Trace::new();
     let mut cum = Costs::ZERO;
     let mut accuracy = 0.0;
@@ -72,9 +71,9 @@ fn prerefactor_fixed_mirror(
     while accuracy < target && round < cfg.max_rounds {
         round += 1;
         let participants =
-            cfg.selector.select(engine.client_sizes(), &systems, cfg.m0, &mut rng);
+            cfg.selector.select(engine.population(), cfg.m0, &mut rng);
         let sizes: Vec<usize> =
-            participants.iter().map(|&k| engine.client_sizes()[k]).collect();
+            participants.iter().map(|&k| engine.population().size(k)).collect();
         let outcome = engine.run_round(&participants, cfg.e0).unwrap();
         accuracy = outcome.accuracy;
         cum.add(&legacy_round_costs(&cost_model, &sizes, cfg.e0));
@@ -169,7 +168,7 @@ fn deadline_selection_on_stragglers_keeps_round_width() {
     cfg.max_rounds = 50;
     cfg.target_accuracy = 0.99; // run to the cap
     cfg.system = SystemSpec::parse("classes:slow:1000.0@1.0").unwrap();
-    cfg.selector = Selector::Deadline { max_cost: 10.0 };
+    cfg.selector = Selector::Deadline { max_cost: 10.0, pool: None };
     let r = baselines::run_sim(&cfg, 1).unwrap();
     assert_eq!(r.rounds, 50);
     // Every round billed M = m0 participants (TransL = C4 · M · rounds),
@@ -274,11 +273,11 @@ fn engine_systems_are_seed_deterministic() {
     cfg.system = SystemSpec::parse("lognormal:0.75").unwrap();
     let e1 = baselines::sim_engine_for(&cfg, 9).unwrap();
     let e2 = baselines::sim_engine_for(&cfg, 9).unwrap();
-    assert_eq!(e1.client_systems(), e2.client_systems());
+    assert_eq!(e1.population().systems_vec(), e2.population().systems_vec());
     assert_eq!(
-        e1.client_systems(),
-        cfg.system.profiles(e1.num_clients(), 9).as_slice()
+        e1.population().systems_vec(),
+        cfg.system.profiles(e1.num_clients(), 9)
     );
     let e3 = baselines::sim_engine_for(&cfg, 10).unwrap();
-    assert_ne!(e1.client_systems(), e3.client_systems());
+    assert_ne!(e1.population().systems_vec(), e3.population().systems_vec());
 }

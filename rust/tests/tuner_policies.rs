@@ -121,15 +121,11 @@ fn preschedule_mirror(
         }
         round += 1;
         let (m, e) = schedule.current();
-        let participants = cfg.selector.select(
-            engine.client_sizes(),
-            engine.client_systems(),
-            m,
-            &mut rng,
-        );
+        let participants =
+            cfg.selector.select(engine.population(), m, &mut rng);
         let rows: Vec<(usize, ClientSystemProfile)> = participants
             .iter()
-            .map(|&k| (engine.client_sizes()[k], engine.client_systems()[k]))
+            .map(|&k| engine.population().row(k))
             .collect();
         let outcome = engine.run_round(&participants, e).unwrap();
         accuracy = outcome.accuracy;
