@@ -64,13 +64,100 @@ fn sample_json(s: &Sample) -> Json {
     ])
 }
 
+/// [`sample_json`] plus effective fold throughput: `bytes` of update
+/// data consumed per wall second (schema-additive to `fedtune.bench/v1`;
+/// the bench-smoke diff pins its presence on every kernel bench).
+fn sample_json_bps(s: &Sample, bytes: f64) -> Json {
+    Json::from_pairs(vec![
+        ("mean_ns", s.mean_ns.into()),
+        ("std_ns", s.std_ns.into()),
+        ("min_ns", s.min_ns.into()),
+        ("iters_per_sample", s.iters_per_sample.into()),
+        ("samples", s.samples.into()),
+        ("bytes_per_sec", (bytes / (s.mean_ns * 1e-9)).into()),
+    ])
+}
+
+/// The pre-kernel `Aggregator` fold, verbatim — the committed serial
+/// baseline the `agg.aggregate.*.legacy` rows measure. Bitwise equal to
+/// the fused kernels (pinned in tests/prop_invariants.rs); only the
+/// memory traffic differs.
+struct LegacyAgg {
+    kind: AggregatorKind,
+    momentum: Option<ParamVec>,
+    accumulator: Option<ParamVec>,
+}
+
+impl LegacyAgg {
+    fn new(kind: AggregatorKind) -> LegacyAgg {
+        LegacyAgg { kind, momentum: None, accumulator: None }
+    }
+
+    fn aggregate(&mut self, global: &mut ParamVec, updates: &[ClientUpdate]) {
+        let total_n: usize = updates.iter().map(|u| u.n).sum();
+        match self.kind {
+            AggregatorKind::FedAvg => {
+                let mut next = global.clone();
+                next.clear();
+                for u in updates {
+                    next.axpy((u.n as f64 / total_n as f64) as f32, &u.params);
+                }
+                *global = next;
+            }
+            AggregatorKind::FedNova => {
+                let mut d = global.clone();
+                d.clear();
+                let mut tau_eff = 0.0f64;
+                for u in updates {
+                    let p_k = u.n as f64 / total_n as f64;
+                    let tau_k = u.tau.max(1) as f64;
+                    tau_eff += p_k * tau_k;
+                    let delta = global.delta(&u.params);
+                    d.axpy((p_k / tau_k) as f32, &delta);
+                }
+                global.axpy(-(tau_eff as f32), &d);
+            }
+            AggregatorKind::FedAdagrad { lr, beta1, tau } => {
+                let mut delta = global.clone();
+                delta.clear();
+                for u in updates {
+                    let p_k = u.n as f64 / total_n as f64;
+                    let diff = u.params.delta(global);
+                    delta.axpy(p_k as f32, &diff);
+                }
+                let m = self.momentum.get_or_insert_with(|| {
+                    let mut z = global.clone();
+                    z.clear();
+                    z
+                });
+                for (mi, di) in m.data.iter_mut().zip(&delta.data) {
+                    *mi = (beta1 as f32) * *mi + (1.0 - beta1 as f32) * di;
+                }
+                let v = self.accumulator.get_or_insert_with(|| {
+                    let mut z = global.clone();
+                    z.clear();
+                    z
+                });
+                for (vi, di) in v.data.iter_mut().zip(&delta.data) {
+                    *vi += di * di;
+                }
+                for ((g, mi), vi) in
+                    global.data.iter_mut().zip(&m.data).zip(&v.data)
+                {
+                    *g += (lr as f32) * mi / (vi.sqrt() + tau as f32);
+                }
+            }
+        }
+    }
+}
+
 fn main() {
     // The metrics plane doubles as the phase profiler here: each section
     // below is bracketed by a stopwatch and lapped into its `bench.*`
     // timer — unconditionally, so the report's phase key set is stable
     // even when the json/pjrt sections have nothing to do.
     wall::enable();
-    let mut report: Vec<(&str, Sample)> = Vec::new();
+    let mut report: Vec<(String, Json)> = Vec::new();
 
     // --- aggregation throughput (FedAvg over 20 updates of 80k params,
     //     the paper's speech/ResNet-10 configuration) -----------------------
@@ -86,12 +173,12 @@ fn main() {
         })
         .collect();
     let mut global = ParamVec::init_he(&specs, &mut rng);
+    let bytes = (20 * n * 4) as f64;
     let s = bench("fedavg_aggregate_20x80k", 300, || {
         let mut agg = Aggregator::new(AggregatorKind::FedAvg);
         agg.aggregate(&mut global, &updates);
     });
-    report.push(("fedavg_aggregate_20x80k", s));
-    let bytes = (20 * n * 4) as f64;
+    report.push(("fedavg_aggregate_20x80k".to_string(), sample_json_bps(&s, bytes)));
     let gbs = bytes / (s.mean_ns * 1e-9) / 1e9;
     println!("  → aggregation throughput: {gbs:.2} GB/s (target ≥ 1)");
     assert!(gbs > 1.0, "aggregation below 1 GB/s: {gbs:.2}");
@@ -100,15 +187,52 @@ fn main() {
         let mut agg = Aggregator::new(AggregatorKind::FedNova);
         agg.aggregate(&mut global, &updates);
     });
-    report.push(("fednova_aggregate_20x80k", s));
+    report.push(("fednova_aggregate_20x80k".to_string(), sample_json_bps(&s, bytes)));
     println!("  → fednova round: {:.1} µs", s.mean_us());
 
     let s = bench("fedadagrad_aggregate_20x80k", 300, || {
         let mut agg = Aggregator::new(AggregatorKind::fedadagrad_paper());
         agg.aggregate(&mut global, &updates);
     });
-    report.push(("fedadagrad_aggregate_20x80k", s));
+    report.push(("fedadagrad_aggregate_20x80k".to_string(), sample_json_bps(&s, bytes)));
     println!("  → fedadagrad round: {:.1} µs", s.mean_us());
+
+    // --- fused kernels vs the committed serial baseline -------------------
+    // `agg.aggregate.<kind>.legacy` runs the verbatim pre-kernel scalar
+    // fold; `.w{1,2,4}` run the fused chunk kernels at that worker count
+    // on a persistent aggregator (steady state: scratch and m/v reused).
+    // All four produce bitwise-identical outputs — only wall time and
+    // memory traffic differ. On a single-core host the w2/w4 rows track
+    // w1 (the fused-vs-legacy delta is the traffic win); worker scaling
+    // shows on multi-core machines.
+    let kinds: [(&str, AggregatorKind); 3] = [
+        ("fedavg", AggregatorKind::FedAvg),
+        ("fednova", AggregatorKind::FedNova),
+        ("fedadagrad", AggregatorKind::fedadagrad_paper()),
+    ];
+    for (kname, kind) in kinds {
+        let mut legacy = LegacyAgg::new(kind);
+        let mut g_legacy = global.clone();
+        let name = format!("agg.aggregate.{kname}.legacy");
+        let s = bench(&name, 300, || legacy.aggregate(&mut g_legacy, &updates));
+        report.push((name, sample_json_bps(&s, bytes)));
+        let legacy_ns = s.mean_ns;
+        for w in [1usize, 2, 4] {
+            let mut agg = Aggregator::new(kind).with_workers(w);
+            let mut g = global.clone();
+            let name = format!("agg.aggregate.{kname}.w{w}");
+            let s = bench(&name, 300, || agg.aggregate(&mut g, &updates));
+            report.push((name, sample_json_bps(&s, bytes)));
+            if w == 1 {
+                println!(
+                    "  → {kname}: legacy {:.0} µs vs fused {:.0} µs ({:.2}x)",
+                    legacy_ns / 1e3,
+                    s.mean_ns / 1e3,
+                    legacy_ns / s.mean_ns
+                );
+            }
+        }
+    }
     wall::lap(names::BENCH_AGGREGATION, sw);
 
     // --- FedTune controller step -----------------------------------------
@@ -130,7 +254,7 @@ fn main() {
         cum.add(&Costs { comp_t: 3.0, trans_t: 1.0, comp_l: 9.0, trans_l: 20.0 });
         ft.observe_round(round, acc, cum)
     });
-    report.push(("fedtune_observe_round", s));
+    report.push(("fedtune_observe_round".to_string(), sample_json(&s)));
     println!("  → fedtune step: {:.3} µs (target < 1 µs)", s.mean_us());
     assert!(s.mean_us() < 1.0, "fedtune step too slow: {:.3} µs", s.mean_us());
     wall::lap(names::BENCH_CONTROLLER, sw);
@@ -147,7 +271,7 @@ fn main() {
     let s = bench("selection_uniform_20_of_2112", 200, || {
         Selector::UniformRandom.select(&pop, 20, &mut sel_rng)
     });
-    report.push(("selection_uniform_20_of_2112", s));
+    report.push(("selection_uniform_20_of_2112".to_string(), sample_json(&s)));
     println!("  → selection: {:.2} µs", s.mean_us());
 
     // --- sampled-pool scoring on a million-client lazy roster -------------
@@ -163,7 +287,7 @@ fn main() {
     let s = bench("selector.sampled", 50, || {
         pooled.select(&huge, 20, &mut sel_rng)
     });
-    report.push(("selector.sampled", s));
+    report.push(("selector.sampled".to_string(), sample_json(&s)));
     println!("  → sampled-pool selection (K=1e6, pool=512): {:.2} µs", s.mean_us());
     wall::lap(names::BENCH_SELECTION, sw);
 
@@ -174,7 +298,7 @@ fn main() {
     let s = bench("sim_engine_round", 200, || {
         eng.run_round(&parts, 2.0).unwrap()
     });
-    report.push(("sim_engine_round", s));
+    report.push(("sim_engine_round".to_string(), sample_json(&s)));
     println!("  → sim round: {:.3} µs", s.mean_us());
 
     // --- single lazy (size, profile) derivation (RNG jump-ahead) ----------
@@ -183,7 +307,7 @@ fn main() {
         next_k = (next_k + 999_983) % 1_000_000; // stride the whole roster
         huge.row(next_k)
     });
-    report.push(("population.derive", s));
+    report.push(("population.derive".to_string(), sample_json(&s)));
     println!("  → lazy row derivation: {:.3} µs", s.mean_us());
     wall::lap(names::BENCH_SIM, sw);
 
@@ -194,7 +318,7 @@ fn main() {
         .map(|i| (1 + i * 7 % 300, fedtune::system::ClientSystemProfile::BASELINE))
         .collect();
     let s = bench("cost_model_round", 100, || cm.round_costs(&rows, 2.0));
-    report.push(("cost_model_round", s));
+    report.push(("cost_model_round".to_string(), sample_json(&s)));
     println!("  → cost accounting: {:.4} µs", s.mean_us());
     wall::lap(names::BENCH_COST, sw);
 
@@ -267,6 +391,41 @@ fn main() {
                 rt.eval_step("mlp-s", &params, &xe, &ye, &maske).unwrap()
             });
             println!("  → eval_step: {:.2} ms", s.mean_ms());
+
+            // Whole pooled real round: per-worker runtimes train the
+            // participants, updates join in participant order, the fused
+            // chunked reduce folds them. Out-of-report like the other
+            // artifact-dependent benches.
+            use fedtune::engine::real::{RealEngine, RealEngineConfig};
+            let rt3 = fedtune::runtime::Runtime::new("artifacts").unwrap();
+            let rprofile = DatasetProfile::speech().scaled(0.05);
+            let ds = fedtune::data::FederatedDataset::generate(&rprofile, 9);
+            // max(2) so the pooled path runs even on a single-core host
+            // (results are bitwise identical to serial either way).
+            let workers = fedtune::util::pool::default_workers().max(2);
+            let mut eng = RealEngine::new(
+                rt3,
+                ds,
+                RealEngineConfig {
+                    model: "mlp-s".into(),
+                    lr: 0.1,
+                    aggregator: AggregatorKind::FedAvg,
+                    eval_subsample: 256,
+                    seed: 9,
+                    system: SystemSpec::Homogeneous,
+                    workers,
+                },
+            )
+            .unwrap();
+            let rparts: Vec<usize> = (0..8.min(eng.num_clients())).collect();
+            let s = bench("real.round.pooled", 4000, || {
+                eng.run_round(&rparts, 1.0).unwrap()
+            });
+            println!(
+                "  → pooled real round (workers={workers}, {} clients): {:.2} ms",
+                rparts.len(),
+                s.mean_ms()
+            );
         }
         Err(_) => println!("(no artifacts/: skipping PJRT microbenches — run `make artifacts`)"),
     }
@@ -274,7 +433,7 @@ fn main() {
 
     if let Some(path) = out_path() {
         let benches = Json::from_pairs(
-            report.iter().map(|(name, s)| (*name, sample_json(s))).collect(),
+            report.iter().map(|(name, j)| (name.as_str(), j.clone())).collect(),
         );
         let phases = Json::from_pairs(
             [

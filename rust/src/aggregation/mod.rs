@@ -15,8 +15,9 @@
 //!   m ← β₁ m + (1−β₁) Δ;  v ← v + Δ²;  wᵍ ← wᵍ + η · m / (√v + τ).
 //!   (Paper §5.2 uses η = 0.1, β₁ = 0, τ = 1e-3.)
 
-use crate::model::ParamVec;
+use crate::model::{kernels, ParamVec};
 use crate::obs::{names, wall};
+use crate::util::pool;
 
 /// Which aggregation algorithm a run uses.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -63,6 +64,16 @@ pub struct ClientUpdate {
 }
 
 /// Stateful server aggregator.
+///
+/// The fold runs as fused chunk kernels ([`crate::model::kernels`]) over
+/// a **fixed chunk grid**: chunk boundaries depend only on the parameter
+/// count (never on the worker count), every element is written by exactly
+/// one chunk, and per-element accumulation stays in update order — so the
+/// result is bitwise identical across any `workers`/`chunk` setting and
+/// to the legacy whole-vector scalar fold (DESIGN.md §17, pinned by
+/// `tests/prop_invariants.rs`). Scratch (the FedNova/FedAdagrad delta
+/// buffer) and the FedAdagrad m/v state are owned here and reused across
+/// rounds: aggregation allocates nothing after the first round.
 #[derive(Debug, Clone)]
 pub struct Aggregator {
     kind: AggregatorKind,
@@ -70,11 +81,40 @@ pub struct Aggregator {
     momentum: Option<ParamVec>,
     accumulator: Option<ParamVec>,
     rounds: usize,
+    /// Pool workers for the chunked reduce (1 = serial, no threads).
+    workers: usize,
+    /// Chunk length in elements. Fixed per aggregator — a tuning/test
+    /// knob, never derived from `workers`.
+    chunk: usize,
+    /// Reusable per-round delta buffer (FedNova/FedAdagrad).
+    scratch: Vec<f32>,
 }
 
 impl Aggregator {
     pub fn new(kind: AggregatorKind) -> Aggregator {
-        Aggregator { kind, momentum: None, accumulator: None, rounds: 0 }
+        Aggregator {
+            kind,
+            momentum: None,
+            accumulator: None,
+            rounds: 0,
+            workers: 1,
+            chunk: kernels::DEFAULT_CHUNK,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Fan the chunked reduce over `workers` pool threads (0 or 1 =
+    /// serial). Any setting produces bitwise-identical results.
+    pub fn with_workers(mut self, workers: usize) -> Aggregator {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Override the chunk length (elements). Exposed for the parity
+    /// property tests; the default is tuned for L1 residency.
+    pub fn with_chunk(mut self, chunk: usize) -> Aggregator {
+        self.chunk = chunk.max(1);
+        self
     }
 
     pub fn kind(&self) -> AggregatorKind {
@@ -97,66 +137,106 @@ impl Aggregator {
         assert!(!updates.is_empty(), "aggregate with no updates");
         let total_n: usize = updates.iter().map(|u| u.n).sum();
         assert!(total_n > 0, "aggregate with zero total data points");
+        for (i, u) in updates.iter().enumerate() {
+            assert_eq!(
+                u.params.len(),
+                global.len(),
+                "update {i} layout mismatch with global"
+            );
+        }
         self.rounds += 1;
+
+        let n = global.len();
+        let chunk = self.chunk;
+        let upd: Vec<&[f32]> = updates.iter().map(|u| u.params.data.as_slice()).collect();
 
         match self.kind {
             AggregatorKind::FedAvg => {
-                let mut next = global.clone();
-                next.clear();
-                for u in updates {
-                    next.axpy((u.n as f64 / total_n as f64) as f32, &u.params);
-                }
-                *global = next;
+                let w: Vec<f32> = updates
+                    .iter()
+                    .map(|u| (u.n as f64 / total_n as f64) as f32)
+                    .collect();
+                let jobs: Vec<&mut [f32]> = global.data.chunks_mut(chunk).collect();
+                run_chunks(self.workers, jobs, |ci, g| {
+                    kernels::weighted_sum(g, ci * chunk, &upd, &w);
+                });
             }
             AggregatorKind::FedNova => {
                 // d = Σ p_k (wᵍ − w_k)/τ_k, applied with τ_eff = Σ p_k τ_k.
-                let mut d = global.clone();
-                d.clear();
+                // Scalar prologue in f64 update order, cast once — exactly
+                // the legacy coefficients.
                 let mut tau_eff = 0.0f64;
+                let mut c = Vec::with_capacity(updates.len());
                 for u in updates {
                     let p_k = u.n as f64 / total_n as f64;
                     let tau_k = u.tau.max(1) as f64;
                     tau_eff += p_k * tau_k;
-                    let delta = global.delta(&u.params); // wᵍ − w_k
-                    d.axpy((p_k / tau_k) as f32, &delta);
+                    c.push((p_k / tau_k) as f32);
                 }
-                global.axpy(-(tau_eff as f32), &d);
+                let neg_tau_eff = -(tau_eff as f32);
+                self.scratch.resize(n, 0.0);
+                let jobs: Vec<(&mut [f32], &mut [f32])> = global
+                    .data
+                    .chunks_mut(chunk)
+                    .zip(self.scratch.chunks_mut(chunk))
+                    .collect();
+                run_chunks(self.workers, jobs, |ci, (g, d)| {
+                    kernels::nova_apply(g, d, ci * chunk, &upd, &c, neg_tau_eff);
+                });
             }
             AggregatorKind::FedAdagrad { lr, beta1, tau } => {
-                // Δ = Σ p_k (w_k − wᵍ)
-                let mut delta = global.clone();
-                delta.clear();
-                for u in updates {
-                    let p_k = u.n as f64 / total_n as f64;
-                    let diff = u.params.delta(global); // w_k − wᵍ
-                    delta.axpy(p_k as f32, &diff);
-                }
-                let m = self
-                    .momentum
-                    .get_or_insert_with(|| {
-                        let mut z = global.clone();
-                        z.clear();
-                        z
-                    });
-                for (mi, di) in m.data.iter_mut().zip(&delta.data) {
-                    *mi = (beta1 as f32) * *mi + (1.0 - beta1 as f32) * di;
-                }
-                let v = self
-                    .accumulator
-                    .get_or_insert_with(|| {
-                        let mut z = global.clone();
-                        z.clear();
-                        z
-                    });
-                for (vi, di) in v.data.iter_mut().zip(&delta.data) {
-                    *vi += di * di;
-                }
-                for ((g, mi), vi) in
-                    global.data.iter_mut().zip(&m.data).zip(&v.data)
-                {
-                    *g += (lr as f32) * mi / (vi.sqrt() + tau as f32);
-                }
+                // Δ = Σ p_k (w_k − wᵍ); m/v are persistent server state.
+                let p: Vec<f32> = updates
+                    .iter()
+                    .map(|u| (u.n as f64 / total_n as f64) as f32)
+                    .collect();
+                self.scratch.resize(n, 0.0);
+                let m = self.momentum.get_or_insert_with(|| global.zeros_like());
+                let v = self.accumulator.get_or_insert_with(|| global.zeros_like());
+                let jobs: Vec<((&mut [f32], &mut [f32]), (&mut [f32], &mut [f32]))> =
+                    global
+                        .data
+                        .chunks_mut(chunk)
+                        .zip(m.data.chunks_mut(chunk))
+                        .zip(v.data.chunks_mut(chunk).zip(self.scratch.chunks_mut(chunk)))
+                        .collect();
+                run_chunks(self.workers, jobs, |ci, ((g, m), (v, d))| {
+                    kernels::adagrad_apply(
+                        g,
+                        m,
+                        v,
+                        d,
+                        ci * chunk,
+                        &upd,
+                        &p,
+                        lr as f32,
+                        beta1 as f32,
+                        tau as f32,
+                    );
+                });
             }
+        }
+    }
+}
+
+/// Dispatch per-chunk jobs over the worker pool with an index-keyed
+/// combine: job `i` always owns chunk `i` of the fixed grid, so results
+/// land at fixed offsets regardless of completion order, and `workers = 1`
+/// takes a thread-free serial path over the *same* grid.
+fn run_chunks<T: Send>(workers: usize, jobs: Vec<T>, f: impl Fn(usize, T) + Sync) {
+    wall::count(names::AGG_CHUNKS, jobs.len() as u64);
+    if workers <= 1 || jobs.len() <= 1 {
+        for (ci, job) in jobs.into_iter().enumerate() {
+            f(ci, job);
+        }
+        return;
+    }
+    let span = wall::stopwatch();
+    let results = pool::scope_map(jobs, workers, &f);
+    wall::lap(names::AGG_PAR_SPAN, span);
+    for r in results {
+        if let Err(e) = r {
+            panic!("aggregation chunk worker failed: {e}");
         }
     }
 }
@@ -301,6 +381,46 @@ mod tests {
         // Clients report exactly the global: delta = 0.
         agg.aggregate(&mut g, &[upd(before.clone(), 10, 1)]);
         assert!(g.delta(&before).l2_norm() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_and_chunked_folds_are_bitwise_identical() {
+        // The determinism contract at unit scope (the exhaustive version
+        // lives in tests/prop_invariants.rs): any workers × chunk setting
+        // must reproduce the serial default bit-for-bit, including the
+        // FedAdagrad m/v state across rounds.
+        let specs = vec![ParamSpec { name: "w".into(), shape: vec![777] }];
+        let mut rng = Rng::new(42);
+        let kinds = [
+            AggregatorKind::FedAvg,
+            AggregatorKind::FedNova,
+            AggregatorKind::fedadagrad_paper(),
+        ];
+        for kind in kinds {
+            let global0 = ParamVec::init_he(&specs, &mut rng);
+            let rounds: Vec<Vec<ClientUpdate>> = (0..3)
+                .map(|r| {
+                    (0..5)
+                        .map(|i| ClientUpdate {
+                            params: ParamVec::init_he(&specs, &mut rng),
+                            n: 10 + 3 * i + r,
+                            tau: 1 + i,
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut g_serial = global0.clone();
+            let mut a_serial = Aggregator::new(kind);
+            let mut g_par = global0.clone();
+            let mut a_par = Aggregator::new(kind).with_workers(4).with_chunk(64);
+            for updates in &rounds {
+                a_serial.aggregate(&mut g_serial, updates);
+                a_par.aggregate(&mut g_par, updates);
+                for (a, b) in g_serial.data.iter().zip(&g_par.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} diverged");
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,8 +9,17 @@
 //!
 //! Fractional passes: `E = 0.5` trains on ⌈0.5 · batches-per-pass⌉
 //! mini-batches, matching §3.2's "half of each client's local data".
+//!
+//! With `workers > 1` the per-participant training fans out over a
+//! persistent [`WorkerPool`] whose threads each own a **private PJRT
+//! runtime** (artifacts loaded once per worker, device handles never
+//! crossing threads). Determinism is preserved by construction: shuffle
+//! orders are pre-drawn serially in participant order (the only RNG
+//! consumer), and updates join back in participant order, so the
+//! aggregator sees the exact sequence the serial loop produces
+//! (DESIGN.md §17).
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use crate::data::{FederatedDataset, Population};
@@ -18,6 +27,7 @@ use crate::model::ParamVec;
 use crate::obs::{names, wall};
 use crate::runtime::Runtime;
 use crate::system::SystemSpec;
+use crate::util::pool::WorkerPool;
 use crate::util::rng::{Rng, streams};
 
 use super::{FlEngine, RoundOutcome};
@@ -34,6 +44,21 @@ pub struct RealEngineConfig {
     /// Per-client system heterogeneity population; profiles derive
     /// deterministically from (spec, seed).
     pub system: SystemSpec,
+    /// In-round parallelism: chunked-aggregation fan-out and pooled
+    /// per-participant training (1 = the serial legacy path). Results
+    /// are bitwise identical for every setting, so `workers` is a pure
+    /// execution knob and deliberately **not** part of the run identity.
+    pub workers: usize,
+}
+
+/// One pooled training job: everything a worker needs, owned.
+struct TrainJob {
+    /// Snapshot of the global model (the serial path clones it too).
+    params: ParamVec,
+    cx: Vec<f32>,
+    cy: Vec<i32>,
+    order: Vec<usize>,
+    total_batches: usize,
 }
 
 /// The PJRT-backed engine.
@@ -48,6 +73,12 @@ pub struct RealEngine {
     rounds_run: usize,
     /// Cumulative local SGD steps executed (τ total) — perf accounting.
     pub total_steps: u64,
+    /// Reusable pre-aggregate snapshot for the update-norm (no per-round
+    /// clone/delta allocation).
+    prev_global: ParamVec,
+    /// Per-worker-runtime training pool (`workers > 1` only; `None`
+    /// falls back to the serial loop).
+    pool: Option<WorkerPool<TrainJob, (ParamVec, f64)>>,
 }
 
 impl RealEngine {
@@ -76,12 +107,31 @@ impl RealEngine {
         // He init and batch order.
         let mut rng = Rng::new(cfg.seed ^ streams::REAL_ENGINE);
         let global = ParamVec::init_he(&meta.params, &mut rng);
-        let aggregator = Aggregator::new(cfg.aggregator);
+        let workers = cfg.workers.max(1);
+        let aggregator = Aggregator::new(cfg.aggregator).with_workers(workers);
         // The real engine materializes data shards anyway, so its
         // population view is eager: sizes from the dataset, profiles
         // derived once up front.
         let systems = cfg.system.profiles(dataset.clients.len(), cfg.seed);
         let population = Population::eager(dataset.sizes.clone(), systems);
+        // Per-worker runtimes: each pool thread loads its own copy of the
+        // artifacts inside the thread (PJRT handles are not Send). If a
+        // worker cannot bring a backend up, training degrades to the
+        // serial loop — the results are identical either way.
+        let pool = if workers > 1 {
+            match Self::spawn_pool(&runtime, &cfg, workers) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    crate::log_warn!(
+                        "training pool unavailable ({e}); falling back to serial client training"
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let prev_global = global.zeros_like();
         Ok(RealEngine {
             runtime,
             dataset,
@@ -92,7 +142,47 @@ impl RealEngine {
             rng,
             rounds_run: 0,
             total_steps: 0,
+            prev_global,
+            pool,
         })
+    }
+
+    /// Build the persistent training pool: `workers` threads, each
+    /// constructing a private `Runtime` over the same artifact dir and
+    /// loading the model once, then serving [`TrainJob`]s for the life
+    /// of the engine.
+    fn spawn_pool(
+        runtime: &Runtime,
+        cfg: &RealEngineConfig,
+        workers: usize,
+    ) -> std::result::Result<WorkerPool<TrainJob, (ParamVec, f64)>, String> {
+        let dir = runtime.manifest().dir.clone();
+        let model = cfg.model.clone();
+        let work_model = cfg.model.clone();
+        let lr = cfg.lr;
+        WorkerPool::new(
+            workers,
+            move |_w| {
+                let mut rt = Runtime::new(&dir).map_err(|e| format!("{e:#}"))?;
+                rt.load_model(&model).map_err(|e| format!("{e:#}"))?;
+                Ok(rt)
+            },
+            move |rt: &mut Runtime, job: TrainJob| {
+                wall::time(names::ENGINE_REAL_TRAIN_CLIENT, || {
+                    local_sgd(
+                        rt,
+                        &work_model,
+                        lr,
+                        job.params,
+                        &job.cx,
+                        &job.cy,
+                        &job.order,
+                        job.total_batches,
+                    )
+                })
+                .map_err(|e| format!("{e:#}"))
+            },
+        )
     }
 
     pub fn global_params(&self) -> &ParamVec {
@@ -107,112 +197,30 @@ impl RealEngine {
         self.rounds_run
     }
 
-    /// Local training for one client: E passes of mini-batch SGD.
-    /// Returns (trained params, steps taken, mean loss).
-    fn train_client(
+    /// Serial local training for one client (the `workers = 1` path):
+    /// shares [`local_sgd`] with the pool workers, so both paths execute
+    /// the identical training sequence. `order` must already be drawn.
+    fn train_client_serial(
         &mut self,
         client_idx: usize,
-        e: f64,
-    ) -> Result<(ParamVec, usize, f64)> {
+        order: &[usize],
+        total_batches: usize,
+    ) -> Result<(ParamVec, f64)> {
+        let params = self.global.clone();
+        let cx = self.dataset.clients[client_idx].x.clone(); // runtime is &mut self
+        let cy = self.dataset.clients[client_idx].y.clone();
         wall::time(names::ENGINE_REAL_TRAIN_CLIENT, || {
-            self.train_client_inner(client_idx, e)
-        })
-    }
-
-    fn train_client_inner(
-        &mut self,
-        client_idx: usize,
-        e: f64,
-    ) -> Result<(ParamVec, usize, f64)> {
-        let meta = self.runtime.model_meta(&self.cfg.model)?.clone();
-        let b = meta.train.batch;
-        let dim = meta.input_dim();
-        let client = &self.dataset.clients[client_idx];
-        let n = client.n();
-        anyhow::ensure!(n > 0, "client {client_idx} has no data");
-
-        let batches_per_pass = n.div_ceil(b);
-        let total_batches = ((e * batches_per_pass as f64).ceil() as usize).max(1);
-
-        // Shuffled index order, re-drawn per round.
-        let mut order: Vec<usize> = (0..n).collect();
-        self.rng.shuffle(&mut order);
-
-        let mut params = self.global.clone();
-
-        let cx = client.x.clone(); // borrow gymnastics: runtime is &mut self
-        let cy = client.y.clone();
-
-        // Fast path: scan-of-K-steps artifacts amortize the host↔device
-        // parameter round-trip over K mini-batches (§Perf: 19-22% → <5%
-        // marshalling overhead). Greedy planner: largest K that does not
-        // overshoot the remaining batches by more than half its size
-        // (bounding padded no-op compute), tail padded with zero masks.
-        let chunk_sizes = self.runtime.chunk_sizes(&self.cfg.model);
-        if !chunk_sizes.is_empty() {
-            let mut loss_sum = 0.0f64;
-            let mut chunks = 0usize;
-            let mut step = 0usize;
-            while step < total_batches {
-                let remaining = total_batches - step;
-                let k = *chunk_sizes
-                    .iter()
-                    .rev()
-                    .find(|&&k| remaining >= k / 2 + 1)
-                    .unwrap_or(&chunk_sizes[0]);
-                let in_chunk = remaining.min(k);
-                let mut xs = vec![0.0f32; k * b * dim];
-                let mut ys = vec![0i32; k * b];
-                let mut masks = vec![0.0f32; k * b];
-                for s in 0..in_chunk {
-                    fill_batch(
-                        &mut xs[s * b * dim..(s + 1) * b * dim],
-                        &mut ys[s * b..(s + 1) * b],
-                        &mut masks[s * b..(s + 1) * b],
-                        &cx,
-                        &cy,
-                        &order,
-                        (step + s) * b,
-                        dim,
-                    );
-                }
-                let loss = self.runtime.train_chunk(
-                    &self.cfg.model,
-                    k,
-                    &mut params,
-                    &xs,
-                    &ys,
-                    &masks,
-                    self.cfg.lr,
-                )?;
-                loss_sum += loss as f64;
-                chunks += 1;
-                step += in_chunk;
-                self.total_steps += in_chunk as u64;
-            }
-            return Ok((params, total_batches, loss_sum / chunks.max(1) as f64));
-        }
-
-        // Fallback: per-batch dispatch against the single-step artifact.
-        let mut x = vec![0.0f32; b * dim];
-        let mut y = vec![0i32; b];
-        let mut mask = vec![0.0f32; b];
-        let mut loss_sum = 0.0f64;
-
-        for step in 0..total_batches {
-            fill_batch(&mut x, &mut y, &mut mask, &cx, &cy, &order, step * b, dim);
-            let loss = self.runtime.train_step(
+            local_sgd(
+                &mut self.runtime,
                 &self.cfg.model,
-                &mut params,
-                &x,
-                &y,
-                &mask,
                 self.cfg.lr,
-            )?;
-            loss_sum += loss as f64;
-            self.total_steps += 1;
-        }
-        Ok((params, total_batches, loss_sum / total_batches as f64))
+                params,
+                &cx,
+                &cy,
+                order,
+                total_batches,
+            )
+        })
     }
 
     /// Evaluate the global model on the held-out pool.
@@ -262,6 +270,80 @@ impl RealEngine {
         }
         Ok(correct / counted as f64)
     }
+}
+
+/// E passes of mini-batch SGD over one client shard, against any runtime
+/// (the engine's own on the serial path, a pool worker's private one on
+/// the pooled path). Returns (trained params, mean loss); the caller
+/// accounts `total_batches` steps.
+#[allow(clippy::too_many_arguments)]
+fn local_sgd(
+    rt: &mut Runtime,
+    model: &str,
+    lr: f32,
+    mut params: ParamVec,
+    cx: &[f32],
+    cy: &[i32],
+    order: &[usize],
+    total_batches: usize,
+) -> Result<(ParamVec, f64)> {
+    let meta = rt.model_meta(model)?.clone();
+    let b = meta.train.batch;
+    let dim = meta.input_dim();
+
+    // Fast path: scan-of-K-steps artifacts amortize the host↔device
+    // parameter round-trip over K mini-batches (§Perf: 19-22% → <5%
+    // marshalling overhead). Greedy planner: largest K that does not
+    // overshoot the remaining batches by more than half its size
+    // (bounding padded no-op compute), tail padded with zero masks.
+    let chunk_sizes = rt.chunk_sizes(model);
+    if !chunk_sizes.is_empty() {
+        let mut loss_sum = 0.0f64;
+        let mut chunks = 0usize;
+        let mut step = 0usize;
+        while step < total_batches {
+            let remaining = total_batches - step;
+            let k = *chunk_sizes
+                .iter()
+                .rev()
+                .find(|&&k| remaining >= k / 2 + 1)
+                .unwrap_or(&chunk_sizes[0]);
+            let in_chunk = remaining.min(k);
+            let mut xs = vec![0.0f32; k * b * dim];
+            let mut ys = vec![0i32; k * b];
+            let mut masks = vec![0.0f32; k * b];
+            for s in 0..in_chunk {
+                fill_batch(
+                    &mut xs[s * b * dim..(s + 1) * b * dim],
+                    &mut ys[s * b..(s + 1) * b],
+                    &mut masks[s * b..(s + 1) * b],
+                    cx,
+                    cy,
+                    order,
+                    (step + s) * b,
+                    dim,
+                );
+            }
+            let loss = rt.train_chunk(model, k, &mut params, &xs, &ys, &masks, lr)?;
+            loss_sum += loss as f64;
+            chunks += 1;
+            step += in_chunk;
+        }
+        return Ok((params, loss_sum / chunks.max(1) as f64));
+    }
+
+    // Fallback: per-batch dispatch against the single-step artifact.
+    let mut x = vec![0.0f32; b * dim];
+    let mut y = vec![0i32; b];
+    let mut mask = vec![0.0f32; b];
+    let mut loss_sum = 0.0f64;
+
+    for step in 0..total_batches {
+        fill_batch(&mut x, &mut y, &mut mask, cx, cy, order, step * b, dim);
+        let loss = rt.train_step(model, &mut params, &x, &y, &mask, lr)?;
+        loss_sum += loss as f64;
+    }
+    Ok((params, loss_sum / total_batches as f64))
 }
 
 /// Fill one mini-batch from a client shard.
@@ -322,19 +404,72 @@ impl FlEngine for RealEngine {
         anyhow::ensure!(!participants.is_empty(), "round with no participants");
         anyhow::ensure!(e > 0.0, "non-positive pass count {e}");
 
-        let mut updates = Vec::with_capacity(participants.len());
-        let mut loss_sum = 0.0;
+        // Per-participant prep, serially in participant order. The
+        // shuffle draw is the round's only RNG consumer, so pre-drawing
+        // leaves the stream in exactly the state the legacy
+        // train-then-draw-next loop produced.
+        let b = self.runtime.model_meta(&self.cfg.model)?.train.batch;
+        let mut preps: Vec<(usize, Vec<usize>, usize)> =
+            Vec::with_capacity(participants.len());
         for &k in participants {
             anyhow::ensure!(k < self.num_clients(), "participant {k} out of range");
-            let (params, tau, loss) = self
-                .train_client(k, e)
-                .with_context(|| format!("training client {k}"))?;
-            loss_sum += loss;
-            updates.push(ClientUpdate { params, n: self.dataset.sizes[k], tau });
+            let n = self.dataset.clients[k].n();
+            anyhow::ensure!(n > 0, "client {k} has no data");
+            let batches_per_pass = n.div_ceil(b);
+            let total_batches =
+                ((e * batches_per_pass as f64).ceil() as usize).max(1);
+            let mut order: Vec<usize> = (0..n).collect();
+            self.rng.shuffle(&mut order);
+            preps.push((k, order, total_batches));
         }
-        let before = self.global.clone();
+
+        let mut updates = Vec::with_capacity(participants.len());
+        let mut loss_sum = 0.0;
+        if let Some(pool) = self.pool.as_mut() {
+            // Pooled: fan out over per-worker runtimes, join strictly in
+            // participant order so the aggregator (and the loss sum) see
+            // the serial sequence.
+            let jobs: Vec<TrainJob> = preps
+                .iter()
+                .map(|(k, order, total_batches)| TrainJob {
+                    params: self.global.clone(),
+                    cx: self.dataset.clients[*k].x.clone(),
+                    cy: self.dataset.clients[*k].y.clone(),
+                    order: order.clone(),
+                    total_batches: *total_batches,
+                })
+                .collect();
+            let results = pool.map(jobs);
+            for ((k, _order, total_batches), res) in preps.into_iter().zip(results) {
+                let (params, loss) = res
+                    .map_err(|e| anyhow!(e))
+                    .with_context(|| format!("training client {k}"))?;
+                loss_sum += loss;
+                self.total_steps += total_batches as u64;
+                updates.push(ClientUpdate {
+                    params,
+                    n: self.dataset.sizes[k],
+                    tau: total_batches,
+                });
+            }
+        } else {
+            for (k, order, total_batches) in preps {
+                let (params, loss) = self
+                    .train_client_serial(k, &order, total_batches)
+                    .with_context(|| format!("training client {k}"))?;
+                loss_sum += loss;
+                self.total_steps += total_batches as u64;
+                updates.push(ClientUpdate {
+                    params,
+                    n: self.dataset.sizes[k],
+                    tau: total_batches,
+                });
+            }
+        }
+
+        self.prev_global.copy_from(&self.global);
         self.aggregator.aggregate(&mut self.global, &updates);
-        let update_norm = Some(self.global.delta(&before).l2_norm());
+        let update_norm = Some(self.global.l2_distance(&self.prev_global));
         anyhow::ensure!(
             self.global.all_finite(),
             "global model diverged to non-finite values (round {})",

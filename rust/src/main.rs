@@ -177,6 +177,13 @@ fn parse_config(cli: &Cli) -> Result<ExperimentConfig> {
 
 fn cmd_run(args: Vec<String>) -> Result<()> {
     let cli = common_cli("fedtune run", "execute one experiment")
+        .opt(
+            "workers",
+            "1",
+            "in-round worker threads for the real engine (chunked aggregation \
+             + pooled client training; results are bitwise identical at any \
+             setting; 0 = all cores, capped)",
+        )
         .parse(args)
         .map_err(anyhow::Error::msg)?;
     let cfg = parse_config(&cli)?;
@@ -226,6 +233,12 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
     );
     let dataset = FederatedDataset::generate(&profile, cfg.seed);
     let cost_model = CostModel::from_flops_params(meta.flops_per_sample, meta.param_count as u64);
+    // Execution knob only — deliberately not part of ExperimentConfig or
+    // the run identity: any worker count yields bitwise-identical runs.
+    let workers = match cli.get::<usize>("workers").map_err(anyhow::Error::msg)? {
+        0 => fedtune::util::pool::default_workers(),
+        w => w,
+    };
     let mut engine = RealEngine::new(
         runtime,
         dataset,
@@ -236,6 +249,7 @@ fn run_real(cli: &Cli, cfg: &ExperimentConfig) -> Result<fedtune::coordinator::R
             eval_subsample: 1024,
             seed: cfg.seed,
             system: cfg.system.clone(),
+            workers,
         },
     )?;
     let num_clients = engine.num_clients();

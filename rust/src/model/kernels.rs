@@ -1,0 +1,216 @@
+//! Fused aggregation kernels over fixed-size parameter chunks.
+//!
+//! The three server folds (FedAvg / FedNova / FedAdagrad) are rewritten
+//! here as single-pass kernels that operate on one chunk of the flat
+//! parameter vector at a time. Two properties make them both fast and
+//! safe to parallelize (DESIGN.md §17):
+//!
+//! * **Cache locality / SIMD**: a chunk of [`DEFAULT_CHUNK`] f32s (32 KiB)
+//!   stays L1-resident while every update streams through it once, so the
+//!   fold reads each update exactly once and touches the global vector
+//!   once — versus the legacy whole-vector fold that re-streamed the
+//!   global (and, for FedNova/FedAdagrad, a freshly allocated delta) per
+//!   participant. The inner loops are plain slice zips, which LLVM
+//!   auto-vectorizes.
+//! * **Bitwise determinism**: every element of the output is produced by
+//!   exactly the same sequence of f32 operations as the legacy fold —
+//!   accumulation is per-element in update order, and elements never
+//!   interact — so chunking (any chunk size) and parallelizing (any
+//!   worker count) cannot change a single bit. The parity property in
+//!   `tests/prop_invariants.rs` pins this against a verbatim copy of the
+//!   old scalar loops.
+//!
+//! Kernels take the *full* update slices plus the chunk's `start` offset
+//! so callers can hand out disjoint `chunks_mut` windows of the global
+//! (and scratch) vectors to pool workers while sharing the read-only
+//! updates.
+
+/// Default chunk length in elements: 32 KiB of f32 keeps the chunk (plus
+/// per-kind scratch) L1-resident across the update sweep. Fixed — never
+/// derived from the worker count — so the chunk grid, and therefore the
+/// result, is a function of the vector length alone.
+pub const DEFAULT_CHUNK: usize = 8192;
+
+/// FedAvg fold: `g[i] = Σ_k w[k] · u_k[start + i]` (overwrite).
+///
+/// Identical per-element op sequence to the legacy
+/// `next.clear(); for u { next.axpy(w_k, u) }` fold: the accumulator
+/// starts at 0.0 and adds `w_k * u_k[i]` in update order.
+pub fn weighted_sum(g: &mut [f32], start: usize, updates: &[&[f32]], w: &[f32]) {
+    debug_assert_eq!(updates.len(), w.len());
+    g.fill(0.0);
+    for (u, &wk) in updates.iter().zip(w) {
+        let u = &u[start..start + g.len()];
+        for (gi, &ui) in g.iter_mut().zip(u) {
+            *gi += wk * ui;
+        }
+    }
+}
+
+/// FedNova fold: `d[i] = Σ_k c_k · (g[i] − u_k[i])`, then
+/// `g[i] += neg_tau_eff · d[i]`, with `c_k = p_k / τ_k` and
+/// `neg_tau_eff = −τ_eff` precomputed by the caller exactly as the
+/// legacy path cast them (f64 prologue, one `as f32` each).
+///
+/// `d` is a caller-owned scratch chunk (same length as `g`), zeroed
+/// here — one reusable buffer replaces the legacy per-participant
+/// `global.delta(&u.params)` allocation.
+pub fn nova_apply(
+    g: &mut [f32],
+    d: &mut [f32],
+    start: usize,
+    updates: &[&[f32]],
+    c: &[f32],
+    neg_tau_eff: f32,
+) {
+    debug_assert_eq!(g.len(), d.len());
+    debug_assert_eq!(updates.len(), c.len());
+    d.fill(0.0);
+    for (u, &ck) in updates.iter().zip(c) {
+        let u = &u[start..start + g.len()];
+        for ((di, &gi), &ui) in d.iter_mut().zip(g.iter()).zip(u) {
+            *di += ck * (gi - ui);
+        }
+    }
+    for (gi, &di) in g.iter_mut().zip(d.iter()) {
+        *gi += neg_tau_eff * di;
+    }
+}
+
+/// FedAdagrad fold: `Δ[i] = Σ_k p_k · (u_k[i] − g[i])`, then
+/// `m ← β₁·m + (1−β₁)·Δ`, `v ← v + Δ²`, `g ← g + lr·m/(√v + τ)`.
+///
+/// `m`/`v` are the aggregator's persistent server state, `d` the same
+/// reusable scratch as [`nova_apply`]. The four passes run per chunk
+/// (cache-hot) but element-wise match the legacy whole-vector loops
+/// exactly — the passes are element-independent.
+#[allow(clippy::too_many_arguments)]
+pub fn adagrad_apply(
+    g: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    d: &mut [f32],
+    start: usize,
+    updates: &[&[f32]],
+    p: &[f32],
+    lr: f32,
+    beta1: f32,
+    tau: f32,
+) {
+    debug_assert_eq!(g.len(), d.len());
+    debug_assert_eq!(g.len(), m.len());
+    debug_assert_eq!(g.len(), v.len());
+    debug_assert_eq!(updates.len(), p.len());
+    d.fill(0.0);
+    for (u, &pk) in updates.iter().zip(p) {
+        let u = &u[start..start + g.len()];
+        for ((di, &gi), &ui) in d.iter_mut().zip(g.iter()).zip(u) {
+            *di += pk * (ui - gi);
+        }
+    }
+    let omb = 1.0 - beta1;
+    for (mi, &di) in m.iter_mut().zip(d.iter()) {
+        *mi = beta1 * *mi + omb * di;
+    }
+    for (vi, &di) in v.iter_mut().zip(d.iter()) {
+        *vi += di * di;
+    }
+    for ((gi, &mi), &vi) in g.iter_mut().zip(m.iter()).zip(v.iter()) {
+        *gi += lr * mi / (vi.sqrt() + tau);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_sum_matches_axpy_fold_bitwise() {
+        let u1: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        let u2: Vec<f32> = (0..100).map(|i| 3.0 - i as f32 * 0.07).collect();
+        let w = [0.3f32, 0.7f32];
+        let mut legacy = vec![0.0f32; 100];
+        for (u, &wk) in [&u1, &u2].iter().zip(&w) {
+            for (a, &b) in legacy.iter_mut().zip(u.iter()) {
+                *a += wk * b;
+            }
+        }
+        // Chunked: two windows of the same output vector.
+        let mut g = vec![9.9f32; 100]; // pre-filled: kernel must overwrite
+        let (lo, hi) = g.split_at_mut(64);
+        weighted_sum(lo, 0, &[&u1, &u2], &w);
+        weighted_sum(hi, 64, &[&u1, &u2], &w);
+        for (a, b) in g.iter().zip(&legacy) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn nova_apply_matches_delta_fold_bitwise() {
+        let g0: Vec<f32> = (0..50).map(|i| (i as f32).sin()).collect();
+        let u1: Vec<f32> = (0..50).map(|i| (i as f32).cos()).collect();
+        let u2: Vec<f32> = (0..50).map(|i| i as f32 * 0.01).collect();
+        let c = [0.04f32, 0.08f32];
+        let neg_tau = -5.5f32;
+        let mut legacy = g0.clone();
+        let mut d = vec![0.0f32; 50];
+        for (u, &ck) in [&u1, &u2].iter().zip(&c) {
+            let delta: Vec<f32> = legacy.iter().zip(u.iter()).map(|(a, b)| a - b).collect();
+            for (di, &x) in d.iter_mut().zip(&delta) {
+                *di += ck * x;
+            }
+        }
+        for (gi, &di) in legacy.iter_mut().zip(&d) {
+            *gi += neg_tau * di;
+        }
+        let mut g = g0.clone();
+        let mut scratch = vec![0.0f32; 50];
+        let (ga, gb) = g.split_at_mut(17);
+        let (sa, sb) = scratch.split_at_mut(17);
+        nova_apply(ga, sa, 0, &[&u1, &u2], &c, neg_tau);
+        nova_apply(gb, sb, 17, &[&u1, &u2], &c, neg_tau);
+        for (a, b) in g.iter().zip(&legacy) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn adagrad_apply_shrinks_steps_and_is_chunk_invariant() {
+        let n = 40;
+        let g0 = vec![0.0f32; n];
+        let target = vec![1.0f32; n];
+        let p = [1.0f32];
+        let run = |chunk: usize| {
+            let mut g = g0.clone();
+            let mut m = vec![0.0f32; n];
+            let mut v = vec![0.0f32; n];
+            let mut d = vec![0.0f32; n];
+            for _round in 0..3 {
+                let mut start = 0;
+                while start < n {
+                    let end = (start + chunk).min(n);
+                    adagrad_apply(
+                        &mut g[start..end],
+                        &mut m[start..end],
+                        &mut v[start..end],
+                        &mut d[start..end],
+                        start,
+                        &[&target],
+                        &p,
+                        0.1,
+                        0.0,
+                        1e-3,
+                    );
+                    start = end;
+                }
+            }
+            g
+        };
+        let whole = run(n);
+        let tiny = run(7);
+        for (a, b) in whole.iter().zip(&tiny) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(whole[0] > 0.0 && whole[0] < 1.0);
+    }
+}

@@ -19,6 +19,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+pub mod kernels;
 pub mod ladder;
 
 /// One tensor in the parameter layout.
@@ -328,6 +329,44 @@ impl ParamVec {
         self.data.iter_mut().for_each(|a| *a = 0.0);
     }
 
+    /// All-zeros vector with this vector's layout (no spec list needed).
+    pub fn zeros_like(&self) -> ParamVec {
+        ParamVec { data: vec![0.0; self.data.len()], offsets: self.offsets.clone() }
+    }
+
+    /// Overwrite `self` with `other`'s values (layouts must match) —
+    /// the allocation-free alternative to `*self = other.clone()`.
+    pub fn copy_from(&mut self, other: &ParamVec) {
+        assert_eq!(self.len(), other.len(), "copy_from length mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Element-wise difference `self - other` written into `out`
+    /// (the in-place variant of [`Self::delta`]).
+    pub fn delta_into(&self, other: &ParamVec, out: &mut ParamVec) {
+        debug_assert_eq!(self.len(), other.len());
+        assert_eq!(self.len(), out.len(), "delta_into length mismatch");
+        for ((o, a), b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            *o = a - b;
+        }
+    }
+
+    /// `‖self − other‖₂` without materializing the difference — bitwise
+    /// identical to `self.delta(other).l2_norm()` (f32 subtraction, f64
+    /// accumulation) but allocation-free.
+    pub fn l2_distance(&self, other: &ParamVec) -> f64 {
+        debug_assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
     /// Element-wise difference `self - other` into a new vector.
     pub fn delta(&self, other: &ParamVec) -> ParamVec {
         debug_assert_eq!(self.len(), other.len());
@@ -409,6 +448,32 @@ mod tests {
         // acc == a now
         let d = acc.delta(&a);
         assert!(d.l2_norm() < 1e-6);
+    }
+
+    #[test]
+    fn in_place_helpers_match_allocating_paths() {
+        let specs = toy_specs();
+        let mut rng = Rng::new(8);
+        let a = ParamVec::init_he(&specs, &mut rng);
+        let b = ParamVec::init_he(&specs, &mut rng);
+        // zeros_like: same layout, all zero.
+        let z = a.zeros_like();
+        assert_eq!(z.len(), a.len());
+        assert_eq!(z.num_tensors(), a.num_tensors());
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        // copy_from == clone.
+        let mut c = b.zeros_like();
+        c.copy_from(&a);
+        assert_eq!(c, a);
+        // delta_into == delta, bitwise.
+        let mut out = a.zeros_like();
+        a.delta_into(&b, &mut out);
+        let alloc = a.delta(&b);
+        for (x, y) in out.data.iter().zip(&alloc.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // l2_distance == delta().l2_norm(), bitwise.
+        assert_eq!(a.l2_distance(&b).to_bits(), a.delta(&b).l2_norm().to_bits());
     }
 
     #[test]

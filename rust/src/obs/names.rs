@@ -13,6 +13,12 @@ pub const ENGINE_SIM_ROUND: &str = "engine.sim.round";
 pub const ENGINE_REAL_TRAIN_CLIENT: &str = "engine.real.train_client";
 /// Timer: one server-side aggregation over a round's client updates.
 pub const AGG_AGGREGATE: &str = "aggregation.aggregate";
+/// Counter: parameter-vector chunks dispatched by the aggregation reduce
+/// (fixed grid: total elements / chunk size, independent of workers).
+pub const AGG_CHUNKS: &str = "agg.chunks";
+/// Timer: wall span of one parallel chunked aggregation reduce (only
+/// laps when the reduce actually fans out to pool workers).
+pub const AGG_PAR_SPAN: &str = "agg.par_span";
 /// Timer: one run-record read from the on-disk store tier.
 pub const STORE_READ: &str = "store.disk.read";
 /// Timer: one run-record write (tmp file + atomic rename).
@@ -64,6 +70,8 @@ pub const ALL: &[(&str, &str, &str)] = &[
     (ENGINE_SIM_ROUND, "timer", "one simulated federated round"),
     (ENGINE_REAL_TRAIN_CLIENT, "timer", "one real-engine client training pass"),
     (AGG_AGGREGATE, "timer", "one server aggregation step"),
+    (AGG_CHUNKS, "counter", "parameter chunks dispatched by the aggregation reduce"),
+    (AGG_PAR_SPAN, "timer", "parallel chunked aggregation reduce span"),
     (STORE_READ, "timer", "one run-record disk read"),
     (STORE_WRITE, "timer", "one run-record disk write"),
     (STORE_READ_BYTES, "counter", "bytes read from the run store"),

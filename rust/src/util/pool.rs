@@ -125,6 +125,148 @@ where
     out
 }
 
+/// Persistent worker pool with **per-worker state built inside the
+/// worker thread**.
+///
+/// [`scope_map`] fans borrowed items over short-lived scoped threads;
+/// this pool instead keeps `workers` long-lived threads, each owning a
+/// state value `S` that its `init` closure constructs *on* the thread.
+/// `S` needs no `Send`/`Sync` bounds — which is the whole point: the real
+/// engine parks a per-worker PJRT `Runtime` (whose device handles never
+/// cross threads) in `S`, built once and reused across every round
+/// (DESIGN.md §17).
+///
+/// [`WorkerPool::map`] submits owned jobs and joins results **in input
+/// order** — index-keyed, never completion-keyed — so pooled fan-out is
+/// sequence-transparent to callers. Construction fails if any worker's
+/// `init` fails (e.g. stub builds without a PJRT backend), letting
+/// callers fall back to their serial path.
+pub struct WorkerPool<J: Send + 'static, R: Send + 'static> {
+    jobs: Option<mpsc::Sender<(usize, J, wall::Stopwatch)>>,
+    results: mpsc::Receiver<(usize, Result<R, String>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
+    /// Spawn `workers` threads; each runs `init(worker_idx)` locally and
+    /// then serves jobs with `work(&mut state, job)` until the pool
+    /// drops. Returns `Err` (after joining every thread) if any `init`
+    /// fails.
+    pub fn new<S, I, F>(workers: usize, init: I, work: F) -> Result<Self, String>
+    where
+        I: Fn(usize) -> Result<S, String> + Send + Clone + 'static,
+        F: Fn(&mut S, J) -> Result<R, String> + Send + Clone + 'static,
+    {
+        let workers = workers.max(1);
+        let (job_tx, job_rx) = mpsc::channel::<(usize, J, wall::Stopwatch)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<R, String>)>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let job_rx = Arc::clone(&job_rx);
+            let res_tx = res_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let init = init.clone();
+            let work = work.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut state = match init(w) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                drop(ready_tx);
+                loop {
+                    // Holding the lock while blocked in recv is fine: the
+                    // holder wakes, takes its job, and releases — idle
+                    // workers rotate through the receiver one at a time.
+                    let next = job_rx.lock().unwrap().recv();
+                    match next {
+                        Err(_) => break, // pool dropped
+                        Ok((i, job, waited)) => {
+                            wall::lap(names::POOL_QUEUE_WAIT, waited);
+                            let r = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    wall::time(names::POOL_BUSY, || work(&mut state, job))
+                                }),
+                            )
+                            .unwrap_or_else(|e| Err(panic_msg(&e)));
+                            if res_tx.send((i, r)).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        drop(res_tx);
+        drop(ready_tx);
+        let mut first_err = None;
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or_else(|| Some("worker died during init".into())),
+            }
+        }
+        if let Some(e) = first_err {
+            drop(job_tx); // unblock successfully initialized workers
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(WorkerPool { jobs: Some(job_tx), results: res_rx, handles, workers })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every job on the pool; results return **in input order**.
+    /// Worker panics surface as `Err` strings at the job's slot.
+    pub fn map(&mut self, jobs: Vec<J>) -> Vec<Result<R, String>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        wall::count(names::POOL_SCOPES, 1);
+        wall::count(names::POOL_ITEMS, n as u64);
+        wall::count(names::POOL_WORKERS, self.workers.min(n) as u64);
+        let span = wall::stopwatch();
+        let tx = self.jobs.as_ref().expect("pool already shut down");
+        for (i, j) in jobs.into_iter().enumerate() {
+            tx.send((i, j, wall::stopwatch())).expect("all pool workers died");
+        }
+        let mut out: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            match self.results.recv() {
+                Ok((i, r)) => out[i] = Some(r),
+                Err(_) => break, // every worker exited — fill below
+            }
+        }
+        wall::lap(names::POOL_SPAN, span);
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err("worker died before producing a result".into())))
+            .collect()
+    }
+}
+
+impl<J: Send + 'static, R: Send + 'static> Drop for WorkerPool<J, R> {
+    fn drop(&mut self) {
+        self.jobs.take(); // close the channel: workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 fn panic_msg(e: &Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
         format!("worker panicked: {s}")
@@ -195,6 +337,68 @@ mod tests {
                 (0..20usize).map(|i| (i, i as i32 * 3)).collect();
             assert_eq!(seen, expect, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn worker_pool_maps_in_order_with_per_worker_state() {
+        // State is constructed inside each worker thread and persists
+        // across map() calls — the per-worker-runtime contract.
+        let mut pool: WorkerPool<i32, (usize, i32)> =
+            WorkerPool::new(4, |w| Ok((w, 0u32)), |state, x| {
+                state.1 += 1; // per-worker call counter persists
+                Ok((state.0, x * 2))
+            })
+            .unwrap();
+        for _round in 0..3 {
+            let out = pool.map((0..40).collect());
+            let vals: Vec<i32> =
+                out.into_iter().map(|r| r.unwrap().1).collect();
+            assert_eq!(vals, (0..40).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn worker_pool_init_failure_fails_construction() {
+        let err = WorkerPool::<i32, i32>::new(
+            3,
+            |w| {
+                if w == 1 {
+                    Err("no backend on worker 1".to_string())
+                } else {
+                    Ok(w)
+                }
+            },
+            |_, x| Ok(x),
+        )
+        .err()
+        .expect("construction must fail");
+        assert!(err.contains("no backend"), "{err}");
+    }
+
+    #[test]
+    fn worker_pool_panics_become_errors() {
+        let mut pool: WorkerPool<i32, i32> =
+            WorkerPool::new(2, |_| Ok(()), |_, x| {
+                if x == 2 {
+                    panic!("boom {x}");
+                }
+                Ok(x)
+            })
+            .unwrap();
+        let out = pool.map(vec![1, 2, 3]);
+        assert_eq!(*out[0].as_ref().unwrap(), 1);
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(*out[2].as_ref().unwrap(), 3);
+        // The pool survives a panicked job.
+        let again = pool.map(vec![7]);
+        assert_eq!(*again[0].as_ref().unwrap(), 7);
+    }
+
+    #[test]
+    fn worker_pool_empty_map() {
+        let mut pool: WorkerPool<i32, i32> =
+            WorkerPool::new(2, |_| Ok(()), |_, x| Ok(x)).unwrap();
+        assert!(pool.map(Vec::new()).is_empty());
     }
 
     #[test]

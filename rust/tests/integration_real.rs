@@ -28,6 +28,17 @@ fn runtime() -> Option<Runtime> {
 }
 
 fn engine(model: &str, dataset: &str, scale: f64, agg: AggregatorKind, seed: u64) -> Option<RealEngine> {
+    engine_with_workers(model, dataset, scale, agg, seed, 1)
+}
+
+fn engine_with_workers(
+    model: &str,
+    dataset: &str,
+    scale: f64,
+    agg: AggregatorKind,
+    seed: u64,
+    workers: usize,
+) -> Option<RealEngine> {
     let runtime = runtime()?;
     let profile = DatasetProfile::by_name(dataset).unwrap().scaled(scale);
     let ds = FederatedDataset::generate(&profile, seed);
@@ -42,6 +53,7 @@ fn engine(model: &str, dataset: &str, scale: f64, agg: AggregatorKind, seed: u64
                 eval_subsample: 512,
                 seed,
                 system: SystemSpec::Homogeneous,
+                workers,
             },
         )
         .unwrap(),
@@ -200,7 +212,36 @@ fn model_dataset_mismatch_rejected() {
             eval_subsample: 64,
             seed: 1,
             system: SystemSpec::Homogeneous,
+            workers: 1,
         },
     );
     assert!(err.is_err());
+}
+
+#[test]
+fn pooled_training_is_bitwise_identical_to_serial() {
+    // The `workers` knob is a pure execution detail: pooled client training
+    // joins updates in participant order and the chunked aggregation reduce
+    // combines in a fixed grid order, so every round must produce exactly
+    // the same bits as the serial path (DESIGN.md §17).
+    let Some(mut serial) = engine("mlp-s", "speech", 0.03, AggregatorKind::FedNova, 21) else {
+        return;
+    };
+    let Some(mut pooled) = engine_with_workers("mlp-s", "speech", 0.03, AggregatorKind::FedNova, 21, 4)
+    else {
+        return;
+    };
+    let parts: Vec<usize> = (0..6.min(serial.num_clients())).collect();
+    for round in 0..3 {
+        let a = serial.run_round(&parts, 1.5).unwrap();
+        let b = pooled.run_round(&parts, 1.5).unwrap();
+        assert_eq!(a.accuracy, b.accuracy, "round {round} accuracy diverged");
+        assert_eq!(a.train_loss, b.train_loss, "round {round} loss diverged");
+        let sg = serial.global_params();
+        let pg = pooled.global_params();
+        assert_eq!(sg.len(), pg.len());
+        for (i, (x, y)) in sg.data.iter().zip(pg.data.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "round {round} param {i} diverged");
+        }
+    }
 }

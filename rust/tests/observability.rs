@@ -177,9 +177,16 @@ fn metrics_plane_records_hot_paths() {
             .unwrap_or(0)
     };
     let before = calls(&wall::snapshot());
+    let chunks_before = wall::counter(names::AGG_CHUNKS);
     Aggregator::new(AggregatorKind::FedAvg).aggregate(&mut global, &[update]);
     let after = calls(&wall::snapshot());
     assert_eq!(after, before + 1, "aggregate() must tick its timer");
+    // A 4-param vector is a single chunk job under the fixed grid.
+    assert_eq!(
+        wall::counter(names::AGG_CHUNKS),
+        chunks_before + 1,
+        "the chunked reduce must count its chunk jobs"
+    );
 
     // The snapshot is exactly what `--metrics-out` serializes.
     let snap = wall::snapshot();

@@ -631,6 +631,138 @@ fn prop_rng_streams_reproducible_and_bounded() {
     );
 }
 
+/// The pre-kernel `Aggregator::aggregate_inner`, verbatim — the
+/// whole-vector scalar fold that the fused chunk kernels
+/// (`model::kernels` + the fixed-grid parallel reduce, DESIGN.md §17)
+/// must reproduce bit-for-bit at every workers × chunk setting.
+struct LegacyAggregator {
+    kind: AggregatorKind,
+    momentum: Option<ParamVec>,
+    accumulator: Option<ParamVec>,
+}
+
+impl LegacyAggregator {
+    fn new(kind: AggregatorKind) -> LegacyAggregator {
+        LegacyAggregator { kind, momentum: None, accumulator: None }
+    }
+
+    fn aggregate(&mut self, global: &mut ParamVec, updates: &[ClientUpdate]) {
+        let total_n: usize = updates.iter().map(|u| u.n).sum();
+        match self.kind {
+            AggregatorKind::FedAvg => {
+                let mut next = global.clone();
+                next.clear();
+                for u in updates {
+                    next.axpy((u.n as f64 / total_n as f64) as f32, &u.params);
+                }
+                *global = next;
+            }
+            AggregatorKind::FedNova => {
+                let mut d = global.clone();
+                d.clear();
+                let mut tau_eff = 0.0f64;
+                for u in updates {
+                    let p_k = u.n as f64 / total_n as f64;
+                    let tau_k = u.tau.max(1) as f64;
+                    tau_eff += p_k * tau_k;
+                    let delta = global.delta(&u.params); // wᵍ − w_k
+                    d.axpy((p_k / tau_k) as f32, &delta);
+                }
+                global.axpy(-(tau_eff as f32), &d);
+            }
+            AggregatorKind::FedAdagrad { lr, beta1, tau } => {
+                let mut delta = global.clone();
+                delta.clear();
+                for u in updates {
+                    let p_k = u.n as f64 / total_n as f64;
+                    let diff = u.params.delta(global); // w_k − wᵍ
+                    delta.axpy(p_k as f32, &diff);
+                }
+                let m = self.momentum.get_or_insert_with(|| {
+                    let mut z = global.clone();
+                    z.clear();
+                    z
+                });
+                for (mi, di) in m.data.iter_mut().zip(&delta.data) {
+                    *mi = (beta1 as f32) * *mi + (1.0 - beta1 as f32) * di;
+                }
+                let v = self.accumulator.get_or_insert_with(|| {
+                    let mut z = global.clone();
+                    z.clear();
+                    z
+                });
+                for (vi, di) in v.data.iter_mut().zip(&delta.data) {
+                    *vi += di * di;
+                }
+                for ((g, mi), vi) in
+                    global.data.iter_mut().zip(&m.data).zip(&v.data)
+                {
+                    *g += (lr as f32) * mi / (vi.sqrt() + tau as f32);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_chunked_parallel_aggregation_is_bitwise_legacy() {
+    // The determinism contract of the fused aggregation rewrite: for all
+    // three aggregators, any (workers, chunk) setting — including chunk
+    // sizes smaller, equal to, and larger than the vector — produces a
+    // global model bitwise equal to the legacy scalar fold, with the
+    // FedAdagrad m/v server state carried across rounds.
+    check(
+        "agg-parallel-vs-legacy-bitwise",
+        60,
+        |g: &mut Gen| {
+            let kind = match g.usize(0, 2) {
+                0 => AggregatorKind::FedAvg,
+                1 => AggregatorKind::FedNova,
+                _ => AggregatorKind::fedadagrad_paper(),
+            };
+            let n_params = g.usize(1, 3000);
+            let n_updates = g.usize(1, 64);
+            let workers = [1usize, 2, 4, 8][g.usize(0, 3)];
+            let chunk = g.usize(1, 4096);
+            let rounds = g.usize(1, 3);
+            (kind, n_params, n_updates, workers, chunk, rounds, g.rng.next_u64())
+        },
+        |(kind, n_params, n_updates, workers, chunk, rounds, seed)| {
+            let specs =
+                vec![ParamSpec { name: "w".into(), shape: vec![*n_params] }];
+            let mut rng = Rng::new(*seed);
+            let mut g_legacy = ParamVec::init_he(&specs, &mut rng);
+            let mut g_new = g_legacy.clone();
+            let mut legacy = LegacyAggregator::new(*kind);
+            let mut fused =
+                Aggregator::new(*kind).with_workers(*workers).with_chunk(*chunk);
+            for round in 0..*rounds {
+                let updates: Vec<ClientUpdate> = (0..*n_updates)
+                    .map(|i| ClientUpdate {
+                        params: ParamVec::init_he(&specs, &mut rng),
+                        n: 1 + (i * 37 + round) % 500,
+                        tau: 1 + (i * 13) % 40,
+                    })
+                    .collect();
+                legacy.aggregate(&mut g_legacy, &updates);
+                fused.aggregate(&mut g_new, &updates);
+                for (i, (a, b)) in
+                    g_legacy.data.iter().zip(&g_new.data).enumerate()
+                {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{kind:?} round {round} param {i}: \
+                             legacy {a} != fused {b} \
+                             (workers={workers}, chunk={chunk})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_paramvec_axpy_linear() {
     check(
