@@ -3,7 +3,8 @@
 //! * aggregation weighted-sum ≥ 1 GB/s,
 //! * FedTune observe_round < 1 µs,
 //! * simulator ≥ 1e6 rounds/s equivalent (sub-µs per round),
-//! * runtime marshal overhead < 5% of execute time.
+//! * runtime marshal overhead < 5% of execute time,
+//! * warm summary cache lookups ≥ 5× the legacy JSON tier.
 //!
 //! With `-- --out PATH` the run also writes a machine-readable
 //! `fedtune.bench/v1` report: per-bench statistics for every
@@ -15,10 +16,16 @@
 #[path = "harness/mod.rs"]
 mod harness;
 
+use std::path::Path;
+
 use fedtune::aggregation::{Aggregator, AggregatorKind, ClientUpdate};
 use fedtune::coordinator::selection::Selector;
 use fedtune::data::{DatasetProfile, Population};
+use fedtune::experiment::runner::{run_record_from_json, run_record_json};
+use fedtune::experiment::RunRecord;
+use fedtune::store::{Fingerprint, RunStore, RUN_SCHEMA};
 use fedtune::system::SystemSpec;
+use fedtune::trace::{RoundRecord, Trace};
 use fedtune::engine::sim::{SimEngine, SimParams};
 use fedtune::engine::FlEngine;
 use fedtune::fedtune::{FedTune, FedTuneConfig};
@@ -148,6 +155,82 @@ impl LegacyAgg {
                 }
             }
         }
+    }
+}
+
+/// The pre-segment disk tier's `put`, verbatim (minus telemetry) — the
+/// committed baseline the `store.put.json` / `store.get.json.*` rows
+/// measure. One dump-compact JSON document per record, temp + rename.
+fn legacy_put(dir: &Path, fp: &Fingerprint, record: &RunRecord) {
+    let runs = dir.join("runs");
+    std::fs::create_dir_all(&runs).unwrap();
+    let path = runs.join(format!("{}.json", fp.hex()));
+    let doc = Json::from_pairs(vec![
+        ("schema", RUN_SCHEMA.into()),
+        ("fingerprint", fp.hex().into()),
+        ("record", run_record_json(record)),
+    ]);
+    let mut text = doc.dump();
+    text.push('\n');
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, text.as_bytes()).unwrap();
+    std::fs::rename(&tmp, &path).unwrap();
+}
+
+/// The pre-segment disk lookup, verbatim: read + parse the whole JSON
+/// document — trace included — even when the caller only needs the
+/// summary. (That full-document parse is exactly what the bounded
+/// summary-prefix pread of the segment tier eliminates.)
+fn legacy_get(dir: &Path, fp: &Fingerprint, need_trace: bool) -> Option<RunRecord> {
+    let path = dir.join("runs").join(format!("{}.json", fp.hex()));
+    let text = std::fs::read_to_string(&path).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    if doc.get("schema").and_then(Json::as_str) != Some(RUN_SCHEMA) {
+        return None;
+    }
+    if doc.get("fingerprint").and_then(Json::as_str) != Some(fp.hex().as_str()) {
+        return None;
+    }
+    let rec = run_record_from_json(doc.get("record")?).ok()?;
+    if need_trace && rec.trace.is_none() {
+        return None;
+    }
+    Some(rec)
+}
+
+/// A realistic keep-traces run record: `rounds` rows of per-round
+/// history behind a handful of summary scalars — the shape that makes
+/// summary-only lookups pay for the trace under the JSON tier.
+fn store_record(seed: u64, rounds: usize) -> RunRecord {
+    let mut trace = Trace::new();
+    let mut cum = Costs::ZERO;
+    for round in 1..=rounds {
+        cum.add(&Costs {
+            comp_t: 3.1e9,
+            trans_t: 1.0,
+            comp_l: 9.7e9,
+            trans_l: 79_700.0,
+        });
+        trace.push(RoundRecord {
+            round,
+            m: 20,
+            e: 2.0,
+            accuracy: 0.9 * (1.0 - (-(round as f64) / 60.0).exp()),
+            train_loss: 2.3 / (1.0 + round as f64 * 0.05),
+            costs: cum,
+            fedtune_activated: round > 10,
+        });
+    }
+    RunRecord {
+        seed,
+        rounds,
+        final_accuracy: 0.87,
+        costs: cum,
+        final_m: 20,
+        final_e: 2.0,
+        improvement_pct: Some(12.5),
+        baseline_costs: Some(cum),
+        trace: Some(trace),
     }
 }
 
@@ -322,6 +405,138 @@ fn main() {
     println!("  → cost accounting: {:.4} µs", s.mean_us());
     wall::lap(names::BENCH_COST, sw);
 
+    // --- run store: packed segment tier vs the legacy JSON tier -----------
+    // Identical records in both tiers; every row normalizes throughput to
+    // the record's canonical JSON payload size, so bytes_per_sec ratios
+    // ARE time ratios. Gets open a fresh reader per iteration — a warm
+    // sweep's first lookup of a key: the JSON tier reads and parses the
+    // whole document, the segment tier loads the index once and performs
+    // one bounded positional read.
+    let sw = wall::stopwatch();
+    let tmp = std::env::temp_dir()
+        .join(format!("fedtune_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+
+    let n_corpus = 64usize;
+    let fps: Vec<Fingerprint> = (0..n_corpus)
+        .map(|i| Fingerprint::of_bytes(format!("bench-store-{i}").as_bytes()))
+        .collect();
+    let recs: Vec<RunRecord> =
+        (0..n_corpus).map(|i| store_record(i as u64, 300)).collect();
+    let payload = run_record_json(&recs[0]).dump().len() as f64;
+
+    let json_dir = tmp.join("json");
+    for (fp, r) in fps.iter().zip(&recs) {
+        legacy_put(&json_dir, fp, r);
+    }
+    let seg_dir = tmp.join("seg");
+    {
+        let mut st = RunStore::open(&seg_dir).unwrap();
+        for (fp, r) in fps.iter().zip(&recs) {
+            st.put(fp, r);
+        }
+    }
+
+    let target = fps[n_corpus / 2];
+    let s = bench("store.get.json.summary", 200, || {
+        legacy_get(&json_dir, &target, false).unwrap()
+    });
+    report.push(("store.get.json.summary".to_string(), sample_json_bps(&s, payload)));
+    let json_summary_ns = s.mean_ns;
+
+    let s = bench("store.get.segment.summary", 200, || {
+        let mut st = RunStore::open(&seg_dir).unwrap();
+        st.get(&target, false).unwrap()
+    });
+    report.push(("store.get.segment.summary".to_string(), sample_json_bps(&s, payload)));
+    let ratio = json_summary_ns / s.mean_ns;
+    println!(
+        "  → warm summary get: json {:.1} µs vs segment {:.1} µs ({ratio:.1}x, target ≥ 5x)",
+        json_summary_ns / 1e3,
+        s.mean_ns / 1e3,
+    );
+    assert!(ratio >= 5.0, "segment summary lookups only {ratio:.2}x the JSON tier");
+
+    let s = bench("store.get.json.trace", 200, || {
+        legacy_get(&json_dir, &target, true).unwrap()
+    });
+    report.push(("store.get.json.trace".to_string(), sample_json_bps(&s, payload)));
+    let json_trace_ns = s.mean_ns;
+
+    let s = bench("store.get.segment.trace", 200, || {
+        let mut st = RunStore::open(&seg_dir).unwrap();
+        st.get(&target, true).unwrap()
+    });
+    report.push(("store.get.segment.trace".to_string(), sample_json_bps(&s, payload)));
+    println!(
+        "  → trace get: json {:.1} µs vs segment {:.1} µs ({:.1}x)",
+        json_trace_ns / 1e3,
+        s.mean_ns / 1e3,
+        json_trace_ns / s.mean_ns
+    );
+
+    // Puts append fresh fingerprints. The segment tier fsyncs the frame
+    // and the index entry and cycles the write lease every call — the
+    // durability the JSON tier's plain write + rename never bought — so
+    // its row is the cost of crash consistency, not a like-for-like race.
+    let mut put_seq = 0u64;
+    let json_put_dir = tmp.join("json_put");
+    let s = bench("store.put.json", 200, || {
+        put_seq += 1;
+        let fp = Fingerprint::of_bytes(format!("bench-put-{put_seq}").as_bytes());
+        legacy_put(&json_put_dir, &fp, &recs[0]);
+    });
+    report.push(("store.put.json".to_string(), sample_json_bps(&s, payload)));
+    let json_put_ns = s.mean_ns;
+
+    let seg_put_dir = tmp.join("seg_put");
+    let mut put_store = RunStore::open(&seg_put_dir).unwrap();
+    let s = bench("store.put.segment", 200, || {
+        put_seq += 1;
+        let fp = Fingerprint::of_bytes(format!("bench-put-{put_seq}").as_bytes());
+        put_store.put(&fp, &recs[0]);
+    });
+    report.push(("store.put.segment".to_string(), sample_json_bps(&s, payload)));
+    println!(
+        "  → put: json {:.1} µs vs segment {:.1} µs (segment fsyncs; durability is the product)",
+        json_put_ns / 1e3,
+        s.mean_ns / 1e3,
+    );
+    drop(put_store);
+
+    // The end-to-end shape the store was rebuilt for: a warm sweep
+    // re-reading a 1000-run summary-only cache through one process-wide
+    // index load + 1000 bounded preads.
+    let sweep_dir = tmp.join("sweep");
+    let n_sweep = 1000usize;
+    let sweep_fps: Vec<Fingerprint> = (0..n_sweep)
+        .map(|i| Fingerprint::of_bytes(format!("bench-sweep-{i}").as_bytes()))
+        .collect();
+    let mut sweep_payload = 0.0f64;
+    {
+        let mut st = RunStore::open(&sweep_dir).unwrap();
+        for (i, fp) in sweep_fps.iter().enumerate() {
+            let mut r = store_record(i as u64, 300);
+            r.trace = None;
+            sweep_payload += run_record_json(&r).dump().len() as f64;
+            st.put(fp, &r);
+        }
+    }
+    let s = bench("store.warm_sweep", 300, || {
+        let mut st = RunStore::open(&sweep_dir).unwrap();
+        for fp in &sweep_fps {
+            st.get(fp, false).unwrap();
+        }
+    });
+    report.push(("store.warm_sweep".to_string(), sample_json_bps(&s, sweep_payload)));
+    println!(
+        "  → warm sweep: {:.2} ms for {n_sweep} summary lookups ({:.0} MB/s of record payload)",
+        s.mean_ms(),
+        sweep_payload / (s.mean_ns * 1e-9) / 1e6
+    );
+    let _ = std::fs::remove_dir_all(&tmp);
+    wall::lap(names::BENCH_STORE, sw);
+
     // --- JSON substrate -----------------------------------------------------
     // Conditional: present in stdout but kept out of the `--out` report so
     // its bench-name set is machine-independent.
@@ -442,6 +657,7 @@ fn main() {
                 names::BENCH_SELECTION,
                 names::BENCH_SIM,
                 names::BENCH_COST,
+                names::BENCH_STORE,
                 names::BENCH_JSON,
                 names::BENCH_PJRT,
             ]

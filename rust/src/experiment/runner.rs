@@ -14,9 +14,12 @@
 //! schema).
 //!
 //! With a cache directory configured, finished runs persist through
-//! [`crate::store::RunStore`] and finished pairs checkpoint into a
-//! [`crate::store::SweepJournal`] as they complete, so repeated sweeps
-//! are near-free and interrupted ones resume.
+//! [`crate::store::RunStore`] — appended as checksummed binary frames
+//! to the packed segment tier (`crate::store::segment`), so a warm
+//! sweep is an index probe plus one bounded positional read per run —
+//! and finished pairs checkpoint into a [`crate::store::SweepJournal`]
+//! as they complete, so repeated sweeps are near-free and interrupted
+//! ones resume.
 //!
 //! Under [`Grid::trace_out`] the sweep additionally writes a
 //! deterministic flight-recorder trace ([`crate::obs`]): per-run event
@@ -187,10 +190,11 @@ fn run_json(r: &RunRecord) -> Json {
 
 /// Lossless [`RunRecord`] serialization: the artifact's per-run object
 /// plus the optional per-round trace. This is the wire format of the
-/// run store (`fedtune.store.run/v1`) and the sweep journal; because
-/// [`Json`] prints floats in shortest-round-trip form, a record survives
-/// disk round-trips bit-for-bit and a resumed sweep reproduces the
-/// uninterrupted artifact byte-for-byte.
+/// sweep journal and the legacy JSON cache tier, and the canonical view
+/// the binary segment codec (`crate::store::binary`) must round-trip
+/// losslessly; because [`Json`] prints floats in shortest-round-trip
+/// form, a record survives disk round-trips bit-for-bit and a resumed
+/// sweep reproduces the uninterrupted artifact byte-for-byte.
 pub fn run_record_json(r: &RunRecord) -> Json {
     let mut j = run_json(r);
     if let Some(t) = &r.trace {

@@ -6,6 +6,8 @@
 //!                      (`--tuner` picks the policy)
 //! * `check-runtime`  — load the AOT artifacts, run one train/eval step
 //! * `info`           — print manifest / ladder / profile inventory
+//! * `compact`        — migrate + garbage-collect a run-cache directory
+//!                      into the packed segment store (DESIGN.md §18)
 //!
 //! `fedtune <cmd> --help` lists per-command options.
 
@@ -40,6 +42,7 @@ fn main() {
         "grid" => cmd_grid(args),
         "check-runtime" => cmd_check_runtime(args),
         "info" => cmd_info(args),
+        "compact" => cmd_compact(args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -68,7 +71,10 @@ fn print_help() {
          check-runtime  smoke-test the AOT artifact → PJRT path\n  \
          info           print models / datasets / artifact inventory\n                 \
          (--cache-dir adds run-cache statistics; --metrics lists the\n                 \
-         wall-clock metric registry)\n"
+         wall-clock metric registry)\n  \
+         compact        pack a run cache: migrate legacy runs/*.json into\n                 \
+         the segment store, drop stale/superseded entries, rewrite\n                 \
+         the index atomically (--cache-dir DIR)\n"
     );
 }
 
@@ -536,16 +542,26 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
                     fedtune::obs::TRACE_SCHEMA,
                     fedtune::LINT_TOOL
                 );
-                println!("  {:>6} run records   {:>12} bytes", s.run_entries, s.run_bytes);
+                println!(
+                    "  {:>6} segment records{:>12} bytes in {} segment file(s) \
+                     ({} indexed)",
+                    s.segment_records, s.segment_bytes, s.segments, s.index_entries
+                );
+                println!(
+                    "  {:>6} legacy records {:>12} bytes (read-only runs/*.json; \
+                     `fedtune compact` migrates them)",
+                    s.run_entries, s.run_bytes
+                );
                 println!(
                     "  {:>6} sweep journals {:>12} bytes",
                     s.journals, s.journal_bytes
                 );
-                if s.stale_runs > 0 || s.stale_journals > 0 {
+                if s.stale_runs > 0 || s.stale_journals > 0 || s.stale_frames > 0 {
                     println!(
-                        "  {:>6} stale-schema records, {} stale journals — these \
-                         always miss and will re-run + heal on the next sweep",
-                        s.stale_runs, s.stale_journals
+                        "  {:>6} stale-schema records, {} stale frames, {} stale \
+                         journals — these always miss and will re-run + heal on \
+                         the next sweep (`fedtune compact` garbage-collects them)",
+                        s.stale_runs, s.stale_frames, s.stale_journals
                     );
                 } else {
                     println!("  all records carry the current schema");
@@ -554,5 +570,43 @@ fn cmd_info(args: Vec<String>) -> Result<()> {
             Err(e) => println!("\n(run cache stats unavailable for {cache_dir}: {e:#})"),
         }
     }
+    Ok(())
+}
+
+fn cmd_compact(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new(
+        "fedtune compact",
+        "pack a run-cache directory: migrate legacy runs/*.json records \
+         into the binary segment store, drop stale-schema and superseded \
+         entries, and rewrite index.bin atomically (DESIGN.md §18)",
+    )
+    .opt("cache-dir", "", "run-cache directory to compact (required)")
+    .parse(args)
+    .map_err(anyhow::Error::msg)?;
+    let cache_dir = cli.get_str("cache-dir");
+    if cache_dir.is_empty() {
+        bail!("compact requires --cache-dir DIR");
+    }
+    let dir = std::path::Path::new(&cache_dir);
+    if !dir.is_dir() {
+        bail!("no cache directory at {cache_dir:?}");
+    }
+    let report = fedtune::store::compact(dir)
+        .with_context(|| format!("compacting run cache {cache_dir:?}"))?;
+    println!("== compact ({cache_dir}) ==");
+    println!("  {:>6} live records kept ({} bytes)", report.kept, report.bytes_written);
+    println!("  {:>6} legacy JSON records migrated into segments", report.migrated_json);
+    println!(
+        "  {:>6} frames dropped (stale fingerprint version or superseded)",
+        report.dropped_frames
+    );
+    println!(
+        "  {:>6} legacy JSON files garbage-collected (migrated or stale)",
+        report.dropped_json + report.migrated_json
+    );
+    println!(
+        "  {:>6} segment file(s) folded into one (index rewritten atomically)",
+        report.segments_before
+    );
     Ok(())
 }

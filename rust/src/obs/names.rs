@@ -31,6 +31,13 @@ pub const STORE_WRITE_BYTES: &str = "store.disk.write.bytes";
 pub const STORE_HITS: &str = "store.lookup.hits";
 /// Counter: run-store lookups that found nothing usable.
 pub const STORE_MISSES: &str = "store.lookup.misses";
+/// Counter: bytes positionally read from the segment tier (bounded
+/// preads — a summary-only lookup charges only the summary prefix).
+pub const STORE_PREAD: &str = "store.pread";
+/// Counter: in-memory segment-index probes (one per warm disk lookup).
+pub const STORE_INDEX_PROBE: &str = "store.index.probe";
+/// Timer: time spent acquiring the store's advisory write lease.
+pub const STORE_LOCK_WAIT: &str = "store.lock.wait";
 /// Timer: how long items sat queued before a pool worker picked them up.
 pub const POOL_QUEUE_WAIT: &str = "pool.queue_wait";
 /// Timer: per-item worker busy time inside the pool.
@@ -63,6 +70,8 @@ pub const BENCH_COST: &str = "bench.cost";
 pub const BENCH_JSON: &str = "bench.json";
 /// Timer: `perf_micro` PJRT execute phase.
 pub const BENCH_PJRT: &str = "bench.pjrt";
+/// Timer: `perf_micro` run-store phase.
+pub const BENCH_STORE: &str = "bench.store";
 
 /// The full catalogue as `(name, kind, what it measures)` rows — the
 /// table behind `fedtune info --metrics`.
@@ -78,6 +87,9 @@ pub const ALL: &[(&str, &str, &str)] = &[
     (STORE_WRITE_BYTES, "counter", "bytes written to the run store"),
     (STORE_HITS, "counter", "run-store lookup hits"),
     (STORE_MISSES, "counter", "run-store lookup misses"),
+    (STORE_PREAD, "counter", "bytes positionally read from the segment tier"),
+    (STORE_INDEX_PROBE, "counter", "segment-index probes"),
+    (STORE_LOCK_WAIT, "timer", "store write-lease acquisition wait"),
     (POOL_QUEUE_WAIT, "timer", "pool queue wait per item"),
     (POOL_BUSY, "timer", "pool worker busy time per item"),
     (POOL_SPAN, "timer", "pool scope wall span"),
@@ -93,6 +105,7 @@ pub const ALL: &[(&str, &str, &str)] = &[
     (BENCH_COST, "timer", "perf_micro cost-model phase"),
     (BENCH_JSON, "timer", "perf_micro JSON phase"),
     (BENCH_PJRT, "timer", "perf_micro PJRT phase"),
+    (BENCH_STORE, "timer", "perf_micro run-store phase"),
 ];
 
 #[cfg(test)]

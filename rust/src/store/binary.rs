@@ -1,0 +1,480 @@
+//! Packed binary frame codec of one persisted [`RunRecord`] — the
+//! `fedtune.store.seg/v1` on-disk unit of the segment store.
+//!
+//! # Frame layout (all integers little-endian)
+//!
+//! ```text
+//! frame  := [u32 body_len][u32 fnv1a-32(body)][body]
+//! body   := [16B fingerprint]        // u128, LE — must match the index key
+//!           [u32 fver]               // FINGERPRINT_VERSION of the record
+//!           [u8  flags]              // bit 0 = trace block present
+//!           [u32 sum_len]            // summary block length in bytes
+//!           [u32 fnv1a-32(summary)]  // prefix reads verify this alone
+//!           [summary block]
+//!           [trace block]            // only when flags bit 0 is set
+//! ```
+//!
+//! The summary block is laid out **first** so a `need_trace = false`
+//! lookup decodes a bounded prefix ([`Frame::sum_prefix`] bytes, ~150 —
+//! never proportional to a kept trace) and never touches the trace
+//! bytes; it carries its own checksum because the frame checksum covers
+//! the whole body and a prefix read cannot verify it. Every f64 is
+//! persisted via [`f64::to_bits`], so decode → [`run_record_json`] is
+//! bit-for-bit identical to encoding the original record — the store's
+//! lossless-round-trip contract survives the binary container
+//! (tests/prop_invariants.rs pins it property-style).
+//!
+//! `fver` tags the *identity* version ([`FINGERPRINT_VERSION`]) a record
+//! was written under: a frame from an older identity layout can never
+//! match a current key, so readers treat it as stale and
+//! `fedtune compact` garbage-collects it. The container format itself
+//! versions independently as [`SEG_SCHEMA`] — bump it only when this
+//! byte layout changes.
+
+use crate::experiment::runner::run_record_json;
+use crate::experiment::RunRecord;
+use crate::overhead::Costs;
+use crate::trace::{RoundRecord, Trace};
+
+use super::fingerprint::{Fingerprint, FINGERPRINT_VERSION};
+
+/// Schema tag of the segment container format. Written as the first
+/// bytes of every `segments/seg-<n>.bin` file; versioned independently
+/// of [`FINGERPRINT_VERSION`] (identities don't move when only their
+/// container changes — xtask lint rule 5 checks `seg/vN` tags against
+/// this constant, not the fingerprint version).
+pub const SEG_SCHEMA: &str = "fedtune.store.seg/v1";
+
+/// Schema tag of the sidecar `index.bin` (first bytes of the file).
+/// Versioned with [`SEG_SCHEMA`]'s independence for the same reason.
+pub const INDEX_SCHEMA: &str = "fedtune.store.index/v1";
+
+/// Frame flag: a trace block follows the summary block.
+pub const FLAG_TRACE: u8 = 1;
+
+/// Bytes of `[u32 body_len][u32 checksum]` before the body.
+pub const FRAME_HEADER_LEN: usize = 8;
+
+/// Fixed body prelude: fingerprint + fver + flags + sum_len + sum_cksum.
+pub const BODY_HEADER_LEN: usize = 16 + 4 + 1 + 4 + 4;
+
+/// Upper bound of [`Frame::sum_prefix`]: prelude + a full summary block
+/// (6 fixed u64-sized fields + 4 costs + optional improvement + optional
+/// baseline costs). A bounded summary `pread` can never legitimately
+/// need more — `tests/observability.rs` asserts the store stays under it.
+pub const MAX_SUM_PREFIX: usize =
+    FRAME_HEADER_LEN + BODY_HEADER_LEN + (6 + 4) * 8 + (1 + 8) + (1 + 4 * 8);
+
+/// FNV-1a 32-bit — the frame and summary checksums (same family as the
+/// store's 128-bit fingerprint hash; in-repo, no dependencies).
+pub fn fnv32(bytes: &[u8]) -> u32 {
+    const OFFSET: u32 = 0x811c9dc5;
+    const PRIME: u32 = 0x01000193;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// One encoded frame, ready to append to a segment.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// The full frame bytes (header + body).
+    pub bytes: Vec<u8>,
+    /// How many leading bytes a `need_trace = false` reader needs: the
+    /// header, body prelude and summary block — never the trace.
+    pub sum_prefix: u32,
+    /// Frame flags (bit 0 = trace present).
+    pub flags: u8,
+}
+
+/// Everything a frame header + body prelude reveals without decoding
+/// record fields — what the index persists per fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameInfo {
+    pub fp: Fingerprint,
+    pub fver: u32,
+    pub flags: u8,
+    /// Total frame length (header included).
+    pub len: u32,
+    /// Summary-prefix length (header included) — see [`Frame::sum_prefix`].
+    pub sum_prefix: u32,
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    push_u64(out, v.to_bits());
+}
+
+fn push_costs(out: &mut Vec<u8>, c: &Costs) {
+    push_f64(out, c.comp_t);
+    push_f64(out, c.trans_t);
+    push_f64(out, c.comp_l);
+    push_f64(out, c.trans_l);
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.b.get(self.i..self.i.checked_add(n)?)?;
+        self.i += n;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+
+    fn usize(&mut self) -> Option<usize> {
+        self.u64()?.try_into().ok()
+    }
+
+    fn costs(&mut self) -> Option<Costs> {
+        Some(Costs {
+            comp_t: self.f64()?,
+            trans_t: self.f64()?,
+            comp_l: self.f64()?,
+            trans_l: self.f64()?,
+        })
+    }
+}
+
+fn encode_summary(r: &RunRecord) -> Vec<u8> {
+    let mut s = Vec::with_capacity(96);
+    push_u64(&mut s, r.seed);
+    push_u64(&mut s, r.rounds as u64);
+    push_f64(&mut s, r.final_accuracy);
+    push_costs(&mut s, &r.costs);
+    push_u64(&mut s, r.final_m as u64);
+    push_f64(&mut s, r.final_e);
+    match r.improvement_pct {
+        Some(v) => {
+            s.push(1);
+            push_f64(&mut s, v);
+        }
+        None => s.push(0),
+    }
+    match &r.baseline_costs {
+        Some(c) => {
+            s.push(1);
+            push_costs(&mut s, c);
+        }
+        None => s.push(0),
+    }
+    s
+}
+
+fn decode_summary_fields(c: &mut Cur) -> Option<RunRecord> {
+    Some(RunRecord {
+        seed: c.u64()?,
+        rounds: c.usize()?,
+        final_accuracy: c.f64()?,
+        costs: c.costs()?,
+        final_m: c.usize()?,
+        final_e: c.f64()?,
+        improvement_pct: match c.u8()? {
+            0 => None,
+            1 => Some(c.f64()?),
+            _ => return None,
+        },
+        baseline_costs: match c.u8()? {
+            0 => None,
+            1 => Some(c.costs()?),
+            _ => return None,
+        },
+        trace: None,
+    })
+}
+
+fn encode_trace(t: &Trace) -> Vec<u8> {
+    let rows = t.records();
+    let mut out = Vec::with_capacity(8 + rows.len() * 74);
+    push_u64(&mut out, rows.len() as u64);
+    for r in rows {
+        push_u64(&mut out, r.round as u64);
+        push_u64(&mut out, r.m as u64);
+        push_f64(&mut out, r.e);
+        push_f64(&mut out, r.accuracy);
+        push_f64(&mut out, r.train_loss);
+        push_costs(&mut out, &r.costs);
+        out.push(r.fedtune_activated as u8);
+    }
+    out
+}
+
+fn decode_trace(c: &mut Cur) -> Option<Trace> {
+    let n = c.usize()?;
+    // A torn length field must not trigger a huge allocation: every row
+    // is ≥ 73 bytes, so the remaining slice bounds the plausible count.
+    if n > c.b.len() / 73 + 1 {
+        return None;
+    }
+    let mut t = Trace::new();
+    for _ in 0..n {
+        t.push(RoundRecord {
+            round: c.usize()?,
+            m: c.usize()?,
+            e: c.f64()?,
+            accuracy: c.f64()?,
+            train_loss: c.f64()?,
+            costs: c.costs()?,
+            fedtune_activated: match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return None,
+            },
+        });
+    }
+    Some(t)
+}
+
+/// Encode one record into a full `fedtune.store.seg/v1` frame.
+pub fn encode_frame(fp: &Fingerprint, r: &RunRecord) -> Frame {
+    let summary = encode_summary(r);
+    let trace = r.trace.as_ref().map(encode_trace);
+    let flags = if trace.is_some() { FLAG_TRACE } else { 0 };
+
+    let mut body =
+        Vec::with_capacity(BODY_HEADER_LEN + summary.len() + trace.as_ref().map_or(0, Vec::len));
+    body.extend_from_slice(&fp.to_bytes());
+    push_u32(&mut body, FINGERPRINT_VERSION as u32);
+    body.push(flags);
+    push_u32(&mut body, summary.len() as u32);
+    push_u32(&mut body, fnv32(&summary));
+    body.extend_from_slice(&summary);
+    let sum_prefix = (FRAME_HEADER_LEN + body.len()) as u32;
+    if let Some(t) = &trace {
+        body.extend_from_slice(t);
+    }
+
+    let mut bytes = Vec::with_capacity(FRAME_HEADER_LEN + body.len());
+    push_u32(&mut bytes, body.len() as u32);
+    push_u32(&mut bytes, fnv32(&body));
+    bytes.extend_from_slice(&body);
+    Frame { bytes, sum_prefix, flags }
+}
+
+/// Parse a frame's header + body prelude from `buf` (which must start at
+/// a frame boundary). Verifies nothing beyond structural sanity — use
+/// [`decode_summary`] / [`decode_full`] for checksummed record reads.
+pub fn peek_frame(buf: &[u8]) -> Option<FrameInfo> {
+    let mut c = Cur::new(buf);
+    let body_len = c.u32()? as usize;
+    let _cksum = c.u32()?;
+    if body_len < BODY_HEADER_LEN {
+        return None;
+    }
+    let fp = Fingerprint::from_bytes(c.take(16)?.try_into().ok()?);
+    let fver = c.u32()?;
+    let flags = c.u8()?;
+    let sum_len = c.u32()? as usize;
+    let _sum_cksum = c.u32()?;
+    if BODY_HEADER_LEN + sum_len > body_len {
+        return None;
+    }
+    Some(FrameInfo {
+        fp,
+        fver,
+        flags,
+        len: (FRAME_HEADER_LEN + body_len) as u32,
+        sum_prefix: (FRAME_HEADER_LEN + BODY_HEADER_LEN + sum_len) as u32,
+    })
+}
+
+/// Decode the summary portion of a frame from a bounded prefix read
+/// (`buf` needs only [`FrameInfo::sum_prefix`] bytes — trace bytes are
+/// never touched). Verifies the summary checksum and the embedded
+/// [`FINGERPRINT_VERSION`]; any defect is `None` (a cache miss, never an
+/// error). The returned record carries no trace.
+pub fn decode_summary(buf: &[u8]) -> Option<(Fingerprint, RunRecord)> {
+    let info = peek_frame(buf)?;
+    if info.fver as u64 != FINGERPRINT_VERSION {
+        return None;
+    }
+    let sum_len = info.sum_prefix as usize - FRAME_HEADER_LEN - BODY_HEADER_LEN;
+    let sum_cksum = u32::from_le_bytes(
+        buf[FRAME_HEADER_LEN + BODY_HEADER_LEN - 4..FRAME_HEADER_LEN + BODY_HEADER_LEN]
+            .try_into()
+            .ok()?,
+    );
+    let summary = buf.get(FRAME_HEADER_LEN + BODY_HEADER_LEN..info.sum_prefix as usize)?;
+    if fnv32(summary) != sum_cksum {
+        return None;
+    }
+    let mut c = Cur::new(summary);
+    let rec = decode_summary_fields(&mut c)?;
+    if c.i != sum_len {
+        return None; // trailing garbage inside the summary block
+    }
+    Some((info.fp, rec))
+}
+
+/// Decode a whole frame (summary + trace when flagged) from a full-frame
+/// read. Verifies the body checksum over every byte.
+pub fn decode_full(buf: &[u8]) -> Option<(Fingerprint, RunRecord)> {
+    let info = peek_frame(buf)?;
+    let total = info.len as usize;
+    let body = buf.get(FRAME_HEADER_LEN..total)?;
+    let cksum = u32::from_le_bytes(buf[4..8].try_into().ok()?);
+    if fnv32(body) != cksum {
+        return None;
+    }
+    let (fp, mut rec) = decode_summary(&buf[..info.sum_prefix as usize])?;
+    if info.flags & FLAG_TRACE != 0 {
+        let mut c = Cur::new(body.get(info.sum_prefix as usize - FRAME_HEADER_LEN..)?);
+        rec.trace = Some(decode_trace(&mut c)?);
+        if c.i != c.b.len() {
+            return None; // trailing garbage after the trace block
+        }
+    }
+    Some((fp, rec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(with_trace: bool) -> RunRecord {
+        let costs =
+            Costs { comp_t: 1.5e12, trans_t: 146.0, comp_l: 3.25e13, trans_l: 2.0e8 };
+        let mut trace = Trace::new();
+        for round in 1..=3usize {
+            trace.push(RoundRecord {
+                round,
+                m: 20 - round,
+                e: 0.5 * round as f64,
+                accuracy: 0.1 * round as f64,
+                train_loss: 1.0 / round as f64,
+                costs: costs.scaled(round as f64),
+                fedtune_activated: round % 2 == 0,
+            });
+        }
+        RunRecord {
+            seed: 7,
+            rounds: 146,
+            final_accuracy: 0.8012345678901234,
+            costs,
+            final_m: 3,
+            final_e: 21.0,
+            improvement_pct: Some(-68.25),
+            baseline_costs: Some(costs.scaled(1.5)),
+            trace: if with_trace { Some(trace) } else { None },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_lossless_with_and_without_trace() {
+        for with_trace in [false, true] {
+            let rec = record(with_trace);
+            let fp = Fingerprint::of_bytes(b"codec");
+            let f = encode_frame(&fp, &rec);
+            let (got_fp, back) = decode_full(&f.bytes).expect("decodes");
+            assert_eq!(got_fp, fp);
+            assert_eq!(
+                run_record_json(&back).dump(),
+                run_record_json(&rec).dump(),
+                "binary round-trip must be lossless (trace={with_trace})"
+            );
+        }
+    }
+
+    #[test]
+    fn summary_decodes_from_exactly_the_bounded_prefix() {
+        let rec = record(true);
+        let fp = Fingerprint::of_bytes(b"prefix");
+        let f = encode_frame(&fp, &rec);
+        assert!((f.sum_prefix as usize) < f.bytes.len(), "trace extends past summary");
+        assert!((f.sum_prefix as usize) <= MAX_SUM_PREFIX);
+        // The real guarantee behind the bounded-pread claim: a buffer
+        // holding ONLY sum_prefix bytes fully serves a summary decode.
+        let prefix = &f.bytes[..f.sum_prefix as usize];
+        let (got_fp, back) = decode_summary(prefix).expect("prefix decode");
+        assert_eq!(got_fp, fp);
+        assert!(back.trace.is_none());
+        let mut expect = rec.clone();
+        expect.trace = None;
+        assert_eq!(run_record_json(&back).dump(), run_record_json(&expect).dump());
+    }
+
+    #[test]
+    fn f64_bits_survive_exactly() {
+        let mut rec = record(false);
+        rec.final_accuracy = f64::from_bits(0x0000_0000_0000_0001); // subnormal
+        rec.final_e = -0.0;
+        rec.costs.comp_t = f64::MAX;
+        rec.costs.trans_t = f64::MIN_POSITIVE;
+        let fp = Fingerprint::of_bytes(b"bits");
+        let (_, back) = decode_full(&encode_frame(&fp, &rec).bytes).unwrap();
+        assert_eq!(back.final_accuracy.to_bits(), rec.final_accuracy.to_bits());
+        assert_eq!(back.final_e.to_bits(), rec.final_e.to_bits(), "-0.0 must keep its sign");
+        assert_eq!(back.costs.comp_t.to_bits(), rec.costs.comp_t.to_bits());
+        assert_eq!(back.costs.trans_t.to_bits(), rec.costs.trans_t.to_bits());
+    }
+
+    #[test]
+    fn corruption_anywhere_is_a_decode_miss() {
+        let rec = record(true);
+        let fp = Fingerprint::of_bytes(b"corrupt");
+        let f = encode_frame(&fp, &rec);
+        for at in [0, 5, FRAME_HEADER_LEN + 3, f.sum_prefix as usize - 1, f.bytes.len() - 1] {
+            let mut bad = f.bytes.clone();
+            bad[at] ^= 0x5a;
+            assert!(decode_full(&bad).is_none(), "flip at {at} must not decode");
+        }
+        // Summary-prefix reads catch corruption inside their own bytes.
+        let mut bad = f.bytes[..f.sum_prefix as usize].to_vec();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x5a;
+        assert!(decode_summary(&bad).is_none());
+        // Truncation below the prefix is structurally short.
+        assert!(decode_summary(&f.bytes[..FRAME_HEADER_LEN + 10]).is_none());
+        assert!(decode_full(&f.bytes[..f.bytes.len() / 2]).is_none());
+    }
+
+    #[test]
+    fn stale_fingerprint_version_is_a_miss() {
+        let rec = record(false);
+        let fp = Fingerprint::of_bytes(b"fver");
+        let mut f = encode_frame(&fp, &rec);
+        // fver sits right after the 16-byte fingerprint in the body.
+        let at = FRAME_HEADER_LEN + 16;
+        f.bytes[at] = (FINGERPRINT_VERSION - 1) as u8;
+        // Re-seal the checksums so only the version disagrees.
+        let sum = fnv32(&f.bytes[FRAME_HEADER_LEN..]);
+        f.bytes[4..8].copy_from_slice(&sum.to_le_bytes());
+        assert!(decode_full(&f.bytes).is_none(), "old-identity frames are stale");
+        assert!(decode_summary(&f.bytes[..f.sum_prefix as usize]).is_none());
+        // But the structural peek still sees it (stats counts staleness).
+        assert_eq!(peek_frame(&f.bytes).unwrap().fver as u64, FINGERPRINT_VERSION - 1);
+    }
+}

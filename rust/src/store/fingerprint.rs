@@ -84,6 +84,17 @@ impl Fingerprint {
         }
         u128::from_str_radix(s, 16).ok().map(Fingerprint)
     }
+
+    /// The 16 raw little-endian bytes — the key field of a binary
+    /// segment frame (`fedtune.store.seg/v1`, see [`super::binary`]).
+    pub fn to_bytes(self) -> [u8; 16] {
+        self.0.to_le_bytes()
+    }
+
+    /// Parse the [`Fingerprint::to_bytes`] form back.
+    pub fn from_bytes(b: [u8; 16]) -> Fingerprint {
+        Fingerprint(u128::from_le_bytes(b))
+    }
 }
 
 impl fmt::Display for Fingerprint {
@@ -217,6 +228,7 @@ mod tests {
         assert_eq!(Fingerprint::from_hex(&hex), Some(fp));
         assert_eq!(Fingerprint::from_hex("xyz"), None);
         assert_eq!(Fingerprint::from_hex(&hex[..16]), None);
+        assert_eq!(Fingerprint::from_bytes(fp.to_bytes()), fp);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Sidecar index of the segment store: fingerprint → frame location.
+//!
+//! `index.bin` is `fedtune.store.index/v1`: a one-line schema header
+//! followed by fixed-size binary entries, appended (fsync'd, under the
+//! store lock) in the same order frames are appended to segments. Each
+//! entry carries its own FNV-32 checksum, so a torn tail entry is
+//! silently dropped on load — like every other store artifact, the index
+//! is advisory and never an error source.
+//!
+//! # Load & rebuild rule
+//!
+//! [`Index::load`] reads the entry list once per process into a sharded
+//! `HashMap` (16 shards keyed by the fingerprint's low bits), validates
+//! every entry against the segment files actually on disk, and then
+//! **tail-scans** each segment past the highest indexed offset: frames
+//! appended by a process that died between segment-fsync and
+//! index-fsync (or written by `fedtune compact` before its index
+//! publish) are recovered by scanning their checksummed frames and
+//! merged in memory. A missing or corrupt-header `index.bin` degrades to
+//! a full scan of every segment — rebuild, never error. Later entries
+//! win (a trace upgrade re-appends the same fingerprint), matching
+//! append order.
+//!
+//! Atomic rewrites ([`Index::rewrite`], used by `fedtune compact`) go
+//! through a uniquely-named temp file + rename, so readers only ever see
+//! a complete index.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::obs::{names, wall};
+
+use super::binary::{FrameInfo, FLAG_TRACE, INDEX_SCHEMA};
+use super::fingerprint::Fingerprint;
+use super::segment;
+use super::unique_tmp;
+
+/// File name of the sidecar index inside a cache dir.
+pub const INDEX_FILE: &str = "index.bin";
+
+/// fp(16) + seg(4) + offset(8) + len(4) + sum_prefix(4) + flags(1).
+const ENTRY_BODY_LEN: usize = 37;
+/// Entry body + its own FNV-32 checksum.
+const ENTRY_LEN: usize = ENTRY_BODY_LEN + 4;
+
+const SHARDS: usize = 16;
+
+/// Where one fingerprint's latest frame lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegLoc {
+    /// Segment number (`segments/seg-<n>.bin`).
+    pub seg: u32,
+    /// Byte offset of the frame inside the segment file.
+    pub offset: u64,
+    /// Total frame length.
+    pub len: u32,
+    /// Bounded prefix length sufficient for a summary-only decode.
+    pub sum_prefix: u32,
+    /// Frame flags ([`FLAG_TRACE`]) — lets a trace-demanding lookup
+    /// classify a trace-less record as stale from the probe alone.
+    pub flags: u8,
+}
+
+impl SegLoc {
+    /// Does the frame carry a trace block?
+    pub fn has_trace(&self) -> bool {
+        self.flags & FLAG_TRACE != 0
+    }
+
+    /// Location of `info`'s frame at `offset` in segment `seg`.
+    pub fn of_frame(seg: u32, offset: u64, info: &FrameInfo) -> SegLoc {
+        SegLoc {
+            seg,
+            offset,
+            len: info.len,
+            sum_prefix: info.sum_prefix,
+            flags: info.flags,
+        }
+    }
+}
+
+/// The per-process in-memory index: one probe per warm lookup.
+#[derive(Debug)]
+pub struct Index {
+    shards: Vec<HashMap<Fingerprint, SegLoc>>,
+}
+
+impl Default for Index {
+    fn default() -> Index {
+        Index::new()
+    }
+}
+
+impl Index {
+    pub fn new() -> Index {
+        Index { shards: (0..SHARDS).map(|_| HashMap::new()).collect() }
+    }
+
+    fn shard(&self, fp: &Fingerprint) -> usize {
+        (fp.to_bytes()[0] as usize) % SHARDS
+    }
+
+    /// One warm-path probe (counted as `store.index.probe`).
+    pub fn probe(&self, fp: &Fingerprint) -> Option<SegLoc> {
+        wall::count(names::STORE_INDEX_PROBE, 1);
+        self.shards[self.shard(fp)].get(fp).copied()
+    }
+
+    pub fn insert(&mut self, fp: Fingerprint, loc: SegLoc) {
+        let s = self.shard(&fp);
+        self.shards[s].insert(fp, loc);
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(HashMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn path(cache_dir: &Path) -> PathBuf {
+        cache_dir.join(INDEX_FILE)
+    }
+
+    /// Load the index for `cache_dir` (see the module doc for the
+    /// rebuild rule). Infallible by design: any defect degrades to
+    /// scanning segments, and an empty store loads an empty index.
+    pub fn load(cache_dir: &Path) -> Index {
+        let mut ix = Index::new();
+        let segs = segment::list(cache_dir);
+        // Highest indexed end-offset per segment — scanning resumes there.
+        let mut covered: HashMap<u32, u64> = HashMap::new();
+        if let Some(entries) = read_entries(&Self::path(cache_dir)) {
+            for (fp, loc) in entries {
+                let Some(&size) = segs.get(&loc.seg) else { continue };
+                if loc.offset + loc.len as u64 > size || loc.sum_prefix > loc.len {
+                    continue; // points past the file (or is nonsense): drop
+                }
+                let end = loc.offset + loc.len as u64;
+                let c = covered.entry(loc.seg).or_insert(0);
+                if end > *c {
+                    *c = end;
+                }
+                ix.insert(fp, loc);
+            }
+        }
+        // Tail-scan every segment past its indexed prefix. Iterating the
+        // sorted segment list keeps "later frames win" deterministic.
+        for (&seg, _) in segs.iter() {
+            let from = covered
+                .get(&seg)
+                .copied()
+                .unwrap_or(segment::header_len() as u64);
+            segment::scan_from(cache_dir, seg, from, |offset, info, _| {
+                ix.insert(info.fp, SegLoc::of_frame(seg, offset, &info));
+            });
+        }
+        ix
+    }
+
+    /// Append one entry (caller holds the store lock) and fsync.
+    pub fn append_entry(
+        cache_dir: &Path,
+        fp: &Fingerprint,
+        loc: &SegLoc,
+    ) -> std::io::Result<()> {
+        let path = Self::path(cache_dir);
+        let mut f = fs::OpenOptions::new().append(true).create(true).open(&path)?;
+        if f.metadata()?.len() == 0 {
+            f.write_all(header().as_bytes())?;
+        }
+        f.write_all(&encode_entry(fp, loc))?;
+        f.sync_data()
+    }
+
+    /// Atomically replace `index.bin` with exactly `entries` (sorted by
+    /// fingerprint — `fedtune compact`'s deterministic publish step).
+    pub fn rewrite(
+        cache_dir: &Path,
+        entries: &std::collections::BTreeMap<Fingerprint, SegLoc>,
+    ) -> std::io::Result<()> {
+        let path = Self::path(cache_dir);
+        let tmp = unique_tmp(&path);
+        let mut buf = header().into_bytes();
+        for (fp, loc) in entries {
+            buf.extend_from_slice(&encode_entry(fp, loc));
+        }
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_data()?;
+        drop(f);
+        let renamed = fs::rename(&tmp, &path);
+        if renamed.is_err() {
+            let _ = fs::remove_file(&tmp);
+        }
+        renamed
+    }
+}
+
+fn header() -> String {
+    format!("{INDEX_SCHEMA}\n")
+}
+
+fn encode_entry(fp: &Fingerprint, loc: &SegLoc) -> [u8; ENTRY_LEN] {
+    let mut e = [0u8; ENTRY_LEN];
+    e[..16].copy_from_slice(&fp.to_bytes());
+    e[16..20].copy_from_slice(&loc.seg.to_le_bytes());
+    e[20..28].copy_from_slice(&loc.offset.to_le_bytes());
+    e[28..32].copy_from_slice(&loc.len.to_le_bytes());
+    e[32..36].copy_from_slice(&loc.sum_prefix.to_le_bytes());
+    e[36] = loc.flags;
+    let ck = super::binary::fnv32(&e[..ENTRY_BODY_LEN]);
+    e[ENTRY_BODY_LEN..].copy_from_slice(&ck.to_le_bytes());
+    e
+}
+
+fn decode_entry(e: &[u8]) -> Option<(Fingerprint, SegLoc)> {
+    let ck = u32::from_le_bytes(e[ENTRY_BODY_LEN..ENTRY_LEN].try_into().ok()?);
+    if super::binary::fnv32(&e[..ENTRY_BODY_LEN]) != ck {
+        return None;
+    }
+    Some((
+        Fingerprint::from_bytes(e[..16].try_into().ok()?),
+        SegLoc {
+            seg: u32::from_le_bytes(e[16..20].try_into().ok()?),
+            offset: u64::from_le_bytes(e[20..28].try_into().ok()?),
+            len: u32::from_le_bytes(e[28..32].try_into().ok()?),
+            sum_prefix: u32::from_le_bytes(e[32..36].try_into().ok()?),
+            flags: e[36],
+        },
+    ))
+}
+
+/// Read + checksum-validate the entry list; `None` means "no usable
+/// index" (missing file or wrong header) and triggers a full rebuild. A
+/// bad entry mid-file drops it and everything after (a torn tail).
+fn read_entries(path: &Path) -> Option<Vec<(Fingerprint, SegLoc)>> {
+    let bytes = fs::read(path).ok()?;
+    let head = header();
+    let body = bytes.strip_prefix(head.as_bytes())?;
+    let mut out = Vec::with_capacity(body.len() / ENTRY_LEN);
+    for chunk in body.chunks_exact(ENTRY_LEN) {
+        match decode_entry(chunk) {
+            Some(e) => out.push(e),
+            None => break,
+        }
+    }
+    Some(out)
+}
+
+/// How many checksum-valid entries `index.bin` currently holds (the
+/// `fedtune info` count; 0 when the file is missing or unreadable).
+pub fn entries_on_disk(cache_dir: &Path) -> usize {
+    read_entries(&Index::path(cache_dir)).map_or(0, |v| v.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(seg: u32, offset: u64) -> SegLoc {
+        SegLoc { seg, offset, len: 64, sum_prefix: 48, flags: FLAG_TRACE }
+    }
+
+    #[test]
+    fn entry_roundtrip_and_checksum() {
+        let fp = Fingerprint::of_bytes(b"ix");
+        let l = loc(3, 12345);
+        let e = encode_entry(&fp, &l);
+        assert_eq!(decode_entry(&e), Some((fp, l)));
+        let mut bad = e;
+        bad[7] ^= 1;
+        assert_eq!(decode_entry(&bad), None);
+    }
+
+    #[test]
+    fn sharded_map_probes_and_overwrites() {
+        let mut ix = Index::new();
+        let a = Fingerprint::of_bytes(b"a");
+        let b = Fingerprint::of_bytes(b"b");
+        assert!(ix.probe(&a).is_none());
+        ix.insert(a, loc(0, 10));
+        ix.insert(b, loc(0, 90));
+        ix.insert(a, loc(1, 20)); // later entry wins (trace upgrade)
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.probe(&a).unwrap().seg, 1);
+        assert_eq!(ix.probe(&b).unwrap().offset, 90);
+    }
+
+    #[test]
+    fn torn_tail_entry_is_dropped_not_an_error() {
+        let dir = std::env::temp_dir()
+            .join(format!("fedtune_index_torn_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let fp = Fingerprint::of_bytes(b"t1");
+        Index::append_entry(&dir, &fp, &loc(0, 21)).unwrap();
+        Index::append_entry(&dir, &Fingerprint::of_bytes(b"t2"), &loc(0, 85)).unwrap();
+        let path = dir.join(INDEX_FILE);
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 7]).unwrap(); // tear entry 2
+        let got = read_entries(&path).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, fp);
+        assert_eq!(entries_on_disk(&dir), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

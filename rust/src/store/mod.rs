@@ -14,10 +14,16 @@
 //!   [`Fingerprint`] with
 //!   an in-repo FNV-1a 128-bit hasher. Identical runs — across cells,
 //!   penalties, figures, or whole processes — share one key.
-//! * [`run_store`] — a two-tier (memory + disk) [`RunStore`] persisting
-//!   one `fedtune.store.run/v4` JSON record per key under a cache
-//!   directory, with lossless [`crate::experiment::RunRecord`]
-//!   round-trips and miss-on-corruption semantics.
+//! * [`run_store`] — a two-tier (memory + disk) [`RunStore`] with
+//!   lossless [`crate::experiment::RunRecord`] round-trips and
+//!   miss-on-corruption semantics. Its disk tier is the packed segment
+//!   store: [`binary`] frames (`fedtune.store.seg/v1`, summary-first so
+//!   summary lookups decode a bounded prefix) appended to
+//!   [`segment`] files under an advisory write lease, located through
+//!   the rebuildable sidecar [`index`] — one probe + one bounded pread
+//!   per warm lookup. Legacy one-file-per-record
+//!   `fedtune.store.run/v4` JSON stays readable as a fallback tier;
+//!   `fedtune compact` migrates it into segments.
 //! * [`journal`] — a per-sweep append-only [`SweepJournal`] of finished
 //!   (cell, seed) records, so an interrupted `fedtune grid` resumes where
 //!   it died and still emits a byte-identical
@@ -30,10 +36,28 @@
 //! Invalidation is by schema bump ([`fingerprint::FINGERPRINT_VERSION`]):
 //! semantic changes orphan old entries instead of corrupting them.
 
+pub mod binary;
 pub mod fingerprint;
+pub mod index;
 pub mod journal;
 pub mod run_store;
+pub mod segment;
 
+pub use binary::{INDEX_SCHEMA, SEG_SCHEMA};
 pub use fingerprint::{run_fingerprint, run_identity, Fingerprint};
 pub use journal::{JournalEntry, SweepJournal, JOURNAL_SCHEMA};
 pub use run_store::{CacheStats, Lookup, RunStore, RUN_SCHEMA};
+pub use segment::{compact, CompactReport};
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A temp-file sibling of `path` unique per (process, call): the PID
+/// alone is not enough — two worker threads persisting the same
+/// fingerprint would race on one `.tmp<pid>` path — so a per-process
+/// atomic counter disambiguates.
+pub(crate) fn unique_tmp(path: &Path) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_extension(format!("tmp{}-{n}", std::process::id()))
+}

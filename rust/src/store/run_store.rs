@@ -1,12 +1,20 @@
 //! Two-tier content-addressed run store.
 //!
 //! The memory tier is a plain map that serves repeated lookups inside one
-//! process; the optional disk tier persists one `fedtune.store.run/v4`
-//! JSON record per [`Fingerprint`] under `<cache-dir>/runs/<hex>.json`,
-//! so later sweeps (a figure regeneration, a resumed grid) reuse finished
-//! runs across processes.
+//! process. The disk tier is the packed segment store: each record is a
+//! checksummed `fedtune.store.seg/v1` binary frame ([`super::binary`])
+//! appended to `<cache-dir>/segments/seg-<n>.bin` ([`super::segment`])
+//! and located through the sidecar `index.bin` ([`super::index`]) — a
+//! warm lookup is one in-memory probe plus one bounded positional read,
+//! never an `open() + read_to_string + JSON parse` per cell. The frame
+//! lays its summary block out *first*, so a `need_trace = false` lookup
+//! of a trace-carrying record reads only the summary prefix and never
+//! touches the (potentially megabytes of) trace bytes.
 //!
-//! # Record schema (`fedtune.store.run/v4`)
+//! # Legacy JSON tier (`fedtune.store.run/v4`)
+//!
+//! Caches written before the segment store hold one JSON record per
+//! [`Fingerprint`] at `<cache-dir>/runs/<hex>.json`:
 //!
 //! ```text
 //! {
@@ -17,26 +25,29 @@
 //! }
 //! ```
 //!
-//! v2 accompanied the fractional-E unification: the run's pass count
-//! lives in the fingerprinted config (`e0: f64`), so the v1 side-channel
-//! `"e"` field is gone. v3 accompanied per-client system heterogeneity:
-//! run identities grew a `system` spec (and a parameter-carrying
-//! selector spec). v4 accompanies pluggable tuner policies: tuned run
-//! identities grew a `tuner` spec with per-policy knob keying, so
-//! pre-v4 records describe runs that no longer exist. Stale records
-//! (v1 through v3) are schema misses — they re-run and heal;
-//! `fedtune info --cache-dir` counts them ([`CacheStats::stale_runs`])
-//! so operators can see why a warm cache re-executes.
+//! Those records stay readable as a **read-only fallback tier** (the
+//! segment tier always wins): nothing writes them anymore, and
+//! `fedtune compact` migrates current-schema ones into segments while
+//! garbage-collecting stale ones. The `RUN_SCHEMA` version history is
+//! unchanged — v2: fractional-E unification; v3: per-client system
+//! heterogeneity; v4: pluggable tuner policies — and pre-v4 records are
+//! schema misses that re-run and heal, counted by `fedtune info`
+//! ([`CacheStats::stale_runs`]). Run *identities* never moved either:
+//! [`super::fingerprint::FINGERPRINT_VERSION`] is untouched by the
+//! container change.
 //!
 //! # Failure semantics
 //!
 //! The cache is advisory: a missing, truncated, corrupted or
-//! wrong-schema file is a **miss**, never an error — the runner falls
-//! back to executing the run and overwrites the bad entry. Writes go
-//! through a temp file + rename so a killed sweep can leave at most one
-//! torn temp file, never a torn record.
+//! wrong-schema frame/file/index is a **miss**, never an error — the
+//! runner falls back to executing the run and the next append heals the
+//! entry. Appends happen under the store's advisory write lease
+//! ([`super::segment::StoreLock`]) with the frame fsync'd before its
+//! index entry publishes, so concurrent processes sharing one
+//! `--cache-dir` never tear a frame and a crash costs at most a
+//! tail-scan on the next [`super::index::Index::load`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
@@ -48,22 +59,38 @@ use crate::experiment::RunRecord;
 use crate::obs::{names, wall};
 use crate::util::json::Json;
 
-use super::fingerprint::Fingerprint;
+use super::binary;
+use super::fingerprint::{Fingerprint, FINGERPRINT_VERSION};
+use super::index::{Index, SegLoc};
+use super::segment::{self, SegmentSet, StoreLock};
 
-/// Schema identifier of one persisted run record.
+/// Schema identifier of one legacy-tier persisted run record.
 pub const RUN_SCHEMA: &str = "fedtune.store.run/v4";
 
-/// Name of the per-run subdirectory inside a cache dir.
-const RUNS_SUBDIR: &str = "runs";
+/// Name of the legacy per-run subdirectory inside a cache dir.
+pub const RUNS_SUBDIR: &str = "runs";
 
 /// Aggregate statistics of a cache directory (`fedtune info --cache-dir`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
-    /// Number of `runs/*.json` records.
+    /// Number of `segments/seg-<n>.bin` files.
+    pub segments: usize,
+    /// Checksum-valid frames across all segments (superseded duplicates
+    /// included — `fedtune compact` folds them away).
+    pub segment_records: usize,
+    /// Total bytes of the segment files.
+    pub segment_bytes: u64,
+    /// Frames whose [`FINGERPRINT_VERSION`] is not current — guaranteed
+    /// misses that `fedtune compact` garbage-collects.
+    pub stale_frames: usize,
+    /// Checksum-valid entries in `index.bin` (0 when missing — lookups
+    /// then rebuild by scanning segments).
+    pub index_entries: usize,
+    /// Number of legacy `runs/*.json` records (read-only fallback tier).
     pub run_entries: usize,
-    /// Total bytes of those records.
+    /// Total bytes of those legacy records.
     pub run_bytes: u64,
-    /// Run records whose schema tag is not the current [`RUN_SCHEMA`]
+    /// Legacy records whose schema tag is not the current [`RUN_SCHEMA`]
     /// (older/newer version, or unparseable) — every one of these is a
     /// guaranteed miss that will re-run and heal.
     pub stale_runs: usize,
@@ -84,8 +111,9 @@ pub enum Lookup {
     /// Nothing stored under the key.
     Miss,
     /// Something was stored but unusable: stale/wrong schema, corrupt
-    /// JSON, key mismatch, or a trace-demanding lookup over a trace-less
-    /// record. Counts as a miss; re-running the job heals the entry.
+    /// frame or JSON, key mismatch, or a trace-demanding lookup over a
+    /// trace-less record. Counts as a miss; re-running the job heals the
+    /// entry.
     Stale,
 }
 
@@ -103,9 +131,20 @@ impl Lookup {
 /// In-memory + on-disk run cache keyed by [`Fingerprint`].
 #[derive(Debug)]
 pub struct RunStore {
-    /// `<cache-dir>/runs`; `None` = memory-only store.
-    dir: Option<PathBuf>,
+    /// The cache directory; `None` = memory-only store.
+    cache_dir: Option<PathBuf>,
     mem: HashMap<Fingerprint, RunRecord>,
+    /// Segment-tier index, loaded once per process ([`Index::load`]).
+    index: Option<Index>,
+    /// Cached read handles over the segment files.
+    segments: Option<SegmentSet>,
+    /// `<cache-dir>/runs` iff it exists at open time — the read-only
+    /// legacy JSON fallback tier (no per-miss directory probe).
+    legacy_dir: Option<PathBuf>,
+    /// Fingerprints whose disk tier was consulted and found trace-less:
+    /// a later trace-demanding lookup classifies `Stale` from memory
+    /// alone instead of re-reading + re-parsing the same record.
+    disk_traceless: HashSet<Fingerprint>,
     /// Lookups answered from either tier.
     pub hits: usize,
     /// Lookups that fell through to "execute the run".
@@ -116,19 +155,38 @@ impl RunStore {
     /// Memory-only store (no `--cache-dir`): still dedupes within a
     /// process, persists nothing.
     pub fn in_memory() -> RunStore {
-        RunStore { dir: None, mem: HashMap::new(), hits: 0, misses: 0 }
+        RunStore {
+            cache_dir: None,
+            mem: HashMap::new(),
+            index: None,
+            segments: None,
+            legacy_dir: None,
+            disk_traceless: HashSet::new(),
+            hits: 0,
+            misses: 0,
+        }
     }
 
-    /// Open (creating if needed) the disk tier under `cache_dir`.
+    /// Open the disk tier under `cache_dir` (creating the directory if
+    /// needed), loading the segment index once for the process.
     pub fn open(cache_dir: &Path) -> Result<RunStore> {
-        let dir = cache_dir.join(RUNS_SUBDIR);
-        fs::create_dir_all(&dir)
-            .with_context(|| format!("creating run cache dir {dir:?}"))?;
-        Ok(RunStore { dir: Some(dir), mem: HashMap::new(), hits: 0, misses: 0 })
+        fs::create_dir_all(cache_dir)
+            .with_context(|| format!("creating run cache dir {cache_dir:?}"))?;
+        let legacy = cache_dir.join(RUNS_SUBDIR);
+        Ok(RunStore {
+            index: Some(Index::load(cache_dir)),
+            segments: Some(SegmentSet::open(cache_dir)),
+            legacy_dir: legacy.is_dir().then_some(legacy),
+            cache_dir: Some(cache_dir.to_path_buf()),
+            mem: HashMap::new(),
+            disk_traceless: HashSet::new(),
+            hits: 0,
+            misses: 0,
+        })
     }
 
-    fn file(&self, fp: &Fingerprint) -> Option<PathBuf> {
-        self.dir.as_ref().map(|d| d.join(format!("{}.json", fp.hex())))
+    fn legacy_file(&self, fp: &Fingerprint) -> Option<PathBuf> {
+        self.legacy_dir.as_ref().map(|d| d.join(format!("{}.json", fp.hex())))
     }
 
     /// Number of records in the memory tier.
@@ -158,80 +216,151 @@ impl RunStore {
         let mut found_unusable = false;
         if let Some(rec) = self.mem.get(fp) {
             if !need_trace || rec.trace.is_some() {
-                self.hits += 1;
-                wall::count(names::STORE_HITS, 1);
-                return (Some(rec.clone()), Lookup::Hit);
+                return self.hit(rec.clone());
             }
             found_unusable = true;
+            // The disk tier was already consulted for this key and had
+            // no trace either: classify from memory alone instead of
+            // re-reading + re-parsing the same record every lookup.
+            if self.disk_traceless.contains(fp) {
+                return self.miss(Lookup::Stale);
+            }
         }
-        if let Some(path) = self.file(fp) {
+
+        // Segment tier: one index probe + one bounded pread.
+        if let Some(loc) = self.index.as_ref().and_then(|ix| ix.probe(fp)) {
+            found_unusable = true;
+            if need_trace && !loc.has_trace() {
+                // The probe alone proves the frame is unusable: zero
+                // bytes read, and the next demand short-circuits in
+                // memory.
+                self.disk_traceless.insert(*fp);
+                return self.miss(Lookup::Stale);
+            }
+            let want = if need_trace { loc.len } else { loc.sum_prefix };
+            let decoded = wall::time(names::STORE_READ, || {
+                let buf = self.segments.as_mut()?.pread(loc.seg, loc.offset, want)?;
+                if need_trace {
+                    binary::decode_full(&buf)
+                } else {
+                    binary::decode_summary(&buf)
+                }
+            });
+            if let Some((frame_fp, rec)) = decoded {
+                if frame_fp == *fp && (!need_trace || rec.trace.is_some()) {
+                    self.mem.insert(*fp, rec.clone());
+                    return self.hit(rec);
+                }
+            }
+            // Unreadable or mis-keyed frame: fall through to the legacy
+            // tier; failing that, the lookup is a Stale miss and a
+            // re-run heals it.
+        }
+
+        // Legacy JSON fallback tier (read-only).
+        if let Some(path) = self.legacy_file(fp) {
             if let Some(text) =
                 wall::time(names::STORE_READ, || fs::read_to_string(&path).ok())
             {
                 wall::count(names::STORE_READ_BYTES, text.len() as u64);
                 found_unusable = true;
                 if let Some(rec) = parse_record(&text, fp) {
-                    if !need_trace || rec.trace.is_some() {
-                        self.hits += 1;
-                        wall::count(names::STORE_HITS, 1);
-                        self.mem.insert(*fp, rec.clone());
-                        return (Some(rec), Lookup::Hit);
+                    let usable = !need_trace || rec.trace.is_some();
+                    self.mem.insert(*fp, rec.clone());
+                    if usable {
+                        return self.hit(rec);
                     }
+                    self.disk_traceless.insert(*fp);
                 }
             }
         }
+        let outcome = if found_unusable { Lookup::Stale } else { Lookup::Miss };
+        self.miss(outcome)
+    }
+
+    fn hit(&mut self, rec: RunRecord) -> (Option<RunRecord>, Lookup) {
+        self.hits += 1;
+        wall::count(names::STORE_HITS, 1);
+        (Some(rec), Lookup::Hit)
+    }
+
+    fn miss(&mut self, outcome: Lookup) -> (Option<RunRecord>, Lookup) {
         self.misses += 1;
         wall::count(names::STORE_MISSES, 1);
-        let outcome = if found_unusable { Lookup::Stale } else { Lookup::Miss };
         (None, outcome)
     }
 
-    /// Persist a finished run. Disk-backed stores write through (later
-    /// [`RunStore::get`]s re-read via the disk tier) and only fall back
-    /// to the memory tier if the write fails — keeping traces from being
-    /// cloned twice on `keep_traces` sweeps; memory-only stores insert
-    /// directly. The pass count needs no side-channel: it is part of the
-    /// fingerprinted config (`e0: f64`).
+    /// Persist a finished run: encode one binary frame and append it to
+    /// the segment tier under the store's write lease, fsync'd before
+    /// its index entry publishes. Disk-backed stores write through
+    /// (later [`RunStore::get`]s re-read via index + bounded pread) and
+    /// only fall back to the memory tier if the write fails — keeping
+    /// traces from being cloned twice on `keep_traces` sweeps;
+    /// memory-only stores insert directly. The pass count needs no
+    /// side-channel: it is part of the fingerprinted config (`e0: f64`).
     pub fn put(&mut self, fp: &Fingerprint, record: &RunRecord) {
-        let path = match self.file(fp) {
-            Some(p) => p,
-            None => {
-                self.mem.insert(*fp, record.clone());
-                return;
-            }
-        };
-        let doc = Json::from_pairs(vec![
-            ("schema", RUN_SCHEMA.into()),
-            ("fingerprint", fp.hex().into()),
-            ("record", run_record_json(record)),
-        ]);
-        // Compact dump: records are machine-parsed only, and pretty-
-        // printing a kept 10k-row trace would inflate the file severalfold.
-        let mut text = doc.dump();
-        text.push('\n');
-        // Temp + rename: a killed process never leaves a torn record.
-        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
-        wall::count(names::STORE_WRITE_BYTES, text.len() as u64);
-        let ok = wall::time(names::STORE_WRITE, || {
-            fs::write(&tmp, text.as_bytes()).and_then(|_| fs::rename(&tmp, &path))
-        });
-        if let Err(err) = ok {
-            let _ = fs::remove_file(&tmp);
-            crate::log_warn!("run cache write failed for {path:?}: {err}");
+        let Some(cache_dir) = self.cache_dir.clone() else {
             self.mem.insert(*fp, record.clone());
+            return;
+        };
+        let frame = binary::encode_frame(fp, record);
+        wall::count(names::STORE_WRITE_BYTES, frame.bytes.len() as u64);
+        let appended = wall::time(names::STORE_WRITE, || -> Result<SegLoc> {
+            let _lease = StoreLock::acquire(&cache_dir)?;
+            let loc = segment::append_frame(&cache_dir, &frame)?;
+            Index::append_entry(&cache_dir, fp, &loc)
+                .with_context(|| format!("appending index entry in {cache_dir:?}"))?;
+            Ok(loc)
+        });
+        match appended {
+            Ok(loc) => {
+                if let Some(ix) = &mut self.index {
+                    ix.insert(*fp, loc);
+                }
+                if record.trace.is_some() {
+                    // A trace upgrade supersedes the trace-less frame.
+                    self.disk_traceless.remove(fp);
+                }
+            }
+            Err(err) => {
+                crate::log_warn!(
+                    "run cache write failed for {} in {cache_dir:?}: {err}",
+                    fp.hex()
+                );
+                self.mem.insert(*fp, record.clone());
+            }
         }
     }
 
-    /// Disk statistics of a cache directory (both runs and journals),
-    /// including how many entries carry a stale schema tag and therefore
-    /// can only ever miss under the current binary.
+    /// Disk statistics of a cache directory — segment tier, index,
+    /// legacy JSON tier and journals — including how many entries carry
+    /// a stale schema/version and therefore can only ever miss under the
+    /// current binary.
     ///
-    /// Schema detection reads only a bounded slice of each file, never
+    /// Segment frames are counted by their checksummed headers; legacy
+    /// schema detection reads only a bounded slice of each file, never
     /// the whole record: compact dumps sort their keys, so `"schema"` is
     /// the *last* field of a run record (a `keep_traces` record can be
     /// megabytes of trace before it) and the *first line* of a journal.
     pub fn stats(cache_dir: &Path) -> Result<CacheStats> {
         let mut s = CacheStats::default();
+        let segs = segment::list(cache_dir);
+        s.segments = segs.len();
+        for (&seg, &size) in segs.iter() {
+            s.segment_bytes += size;
+            segment::scan_from(
+                cache_dir,
+                seg,
+                segment::header_len() as u64,
+                |_, info, _| {
+                    s.segment_records += 1;
+                    if info.fver as u64 != FINGERPRINT_VERSION {
+                        s.stale_frames += 1;
+                    }
+                },
+            );
+        }
+        s.index_entries = super::index::entries_on_disk(cache_dir);
         let run_tag = format!("\"schema\":{}", Json::from(RUN_SCHEMA).dump());
         let journal_tag = format!("\"schema\":{}", Json::from(super::JOURNAL_SCHEMA).dump());
         let runs = cache_dir.join(RUNS_SUBDIR);
@@ -291,9 +420,10 @@ fn read_head(path: &Path, n: u64) -> Option<String> {
     Some(String::from_utf8_lossy(&buf).into_owned())
 }
 
-/// Parse one on-disk record's text; any defect (bad JSON, wrong schema,
-/// wrong key, missing fields) is a miss, not an error.
-fn parse_record(text: &str, fp: &Fingerprint) -> Option<RunRecord> {
+/// Parse one legacy on-disk record's text; any defect (bad JSON, wrong
+/// schema, wrong key, missing fields) is a miss, not an error. Also the
+/// migration parser behind `fedtune compact`.
+pub(crate) fn parse_record(text: &str, fp: &Fingerprint) -> Option<RunRecord> {
     let j = Json::parse(text).ok()?;
     if j.get("schema")?.as_str()? != RUN_SCHEMA {
         return None;
@@ -342,6 +472,23 @@ mod tests {
         d
     }
 
+    /// Write a legacy-tier JSON record exactly as the pre-segment store
+    /// did — the migration/fallback fixtures.
+    fn write_legacy(dir: &Path, fp: &Fingerprint, rec: &RunRecord) -> PathBuf {
+        let runs = dir.join(RUNS_SUBDIR);
+        fs::create_dir_all(&runs).unwrap();
+        let doc = Json::from_pairs(vec![
+            ("schema", RUN_SCHEMA.into()),
+            ("fingerprint", fp.hex().into()),
+            ("record", run_record_json(rec)),
+        ]);
+        let path = runs.join(format!("{}.json", fp.hex()));
+        let mut text = doc.dump();
+        text.push('\n');
+        fs::write(&path, text).unwrap();
+        path
+    }
+
     #[test]
     fn memory_tier_hit_and_trace_demand() {
         let mut s = RunStore::in_memory();
@@ -366,7 +513,7 @@ mod tests {
             let mut s = RunStore::open(&dir).unwrap();
             s.put(&fp, &rec);
         }
-        // Fresh store: memory tier empty, must come off disk.
+        // Fresh store: memory tier empty, must come off the segment tier.
         let mut s2 = RunStore::open(&dir).unwrap();
         let back = s2.get(&fp, true).expect("disk hit");
         assert_eq!(
@@ -375,32 +522,80 @@ mod tests {
             "store round-trip must be lossless"
         );
         let stats = RunStore::stats(&dir).unwrap();
-        assert_eq!(stats.run_entries, 1);
-        assert_eq!(stats.stale_runs, 0);
-        assert!(stats.run_bytes > 0);
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.segment_records, 1);
+        assert_eq!(stats.stale_frames, 0);
+        assert_eq!(stats.index_entries, 1);
+        assert_eq!(stats.run_entries, 0, "nothing writes the legacy tier");
+        assert!(stats.segment_bytes > 0);
         let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn corrupted_and_mismatched_files_are_misses() {
+    fn summary_lookup_of_traced_record_stays_summary_only() {
+        // need_trace = false over a trace-carrying frame: the record
+        // comes back summary-shaped (no trace clone into memory), and a
+        // later trace demand upgrades via the full frame.
+        let dir = tmp_dir("summary_only");
+        let fp = Fingerprint::of_bytes(b"k6");
+        let rec = record(11, true);
+        {
+            let mut s = RunStore::open(&dir).unwrap();
+            s.put(&fp, &rec);
+        }
+        let mut s = RunStore::open(&dir).unwrap();
+        let summary = s.get(&fp, false).expect("summary hit");
+        assert!(summary.trace.is_none(), "summary decode must not carry the trace");
+        assert_eq!(summary.final_accuracy.to_bits(), rec.final_accuracy.to_bits());
+        let full = s.get(&fp, true).expect("trace hit");
+        assert_eq!(full.trace.as_ref().map(Trace::len), Some(1));
+        assert_eq!(s.hits, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_index_rebuilds_from_segment_scan() {
+        let dir = tmp_dir("rebuild");
+        let fp = Fingerprint::of_bytes(b"k7");
+        {
+            let mut s = RunStore::open(&dir).unwrap();
+            s.put(&fp, &record(3, false));
+        }
+        fs::remove_file(dir.join(super::super::index::INDEX_FILE)).unwrap();
+        let mut s = RunStore::open(&dir).unwrap();
+        assert!(s.get(&fp, false).is_some(), "index rebuild must serve the frame");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_frames_and_mismatched_legacy_files_are_misses() {
         let dir = tmp_dir("corrupt");
         let fp = Fingerprint::of_bytes(b"k3");
-        let mut s = RunStore::open(&dir).unwrap();
-        s.put(&fp, &record(1, false));
-        let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
+        {
+            let mut s = RunStore::open(&dir).unwrap();
+            s.put(&fp, &record(1, false));
+        }
+        // Flip a byte inside the frame body: checksum fails → miss.
+        let seg = segment::seg_path(&dir, 0);
+        let mut bytes = fs::read(&seg).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x40;
+        fs::write(&seg, &bytes).unwrap();
+        let mut fresh = RunStore::open(&dir).unwrap();
+        assert!(fresh.get(&fp, false).is_none(), "corrupt frame must miss");
 
-        // Truncated mid-JSON.
+        // Legacy fallback tier defects are misses too.
+        let path = write_legacy(&dir, &fp, &record(1, false));
         let full = fs::read_to_string(&path).unwrap();
+
         fs::write(&path, &full[..full.len() / 2]).unwrap();
         let mut fresh = RunStore::open(&dir).unwrap();
         assert!(fresh.get(&fp, false).is_none(), "truncated file must miss");
 
-        // Garbage bytes.
         fs::write(&path, "not json at all {{{").unwrap();
         let mut fresh = RunStore::open(&dir).unwrap();
         assert!(fresh.get(&fp, false).is_none(), "garbage file must miss");
 
-        // Valid JSON, wrong schema tag.
         fs::write(&path, "{\"schema\": \"something/else\"}").unwrap();
         let mut fresh = RunStore::open(&dir).unwrap();
         assert!(fresh.get(&fp, false).is_none(), "wrong schema must miss");
@@ -422,41 +617,137 @@ mod tests {
         s.put(&fp, &record(9, false));
         let mut fresh = RunStore::open(&dir).unwrap();
         assert_eq!(fresh.get_classified(&fp, false).1, Lookup::Hit);
-        // Trace demanded but not kept: stored-but-unusable.
+        // Trace demanded but not kept: stored-but-unusable, proven by
+        // the index probe's flags alone.
         let mut fresh = RunStore::open(&dir).unwrap();
         assert_eq!(fresh.get_classified(&fp, true).1, Lookup::Stale);
-        // Old schema tag: also stored-but-unusable.
-        let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
+        // Legacy record with an old schema tag: also stored-but-unusable.
+        let dir2 = tmp_dir("classify_legacy");
+        let path = write_legacy(&dir2, &fp, &record(9, false));
         let text = fs::read_to_string(&path).unwrap();
         fs::write(&path, text.replace(RUN_SCHEMA, "fedtune.store.run/v1")).unwrap();
-        let mut fresh = RunStore::open(&dir).unwrap();
+        let mut fresh = RunStore::open(&dir2).unwrap();
         assert_eq!(fresh.get_classified(&fp, false).1, Lookup::Stale);
+        let _ = fs::remove_dir_all(&dir);
+        let _ = fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn trace_demand_consults_disk_once_then_classifies_in_memory() {
+        // The repeated-waste fix: a memory-tier trace-less record under
+        // need_trace = true must not re-read + re-parse the disk tier on
+        // every lookup once it has been consulted.
+        let dir = tmp_dir("no_reread");
+        let fp = Fingerprint::of_bytes(b"k8");
+        write_legacy(&dir, &fp, &record(3, false));
+        let mut s = RunStore::open(&dir).unwrap();
+        assert_eq!(s.get_classified(&fp, false).1, Lookup::Hit); // fills mem
+        assert_eq!(s.get_classified(&fp, true).1, Lookup::Stale); // disk consulted once
+        // Swap a trace-carrying record under the same key: the fixed
+        // path classifies from memory without touching the file — an
+        // out-of-band upgrade is picked up by re-run + put, not by
+        // polling the disk on every lookup.
+        write_legacy(&dir, &fp, &record(3, true));
+        assert_eq!(s.get_classified(&fp, true).1, Lookup::Stale);
+        // A put through this store (the trace upgrade path) clears the
+        // marker and serves the trace again.
+        s.put(&fp, &record(3, true));
+        let back = s.get(&fp, true).expect("upgraded hit");
+        assert!(back.trace.is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_json_migrates_via_compact() {
+        let dir = tmp_dir("migrate");
+        let fp = Fingerprint::of_bytes(b"k9");
+        let rec = record(21, true);
+        write_legacy(&dir, &fp, &rec);
+        // Fallback tier serves it read-only...
+        let mut s = RunStore::open(&dir).unwrap();
+        assert_eq!(s.get_classified(&fp, true).1, Lookup::Hit);
+        let stats = RunStore::stats(&dir).unwrap();
+        assert_eq!((stats.run_entries, stats.segment_records), (1, 0));
+        // ...and compact moves it into the segment tier losslessly.
+        let report = segment::compact(&dir).unwrap();
+        assert_eq!(report.migrated_json, 1);
+        assert_eq!(report.kept, 1);
+        let stats = RunStore::stats(&dir).unwrap();
+        assert_eq!((stats.run_entries, stats.segment_records), (0, 1));
+        assert_eq!(stats.index_entries, 1);
+        let mut fresh = RunStore::open(&dir).unwrap();
+        let back = fresh.get(&fp, true).expect("post-migration hit");
+        assert_eq!(run_record_json(&back).dump(), run_record_json(&rec).dump());
         let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn v1_schema_records_are_stale_misses() {
         // A record written by the pre-fractional-E store (v1 schema tag)
-        // must be a clean miss, and `stats` must count it as stale so
-        // `fedtune info` can explain why a "warm" cache re-runs.
+        // must be a clean miss, `stats` must count it as stale so
+        // `fedtune info` can explain why a "warm" cache re-runs, and
+        // `compact` must garbage-collect it.
         let dir = tmp_dir("v1_stale");
         let fp = Fingerprint::of_bytes(b"k4");
-        let mut s = RunStore::open(&dir).unwrap();
-        s.put(&fp, &record(5, false));
-        let path = dir.join(RUNS_SUBDIR).join(format!("{}.json", fp.hex()));
+        let path = write_legacy(&dir, &fp, &record(5, false));
         let text = fs::read_to_string(&path).unwrap();
         fs::write(&path, text.replace(RUN_SCHEMA, "fedtune.store.run/v1")).unwrap();
 
         let mut fresh = RunStore::open(&dir).unwrap();
-        assert!(fresh.get(&fp, false).is_none(), "v1 record must miss under v2");
+        assert!(fresh.get(&fp, false).is_none(), "v1 record must miss under v4");
         let stats = RunStore::stats(&dir).unwrap();
         assert_eq!(stats.run_entries, 1);
         assert_eq!(stats.stale_runs, 1);
 
-        // Healing: a fresh put overwrites with the current schema.
+        // Healing: a fresh put lands in the segment tier and wins.
         fresh.put(&fp, &record(5, false));
+        assert!(fresh.get(&fp, false).is_some());
+        let report = segment::compact(&dir).unwrap();
+        assert_eq!(report.dropped_json, 1);
         let stats = RunStore::stats(&dir).unwrap();
-        assert_eq!(stats.stale_runs, 0);
+        assert_eq!((stats.run_entries, stats.stale_runs), (0, 0));
+        assert_eq!(stats.segment_records, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_puts_do_not_collide_on_temp_names() {
+        // Regression: the temp-file suffix used to be the PID alone, so
+        // two threads persisting under one process raced on one path.
+        // `unique_tmp` adds a per-process counter; exercise it both
+        // directly and through racing index rewrites.
+        let base = tmp_dir("tmp_names").join("index.bin");
+        let a = super::super::unique_tmp(&base);
+        let b = super::super::unique_tmp(&base);
+        assert_ne!(a, b, "temp names must be unique within a process");
+
+        let dir = tmp_dir("tmp_race");
+        fs::create_dir_all(&dir).unwrap();
+        let dir2 = dir.clone();
+        let writer = |d: PathBuf, lane: u64| {
+            move || {
+                let mut s = RunStore::open(&d).unwrap();
+                for i in 0..16u64 {
+                    let fp = Fingerprint::of_bytes(format!("race-{lane}-{i}").as_bytes());
+                    s.put(&fp, &record(i, false));
+                }
+            }
+        };
+        let t1 = std::thread::spawn(writer(dir.clone(), 1));
+        let t2 = std::thread::spawn(writer(dir2, 2));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let mut s = RunStore::open(&dir).unwrap();
+        for lane in 1..=2u64 {
+            for i in 0..16u64 {
+                let fp = Fingerprint::of_bytes(format!("race-{lane}-{i}").as_bytes());
+                assert_eq!(
+                    s.get(&fp, false).expect("no record lost").seed,
+                    i,
+                    "every concurrent put must survive"
+                );
+            }
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,476 @@
+//! Append-only segment files + the advisory store lock + `compact`.
+//!
+//! Records live as checksummed `fedtune.store.seg/v1` frames
+//! ([`super::binary`]) appended to `<cache-dir>/segments/seg-<n>.bin`.
+//! Every file starts with the [`SEG_SCHEMA`] magic line; a segment whose
+//! magic disagrees is ignored wholesale (a future container format, not
+//! corruption). Appends fsync the frame before the index entry is
+//! published, so a crash leaves at most one indexed-but-unscanned tail
+//! frame — which [`super::index::Index::load`] recovers by tail-scan.
+//! A torn tail frame (killed mid-write) fails its checksum and is
+//! treated as end-of-segment: later appends land after it only when the
+//! index said so, and `fedtune compact` drops it for good. The cache
+//! stays advisory throughout — scans and reads degrade to misses, never
+//! errors.
+//!
+//! # Lock lease (multi-process safety)
+//!
+//! [`StoreLock`] is a `O_CREAT|O_EXCL` lease file (`store.lock`,
+//! std-only) holding the owner's PID. It is held only around
+//! append + index-publish (milliseconds), so concurrent `fedtune grid`
+//! processes sharing one `--cache-dir` serialize their writes and never
+//! interleave frame bytes. Takeover: if the recorded PID is provably
+//! dead (`/proc/<pid>` on Linux), or the lease stays unreadable past a
+//! patience window, a waiter renames the lease aside (first renamer
+//! wins) and retries — a crashed holder cannot wedge the store. Readers
+//! never lock: frames are immutable once their index entry exists.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::obs::{names, wall};
+
+use super::binary::{self, Frame, FrameInfo, SEG_SCHEMA};
+use super::fingerprint::{Fingerprint, FINGERPRINT_VERSION};
+use super::index::{Index, SegLoc};
+use super::unique_tmp;
+
+/// Subdirectory of a cache dir holding the segment files.
+pub const SEGMENTS_SUBDIR: &str = "segments";
+
+/// The advisory lease file guarding append + index-publish.
+pub const LOCK_FILE: &str = "store.lock";
+
+/// Roll to a new segment once the active one crosses this size.
+const ROLL_BYTES: u64 = 64 * 1024 * 1024;
+
+/// Magic line at the start of every segment file.
+fn magic() -> String {
+    format!("{SEG_SCHEMA}\n")
+}
+
+/// Byte length of the segment magic line (frame 0 starts here).
+pub fn header_len() -> usize {
+    magic().len()
+}
+
+fn seg_dir(cache_dir: &Path) -> PathBuf {
+    cache_dir.join(SEGMENTS_SUBDIR)
+}
+
+/// `segments/seg-<n>.bin` under `cache_dir`.
+pub fn seg_path(cache_dir: &Path, n: u32) -> PathBuf {
+    seg_dir(cache_dir).join(format!("seg-{n}.bin"))
+}
+
+/// The segments on disk as `number → file size`, sorted (deterministic
+/// scan order). Files whose magic line disagrees with [`SEG_SCHEMA`]
+/// are skipped — a different container version, never corruption.
+pub fn list(cache_dir: &Path) -> BTreeMap<u32, u64> {
+    let mut out = BTreeMap::new();
+    let Ok(iter) = fs::read_dir(seg_dir(cache_dir)) else { return out };
+    for entry in iter.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(n) = name
+            .strip_prefix("seg-")
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<u32>().ok())
+        else {
+            continue;
+        };
+        let Ok(meta) = entry.metadata() else { continue };
+        if has_magic(&entry.path()) {
+            out.insert(n, meta.len());
+        }
+    }
+    out
+}
+
+fn has_magic(path: &Path) -> bool {
+    let Ok(mut f) = fs::File::open(path) else { return false };
+    let mut buf = vec![0u8; header_len()];
+    matches!(f.read_exact(&mut buf), Ok(())) && buf == magic().as_bytes()
+}
+
+/// Scan checksum-valid frames of segment `seg` starting at byte `from`,
+/// calling `visit(offset, info, frame_bytes)` per frame. Stops silently
+/// at the first torn/corrupt frame (the advisory-cache rule: a bad tail
+/// is end-of-data, not an error). `from` must sit on a frame boundary —
+/// the magic end or an index-covered end offset.
+pub fn scan_from(
+    cache_dir: &Path,
+    seg: u32,
+    from: u64,
+    mut visit: impl FnMut(u64, FrameInfo, &[u8]),
+) {
+    let Ok(mut f) = fs::File::open(seg_path(cache_dir, seg)) else { return };
+    if f.seek(SeekFrom::Start(from)).is_err() {
+        return;
+    }
+    let mut offset = from;
+    let mut header = [0u8; binary::FRAME_HEADER_LEN];
+    loop {
+        if f.read_exact(&mut header).is_err() {
+            return; // clean EOF or torn header: end of segment
+        }
+        let body_len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        if body_len < binary::BODY_HEADER_LEN || body_len > ROLL_BYTES as usize {
+            return; // structurally impossible: treat as torn tail
+        }
+        let mut frame = vec![0u8; binary::FRAME_HEADER_LEN + body_len];
+        frame[..binary::FRAME_HEADER_LEN].copy_from_slice(&header);
+        if f.read_exact(&mut frame[binary::FRAME_HEADER_LEN..]).is_err() {
+            return; // torn body
+        }
+        let cksum = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if binary::fnv32(&frame[binary::FRAME_HEADER_LEN..]) != cksum {
+            return; // corrupt frame: stop, cache heals by re-run/compact
+        }
+        let Some(info) = binary::peek_frame(&frame) else { return };
+        visit(offset, info, &frame);
+        offset += frame.len() as u64;
+    }
+}
+
+/// Append one frame (caller holds the [`StoreLock`]) and fsync it.
+/// Creates the segments dir / a fresh segment (with magic) as needed and
+/// rolls to `seg-<n+1>` past [`ROLL_BYTES`].
+pub fn append_frame(cache_dir: &Path, frame: &Frame) -> Result<SegLoc> {
+    let dir = seg_dir(cache_dir);
+    fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+    let segs = list(cache_dir);
+    let seg = match segs.iter().next_back() {
+        Some((&n, &size)) if size < ROLL_BYTES => n,
+        Some((&n, _)) => n + 1,
+        None => 0,
+    };
+    let path = seg_path(cache_dir, seg);
+    let mut f = fs::OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(&path)
+        .with_context(|| format!("opening segment {path:?}"))?;
+    let mut offset = f.metadata()?.len();
+    if offset == 0 {
+        f.write_all(magic().as_bytes())?;
+        offset = header_len() as u64;
+    }
+    f.write_all(&frame.bytes)?;
+    f.sync_data().with_context(|| format!("fsync segment {path:?}"))?;
+    Ok(SegLoc {
+        seg,
+        offset,
+        len: frame.bytes.len() as u32,
+        sum_prefix: frame.sum_prefix,
+        flags: frame.flags,
+    })
+}
+
+/// Open read handles over a cache dir's segments, lazily per segment.
+/// The warm path is one bounded positional read per lookup (counted as
+/// `store.pread` bytes) against a cached handle — no open/read-to-string
+/// per record, no locking.
+#[derive(Debug, Default)]
+pub struct SegmentSet {
+    dir: PathBuf,
+    handles: std::collections::HashMap<u32, fs::File>,
+}
+
+impl SegmentSet {
+    pub fn open(cache_dir: &Path) -> SegmentSet {
+        SegmentSet { dir: cache_dir.to_path_buf(), handles: Default::default() }
+    }
+
+    /// Bounded positional read: exactly `len` bytes at `offset` of
+    /// segment `seg`, or `None` (a miss) if the segment is gone or
+    /// short. Never reads past `len` — the bounded-prefix guarantee.
+    pub fn pread(&mut self, seg: u32, offset: u64, len: u32) -> Option<Vec<u8>> {
+        if !self.handles.contains_key(&seg) {
+            let f = fs::File::open(seg_path(&self.dir, seg)).ok()?;
+            self.handles.insert(seg, f);
+        }
+        let f = self.handles.get_mut(&seg)?;
+        let mut buf = vec![0u8; len as usize];
+        let got = read_at(f, offset, &mut buf);
+        if got.is_none() {
+            // A compacted-away segment: drop the dead handle so a
+            // reopened file (same number, post-compact) can be retried.
+            self.handles.remove(&seg);
+            return None;
+        }
+        wall::count(names::STORE_PREAD, len as u64);
+        Some(buf)
+    }
+}
+
+#[cfg(unix)]
+fn read_at(f: &mut fs::File, offset: u64, buf: &mut [u8]) -> Option<()> {
+    use std::os::unix::fs::FileExt;
+    f.read_exact_at(buf, offset).ok()
+}
+
+#[cfg(not(unix))]
+fn read_at(f: &mut fs::File, offset: u64, buf: &mut [u8]) -> Option<()> {
+    f.seek(SeekFrom::Start(offset)).ok()?;
+    f.read_exact(buf).ok()
+}
+
+// ---------------------------------------------------------------------
+// Advisory lock lease
+// ---------------------------------------------------------------------
+
+/// Held around append + index-publish; released (file removed) on drop.
+#[derive(Debug)]
+pub struct StoreLock {
+    path: PathBuf,
+}
+
+/// Sleep schedule while waiting on a live holder: 1 ms doubling to 50 ms.
+const BACKOFF_START_MS: u64 = 1;
+const BACKOFF_MAX_MS: u64 = 50;
+/// Give an unreadable/ownerless lease this many wait rounds (~5 s of
+/// accumulated backoff) before assuming its owner died mid-acquire.
+const PATIENCE_ROUNDS: u32 = 120;
+
+impl StoreLock {
+    /// Acquire the lease for `cache_dir`, waiting (time charged to the
+    /// `store.lock.wait` timer) while a live owner holds it.
+    pub fn acquire(cache_dir: &Path) -> Result<StoreLock> {
+        let path = cache_dir.join(LOCK_FILE);
+        wall::time(names::STORE_LOCK_WAIT, || Self::acquire_at(path))
+    }
+
+    fn acquire_at(path: PathBuf) -> Result<StoreLock> {
+        let mut backoff = BACKOFF_START_MS;
+        let mut patience = 0u32;
+        loop {
+            match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    // Lease body: our PID (the takeover liveness probe).
+                    let _ = f.write_all(std::process::id().to_string().as_bytes());
+                    let _ = f.sync_data();
+                    return Ok(StoreLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    match holder_pid(&path) {
+                        Some(pid) if pid_is_live(pid) => patience = 0,
+                        Some(_) => {
+                            // Provably dead owner: take over immediately.
+                            take_over(&path);
+                            continue;
+                        }
+                        None => {
+                            // Unreadable lease: a racing owner between
+                            // create and PID write — or one that died
+                            // there. Patience separates the two.
+                            patience += 1;
+                            if patience > PATIENCE_ROUNDS {
+                                crate::log_warn!(
+                                    "store lock {path:?} unreadable for too long; \
+                                     assuming a dead owner and taking over"
+                                );
+                                take_over(&path);
+                                patience = 0;
+                                continue;
+                            }
+                        }
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(backoff));
+                    backoff = (backoff * 2).min(BACKOFF_MAX_MS);
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("creating store lock {path:?}"))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+fn holder_pid(path: &Path) -> Option<u32> {
+    fs::read_to_string(path).ok()?.trim().parse().ok()
+}
+
+#[cfg(target_os = "linux")]
+fn pid_is_live(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+/// Without a liveness probe, treat every recorded owner as live — the
+/// patience window still prevents a permanent wedge on unreadable
+/// leases, and a stale-but-parseable lease needs manual removal.
+#[cfg(not(target_os = "linux"))]
+fn pid_is_live(_pid: u32) -> bool {
+    true
+}
+
+/// First-renamer-wins takeover: rename the stale lease aside, then
+/// delete it. Two waiters racing here cannot both "free" a lease that a
+/// third process just re-acquired — rename fails for the loser.
+fn take_over(path: &Path) {
+    let aside = path.with_extension(format!("stale{}", std::process::id()));
+    if fs::rename(path, &aside).is_ok() {
+        let _ = fs::remove_file(&aside);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compaction / migration
+// ---------------------------------------------------------------------
+
+/// What one `fedtune compact` pass did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Live frames carried into the new segment.
+    pub kept: usize,
+    /// Current-schema legacy `runs/*.json` records migrated to frames.
+    pub migrated_json: usize,
+    /// Frames dropped: stale [`FINGERPRINT_VERSION`] or superseded by a
+    /// later frame for the same fingerprint.
+    pub dropped_frames: usize,
+    /// Legacy JSON files garbage-collected (stale schema / unparseable).
+    pub dropped_json: usize,
+    /// Segment files replaced by the rewrite.
+    pub segments_before: usize,
+    /// Bytes of the compacted segment (0 when the store came up empty).
+    pub bytes_written: u64,
+}
+
+/// Compact `cache_dir`: migrate legacy `runs/*.json` records into the
+/// segment tier, drop stale-schema and superseded frames, and rewrite
+/// `index.bin` atomically. Holds the store lock for the duration.
+///
+/// Crash ordering: the new segment is fsync'd + renamed **before** the
+/// index publish, and old segments/JSON files are deleted only **after**
+/// it — a kill at any point leaves a store that the next
+/// [`Index::load`] serves fully (old index + old segments, or tail-scan
+/// of the new segment), never one that errors or loses a record.
+pub fn compact(cache_dir: &Path) -> Result<CompactReport> {
+    compact_inner(cache_dir, false)
+}
+
+/// Test-only kill point: stop after the new segment is published but
+/// before the index rewrite and the old-file sweep — the crash window
+/// the recovery tests pin.
+#[doc(hidden)]
+pub fn compact_killed_before_index_publish(cache_dir: &Path) -> Result<CompactReport> {
+    compact_inner(cache_dir, true)
+}
+
+fn compact_inner(cache_dir: &Path, kill_before_publish: bool) -> Result<CompactReport> {
+    fs::create_dir_all(cache_dir)
+        .with_context(|| format!("creating cache dir {cache_dir:?}"))?;
+    let _lock = StoreLock::acquire(cache_dir)?;
+    let mut report = CompactReport::default();
+
+    // Live frame per fingerprint, later appends winning — raw bytes are
+    // copied verbatim (they are already checksummed and versioned).
+    let mut live: BTreeMap<Fingerprint, Vec<u8>> = BTreeMap::new();
+    let segs = list(cache_dir);
+    report.segments_before = segs.len();
+    for (&seg, _) in segs.iter() {
+        scan_from(cache_dir, seg, header_len() as u64, |_, info, frame| {
+            if info.fver as u64 != FINGERPRINT_VERSION {
+                report.dropped_frames += 1;
+                return;
+            }
+            if live.insert(info.fp, frame.to_vec()).is_some() {
+                report.dropped_frames += 1; // superseded duplicate
+            }
+        });
+    }
+
+    // Legacy JSON tier: migrate current-schema records not already in a
+    // (newer) frame; GC everything else. Sorted paths keep this
+    // deterministic.
+    let mut remove_json: Vec<PathBuf> = Vec::new();
+    let runs_dir = cache_dir.join(super::run_store::RUNS_SUBDIR);
+    if let Ok(iter) = fs::read_dir(&runs_dir) {
+        let mut paths: Vec<PathBuf> = iter
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let parsed = path
+                .file_stem()
+                .and_then(|s| Fingerprint::from_hex(&s.to_string_lossy()))
+                .and_then(|fp| {
+                    let text = fs::read_to_string(&path).ok()?;
+                    Some((fp, super::run_store::parse_record(&text, &fp)?))
+                });
+            match parsed {
+                Some((fp, rec)) => {
+                    if !live.contains_key(&fp) {
+                        live.insert(fp, binary::encode_frame(&fp, &rec).bytes);
+                        report.migrated_json += 1;
+                    } else {
+                        report.dropped_json += 1; // frame supersedes it
+                    }
+                }
+                None => report.dropped_json += 1, // stale schema / corrupt
+            }
+            remove_json.push(path);
+        }
+    }
+    report.kept = live.len();
+
+    // Nothing lives and nothing existed: leave the empty store alone.
+    if live.is_empty() && segs.is_empty() && remove_json.is_empty() {
+        return Ok(report);
+    }
+
+    // 1) Write + publish the compacted segment (temp + fsync + rename).
+    let new_seg = segs.keys().next_back().map_or(0, |&n| n + 1);
+    let mut entries: BTreeMap<Fingerprint, SegLoc> = BTreeMap::new();
+    let dir = seg_dir(cache_dir);
+    fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+    let path = seg_path(cache_dir, new_seg);
+    let tmp = unique_tmp(&path);
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating compacted segment {tmp:?}"))?;
+        f.write_all(magic().as_bytes())?;
+        let mut offset = header_len() as u64;
+        for (fp, frame) in &live {
+            f.write_all(frame)?;
+            let info = binary::peek_frame(frame)
+                .expect("compacted frames were checksum-verified on scan");
+            entries.insert(*fp, SegLoc::of_frame(new_seg, offset, &info));
+            offset += frame.len() as u64;
+        }
+        f.sync_data()?;
+        report.bytes_written = offset;
+    }
+    fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing compacted segment {path:?}"))?;
+
+    if kill_before_publish {
+        return Ok(report);
+    }
+
+    // 2) Atomically publish the rebuilt index.
+    Index::rewrite(cache_dir, &entries)
+        .with_context(|| format!("rewriting index for {cache_dir:?}"))?;
+
+    // 3) Only now sweep the superseded files.
+    for &seg in segs.keys() {
+        let _ = fs::remove_file(seg_path(cache_dir, seg));
+    }
+    for p in &remove_json {
+        let _ = fs::remove_file(p);
+    }
+    let _ = fs::remove_dir(&runs_dir); // only removes it when empty
+    Ok(report)
+}

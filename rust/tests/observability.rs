@@ -193,3 +193,57 @@ fn metrics_plane_records_hot_paths() {
     assert!(snap.path(&["timers", names::ENGINE_SIM_ROUND, "secs"]).is_some());
     assert!(snap.path(&["counters", names::POOL_ITEMS]).is_some());
 }
+
+/// Acceptance (segment store): a `need_trace = false` lookup of a
+/// trace-carrying record reads only the bounded summary prefix of its
+/// frame — the `store.pread` byte counter proves the trace bytes were
+/// never touched. (Tests in this binary run in parallel and the wall
+/// counters are global, so the bounds are loose; the exact
+/// prefix-sufficiency guarantee is pinned by `store::binary`'s
+/// unit tests.)
+#[test]
+fn summary_lookups_read_only_the_bounded_prefix() {
+    wall::enable();
+    let dir = tmp_dir("pread");
+    let cache = dir.join("cache");
+    let make = |keep: bool| {
+        Grid::new(base()).seeds(&[9]).cache_dir(cache.clone()).keep_traces(keep)
+    };
+    // Cold keep-traces run: the cached frame carries a per-round trace,
+    // orders of magnitude larger than its summary block.
+    let cold = make(true).run().unwrap();
+    assert_eq!(cold.executed_runs, 1);
+    let rounds = cold.cells[0].runs[0].rounds;
+    assert!(rounds > 50, "trace must dwarf the summary ({rounds} rounds)");
+
+    // Warm summary-only sweep: served via index probe + bounded pread.
+    let pread0 = wall::counter(names::STORE_PREAD);
+    let probes0 = wall::counter(names::STORE_INDEX_PROBE);
+    let warm = make(false).run().unwrap();
+    assert_eq!(warm.executed_runs, 0);
+    assert_eq!(warm.cache_hits, 1);
+    let summary_bytes = wall::counter(names::STORE_PREAD) - pread0;
+    assert!(summary_bytes > 0, "warm lookup must come off the segment tier");
+    assert!(
+        summary_bytes <= 8192,
+        "summary lookup must read a bounded prefix, got {summary_bytes} bytes \
+         for a {rounds}-round trace record"
+    );
+    assert!(
+        wall::counter(names::STORE_INDEX_PROBE) > probes0,
+        "segment lookups go through the in-memory index"
+    );
+
+    // A trace-demanding warm sweep reads the whole frame — the trace
+    // bytes it actually needs.
+    let pread1 = wall::counter(names::STORE_PREAD);
+    let traced = make(true).run().unwrap();
+    assert_eq!(traced.executed_runs, 0);
+    let full_bytes = wall::counter(names::STORE_PREAD) - pread1;
+    assert!(
+        full_bytes > summary_bytes * 4 && full_bytes > 4096,
+        "trace lookup reads the full frame (summary {summary_bytes} B, \
+         full {full_bytes} B, {rounds} rounds)"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -789,3 +789,120 @@ fn prop_paramvec_axpy_linear() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Packed segment store: the binary frame codec (store::binary) must be a
+// lossless inverse of the canonical JSON view over *arbitrary* records.
+// ---------------------------------------------------------------------------
+
+/// An f64 that stresses the codec: half the draws are raw bit patterns
+/// (subnormals, -0.0, extreme exponents, ugly mantissas), filtered to
+/// finite values so the canonical-JSON comparison stays well-defined.
+fn wild_f64(g: &mut Gen) -> f64 {
+    let raw = f64::from_bits(g.rng.next_u64());
+    if g.bool() && raw.is_finite() {
+        raw
+    } else {
+        g.f64(-1.0e15, 1.0e15)
+    }
+}
+
+fn gen_wild_costs(g: &mut Gen) -> fedtune::overhead::Costs {
+    fedtune::overhead::Costs {
+        comp_t: wild_f64(g),
+        trans_t: wild_f64(g),
+        comp_l: wild_f64(g),
+        trans_l: wild_f64(g),
+    }
+}
+
+fn gen_run_record(g: &mut Gen) -> fedtune::experiment::RunRecord {
+    use fedtune::trace::{RoundRecord, Trace};
+    let trace = g.bool().then(|| {
+        let rows = g.usize(0, 3 * g.size);
+        let mut t = Trace::new();
+        for round in 1..=rows {
+            t.push(RoundRecord {
+                round,
+                m: g.usize(1, 500),
+                e: wild_f64(g),
+                accuracy: wild_f64(g),
+                train_loss: wild_f64(g),
+                costs: gen_wild_costs(g),
+                fedtune_activated: g.bool(),
+            });
+        }
+        t
+    });
+    fedtune::experiment::RunRecord {
+        seed: g.rng.next_u64(),
+        rounds: g.usize(0, 100_000),
+        final_accuracy: wild_f64(g),
+        costs: gen_wild_costs(g),
+        final_m: g.usize(0, 100_000),
+        final_e: wild_f64(g),
+        improvement_pct: g.bool().then(|| wild_f64(g)),
+        baseline_costs: g.bool().then(|| gen_wild_costs(g)),
+        trace,
+    }
+}
+
+/// Acceptance (ISSUE 10): `run_record_json(decode(encode(r)))` equals
+/// `run_record_json(r)` — every f64 survives bit-exactly through the
+/// binary frame, and the summary block alone decodes from exactly the
+/// `sum_prefix` bytes the index advertises.
+#[test]
+fn prop_binary_frame_roundtrip_is_lossless() {
+    use fedtune::experiment::runner::run_record_json;
+    use fedtune::store::{binary, Fingerprint};
+    check(
+        "segment-frame-roundtrip",
+        200,
+        |g: &mut Gen| {
+            let key: Vec<u8> =
+                (0..g.usize(0, 64)).map(|_| g.rng.next_u64() as u8).collect();
+            (Fingerprint::of_bytes(&key), gen_run_record(g))
+        },
+        |(fp, r)| {
+            let frame = binary::encode_frame(fp, r);
+            let (fp2, full) = binary::decode_full(&frame.bytes)
+                .ok_or("full decode failed on a pristine frame")?;
+            if fp2 != *fp {
+                return Err("fingerprint changed in flight".into());
+            }
+            let want = run_record_json(r).dump();
+            let got = run_record_json(&full).dump();
+            if got != want {
+                return Err(format!("lossy roundtrip:\n {want}\n {got}"));
+            }
+            // f64 bit-exactness, stronger than JSON text equality.
+            if full.final_accuracy.to_bits() != r.final_accuracy.to_bits()
+                || full.final_e.to_bits() != r.final_e.to_bits()
+                || full.costs.comp_t.to_bits() != r.costs.comp_t.to_bits()
+            {
+                return Err("f64 bits drifted".into());
+            }
+
+            // The summary decodes from the advertised prefix alone, with
+            // the trace stripped and every summary field bit-identical.
+            let prefix = &frame.bytes[..frame.sum_prefix as usize];
+            let (fp3, summary) = binary::decode_summary(prefix)
+                .ok_or("summary decode failed on its own prefix")?;
+            if fp3 != *fp || summary.trace.is_some() {
+                return Err("summary prefix wrong identity or kept trace".into());
+            }
+            let mut bare = r.clone();
+            bare.trace = None;
+            if run_record_json(&summary).dump() != run_record_json(&bare).dump()
+            {
+                return Err("summary fields drifted from the record".into());
+            }
+            // Flags must advertise exactly the trace's presence.
+            let has = frame.flags & binary::FLAG_TRACE != 0;
+            if has != r.trace.is_some() {
+                return Err("FLAG_TRACE disagrees with the record".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -132,24 +132,32 @@ fn corrupted_cache_records_fall_back_to_rerun() {
     let cold = make().run().unwrap();
     assert_eq!(cold.executed_runs, 2);
 
-    let runs_dir = dir.join("runs");
-    let mut files: Vec<PathBuf> = fs::read_dir(&runs_dir)
-        .unwrap()
-        .map(|e| e.unwrap().path())
-        .collect();
-    files.sort();
-    assert_eq!(files.len(), 2);
-    fs::write(&files[0], "not json at all {{{").unwrap();
-    let full = fs::read_to_string(&files[1]).unwrap();
-    fs::write(&files[1], &full[..full.len() / 3]).unwrap();
+    // Both records live as frames in segments/seg-0.bin: corrupt every
+    // frame byte past the magic line. The index still points at the
+    // (now checksum-invalid) frames, so every lookup degrades to a miss.
+    let seg = fedtune::store::segment::seg_path(&dir, 0);
+    let mut bytes = fs::read(&seg).unwrap();
+    let magic = fedtune::store::segment::header_len();
+    assert!(bytes.len() > magic, "two frames must follow the magic");
+    for b in &mut bytes[magic..] {
+        *b ^= 0xFF;
+    }
+    fs::write(&seg, &bytes).unwrap();
 
     let again = make().run().unwrap();
     assert_eq!(again.executed_runs, 2, "both defective records must re-run");
     assert_eq!(again.to_json().pretty(), cold.to_json().pretty());
 
-    // The re-run rewrote the records: the cache is healed.
+    // The re-run appended fresh frames: the cache is healed.
     let healed = make().run().unwrap();
     assert_eq!(healed.executed_runs, 0);
+
+    // Losing the sidecar index is not even a miss: lookups rebuild it by
+    // scanning the segment frames.
+    fs::remove_file(dir.join("index.bin")).unwrap();
+    let rebuilt = make().run().unwrap();
+    assert_eq!(rebuilt.executed_runs, 0, "index rebuild must serve every run");
+    assert_eq!(rebuilt.to_json().pretty(), cold.to_json().pretty());
     let _ = fs::remove_dir_all(&dir);
 }
 
@@ -185,8 +193,8 @@ fn interrupted_sweep_resumes_byte_identical() {
     assert!(journal.exists(), "journal missing at {journal:?}");
 
     // Simulate the kill: keep the header + 3 finished pairs + a torn
-    // final line, and delete every cached run record so the remaining
-    // pairs genuinely re-execute.
+    // final line, and delete the whole segment tier (segments + index)
+    // so the remaining pairs genuinely re-execute.
     let text = fs::read_to_string(&journal).unwrap();
     let lines: Vec<&str> = text.lines().collect();
     assert_eq!(lines.len(), 1 + 8, "header + 4 prefs × 2 seeds");
@@ -194,7 +202,8 @@ fn interrupted_sweep_resumes_byte_identical() {
     partial.push('\n');
     partial.push_str(&lines[4][..lines[4].len() / 2]);
     fs::write(&journal, partial).unwrap();
-    fs::remove_dir_all(dir.join("runs")).unwrap();
+    fs::remove_dir_all(dir.join("segments")).unwrap();
+    let _ = fs::remove_file(dir.join("index.bin"));
 
     let resumed = make().resume(true).run().unwrap();
     assert_eq!(

@@ -1,0 +1,218 @@
+//! Crash-consistency of the packed segment store (DESIGN.md §18): torn
+//! segment tails, lost/corrupt `index.bin`, and a `fedtune compact`
+//! killed between its segment publish and its index publish must all
+//! recover as misses or via index rebuild — never as errors, never as
+//! lost records that were durably indexed.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use fedtune::experiment::RunRecord;
+use fedtune::overhead::Costs;
+use fedtune::store::{segment, Fingerprint, RunStore, RUN_SCHEMA};
+use fedtune::trace::{RoundRecord, Trace};
+use fedtune::util::json::Json;
+
+fn record(seed: u64) -> RunRecord {
+    let costs = Costs { comp_t: 2.0e12, trans_t: 90.0, comp_l: 1.25e13, trans_l: 3.0e8 };
+    let mut trace = Trace::new();
+    for round in 1..=4 {
+        trace.push(RoundRecord {
+            round,
+            m: 10 + round,
+            e: 1.5,
+            accuracy: 0.1 * round as f64,
+            train_loss: 2.0 / round as f64,
+            costs,
+            fedtune_activated: round > 2,
+        });
+    }
+    RunRecord {
+        seed,
+        rounds: 4,
+        final_accuracy: 0.4321,
+        costs,
+        final_m: 14,
+        final_e: 1.5,
+        improvement_pct: None,
+        baseline_costs: None,
+        trace: Some(trace),
+    }
+}
+
+fn fp(n: u64) -> Fingerprint {
+    Fingerprint::of_bytes(format!("crash-key-{n}").as_bytes())
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fedtune_crash_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// Write a legacy-tier `runs/<hex>.json` record exactly as the
+/// pre-segment store did (the migration corpus for compact tests).
+fn write_legacy(dir: &Path, fp: &Fingerprint, rec: &RunRecord) {
+    let runs = dir.join("runs");
+    fs::create_dir_all(&runs).unwrap();
+    let doc = Json::from_pairs(vec![
+        ("schema", RUN_SCHEMA.into()),
+        ("fingerprint", fp.hex().into()),
+        ("record", fedtune::experiment::runner::run_record_json(rec)),
+    ]);
+    let mut text = doc.dump();
+    text.push('\n');
+    fs::write(runs.join(format!("{}.json", fp.hex())), text).unwrap();
+}
+
+/// A segment truncated mid-frame (a process killed inside `write_all`)
+/// loses exactly the torn record: earlier frames still hit, the torn one
+/// is a miss, and a fresh put heals it in place.
+#[test]
+fn truncated_segment_tail_is_a_miss_not_an_error() {
+    let dir = tmp_dir("torn_tail");
+    {
+        let mut s = RunStore::open(&dir).unwrap();
+        for n in 0..3 {
+            s.put(&fp(n), &record(n));
+        }
+    }
+    // Tear into the last frame: every byte boundary must stay safe, 10
+    // bytes is inside frame 3's trace block.
+    let seg = segment::seg_path(&dir, 0);
+    let full = fs::read(&seg).unwrap();
+    fs::write(&seg, &full[..full.len() - 10]).unwrap();
+
+    let mut s = RunStore::open(&dir).unwrap();
+    assert!(s.get(&fp(0), true).is_some(), "frame before the tear must hit");
+    assert!(s.get(&fp(1), true).is_some(), "frame before the tear must hit");
+    assert!(s.get(&fp(2), true).is_none(), "torn frame must be a clean miss");
+
+    // Healing: re-putting appends a fresh frame past the tear.
+    s.put(&fp(2), &record(2));
+    let mut fresh = RunStore::open(&dir).unwrap();
+    for n in 0..3 {
+        assert_eq!(fresh.get(&fp(n), true).expect("healed").seed, n);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Deleting or corrupting `index.bin` never loses scanned-reachable
+/// records: the index is rebuilt from the checksummed segment frames.
+#[test]
+fn lost_or_corrupt_index_rebuilds_from_segments() {
+    let dir = tmp_dir("index_loss");
+    {
+        let mut s = RunStore::open(&dir).unwrap();
+        for n in 0..4 {
+            s.put(&fp(n), &record(n));
+        }
+    }
+    let index = dir.join("index.bin");
+
+    // Gone entirely → full segment scan.
+    fs::remove_file(&index).unwrap();
+    let mut s = RunStore::open(&dir).unwrap();
+    for n in 0..4 {
+        assert_eq!(s.get(&fp(n), true).expect("rebuilt").seed, n);
+    }
+
+    // Garbage header → treated as no index, full rebuild again. (The
+    // previous open did not rewrite index.bin; only appends and compact
+    // touch it.)
+    fs::write(&index, b"not an index at all").unwrap();
+    let mut s = RunStore::open(&dir).unwrap();
+    for n in 0..4 {
+        assert_eq!(s.get(&fp(n), true).expect("rebuilt").seed, n);
+    }
+
+    // Torn tail entry: rebuild a complete on-disk index (compact
+    // rewrites it atomically), then tear into its last entry — the
+    // damaged suffix is dropped and the tail-scan past the highest
+    // indexed offset recovers the frame it described.
+    {
+        let mut s = RunStore::open(&dir).unwrap();
+        s.put(&fp(9), &record(9));
+    }
+    segment::compact(&dir).unwrap();
+    let full = fs::read(&index).unwrap();
+    fs::write(&index, &full[..full.len() - 5]).unwrap();
+    let mut s = RunStore::open(&dir).unwrap();
+    assert_eq!(s.get(&fp(9), true).expect("tail-scanned").seed, 9);
+    for n in 0..4 {
+        assert_eq!(s.get(&fp(n), true).expect("still served").seed, n);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// `fedtune compact` killed after its new segment is published but
+/// before the index rewrite (the designed crash window) loses nothing:
+/// the old index + old segments still serve every record, and a rerun
+/// compact converges to the clean final state.
+#[test]
+fn interrupted_compact_loses_no_records() {
+    let dir = tmp_dir("compact_kill");
+    // Mixed-tier corpus: two segment-resident records + one legacy JSON.
+    {
+        let mut s = RunStore::open(&dir).unwrap();
+        s.put(&fp(0), &record(0));
+        s.put(&fp(1), &record(1));
+    }
+    write_legacy(&dir, &fp(2), &record(2));
+
+    let report = segment::compact_killed_before_index_publish(&dir).unwrap();
+    assert_eq!(report.kept, 3);
+    assert_eq!(report.migrated_json, 1);
+    // The crash window on disk: both generations of segments present,
+    // the legacy JSON untouched, the index still describing the old one.
+    assert!(segment::seg_path(&dir, 0).exists(), "old segment still present");
+    assert!(segment::seg_path(&dir, 1).exists(), "new segment published");
+    assert!(dir.join("runs").join(format!("{}.json", fp(2).hex())).exists());
+
+    let mut s = RunStore::open(&dir).unwrap();
+    for n in 0..3 {
+        assert_eq!(s.get(&fp(n), true).expect("no record lost").seed, n);
+    }
+
+    // Re-running compact from the crashed state converges: one segment
+    // generation, no legacy JSON, a fresh index, everything served.
+    let report = segment::compact(&dir).unwrap();
+    assert_eq!(report.kept, 3);
+    assert!(!segment::seg_path(&dir, 0).exists(), "old segments swept");
+    assert!(!segment::seg_path(&dir, 1).exists(), "crashed generation swept");
+    assert!(segment::seg_path(&dir, 2).exists(), "compacted segment lives");
+    assert!(!dir.join("runs").exists(), "migrated JSON tier removed");
+    let stats = RunStore::stats(&dir).unwrap();
+    assert_eq!(stats.segments, 1);
+    assert_eq!(stats.segment_records, 3);
+    assert_eq!(stats.index_entries, 3);
+    assert_eq!(stats.run_entries, 0);
+    let mut s = RunStore::open(&dir).unwrap();
+    for n in 0..3 {
+        assert_eq!(s.get(&fp(n), true).expect("post-compact hit").seed, n);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Compacting an empty or trivial store is safe and idempotent.
+#[test]
+fn compact_is_idempotent() {
+    let dir = tmp_dir("compact_idem");
+    fs::create_dir_all(&dir).unwrap();
+    let report = segment::compact(&dir).unwrap();
+    assert_eq!(report.kept, 0);
+
+    {
+        let mut s = RunStore::open(&dir).unwrap();
+        s.put(&fp(0), &record(0));
+    }
+    let first = segment::compact(&dir).unwrap();
+    assert_eq!(first.kept, 1);
+    let second = segment::compact(&dir).unwrap();
+    assert_eq!(second.kept, 1);
+    assert_eq!(second.dropped_frames, 0);
+    let mut s = RunStore::open(&dir).unwrap();
+    assert!(s.get(&fp(0), true).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}

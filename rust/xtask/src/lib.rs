@@ -16,9 +16,13 @@
 //! * **spec-help-sync** — each `SPEC_HELP` grammar string mentions every
 //!   parse arm's leading token in the adjacent parser.
 //! * **schema-tag-drift** — every `fedtune.store.*/vN` and
-//!   `fedtune.sweep/vN` tag agrees with `FINGERPRINT_VERSION`,
-//!   `fedtune-lint/vN` tags agree with [`LINT_VERSION`], and every
-//!   `fedtune.obs.trace/vN` tag agrees with `obs::TRACE_SCHEMA`.
+//!   `fedtune.sweep/vN` tag agrees with `FINGERPRINT_VERSION` — except
+//!   the segment-store *container* tags `fedtune.store.seg/vN` /
+//!   `fedtune.store.index/vN`, which version independently of run
+//!   identities and must agree with the `SEG_SCHEMA` / `INDEX_SCHEMA`
+//!   constants of `store/binary.rs`; `fedtune-lint/vN` tags agree with
+//!   [`LINT_VERSION`], and every `fedtune.obs.trace/vN` tag agrees with
+//!   `obs::TRACE_SCHEMA`.
 //! * **metric-name-registry** — every metric name published through
 //!   `obs::wall` (`time`/`count`/`lap`) is a constant registered in
 //!   `obs::names`; ad-hoc string literals and duplicate names are
@@ -852,6 +856,30 @@ fn digits_after(s: &str, at: usize) -> Option<u64> {
     n.parse().ok()
 }
 
+/// Harvest the `/vN` version of a `const NAME: &str = ".../vN";` anchor
+/// in `rel`, scanning tokens (so formatting can't hide it). `None` when
+/// the file or constant is absent — the dependent checks then skip,
+/// like every other missing anchor.
+fn const_str_version(files: &[SrcFile], rel: &str, name: &str) -> Option<u64> {
+    let f = find(files, rel)?;
+    let t = &f.tokens;
+    for i in 0..t.len() {
+        if t[i].text != name {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < t.len() && t[j].text != "=" && t[j].text != ";" {
+            j += 1;
+        }
+        if j < t.len() && t[j].text == "=" {
+            if let Some(s) = t.get(j + 1).filter(|x| x.kind == Kind::Str) {
+                return s.text.rfind('v').and_then(|p| digits_after(&s.text, p + 1));
+            }
+        }
+    }
+    None
+}
+
 fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violation>) {
     let Some(fp) = find(files, FINGERPRINT_FILE) else { return };
     let t = &fp.tokens;
@@ -887,24 +915,14 @@ fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violati
     // Flight-recorder trace schema: the registered version lives in the
     // `TRACE_SCHEMA` constant of obs/mod.rs (absent in fixture trees →
     // the trace checks skip, like every other missing anchor).
-    let trace_n = find(files, "obs/mod.rs").and_then(|obs| {
-        let t = &obs.tokens;
-        for i in 0..t.len() {
-            if t[i].text != "TRACE_SCHEMA" {
-                continue;
-            }
-            let mut j = i + 1;
-            while j < t.len() && t[j].text != "=" && t[j].text != ";" {
-                j += 1;
-            }
-            if j < t.len() && t[j].text == "=" {
-                if let Some(s) = t.get(j + 1).filter(|x| x.kind == Kind::Str) {
-                    return s.text.rfind('v').and_then(|p| digits_after(&s.text, p + 1));
-                }
-            }
-        }
-        None
-    });
+    let trace_n = const_str_version(files, "obs/mod.rs", "TRACE_SCHEMA");
+
+    // Segment-store container tags version independently of run
+    // identities (the PR that introduced them left FINGERPRINT_VERSION
+    // untouched): their anchors are the SEG_SCHEMA / INDEX_SCHEMA
+    // constants of store/binary.rs.
+    let seg_n = const_str_version(files, "store/binary.rs", "SEG_SCHEMA");
+    let index_n = const_str_version(files, "store/binary.rs", "INDEX_SCHEMA");
 
     for f in files {
         for tok in &f.tokens {
@@ -921,6 +939,32 @@ fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violati
                 if !s[tail..].starts_with('v') {
                     continue;
                 }
+                let name = &s[start..start + slash];
+                // Container tags: anchored to store/binary.rs constants,
+                // not to the run-identity version.
+                if name == "seg" || name == "index" {
+                    let (expect, anchor) = if name == "seg" {
+                        (seg_n, "SEG_SCHEMA")
+                    } else {
+                        (index_n, "INDEX_SCHEMA")
+                    };
+                    if let (Some(n), Some(expect)) = (digits_after(s, tail + 1), expect)
+                    {
+                        if n != expect {
+                            out.push(Violation {
+                                file: f.rel.clone(),
+                                line: tok.line,
+                                rule: R_SCHEMA,
+                                message: format!(
+                                    "segment container tag \
+                                     \"fedtune.store.{name}/v{n}\" disagrees with \
+                                     store::binary::{anchor} (v{expect})"
+                                ),
+                            });
+                        }
+                    }
+                    continue;
+                }
                 if let Some(n) = digits_after(s, tail + 1) {
                     if n != version {
                         out.push(Violation {
@@ -928,9 +972,8 @@ fn rule_schema_tags(files: &[SrcFile], lint_version: &str, out: &mut Vec<Violati
                             line: tok.line,
                             rule: R_SCHEMA,
                             message: format!(
-                                "store schema tag \"fedtune.store.{}/v{n}\" disagrees \
-                                 with FINGERPRINT_VERSION = {version}",
-                                &s[start..start + slash]
+                                "store schema tag \"fedtune.store.{name}/v{n}\" disagrees \
+                                 with FINGERPRINT_VERSION = {version}"
                             ),
                         });
                     }

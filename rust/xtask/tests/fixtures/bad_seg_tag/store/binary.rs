@@ -1,0 +1,6 @@
+// Anchors: the segment-store container tags version independently of
+// FINGERPRINT_VERSION — the lint checks every seg/index tag against
+// these constants.
+
+pub const SEG_SCHEMA: &str = "fedtune.store.seg/v1";
+pub const INDEX_SCHEMA: &str = "fedtune.store.index/v1";

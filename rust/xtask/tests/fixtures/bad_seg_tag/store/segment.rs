@@ -1,0 +1,5 @@
+// Fixture violations: both container tags drifted away from the
+// store/binary.rs anchors (a half-done container version bump).
+
+pub const SEG_MAGIC: &str = "fedtune.store.seg/v2";
+pub const INDEX_HEADER: &str = "fedtune.store.index/v3";

@@ -102,6 +102,22 @@ fn schema_tag_drift_fails() {
 }
 
 #[test]
+fn segment_container_tag_drift_fails() {
+    // seg/index container tags are checked against the SEG_SCHEMA /
+    // INDEX_SCHEMA anchors of store/binary.rs — NOT against
+    // FINGERPRINT_VERSION, which the segment store leaves untouched.
+    let vs = lint("bad_seg_tag");
+    assert_one(&vs, R_SCHEMA, "fedtune.store.seg/v2");
+    assert_one(&vs, R_SCHEMA, "fedtune.store.index/v3");
+    assert!(
+        vs.iter().all(|v| v.message.contains("store::binary::")),
+        "container tags must be anchored to binary.rs, not \
+         FINGERPRINT_VERSION: {vs:#?}"
+    );
+    assert_eq!(vs.len(), 2, "{vs:#?}");
+}
+
+#[test]
 fn duplicate_and_adhoc_metric_names_fail() {
     let vs = lint("bad_metric");
     assert_one(&vs, R_METRICS, "ROUND_AGAIN");
